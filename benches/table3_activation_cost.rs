@@ -1,0 +1,53 @@
+//! Table 3: computational cost of the activation functions — average
+//! processing time of ReLU / TanH / Sigmoid over identical workloads
+//! (paper: ReLU 1.12 s, TanH 1.50 s, Sigmoid 1.48 s on their setup;
+//! the *ordering* is the reproducible claim).
+
+#[path = "common.rs"]
+mod common;
+
+use xtpu::nn::layers::Activation;
+
+fn main() {
+    common::header(
+        "Table 3 — activation-function processing time",
+        "paper Table 3: ReLU O(1) fastest; TanH/Sigmoid ≈ O(n^2.085) slower",
+    );
+    let n = 4_000_000usize;
+    let data: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.001).sin() * 4.0).collect();
+    let reps = 25;
+    let mut results = Vec::new();
+    for act in [Activation::Relu, Activation::Tanh, Activation::Sigmoid, Activation::Linear] {
+        // Warm-up.
+        let mut sink = 0f32;
+        for &v in data.iter().take(1000) {
+            sink += act.apply(v);
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            for &v in &data {
+                sink += act.apply(v);
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(sink);
+        results.push((act, dt));
+        println!(
+            "{:>8}: {:.3} s for {} × {} elements ({:.1} M elem/s)",
+            act.name(),
+            dt,
+            reps,
+            n,
+            (reps * n) as f64 / dt / 1e6
+        );
+    }
+    let relu = results.iter().find(|(a, _)| *a == Activation::Relu).unwrap().1;
+    let tanh = results.iter().find(|(a, _)| *a == Activation::Tanh).unwrap().1;
+    let sigmoid = results.iter().find(|(a, _)| *a == Activation::Sigmoid).unwrap().1;
+    println!(
+        "\nratios vs ReLU: TanH ×{:.2}, Sigmoid ×{:.2} (paper: ×1.34, ×1.32)",
+        tanh / relu,
+        sigmoid / relu
+    );
+    assert!(tanh > relu && sigmoid > relu, "transcendental activations must cost more");
+}

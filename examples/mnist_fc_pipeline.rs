@@ -1,0 +1,166 @@
+//! End-to-end driver (DESIGN.md §6): the full Fig-4 flow on a real small
+//! workload, proving all three layers compose:
+//!
+//!   rust training → int8 quantization → gate-level characterization →
+//!   ES → ILP assignment → augmented weight memory → validation through
+//!   BOTH (a) the rust quantized-inference path + cycle-level systolic
+//!   simulator and (b) the AOT JAX/Pallas artifact executed via PJRT.
+//!
+//! Reproduces the paper's headline: ~32 % energy saving for <1 % accuracy
+//! loss at MSE_UB = 200 % with linear activations. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run after `make artifacts`: `cargo run --release --example mnist_fc_pipeline`
+
+use anyhow::Result;
+use xtpu::assign::AssignmentProblem;
+use xtpu::config::ExperimentConfig;
+use xtpu::coordinator::{systolic_cross_check, Pipeline};
+use xtpu::runtime::{artifacts_dir, FcExecutor, Runtime};
+use xtpu::simulator::WeightMemory;
+use xtpu::util::rng::Xoshiro256pp;
+
+fn main() -> Result<()> {
+    let cfg = ExperimentConfig {
+        train_samples: 4000,
+        test_samples: 1000,
+        epochs: 6,
+        characterize_samples: 1_000_000, // paper scale
+        mse_ub_fractions: vec![0.01, 0.1, 0.5, 1.0, 2.0, 5.0, 10.0],
+        validation_runs: 3,
+        ..Default::default()
+    };
+    let pipeline = Pipeline::new(cfg);
+
+    println!("=== X-TPU end-to-end pipeline (FC 128×10, linear) ===\n");
+    let t_all = std::time::Instant::now();
+    let sys = pipeline.prepare()?;
+    println!(
+        "prepared: train {:.1}s · characterize {:.1}s · ES {:.1}s",
+        sys.train_seconds, sys.characterize_seconds, sys.es_seconds
+    );
+    println!(
+        "baseline: accuracy {:.4} · nominal test MSE {:.4}\n",
+        sys.baseline_accuracy, sys.baseline_mse
+    );
+
+    println!(
+        "{:>8} {:>10} {:>10} {:>9} {:>9} {:>9}  (Fig 13a sweep)",
+        "MSE_UB%", "predMSE", "measMSE", "acc", "drop", "saving%"
+    );
+    let mut headline = None;
+    for &f in &pipeline.cfg.mse_ub_fractions.clone() {
+        let r = pipeline.run_budget(&sys, f)?;
+        println!(
+            "{:>8.0} {:>10.4} {:>10.4} {:>9.4} {:>9.4} {:>9.2}",
+            f * 100.0,
+            r.assignment.predicted_mse,
+            r.validated_mse,
+            r.accuracy,
+            r.accuracy_drop,
+            r.assignment.energy_saving * 100.0
+        );
+        if (f - 2.0).abs() < 1e-9 {
+            headline = Some(r);
+        }
+    }
+    let headline = headline.expect("200 % budget in sweep");
+
+    // --- augmented weight memory (Fig 7) --------------------------------
+    let mac = match &sys.quantized.layers[0] {
+        xtpu::nn::quant::QLayer::Dense(m) => m,
+        _ => unreachable!(),
+    };
+    let mut w_colmajor = vec![0i8; mac.fan_in * mac.out];
+    for u in 0..mac.out {
+        for i in 0..mac.fan_in {
+            w_colmajor[i * mac.out + u] = mac.wq[u * mac.fan_in + i];
+        }
+    }
+    let mem = WeightMemory::encode(
+        &w_colmajor,
+        mac.fan_in,
+        mac.out,
+        &headline.assignment.level[..mac.out],
+        sys.registry.ladder.selection_bits(),
+    );
+    println!(
+        "\nweight memory: {} words × {} bits ({}% overhead for selection bits)",
+        mem.words().len(),
+        8 + mem.sel_bits,
+        mem.overhead() * 100.0
+    );
+    assert_eq!(mem.column_levels().unwrap(), headline.assignment.level[..mac.out]);
+
+    // --- cross-check 1: cycle-level systolic simulator -------------------
+    let (measured, predicted) = systolic_cross_check(&sys, &headline.assignment, 2000, 42)?;
+    println!(
+        "systolic simulator: column error variance {measured:.3e} vs model {predicted:.3e} \
+         (ratio {:.2})",
+        measured / predicted.max(1e-12)
+    );
+
+    // --- cross-check 2: the PJRT / JAX / Pallas artifact ------------------
+    if artifacts_dir().join("fc_mnist_linear_b32.hlo.txt").exists() {
+        let mut rt = Runtime::new(&artifacts_dir())?;
+        let mut exec = FcExecutor::from_quantized(&sys.quantized, "linear", 32)?;
+        rt.load(&exec.artifact)?;
+        let problem = AssignmentProblem::build(
+            &sys.es,
+            &sys.fan_in,
+            &sys.registry,
+            &sys.power,
+            headline.budget_abs,
+        );
+        exec.set_noise(problem.noise_spec(&headline.assignment, &sys.registry));
+        let idx: Vec<usize> = (0..sys.test.len().min(960)).collect();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut rng = Xoshiro256pp::seeded(77);
+        let t0 = std::time::Instant::now();
+        for chunk in idx.chunks(32) {
+            if chunk.len() < 32 {
+                break;
+            }
+            let (x, labels) = sys.test.batch(chunk);
+            let logits = exec.run(&rt, &x.data, &mut rng)?;
+            for r in 0..32 {
+                let row = &logits[r * 10..(r + 1) * 10];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == labels[r] as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let dt = t0.elapsed();
+        println!(
+            "PJRT (JAX/Pallas artifact): accuracy {:.4} on {} samples \
+             ({:.1} inf/s through the compiled XLA executable)",
+            correct as f64 / total as f64,
+            total,
+            total as f64 / dt.as_secs_f64()
+        );
+        println!(
+            "  platform: {} · artifact: {}",
+            rt.platform(),
+            exec.artifact
+        );
+    } else {
+        println!("PJRT cross-check skipped (run `make artifacts` first)");
+    }
+
+    println!(
+        "\n=== headline @ MSE_UB=200%: {:.1}% energy saving, {:.2}% accuracy loss \
+         (paper: 32 % / 0.6 %) — total {:.1}s ===",
+        headline.assignment.energy_saving * 100.0,
+        headline.accuracy_drop * 100.0,
+        t_all.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the X-TPU framework in ~60 lines.
+//!
+//! Characterizes the PE multiplier at four voltages, trains a small FC
+//! model on synthetic MNIST, solves the ILP voltage assignment for a 200 %
+//! MSE budget (the paper's headline operating point), and validates the
+//! result with noise-injected quantized inference.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use xtpu::config::ExperimentConfig;
+use xtpu::coordinator::Pipeline;
+
+fn main() -> Result<()> {
+    // Small-but-real configuration (the full pipeline example uses the
+    // paper-scale one; see examples/mnist_fc_pipeline.rs).
+    let cfg = ExperimentConfig {
+        train_samples: 1500,
+        test_samples: 400,
+        epochs: 3,
+        characterize_samples: 100_000,
+        mse_ub_fractions: vec![2.0],
+        ..Default::default()
+    };
+    let pipeline = Pipeline::new(cfg);
+
+    println!("① preparing: train → characterize → error-sensitivity…");
+    let sys = pipeline.prepare()?;
+    println!(
+        "   model {} · baseline accuracy {:.3} · nominal MSE {:.4}",
+        sys.model.name, sys.baseline_accuracy, sys.baseline_mse
+    );
+    println!("   error models (PE multiplier):");
+    for m in sys.registry.models() {
+        println!(
+            "     {:.1} V → var {:>12.3e}  err-rate {:>7.4}",
+            m.volts, m.variance, m.error_rate
+        );
+    }
+
+    println!("② solving the ILP voltage assignment (MSE_UB = 200 %)…");
+    let report = pipeline.run_budget(&sys, 2.0)?;
+    let hist = report.assignment.level_histogram(sys.registry.ladder.len());
+    println!(
+        "   levels {hist:?} (0.5 V → nominal) in {:.2}s, optimal={}",
+        report.assignment.solve_seconds, report.assignment.optimal
+    );
+
+    println!("③ validation (noise-injected int8 inference):");
+    println!(
+        "   energy saving {:.1}%  ·  accuracy {:.3} (drop {:.3})  ·  \
+         measured MSE {:.4} vs budget {:.4}",
+        report.assignment.energy_saving * 100.0,
+        report.accuracy,
+        report.accuracy_drop,
+        report.validated_mse,
+        report.budget_abs
+    );
+    println!(
+        "\npaper headline: 32 % energy saving for 0.6 % accuracy loss at \
+         MSE_UB = 200 % (linear activation)"
+    );
+    Ok(())
+}

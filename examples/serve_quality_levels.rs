@@ -1,0 +1,123 @@
+//! Serving demo: spin up the quality-adjustable inference server, then act
+//! as a fleet of clients issuing requests at different quality levels —
+//! the "runtime accuracy configuration" the X-TPU architecture enables
+//! (voltage-selection bits in weight memory, Fig 7), measured for both
+//! accuracy and latency/throughput.
+//!
+//! Run: `cargo run --release --example serve_quality_levels`
+
+use anyhow::Result;
+use std::time::Instant;
+use xtpu::assign::AssignmentProblem;
+use xtpu::config::ExperimentConfig;
+use xtpu::coordinator::Pipeline;
+use xtpu::nn::quant::NoiseSpec;
+use xtpu::server::{BatchPolicy, Client, Engine, QualityLevel, Server};
+
+fn main() -> Result<()> {
+    let cfg = ExperimentConfig {
+        train_samples: 1500,
+        test_samples: 400,
+        epochs: 3,
+        characterize_samples: 100_000,
+        validation_runs: 1,
+        ..Default::default()
+    };
+    let pipeline = Pipeline::new(cfg);
+    let sys = pipeline.prepare()?;
+
+    // Pre-solve three quality levels: exact, balanced, eco.
+    let mut levels = vec![QualityLevel {
+        name: "exact".into(),
+        noise: NoiseSpec::silent(sys.es.len()),
+        energy_saving: 0.0,
+    }];
+    for (name, f) in [("balanced", 0.5f64), ("eco", 5.0)] {
+        let r = pipeline.run_budget(&sys, f)?;
+        let problem = AssignmentProblem::build(
+            &sys.es,
+            &sys.fan_in,
+            &sys.registry,
+            &sys.power,
+            r.budget_abs,
+        );
+        levels.push(QualityLevel {
+            name: name.into(),
+            noise: problem.noise_spec(&r.assignment, &sys.registry),
+            energy_saving: r.assignment.energy_saving,
+        });
+    }
+    for (i, l) in levels.iter().enumerate() {
+        println!("quality {i}: {:>8} → {:.1}% energy saving", l.name, l.energy_saving * 100.0);
+    }
+
+    let engine = Engine {
+        quantized: sys.quantized.clone(),
+        levels: levels.clone(),
+        input_dim: 784,
+    };
+    let mut server = Server::spawn(
+        engine,
+        0,
+        BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_millis(3) },
+    )?;
+    println!("\nserver on {}\n", server.addr);
+
+    // Fleet: 4 concurrent clients × 50 requests each, mixed quality levels.
+    let n_clients = 4;
+    let per_client = 50;
+    let addr = server.addr;
+    let test = sys.test.clone();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let test = test.clone();
+            std::thread::spawn(move || -> Result<(usize, usize, Vec<u128>)> {
+                let mut client = Client::connect(addr)?;
+                let mut correct = 0;
+                let mut lat = Vec::new();
+                for i in 0..per_client {
+                    let idx = (c * per_client + i) % test.len();
+                    let quality = i % 3;
+                    let t = Instant::now();
+                    let (class, _) = client.infer(test.images.row(idx), quality)?;
+                    lat.push(t.elapsed().as_micros());
+                    if class == test.labels[idx] as usize {
+                        correct += 1;
+                    }
+                }
+                Ok((correct, per_client, lat))
+            })
+        })
+        .collect();
+    let mut correct = 0;
+    let mut total = 0;
+    let mut lats: Vec<u128> = Vec::new();
+    for h in handles {
+        let (c, t, l) = h.join().unwrap()?;
+        correct += c;
+        total += t;
+        lats.extend(l);
+    }
+    let wall = t0.elapsed();
+    lats.sort_unstable();
+    println!(
+        "{total} requests in {:.2}s → {:.0} req/s · accuracy {:.3} (mixed levels)",
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64(),
+        correct as f64 / total as f64
+    );
+    println!(
+        "latency p50 {:.1} ms · p95 {:.1} ms · p99 {:.1} ms",
+        lats[lats.len() / 2] as f64 / 1000.0,
+        lats[lats.len() * 95 / 100] as f64 / 1000.0,
+        lats[lats.len() * 99 / 100] as f64 / 1000.0
+    );
+    println!(
+        "batches formed: {} (dynamic batching coalesced {:.1} req/batch)",
+        server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        total as f64 / server.stats.batches.load(std::sync::atomic::Ordering::Relaxed) as f64
+    );
+    server.shutdown();
+    Ok(())
+}

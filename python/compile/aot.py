@@ -1,0 +1,117 @@
+"""AOT lowering: JAX/Pallas (L2+L1) → HLO text artifacts for the rust
+runtime (L3).
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import fc_forward, mm16_forward
+
+# Batch sizes lowered per model: 1 for request-at-a-time serving, 32 for
+# the batched validation path.
+FC_BATCHES = (1, 32)
+MM16_SHAPE = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def fc_specs(m):
+    f32 = jnp.float32
+    i8 = jnp.int8
+    S = jax.ShapeDtypeStruct
+    return [
+        S((m, 784), i8),     # x_q
+        S((784, 128), i8),   # w1_q
+        S((128,), f32),      # b1
+        S((1,), f32),        # s1
+        S((1,), f32),        # sx2
+        S((128, 10), i8),    # w2_q
+        S((10,), f32),       # b2
+        S((1,), f32),        # s2
+        S((m, 128), f32),    # noise1
+        S((m, 10), f32),     # noise2
+    ]
+
+
+def mm16_specs():
+    S = jax.ShapeDtypeStruct
+    return [
+        S((MM16_SHAPE, MM16_SHAPE), jnp.int8),
+        S((MM16_SHAPE, MM16_SHAPE), jnp.int8),
+        S((MM16_SHAPE, MM16_SHAPE), jnp.float32),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+
+    def emit(name, fn, specs, inputs_doc):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": inputs_doc,
+                "chars": len(text),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    fc_doc = [
+        {"name": "x_q", "dtype": "i8"},
+        {"name": "w1_q", "dtype": "i8"},
+        {"name": "b1", "dtype": "f32"},
+        {"name": "s1", "dtype": "f32"},
+        {"name": "sx2", "dtype": "f32"},
+        {"name": "w2_q", "dtype": "i8"},
+        {"name": "b2", "dtype": "f32"},
+        {"name": "s2", "dtype": "f32"},
+        {"name": "noise1", "dtype": "f32"},
+        {"name": "noise2", "dtype": "f32"},
+    ]
+    for act in ("linear", "sigmoid", "relu"):
+        for m in FC_BATCHES:
+            emit(f"fc_mnist_{act}_b{m}", fc_forward(act), fc_specs(m), fc_doc)
+    emit(
+        "mm16",
+        mm16_forward,
+        mm16_specs(),
+        [
+            {"name": "x_q", "dtype": "i8"},
+            {"name": "w_q", "dtype": "i8"},
+            {"name": "noise", "dtype": "f32"},
+        ],
+    )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest asserts kernel == ref over randomized shapes/values)."""
+
+import jax.numpy as jnp
+
+
+def ref_vos_matmul(x, w, noise):
+    """int8[m,k] × int8[k,n] + round(noise) in exact int32 arithmetic."""
+    acc = jnp.matmul(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return acc + jnp.round(noise).astype(jnp.int32)
+
+
+def ref_quantize(x, scale):
+    """Symmetric int8 quantization used by the L2 model."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def ref_fc_forward(x_q, w1_q, b1, s1, sx2, w2_q, b2, s2, noise1, noise2, activation):
+    """Reference (no-pallas) forward of the quantized 784→128→10 FC model.
+
+    Mirrors the rust QuantizedModel pipeline: int8 matmul → dequant →
+    activation → requantize → int8 matmul → logits.
+    """
+    acc1 = ref_vos_matmul(x_q, w1_q, noise1).astype(jnp.float32)
+    y1 = acc1 * s1 + b1
+    if activation == "linear":
+        h = y1
+    elif activation == "relu":
+        h = jnp.maximum(y1, 0.0)
+    elif activation == "sigmoid":
+        h = 1.0 / (1.0 + jnp.exp(-y1))
+    elif activation == "tanh":
+        h = jnp.tanh(y1)
+    else:
+        raise ValueError(f"unknown activation {activation}")
+    x2_q = ref_quantize(h, sx2)
+    acc2 = ref_vos_matmul(x2_q, w2_q, noise2).astype(jnp.float32)
+    return acc2 * s2 + b2

@@ -1,0 +1,107 @@
+"""Layer-1 Pallas kernel: the X-TPU's MAC hot-spot with VOS error injection.
+
+The systolic array computes ``O_c = Σ W_c,i · A_i`` per column (paper eq. 9);
+under voltage overscaling each column output carries an additive error
+``e_c`` (eq. 10) that the coordinator samples from the per-voltage
+statistical error models (eqs 11–13). Because the paper applies VOS to the
+multipliers only, the column error is independent of the partial-sum chain,
+so it is *exact* to inject it after the reduction — which is what lets a
+dense-matmul kernel emulate the overscaled systolic array.
+
+Hardware adaptation (DESIGN.md §2): BlockSpec tiles the activation/weight
+operands into VMEM-sized blocks, accumulating over the K grid axis in an
+int32 block resident in VMEM (≙ the PE partial-sum chain feeding the MXU);
+``interpret=True`` keeps the lowered HLO executable on the CPU PJRT plugin
+(real-TPU lowering would emit a Mosaic custom call).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: sized so one (BM×BK int8 + BK×BN int8 + BM×BN int32 + BM×BN
+# f32) working set stays far under a TPU core's ~16 MiB VMEM even at the
+# largest artifact shapes (see DESIGN.md §8).
+DEFAULT_BM = 32
+DEFAULT_BN = 128
+DEFAULT_BK = 256
+
+
+def _vos_matmul_kernel(x_ref, w_ref, noise_ref, o_ref):
+    """One (BM, BN) output block; grid axis 2 walks the K dimension."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    # Inject the pre-sampled column error on the last K step (additive, so
+    # ordering does not matter; doing it once keeps the math exact).
+    nk = pl.num_programs(2)
+
+    @pl.when(k_idx == nk - 1)
+    def _inject():
+        o_ref[...] += jnp.round(noise_ref[...]).astype(jnp.int32)
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def vos_matmul(x, w, noise, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """int8[m,k] × int8[k,n] + round(noise[m,n]) → int32[m,n].
+
+    ``noise`` is float32: the coordinator samples e_c ~ N(k·μ_v, k·σ²_v)
+    per output value and passes it in; all-zero noise gives the exact
+    quantized matmul of the nominal-voltage TPU.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    assert noise.shape == (m, n), f"noise shape {noise.shape} != {(m, n)}"
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    np_ = _pad_to(_pad_to(noise, bm, 0), bn, 1)
+    mp, kp = xp.shape
+    _, npad = wp.shape
+    grid = (mp // bm, npad // bn, kp // bk)
+    out = pl.pallas_call(
+        _vos_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, np_)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Working-set estimate per grid step (the DESIGN.md §8 budget check)."""
+    return bm * bk * 1 + bk * bn * 1 + 2 * bm * bn * 4 + bm * bn * 4

@@ -1,0 +1,64 @@
+"""Layer-2 JAX model: quantized forward passes of the paper's evaluation
+networks, calling the Layer-1 Pallas kernel for every MAC layer.
+
+Weights/scales are *runtime arguments* (not baked constants): the rust
+coordinator trains + quantizes the model in-process and feeds the weights
+through PJRT, so one HLO artifact serves any trained instance of the same
+architecture. Python never runs on the request path — these functions exist
+to be AOT-lowered by aot.py.
+
+The noise inputs carry the per-column VOS error samples e_c (paper eq. 10);
+zeros = exact nominal-voltage TPU.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.vos_matmul import vos_matmul
+
+
+def _activation(name, y):
+    if name == "linear":
+        return y
+    if name == "relu":
+        return jnp.maximum(y, 0.0)
+    if name == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-y))
+    if name == "tanh":
+        return jnp.tanh(y)
+    raise ValueError(f"unknown activation {name}")
+
+
+def quantize(x, scale):
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def fc_forward(activation):
+    """Build the 784→128→10 FC forward (paper Figs 11–13) for one hidden
+    activation. Returns a function of:
+
+      x_q     int8[m,784]   quantized input batch
+      w1_q    int8[784,128] layer-1 weights (column j = neuron j)
+      b1      f32[128]
+      s1      f32[1]        w1_scale·x1_scale (dequant factor)
+      sx2     f32[1]        hidden activation quantization scale
+      w2_q    int8[128,10]
+      b2      f32[10]
+      s2      f32[1]        w2_scale·x2_scale
+      noise1  f32[m,128]    per-neuron column errors, hidden layer
+      noise2  f32[m,10]     per-neuron column errors, output layer
+    """
+
+    def forward(x_q, w1_q, b1, s1, sx2, w2_q, b2, s2, noise1, noise2):
+        acc1 = vos_matmul(x_q, w1_q, noise1).astype(jnp.float32)
+        h = _activation(activation, acc1 * s1 + b1)
+        x2_q = quantize(h, sx2)
+        acc2 = vos_matmul(x2_q, w2_q, noise2).astype(jnp.float32)
+        return (acc2 * s2 + b2,)
+
+    return forward
+
+
+def mm16_forward(x_q, w_q, noise):
+    """The paper's 16×16 matrix-multiplication verification benchmark
+    (§V.A/Fig 10): one VOS matmul, int32 out."""
+    return (vos_matmul(x_q, w_q, noise),)

@@ -1,0 +1,96 @@
+"""L1 correctness: the Pallas vos_matmul kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and block sizes; exactness is required (integer
+arithmetic + deterministic rounding), so comparisons are equality, not
+allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ref_vos_matmul
+from compile.kernels.vos_matmul import vos_matmul, vmem_bytes
+
+
+def rand_case(rng, m, k, n, noise_scale):
+    x = rng.integers(-128, 128, size=(m, k), dtype=np.int8)
+    w = rng.integers(-128, 128, size=(k, n), dtype=np.int8)
+    noise = (rng.standard_normal((m, n)) * noise_scale).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(noise)
+
+
+def test_exact_matches_ref_no_noise():
+    rng = np.random.default_rng(0)
+    x, w, noise = rand_case(rng, 8, 32, 16, 0.0)
+    got = vos_matmul(x, w, noise)
+    want = ref_vos_matmul(x, w, noise)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_noise_injected_once():
+    rng = np.random.default_rng(1)
+    x, w, noise = rand_case(rng, 4, 100, 8, 5000.0)
+    got = vos_matmul(x, w, noise)
+    want = ref_vos_matmul(x, w, noise)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 300),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+    noise_scale=st.sampled_from([0.0, 1.0, 1e4]),
+)
+def test_hypothesis_shapes(m, k, n, seed, noise_scale):
+    rng = np.random.default_rng(seed)
+    x, w, noise = rand_case(rng, m, k, n, noise_scale)
+    got = vos_matmul(x, w, noise)
+    want = ref_vos_matmul(x, w, noise)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (32, 128, 256)])
+def test_block_size_invariance(bm, bn, bk):
+    rng = np.random.default_rng(2)
+    x, w, noise = rand_case(rng, 33, 129, 65, 100.0)
+    got = vos_matmul(x, w, noise, bm=bm, bn=bn, bk=bk)
+    want = ref_vos_matmul(x, w, noise)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_extreme_values_no_overflow():
+    # -128 × -128 × k accumulation must stay exact in int32.
+    m, k, n = 2, 256, 2
+    x = jnp.full((m, k), -128, dtype=jnp.int8)
+    w = jnp.full((k, n), -128, dtype=jnp.int8)
+    noise = jnp.zeros((m, n), dtype=jnp.float32)
+    got = np.asarray(vos_matmul(x, w, noise))
+    assert (got == 128 * 128 * k).all()
+
+
+def test_noise_rounding_matches_ref():
+    # Half-integers and negatives must round identically to the oracle.
+    x = jnp.zeros((2, 4), dtype=jnp.int8)
+    w = jnp.zeros((4, 2), dtype=jnp.int8)
+    noise = jnp.asarray([[0.5, -0.5], [1.49, -2.51]], dtype=jnp.float32)
+    got = np.asarray(vos_matmul(x, w, noise))
+    want = np.asarray(ref_vos_matmul(x, w, noise))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_vmem_budget():
+    # DESIGN.md §8: default blocks stay far below a 16 MiB VMEM budget.
+    assert vmem_bytes() < 1 << 20
+
+
+def test_jit_cache_stable():
+    rng = np.random.default_rng(3)
+    x, w, noise = rand_case(rng, 8, 16, 8, 0.0)
+    a = vos_matmul(x, w, noise)
+    b = vos_matmul(x, w, noise)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,300 @@
+//! Aging model: BTI-driven threshold-voltage drift and its timing/lifetime
+//! consequences (paper §III.A eqs 1–2, §V.C Fig 15).
+//!
+//! The paper evaluates ΔVth after ten years of stress via
+//! `ΔVth ≅ A·e^{κ/θ}·t^α·E_OX^γ·f^β` with `E_OX = (V_DD − V_th)/T_INV`,
+//! then maps ΔVth back to path delay through the alpha-power law (eq 3).
+//! The published data points anchor our constants: after 10 years at
+//! V_DD = 0.8 V the threshold rises ≈ 23.7 % (PMOS) / 19 % (NMOS), while at
+//! V_DD = 0.5 V the rise is only ≈ 0.21 % / 0.2 % — a ratio of ~110× that
+//! pins the field exponent γ ≈ 4.3 for this technology's T_INV.
+
+use crate::timing::voltage::Technology;
+
+/// Device polarity — BTI hits PMOS (NBTI) harder than NMOS (PBTI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Device {
+    Pmos,
+    Nmos,
+}
+
+/// BTI model constants (technology-dependent, paper eq. 1).
+#[derive(Clone, Copy, Debug)]
+pub struct BtiModel {
+    /// Pre-factor lumped with the temperature term `A·e^{κ/θ}` for PMOS.
+    pub a_pmos: f64,
+    /// Same for NMOS.
+    pub a_nmos: f64,
+    /// Time exponent α (classic reaction-diffusion value ≈ 0.2).
+    pub time_exp: f64,
+    /// Oxide-field exponent γ.
+    pub field_exp: f64,
+    /// Duty-factor exponent β.
+    pub duty_exp: f64,
+    /// Inversion-layer thickness T_INV in nm.
+    pub t_inv_nm: f64,
+}
+
+impl Default for BtiModel {
+    fn default() -> Self {
+        let mut m = Self {
+            a_pmos: 0.0,
+            a_nmos: 0.0,
+            time_exp: 0.2,
+            field_exp: 4.3,
+            duty_exp: 0.3,
+            t_inv_nm: 1.5,
+        };
+        // Calibrate the lumped pre-factors so ΔVth(10 y, 0.8 V, duty=1)
+        // equals the paper's 23.7 % (PMOS) / 19 % (NMOS) of Vth = 0.35 V.
+        let tech = Technology::default();
+        let base = m.raw_stress(tech.v_nominal, tech.v_th, 10.0, 1.0);
+        m.a_pmos = 0.237 * tech.v_th / base;
+        m.a_nmos = 0.19 * tech.v_th / base;
+        m
+    }
+}
+
+impl BtiModel {
+    /// The unscaled stress term `t^α · E_OX^γ · f^β` (eq. 1 without A·e^{κ/θ}).
+    fn raw_stress(&self, v_dd: f64, v_th: f64, years: f64, duty: f64) -> f64 {
+        assert!(v_dd > v_th, "no gate overdrive, no BTI stress");
+        let e_ox = (v_dd - v_th) / self.t_inv_nm; // V/nm (eq. 2)
+        years.powf(self.time_exp) * e_ox.powf(self.field_exp) * duty.powf(self.duty_exp)
+    }
+
+    /// Absolute threshold shift ΔVth (V) after `years` at supply `v_dd`
+    /// with activity duty factor `duty` ∈ (0, 1].
+    pub fn delta_vth(
+        &self,
+        device: Device,
+        tech: &Technology,
+        v_dd: f64,
+        years: f64,
+        duty: f64,
+    ) -> f64 {
+        if years <= 0.0 {
+            return 0.0;
+        }
+        let a = match device {
+            Device::Pmos => self.a_pmos,
+            Device::Nmos => self.a_nmos,
+        };
+        a * self.raw_stress(v_dd, tech.v_th, years, duty)
+    }
+
+    /// Relative threshold shift (fraction of Vth), the quantity Fig 15a
+    /// plots.
+    pub fn delta_vth_percent(
+        &self,
+        device: Device,
+        tech: &Technology,
+        v_dd: f64,
+        years: f64,
+    ) -> f64 {
+        self.delta_vth(device, tech, v_dd, years, 1.0) / tech.v_th * 100.0
+    }
+
+    /// Path-delay degradation factor after aging: aged delay / fresh delay
+    /// at the *same* supply (combines eq. 1's ΔVth with eq. 3). Uses the
+    /// PMOS shift (worst case) — Fig 15b.
+    pub fn delay_degradation(&self, tech: &Technology, v_dd: f64, years: f64) -> f64 {
+        let dvth = self.delta_vth(Device::Pmos, tech, v_dd, years, 1.0);
+        let fresh = tech.alpha_power(v_dd);
+        let aged = v_dd / (v_dd - (tech.v_th + dvth)).powf(tech.alpha);
+        aged / fresh
+    }
+
+    /// Years until the delay degradation at supply `v_dd` consumes the
+    /// clock guard band (the circuit then starts failing at nominal
+    /// conditions) — our operational definition of lifetime.
+    pub fn lifetime_years(&self, tech: &Technology, v_dd: f64, duty: f64) -> f64 {
+        let budget = 1.0 + tech.clock_guard;
+        // Bisection on years (degradation is monotone in t).
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        let degr = |y: f64| {
+            let dvth = self.delta_vth(Device::Pmos, tech, v_dd, y, duty);
+            if v_dd - (tech.v_th + dvth) <= 1e-6 {
+                return f64::INFINITY;
+            }
+            (v_dd / (v_dd - (tech.v_th + dvth)).powf(tech.alpha)) / tech.alpha_power(v_dd)
+        };
+        while degr(hi) < budget && hi < 1e6 {
+            hi *= 2.0;
+        }
+        if hi >= 1e6 {
+            return f64::INFINITY;
+        }
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            if degr(mid) < budget {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Lifetime improvement (fraction) of operating with a distribution of
+    /// voltages instead of always-nominal — the paper's §V.C "uniform
+    /// probability distribution of operating voltages" comparison (≈ +12 %).
+    ///
+    /// Following the paper's reading of Fig 15b, the mixed-mode PE's aged
+    /// delay stretch is the share-weighted average of the per-voltage delay
+    /// stretches at the evaluation horizon, and the improvement is the
+    /// relief in required clock-period stretch relative to always-nominal:
+    /// `f_nominal / f_mixed − 1`. (A pure time-to-failure inversion through
+    /// the t^0.2 BTI law yields far larger factors — see
+    /// [`BtiModel::lifetime_years`] — but the paper's 12 % figure is a
+    /// delay-axis comparison, so that is the headline metric here.)
+    pub fn lifetime_improvement(
+        &self,
+        tech: &Technology,
+        volts: &[f64],
+        share: &[f64],
+    ) -> f64 {
+        self.lifetime_improvement_at(tech, volts, share, 10.0)
+    }
+
+    /// Same as [`Self::lifetime_improvement`] with an explicit horizon.
+    pub fn lifetime_improvement_at(
+        &self,
+        tech: &Technology,
+        volts: &[f64],
+        share: &[f64],
+        years: f64,
+    ) -> f64 {
+        assert_eq!(volts.len(), share.len());
+        let total: f64 = share.iter().sum();
+        assert!(total > 0.0);
+        let f_mixed: f64 = volts
+            .iter()
+            .zip(share)
+            .map(|(&v, &s)| s / total * self.delay_degradation(tech, v, years))
+            .sum();
+        let f_nom = self.delay_degradation(tech, tech.v_nominal, years);
+        f_nom / f_mixed - 1.0
+    }
+}
+
+/// Scenario for Fig 15c: aged clock (relaxed to the 10-year 0.8 V critical
+/// path) and per-voltage aged error variance.
+#[derive(Clone, Copy, Debug)]
+pub struct AgedScenario {
+    pub years: f64,
+    /// ΔVth applied to the datapath (PMOS, worst case).
+    pub delta_vth: f64,
+    /// Clock-stretch factor relative to the fresh clock.
+    pub clock_stretch: f64,
+}
+
+impl AgedScenario {
+    /// Build the paper's §V.C scenario: after `years` of always-nominal
+    /// stress, the clock is re-provisioned to the aged nominal critical
+    /// path.
+    pub fn worst_case(bti: &BtiModel, tech: &Technology, years: f64) -> Self {
+        let delta_vth = bti.delta_vth(Device::Pmos, tech, tech.v_nominal, years, 1.0);
+        let clock_stretch = bti.delay_degradation(tech, tech.v_nominal, years);
+        Self { years, delta_vth, clock_stretch }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::checks::assert_close;
+
+    #[test]
+    fn calibration_hits_paper_anchors() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        assert_close(bti.delta_vth_percent(Device::Pmos, &tech, 0.8, 10.0), 23.7, 1e-9);
+        assert_close(bti.delta_vth_percent(Device::Nmos, &tech, 0.8, 10.0), 19.0, 1e-9);
+        // 0.5 V after 10 years: paper reports 0.21 % (PMOS) / 0.2 % (NMOS).
+        let p05 = bti.delta_vth_percent(Device::Pmos, &tech, 0.5, 10.0);
+        assert!(p05 < 1.0, "0.5 V PMOS shift should be tiny, got {p05}%");
+    }
+
+    #[test]
+    fn shift_monotone_in_voltage_and_time() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let mut last = 0.0;
+        for v in [0.5, 0.6, 0.7, 0.8] {
+            let d = bti.delta_vth(Device::Pmos, &tech, v, 10.0, 1.0);
+            assert!(d > last, "ΔVth must grow with V_DD");
+            last = d;
+        }
+        let d1 = bti.delta_vth(Device::Pmos, &tech, 0.8, 1.0, 1.0);
+        let d10 = bti.delta_vth(Device::Pmos, &tech, 0.8, 10.0, 1.0);
+        assert!(d10 > d1);
+        // t^0.2 law: 10-year shift ≈ 10^0.2 ≈ 1.585 × the 1-year shift.
+        assert_close(d10 / d1, 10f64.powf(0.2), 1e-9);
+        assert_eq!(bti.delta_vth(Device::Pmos, &tech, 0.8, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn duty_factor_reduces_stress() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let full = bti.delta_vth(Device::Pmos, &tech, 0.8, 10.0, 1.0);
+        let half = bti.delta_vth(Device::Pmos, &tech, 0.8, 10.0, 0.5);
+        assert!(half < full);
+    }
+
+    #[test]
+    fn delay_degradation_larger_at_nominal() {
+        // Fig 15b pointer ⑨: lower V_DD ages less, so its *relative* delay
+        // increase is smaller.
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let d_nom = bti.delay_degradation(&tech, 0.8, 10.0);
+        let d_low = bti.delay_degradation(&tech, 0.5, 10.0);
+        assert!(d_nom > 1.05, "nominal aging must be visible, got {d_nom}");
+        assert!(d_low < d_nom);
+        assert!(d_low > 0.999);
+    }
+
+    #[test]
+    fn lifetime_finite_at_nominal_infinite_when_cold() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let life = bti.lifetime_years(&tech, 0.8, 1.0);
+        assert!(life.is_finite() && life > 0.0 && life < 100.0, "life={life}");
+        // Guard band of 3 % is consumed well before 10 years at full stress
+        // given the 23.7 %-in-10-years anchor.
+        assert!(life < 10.0);
+    }
+
+    #[test]
+    fn mixed_voltage_extends_lifetime_about_12_percent() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        // Paper §V.C: uniform distribution over the four levels → ≈ +12 %.
+        let volts = [0.5, 0.6, 0.7, 0.8];
+        let share = [0.25, 0.25, 0.25, 0.25];
+        let imp = bti.lifetime_improvement(&tech, &volts, &share);
+        assert!(imp > 0.0, "mixed voltages must extend lifetime");
+        // Paper reports 12 %; our calibration lands in the same band.
+        assert!((0.05..0.35).contains(&imp), "improvement {imp:.3} out of plausible band");
+    }
+
+    #[test]
+    fn always_nominal_distribution_changes_nothing() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let imp = bti.lifetime_improvement(&tech, &[0.8], &[1.0]);
+        assert_close(imp, 0.0, 1e-9);
+    }
+
+    #[test]
+    fn aged_scenario_stretches_clock() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let sc = AgedScenario::worst_case(&bti, &tech, 10.0);
+        assert!(sc.clock_stretch > 1.0);
+        assert!(sc.delta_vth > 0.0);
+        assert_eq!(sc.years, 10.0);
+    }
+}

@@ -1,0 +1,409 @@
+//! The voltage-assignment problem (paper §IV.D, eqs 18–22 & 29) and the
+//! augmented-weight encoding (§IV.A, Fig 7).
+//!
+//! Builds the MCKP instance `minimize Σ E_n(v)` s.t.
+//! `Σ ES_n²·k_n·var(e)_v·x_{n,v} < MSE_UB`, solves it with the chosen
+//! solver, and converts solutions into (a) per-neuron noise specs for
+//! validation and (b) voltage-selection bits packed next to the int8
+//! weights, exactly as the X-TPU weight memory stores them.
+
+use crate::errormodel::ErrorModelRegistry;
+use crate::ilp::{solve_genetic, solve_greedy, solve_mckp, GaConfig, MckpInstance};
+use crate::nn::quant::NoiseSpec;
+use crate::power::PePowerModel;
+use crate::util::json::Json;
+
+/// Which solver to use for eqs (20)(22)(29).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// Exact branch-and-bound (the paper's ILP).
+    Ilp,
+    /// Greedy heuristic (paper's suggested fallback).
+    Greedy,
+    /// Genetic algorithm (baseline, no optimality guarantee).
+    Genetic,
+}
+
+impl Solver {
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "ilp" => Solver::Ilp,
+            "greedy" => Solver::Greedy,
+            "genetic" | "ga" => Solver::Genetic,
+            other => anyhow::bail!("unknown solver '{other}' (ilp|greedy|genetic)"),
+        })
+    }
+}
+
+/// Fully specified assignment problem for one network on one X-TPU config.
+#[derive(Clone, Debug)]
+pub struct AssignmentProblem {
+    /// Error sensitivity per neuron.
+    pub es: Vec<f64>,
+    /// Fan-in (PE column height) per neuron.
+    pub fan_in: Vec<usize>,
+    /// Energy per neuron per voltage level (ladder order).
+    pub energy: Vec<Vec<f64>>,
+    /// Output-MSE contribution per neuron per level: ES²·k·var(e)_v.
+    pub mse_contrib: Vec<Vec<f64>>,
+    /// Absolute MSE-increment budget (MSE_UB).
+    pub budget: f64,
+    /// Voltage ladder (volts per level).
+    pub volts: Vec<f64>,
+}
+
+impl AssignmentProblem {
+    /// Assemble from the framework's artifacts (Fig 4 dataflow).
+    pub fn build(
+        es: &[f64],
+        fan_in: &[usize],
+        registry: &ErrorModelRegistry,
+        power: &PePowerModel,
+        mse_ub: f64,
+    ) -> Self {
+        assert_eq!(es.len(), fan_in.len());
+        assert!(mse_ub >= 0.0);
+        let levels = registry.ladder.levels();
+        let volts: Vec<f64> = levels.iter().map(|l| l.volts).collect();
+        let mut energy = Vec::with_capacity(es.len());
+        let mut mse_contrib = Vec::with_capacity(es.len());
+        for (n, (&e, &k)) in es.iter().zip(fan_in).enumerate() {
+            let _ = n;
+            let row_e: Vec<f64> =
+                volts.iter().map(|&v| power.neuron_energy(k, v)).collect();
+            let row_m: Vec<f64> = registry
+                .models()
+                .iter()
+                .map(|m| e * e * m.column_variance(k))
+                .collect();
+            energy.push(row_e);
+            mse_contrib.push(row_m);
+        }
+        Self { es: es.to_vec(), fan_in: fan_in.to_vec(), energy, mse_contrib, budget: mse_ub, volts }
+    }
+
+    fn as_mckp(&self) -> MckpInstance {
+        MckpInstance {
+            cost: self.energy.clone(),
+            weight: self.mse_contrib.clone(),
+            budget: self.budget,
+        }
+    }
+
+    /// Solve; always feasible because the nominal level has zero error.
+    pub fn solve(&self, solver: Solver) -> anyhow::Result<VoltageAssignment> {
+        let inst = self.as_mckp();
+        let t0 = std::time::Instant::now();
+        let sol = match solver {
+            Solver::Ilp => solve_mckp(&inst)?,
+            Solver::Greedy => solve_greedy(&inst)?,
+            Solver::Genetic => solve_genetic(&inst, &GaConfig::default())?,
+        };
+        let solve_seconds = t0.elapsed().as_secs_f64();
+        let nominal_energy: f64 = self
+            .fan_in
+            .iter()
+            .map(|&k| self.energy_at_nominal(k))
+            .sum();
+        let level = sol.choice;
+        let volts: Vec<f64> = level.iter().map(|&l| self.volts[l]).collect();
+        Ok(VoltageAssignment {
+            level,
+            volts,
+            predicted_mse: sol.total_weight,
+            energy: sol.total_cost,
+            energy_saving: 1.0 - sol.total_cost / nominal_energy,
+            optimal: sol.optimal,
+            nodes_explored: sol.nodes_explored,
+            solve_seconds,
+        })
+    }
+
+    fn energy_at_nominal(&self, k: usize) -> f64 {
+        // The nominal level is the last ladder entry; find a neuron with
+        // this fan-in (energies are per-k rows already).
+        let idx = self.fan_in.iter().position(|&f| f == k).unwrap();
+        *self.energy[idx].last().unwrap()
+    }
+
+    /// Noise spec (mean/std per neuron) implied by an assignment — what the
+    /// validation pass injects (eqs 12–13).
+    pub fn noise_spec(
+        &self,
+        assignment: &VoltageAssignment,
+        registry: &ErrorModelRegistry,
+    ) -> NoiseSpec {
+        let mut spec = NoiseSpec::silent(self.es.len());
+        for (n, &lvl) in assignment.level.iter().enumerate() {
+            let m = registry.model(lvl);
+            spec.mean[n] = m.column_mean(self.fan_in[n]);
+            spec.std[n] = m.column_variance(self.fan_in[n]).sqrt();
+        }
+        spec
+    }
+}
+
+/// The solved <neuron, voltage> tuples plus bookkeeping.
+#[derive(Clone, Debug)]
+pub struct VoltageAssignment {
+    /// Ladder level index per neuron.
+    pub level: Vec<usize>,
+    /// Volts per neuron.
+    pub volts: Vec<f64>,
+    /// Σ ES²·k·var(e)_v — the predicted output-MSE increment.
+    pub predicted_mse: f64,
+    /// Total energy (normalized units).
+    pub energy: f64,
+    /// Fractional saving vs all-nominal.
+    pub energy_saving: f64,
+    pub optimal: bool,
+    pub nodes_explored: u64,
+    pub solve_seconds: f64,
+}
+
+impl VoltageAssignment {
+    /// All-nominal assignment (exact mode) for `n` neurons on a ladder with
+    /// `levels` entries.
+    pub fn all_nominal(n: usize, levels: usize, volts_nominal: f64) -> Self {
+        Self {
+            level: vec![levels - 1; n],
+            volts: vec![volts_nominal; n],
+            predicted_mse: 0.0,
+            energy: 0.0,
+            energy_saving: 0.0,
+            optimal: true,
+            nodes_explored: 0,
+            solve_seconds: 0.0,
+        }
+    }
+
+    /// Histogram of level usage (for the Fig 12 heatmap bench).
+    pub fn level_histogram(&self, levels: usize) -> Vec<usize> {
+        let mut h = vec![0usize; levels];
+        for &l in &self.level {
+            h[l] += 1;
+        }
+        h
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "level",
+                Json::Arr(self.level.iter().map(|&l| Json::Num(l as f64)).collect()),
+            ),
+            ("volts", Json::arr_f64(&self.volts)),
+            ("predicted_mse", Json::Num(self.predicted_mse)),
+            ("energy", Json::Num(self.energy)),
+            ("energy_saving", Json::Num(self.energy_saving)),
+            ("optimal", Json::Bool(self.optimal)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let level: Vec<usize> = j
+            .get("level")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_, _>>()?;
+        Ok(Self {
+            volts: j.get("volts")?.as_f64_vec()?,
+            predicted_mse: j.get("predicted_mse")?.as_f64()?,
+            energy: j.get("energy")?.as_f64()?,
+            energy_saving: j.get("energy_saving")?.as_f64()?,
+            optimal: j.get("optimal")?.as_bool()?,
+            nodes_explored: 0,
+            solve_seconds: 0.0,
+            level,
+        })
+    }
+}
+
+/// Augmented weight word (Fig 7): the int8 weight in the low 8 bits plus the
+/// voltage-selection bits appended at the MSB side.
+pub fn encode_weight_word(weight: i8, level: usize, sel_bits: usize) -> u16 {
+    assert!(sel_bits <= 8, "selection bits must fit the word");
+    assert!(level < (1 << sel_bits), "level {level} needs more than {sel_bits} bits");
+    ((level as u16) << 8) | (weight as u8 as u16)
+}
+
+/// Decode an augmented weight word back into (weight, level).
+pub fn decode_weight_word(word: u16, sel_bits: usize) -> (i8, usize) {
+    let weight = (word & 0xFF) as u8 as i8;
+    let level = ((word >> 8) as usize) & ((1 << sel_bits) - 1);
+    (weight, level)
+}
+
+/// Encode a whole neuron's weight column into augmented memory words.
+pub fn encode_neuron_weights(weights: &[i8], level: usize, sel_bits: usize) -> Vec<u16> {
+    weights.iter().map(|&w| encode_weight_word(w, level, sel_bits)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::errormodel::ErrorModel;
+    use crate::power::{PePowerModel, RegionActivity};
+    use crate::timing::voltage::{Technology, VoltageLadder};
+    use crate::util::checks::property;
+
+    fn fake_registry() -> ErrorModelRegistry {
+        let ladder = VoltageLadder::paper_default();
+        let vars = [3.0e6, 1.4e6, 2.0e5, 0.0]; // Table-2-like ordering
+        let models = ladder
+            .levels()
+            .iter()
+            .zip(vars)
+            .map(|(l, v)| ErrorModel {
+                volts: l.volts,
+                mean: 0.0,
+                variance: v,
+                skewness: 0.0,
+                kurtosis_excess: 0.0,
+                error_rate: if v > 0.0 { 0.01 } else { 0.0 },
+                samples: 1_000_000,
+            })
+            .collect::<Vec<_>>();
+        // Assemble via JSON to reuse the public constructor.
+        let j = Json::obj(vec![
+            ("voltages", Json::arr_f64(&[0.5, 0.6, 0.7, 0.8])),
+            ("models", Json::Arr(models.iter().map(|m| m.to_json()).collect())),
+        ]);
+        ErrorModelRegistry::from_json(&j, Technology::default()).unwrap()
+    }
+
+    fn fake_power() -> PePowerModel {
+        PePowerModel::new(
+            RegionActivity { toggle_energy_per_cycle: 60.0, leakage_sum: 400.0 },
+            RegionActivity { toggle_energy_per_cycle: 20.0, leakage_sum: 120.0 },
+            Technology::default(),
+        )
+    }
+
+    fn small_problem(budget: f64) -> AssignmentProblem {
+        let es = vec![0.001, 0.002, 0.01, 1.0];
+        let fan_in = vec![784, 784, 784, 128];
+        AssignmentProblem::build(&es, &fan_in, &fake_registry(), &fake_power(), budget)
+    }
+
+    #[test]
+    fn zero_budget_forces_all_nominal() {
+        let p = small_problem(0.0);
+        let a = p.solve(Solver::Ilp).unwrap();
+        assert!(a.level.iter().all(|&l| l == 3), "{:?}", a.level);
+        assert!(a.energy_saving.abs() < 1e-9);
+        assert_eq!(a.predicted_mse, 0.0);
+    }
+
+    #[test]
+    fn generous_budget_drops_everything_to_lowest() {
+        let p = small_problem(1e15);
+        let a = p.solve(Solver::Ilp).unwrap();
+        assert!(a.level.iter().all(|&l| l == 0));
+        assert!(a.energy_saving > 0.2, "saving {}", a.energy_saving);
+    }
+
+    #[test]
+    fn intermediate_budget_protects_sensitive_neurons() {
+        // Budget sized to overscale the insensitive neurons only:
+        // neuron 0 (ES 1e-3, k=784) costs 156.8 at 0.7 V / 1097 at 0.6 V,
+        // while neuron 3 (ES 1, k=128) costs ≥ 2.56e7 at any overscale.
+        let p = small_problem(2000.0);
+        let a = p.solve(Solver::Ilp).unwrap();
+        // Neuron 3 (ES=1.0) must stay near nominal; neuron 0 (ES=0.001)
+        // should be overscaled deeper than neuron 3.
+        assert!(a.level[0] <= a.level[3]);
+        assert!(a.level[0] < 3, "insensitive neuron should be overscaled");
+        assert_eq!(a.level[3], 3, "sensitive neuron must stay nominal");
+        assert!(a.predicted_mse <= 2000.0 + 1e-9);
+        assert!(a.energy_saving > 0.0);
+    }
+
+    #[test]
+    fn monotone_budget_monotone_saving() {
+        let mut last = -1.0;
+        for budget in [0.0, 0.1, 1.0, 10.0, 1e3, 1e9] {
+            let a = small_problem(budget).solve(Solver::Ilp).unwrap();
+            assert!(
+                a.energy_saving >= last - 1e-12,
+                "saving must be monotone in budget: {} after {last}",
+                a.energy_saving
+            );
+            last = a.energy_saving;
+        }
+    }
+
+    #[test]
+    fn solvers_agree_on_feasibility_ilp_wins() {
+        for budget in [1.0, 50.0, 1e4] {
+            let p = small_problem(budget);
+            let ilp = p.solve(Solver::Ilp).unwrap();
+            let greedy = p.solve(Solver::Greedy).unwrap();
+            let ga = p.solve(Solver::Genetic).unwrap();
+            for a in [&ilp, &greedy, &ga] {
+                assert!(a.predicted_mse <= budget + 1e-9);
+            }
+            assert!(ilp.energy <= greedy.energy + 1e-9);
+            assert!(ilp.energy <= ga.energy + 1e-9);
+        }
+    }
+
+    #[test]
+    fn noise_spec_reflects_assignment() {
+        let p = small_problem(1e15);
+        let reg = fake_registry();
+        let a = p.solve(Solver::Ilp).unwrap();
+        let spec = p.noise_spec(&a, &reg);
+        // All at level 0 (var 3e6): std = sqrt(k·3e6).
+        for (n, &k) in p.fan_in.iter().enumerate() {
+            crate::util::checks::assert_close(
+                spec.std[n],
+                (k as f64 * 3.0e6).sqrt(),
+                1e-12,
+            );
+        }
+        // Nominal assignment → silent spec.
+        let nominal = VoltageAssignment::all_nominal(4, 4, 0.8);
+        let spec = p.noise_spec(&nominal, &reg);
+        assert!(spec.is_silent());
+    }
+
+    #[test]
+    fn weight_word_roundtrip() {
+        property("augmented weight words round-trip", 256, |rng, _| {
+            let w = rng.range_i64(-128, 127) as i8;
+            let sel_bits = 1 + rng.index(3);
+            let level = rng.index(1 << sel_bits);
+            let word = encode_weight_word(w, level, sel_bits);
+            let (w2, l2) = decode_weight_word(word, sel_bits);
+            assert_eq!(w, w2);
+            assert_eq!(level, l2);
+        });
+    }
+
+    #[test]
+    fn neuron_encoding_shape() {
+        let words = encode_neuron_weights(&[1, -1, 127, -128], 2, 2);
+        assert_eq!(words.len(), 4);
+        for w in words {
+            assert_eq!(decode_weight_word(w, 2).1, 2);
+        }
+    }
+
+    #[test]
+    fn assignment_json_roundtrip() {
+        let p = small_problem(5.0);
+        let a = p.solve(Solver::Ilp).unwrap();
+        let b = VoltageAssignment::from_json(&a.to_json()).unwrap();
+        assert_eq!(a.level, b.level);
+        assert_eq!(a.volts, b.volts);
+        assert_eq!(a.energy_saving, b.energy_saving);
+    }
+
+    #[test]
+    fn level_histogram_counts() {
+        let a = VoltageAssignment::all_nominal(7, 4, 0.8);
+        assert_eq!(a.level_histogram(4), vec![0, 0, 0, 7]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Experiment configuration: one JSON-serializable struct drives the whole
+//! Fig-4 pipeline (model choice, ladder, characterization depth, budgets,
+//! solver). The CLI and examples construct these; benches use presets.
+
+use crate::assign::Solver;
+use crate::nn::layers::Activation;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// "fc_mnist" | "lenet5" | "resnet_tiny".
+    pub model: String,
+    /// Hidden-layer activation for the FC model.
+    pub activation: Activation,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub epochs: usize,
+    /// Voltage ladder (ascending, last = nominal).
+    pub voltages: Vec<f64>,
+    /// Monte-Carlo vectors per voltage level (paper: 10^6).
+    pub characterize_samples: u64,
+    /// MSE-increment upper bounds, as *fractions* of the nominal test MSE
+    /// (paper sweeps 1 %…1000 % → 0.01…10.0).
+    pub mse_ub_fractions: Vec<f64>,
+    pub solver: Solver,
+    pub seed: u64,
+    /// Directory for artifacts (models, error models, HLO).
+    pub artifacts_dir: String,
+    /// Validation repetitions per budget (noise is stochastic).
+    pub validation_runs: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            model: "fc_mnist".into(),
+            activation: Activation::Linear,
+            train_samples: 4000,
+            test_samples: 1000,
+            epochs: 6,
+            voltages: vec![0.5, 0.6, 0.7, 0.8],
+            characterize_samples: 200_000,
+            mse_ub_fractions: vec![0.01, 0.1, 0.5, 1.0, 2.0, 5.0, 10.0],
+            solver: Solver::Ilp,
+            seed: 0xA11CE,
+            artifacts_dir: "artifacts".into(),
+            validation_runs: 3,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Small/fast preset for tests and smoke runs.
+    pub fn smoke() -> Self {
+        Self {
+            train_samples: 600,
+            test_samples: 200,
+            epochs: 2,
+            characterize_samples: 30_000,
+            mse_ub_fractions: vec![0.1, 2.0],
+            validation_runs: 1,
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("activation", Json::Str(self.activation.name().into())),
+            ("train_samples", Json::Num(self.train_samples as f64)),
+            ("test_samples", Json::Num(self.test_samples as f64)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("voltages", Json::arr_f64(&self.voltages)),
+            ("characterize_samples", Json::Num(self.characterize_samples as f64)),
+            ("mse_ub_fractions", Json::arr_f64(&self.mse_ub_fractions)),
+            (
+                "solver",
+                Json::Str(
+                    match self.solver {
+                        Solver::Ilp => "ilp",
+                        Solver::Greedy => "greedy",
+                        Solver::Genetic => "genetic",
+                    }
+                    .into(),
+                ),
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+            ("validation_runs", Json::Num(self.validation_runs as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            model: j.opt("model").map(|v| v.as_str().map(String::from)).transpose()?.unwrap_or(d.model),
+            activation: match j.opt("activation") {
+                Some(v) => Activation::from_name(v.as_str()?)?,
+                None => d.activation,
+            },
+            train_samples: opt_usize(j, "train_samples", d.train_samples)?,
+            test_samples: opt_usize(j, "test_samples", d.test_samples)?,
+            epochs: opt_usize(j, "epochs", d.epochs)?,
+            voltages: match j.opt("voltages") {
+                Some(v) => v.as_f64_vec()?,
+                None => d.voltages,
+            },
+            characterize_samples: opt_usize(j, "characterize_samples", d.characterize_samples as usize)? as u64,
+            mse_ub_fractions: match j.opt("mse_ub_fractions") {
+                Some(v) => v.as_f64_vec()?,
+                None => d.mse_ub_fractions,
+            },
+            solver: match j.opt("solver") {
+                Some(v) => Solver::from_name(v.as_str()?)?,
+                None => d.solver,
+            },
+            seed: opt_usize(j, "seed", d.seed as usize)? as u64,
+            artifacts_dir: j
+                .opt("artifacts_dir")
+                .map(|v| v.as_str().map(String::from))
+                .transpose()?
+                .unwrap_or(d.artifacts_dir),
+            validation_runs: opt_usize(j, "validation_runs", d.validation_runs)?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_json(&crate::util::json::read_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        crate::util::json::write_file(path, &self.to_json())
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> anyhow::Result<usize> {
+    match j.opt(key) {
+        Some(v) => Ok(v.as_usize()?),
+        None => Ok(default),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_json() {
+        let mut c = ExperimentConfig::default();
+        c.model = "lenet5".into();
+        c.solver = Solver::Greedy;
+        c.mse_ub_fractions = vec![0.5];
+        let j = c.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.model, "lenet5");
+        assert_eq!(back.solver, Solver::Greedy);
+        assert_eq!(back.mse_ub_fractions, vec![0.5]);
+        assert_eq!(back.voltages, c.voltages);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"model": "resnet_tiny"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "resnet_tiny");
+        assert_eq!(c.epochs, ExperimentConfig::default().epochs);
+        assert_eq!(c.voltages, vec![0.5, 0.6, 0.7, 0.8]);
+    }
+
+    #[test]
+    fn bad_solver_rejected() {
+        let j = Json::parse(r#"{"solver": "quantum"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("xtpu_cfg_test");
+        let path = dir.join("cfg.json");
+        let c = ExperimentConfig::smoke();
+        c.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(back.train_samples, c.train_samples);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,475 @@
+//! Statistical error modeling of processing elements (paper §IV.B, §V.B).
+//!
+//! For each overscaled voltage we Monte-Carlo the PE multiplier through the
+//! gate-level VOS simulator with random int8 operand streams (the paper uses
+//! 10^6 uniform random vectors) and fit the first four moments of
+//! `e = captured − exact`. Because VOS is applied to the multiplier only,
+//! per-PE errors are independent, so a column of `k` PEs composes as
+//! `E(e_c) = k·E(e)` and `Var(e_c) = k·Var(e)` (eqs 11–13) — the quantities
+//! Table 2 and Fig 9b report, and the inputs to the ILP constraint (eq 29).
+
+use crate::timing::gate::{i64_to_bits, Netlist};
+use crate::timing::sta::{clock_period, ChipInstance};
+use crate::timing::voltage::{Technology, VoltageLadder};
+use crate::timing::vos::VosSimulator;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::stats::{Histogram, RunningMoments};
+use crate::util::threadpool::parallel_chunks;
+
+/// Fitted statistical error model of a single PE multiplier at one voltage.
+#[derive(Clone, Debug)]
+pub struct ErrorModel {
+    pub volts: f64,
+    pub mean: f64,
+    /// Bessel-corrected sample variance (paper eq. 24).
+    pub variance: f64,
+    pub skewness: f64,
+    pub kurtosis_excess: f64,
+    /// Fraction of cycles with at least one late output bit.
+    pub error_rate: f64,
+    pub samples: u64,
+}
+
+impl ErrorModel {
+    pub fn std_dev(&self) -> f64 {
+        self.variance.sqrt()
+    }
+
+    /// Column composition (paper eqs 12–13): mean and variance of the sum of
+    /// `k` independent PE errors.
+    pub fn column_mean(&self, k: usize) -> f64 {
+        self.mean * k as f64
+    }
+
+    pub fn column_variance(&self, k: usize) -> f64 {
+        self.variance * k as f64
+    }
+
+    /// Draw one column error sample (normal approximation, justified by the
+    /// CLT over k independent PE errors — and validated in tests against the
+    /// direct gate-level column simulation).
+    pub fn sample_column_error(&self, k: usize, rng: &mut Xoshiro256pp) -> f64 {
+        rng.gaussian(self.column_mean(k), self.column_variance(k).sqrt())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("volts", Json::Num(self.volts)),
+            ("mean", Json::Num(self.mean)),
+            ("variance", Json::Num(self.variance)),
+            ("skewness", Json::Num(self.skewness)),
+            ("kurtosis_excess", Json::Num(self.kurtosis_excess)),
+            ("error_rate", Json::Num(self.error_rate)),
+            ("samples", Json::Num(self.samples as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            volts: j.get("volts")?.as_f64()?,
+            mean: j.get("mean")?.as_f64()?,
+            variance: j.get("variance")?.as_f64()?,
+            skewness: j.get("skewness")?.as_f64()?,
+            kurtosis_excess: j.get("kurtosis_excess")?.as_f64()?,
+            error_rate: j.get("error_rate")?.as_f64()?,
+            samples: j.get("samples")?.as_u64()?,
+        })
+    }
+}
+
+/// Options for the Monte-Carlo characterization pass.
+#[derive(Clone, Copy, Debug)]
+pub struct CharacterizeOptions {
+    /// Input vectors per voltage (paper: 10^6).
+    pub samples: u64,
+    /// RNG seed (chip instance + stimulus).
+    pub seed: u64,
+    /// Optional aged threshold-voltage shift applied to gate delays.
+    pub delta_vth: f64,
+    /// Optional clock override (normalized units); `None` derives the clock
+    /// from the nominal-voltage critical path as the TPU would.
+    pub clock_override: Option<f32>,
+}
+
+impl Default for CharacterizeOptions {
+    fn default() -> Self {
+        Self { samples: 1_000_000, seed: 0xC0FFEE, delta_vth: 0.0, clock_override: None }
+    }
+}
+
+/// Monte-Carlo characterization of the multiplier at one voltage.
+/// Parallelized across cores; each worker owns a simulator instance and the
+/// per-worker moment accumulators merge exactly (Chan et al.).
+pub fn characterize_voltage(
+    netlist: &Netlist,
+    chip: &ChipInstance,
+    tech: &Technology,
+    volts: f64,
+    opts: &CharacterizeOptions,
+) -> ErrorModel {
+    let clock = opts
+        .clock_override
+        .unwrap_or_else(|| clock_period(netlist, chip, tech));
+    let delays = if opts.delta_vth != 0.0 {
+        chip.delays_at_aged(netlist, tech, volts, opts.delta_vth)
+    } else {
+        chip.delays_at(netlist, tech, volts)
+    };
+    let n_workers_samples = opts.samples as usize;
+    let parts = parallel_chunks(n_workers_samples, |range, worker| {
+        let mut sim =
+            VosSimulator::new(netlist, delays.clone(), clock).without_toggle_tracking();
+        let mut rng = Xoshiro256pp::seeded(opts.seed ^ ((worker as u64 + 1) * 0x9E37_79B9));
+        let mut moments = RunningMoments::new();
+        let mut erroneous = 0u64;
+        // Reused input buffer — no per-sample allocation in the hot loop.
+        let mut bits = [false; 16];
+        // Warm-up vector (not counted).
+        sim.step(&mult_input_bits(rng.range_i64(-128, 127), rng.range_i64(-128, 127)));
+        for _ in range {
+            let a = rng.range_i64(-128, 127);
+            let w = rng.range_i64(-128, 127);
+            fill_mult_bits(&mut bits, a, w);
+            sim.step(&bits);
+            let err = (sim.captured_i64() - a * w) as f64;
+            if err != 0.0 {
+                erroneous += 1;
+            }
+            moments.push(err);
+        }
+        (moments, erroneous)
+    });
+    let mut moments = RunningMoments::new();
+    let mut erroneous = 0u64;
+    for (m, e) in parts {
+        moments.merge(&m);
+        erroneous += e;
+    }
+    ErrorModel {
+        volts,
+        mean: moments.mean(),
+        variance: moments.variance(),
+        skewness: moments.skewness(),
+        kurtosis_excess: moments.kurtosis_excess(),
+        error_rate: erroneous as f64 / moments.count().max(1) as f64,
+        samples: moments.count(),
+    }
+}
+
+/// Same pass but also fills a histogram (Fig 9a) — single-threaded variant
+/// used by the figure bench.
+pub fn characterize_with_histogram(
+    netlist: &Netlist,
+    chip: &ChipInstance,
+    tech: &Technology,
+    volts: f64,
+    samples: u64,
+    seed: u64,
+    hist: &mut Histogram,
+) -> ErrorModel {
+    let clock = clock_period(netlist, chip, tech);
+    let mut sim = VosSimulator::new(netlist, chip.delays_at(netlist, tech, volts), clock);
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let mut moments = RunningMoments::new();
+    let mut erroneous = 0u64;
+    sim.step(&mult_input_bits(1, 1));
+    for _ in 0..samples {
+        let a = rng.range_i64(-128, 127);
+        let w = rng.range_i64(-128, 127);
+        sim.step(&mult_input_bits(a, w));
+        let err = (sim.captured_i64() - a * w) as f64;
+        if err != 0.0 {
+            erroneous += 1;
+        }
+        moments.push(err);
+        hist.push(err);
+    }
+    ErrorModel {
+        volts,
+        mean: moments.mean(),
+        variance: moments.variance(),
+        skewness: moments.skewness(),
+        kurtosis_excess: moments.kurtosis_excess(),
+        error_rate: erroneous as f64 / samples.max(1) as f64,
+        samples,
+    }
+}
+
+#[inline]
+pub fn mult_input_bits(a: i64, w: i64) -> Vec<bool> {
+    let mut bits = i64_to_bits(a, 8);
+    bits.extend(i64_to_bits(w, 8));
+    bits
+}
+
+/// Allocation-free variant for hot loops.
+#[inline]
+pub fn fill_mult_bits(bits: &mut [bool; 16], a: i64, w: i64) {
+    for i in 0..8 {
+        bits[i] = (a >> i) & 1 == 1;
+        bits[8 + i] = (w >> i) & 1 == 1;
+    }
+}
+
+/// Direct gate-level simulation of a *column* of `k` independent PEs:
+/// returns the Bessel-corrected variance of the summed error. Used to
+/// validate the k·Var(e) composition law (Fig 9b / Table 2).
+pub fn simulate_column_variance(
+    netlist: &Netlist,
+    chip: &ChipInstance,
+    tech: &Technology,
+    volts: f64,
+    k: usize,
+    samples: u64,
+    seed: u64,
+) -> f64 {
+    let clock = clock_period(netlist, chip, tech);
+    let delays = chip.delays_at(netlist, tech, volts);
+    let mut sims: Vec<VosSimulator> =
+        (0..k).map(|_| VosSimulator::new(netlist, delays.clone(), clock)).collect();
+    let mut rng = Xoshiro256pp::seeded(seed);
+    for sim in sims.iter_mut() {
+        sim.step(&mult_input_bits(rng.range_i64(-128, 127), rng.range_i64(-128, 127)));
+    }
+    let mut moments = RunningMoments::new();
+    for _ in 0..samples {
+        let mut column_err = 0i64;
+        for sim in sims.iter_mut() {
+            let a = rng.range_i64(-128, 127);
+            let w = rng.range_i64(-128, 127);
+            sim.step(&mult_input_bits(a, w));
+            column_err += sim.captured_i64() - a * w;
+        }
+        moments.push(column_err as f64);
+    }
+    moments.variance()
+}
+
+/// Registry of error models per voltage level — the artifact the rest of the
+/// framework (ES computation, ILP constraint, runtime injection) consumes.
+#[derive(Clone, Debug)]
+pub struct ErrorModelRegistry {
+    /// Sorted by ladder index (ascending voltage), one per ladder level.
+    models: Vec<ErrorModel>,
+    pub ladder: VoltageLadder,
+}
+
+impl ErrorModelRegistry {
+    /// Characterize every level of the ladder on the given multiplier.
+    ///
+    /// The nominal (top) level is exact by definition: the shipped clock is
+    /// binned to meet timing at nominal voltage (any residual tail events
+    /// our finite-stimulus binning misses are covered by the guard band in
+    /// real sign-off), so its model is pinned to zero error rather than
+    /// carrying Monte-Carlo sampling noise into the ILP constraint.
+    pub fn characterize(
+        netlist: &Netlist,
+        chip: &ChipInstance,
+        ladder: &VoltageLadder,
+        opts: &CharacterizeOptions,
+    ) -> Self {
+        let models = ladder
+            .levels()
+            .iter()
+            .map(|lv| {
+                if lv.is_nominal(&ladder.tech) {
+                    ErrorModel {
+                        volts: lv.volts,
+                        mean: 0.0,
+                        variance: 0.0,
+                        skewness: 0.0,
+                        kurtosis_excess: 0.0,
+                        error_rate: 0.0,
+                        samples: opts.samples,
+                    }
+                } else {
+                    characterize_voltage(netlist, chip, &ladder.tech, lv.volts, opts)
+                }
+            })
+            .collect();
+        Self { models, ladder: ladder.clone() }
+    }
+
+    pub fn models(&self) -> &[ErrorModel] {
+        &self.models
+    }
+
+    pub fn model(&self, level_index: usize) -> &ErrorModel {
+        &self.models[level_index]
+    }
+
+    /// The per-level column variances for a column of height `k` — the
+    /// `k_n · var(e)_v` coefficients of eq. 29.
+    pub fn column_variances(&self, k: usize) -> Vec<f64> {
+        self.models.iter().map(|m| m.column_variance(k)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "voltages",
+                Json::arr_f64(
+                    &self.ladder.levels().iter().map(|l| l.volts).collect::<Vec<_>>(),
+                ),
+            ),
+            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json, tech: Technology) -> anyhow::Result<Self> {
+        let volts = j.get("voltages")?.as_f64_vec()?;
+        let ladder = VoltageLadder::new(&volts, tech);
+        let models = j
+            .get("models")?
+            .as_arr()?
+            .iter()
+            .map(ErrorModel::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(models.len() == ladder.len(), "model/ladder length mismatch");
+        for (m, l) in models.iter().zip(ladder.levels()) {
+            anyhow::ensure!((m.volts - l.volts).abs() < 1e-9, "voltage order mismatch");
+        }
+        Ok(Self { models, ladder })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        crate::util::json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &std::path::Path, tech: Technology) -> anyhow::Result<Self> {
+        Self::from_json(&crate::util::json::read_file(path)?, tech)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::circuits::baugh_wooley_8x8;
+
+    fn setup() -> (Netlist, ChipInstance, Technology) {
+        let n = baugh_wooley_8x8("bw_em");
+        let tech = Technology::default();
+        let mut rng = Xoshiro256pp::seeded(1234);
+        let chip = ChipInstance::sample(&n, &tech, &mut rng);
+        (n, chip, tech)
+    }
+
+    fn quick_opts(samples: u64) -> CharacterizeOptions {
+        CharacterizeOptions { samples, seed: 77, ..Default::default() }
+    }
+
+    #[test]
+    fn nominal_model_is_exact() {
+        let (n, chip, tech) = setup();
+        let m = characterize_voltage(&n, &chip, &tech, 0.8, &quick_opts(20_000));
+        assert_eq!(m.error_rate, 0.0);
+        assert_eq!(m.variance, 0.0);
+        assert_eq!(m.mean, 0.0);
+    }
+
+    #[test]
+    fn variance_grows_as_voltage_drops() {
+        let (n, chip, tech) = setup();
+        let m7 = characterize_voltage(&n, &chip, &tech, 0.7, &quick_opts(30_000));
+        let m6 = characterize_voltage(&n, &chip, &tech, 0.6, &quick_opts(30_000));
+        let m5 = characterize_voltage(&n, &chip, &tech, 0.5, &quick_opts(30_000));
+        assert!(
+            m5.variance > m6.variance && m6.variance >= m7.variance,
+            "var: 0.5V={} 0.6V={} 0.7V={}",
+            m5.variance,
+            m6.variance,
+            m7.variance
+        );
+        assert!(m5.error_rate > 0.0);
+        // Table-2 scale check: 0.5 V variance should be order 10^5–10^7 for
+        // an int8 multiplier (product magnitude ≤ 16384).
+        assert!(m5.variance > 1e4, "var(0.5V) = {}", m5.variance);
+    }
+
+    #[test]
+    fn errors_roughly_zero_mean() {
+        let (n, chip, tech) = setup();
+        let m = characterize_voltage(&n, &chip, &tech, 0.5, &quick_opts(50_000));
+        // |mean| should be small relative to std dev (paper assumes E(e)=0).
+        assert!(m.mean.abs() < 0.2 * m.std_dev(), "mean={} std={}", m.mean, m.std_dev());
+    }
+
+    #[test]
+    fn parallel_characterization_is_deterministic() {
+        let (n, chip, tech) = setup();
+        let a = characterize_voltage(&n, &chip, &tech, 0.6, &quick_opts(20_000));
+        let b = characterize_voltage(&n, &chip, &tech, 0.6, &quick_opts(20_000));
+        assert_eq!(a.samples, b.samples);
+        // Worker split depends on core count, but the seed per worker is
+        // fixed, so repeated runs on the same machine agree exactly.
+        assert_eq!(a.variance, b.variance);
+        assert_eq!(a.error_rate, b.error_rate);
+    }
+
+    #[test]
+    fn column_composition_matches_direct_simulation() {
+        // Use 0.5 V where the error rate is high enough for stable
+        // statistics at test-scale sample counts (the bench reruns this at
+        // paper scale for every voltage).
+        let (n, chip, tech) = setup();
+        let m = characterize_voltage(&n, &chip, &tech, 0.5, &quick_opts(60_000));
+        assert!(m.error_rate > 1e-3, "0.5 V error rate too low for this check");
+        for k in [2usize, 8] {
+            let direct = simulate_column_variance(&n, &chip, &tech, 0.5, k, 20_000, 5);
+            let composed = m.column_variance(k);
+            let ratio = direct / composed;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "k={k}: direct={direct:.3e} composed={composed:.3e} ratio={ratio:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_characterization_consistent() {
+        let (n, chip, tech) = setup();
+        let mut hist = Histogram::new(-20000.0, 20000.0, 64);
+        let m = characterize_with_histogram(&n, &chip, &tech, 0.5, 20_000, 9, &mut hist);
+        assert_eq!(hist.count(), 20_000);
+        assert!(m.variance > 0.0);
+    }
+
+    #[test]
+    fn registry_roundtrip_json() {
+        let (n, chip, _tech) = setup();
+        let ladder = VoltageLadder::paper_default();
+        let reg =
+            ErrorModelRegistry::characterize(&n, &chip, &ladder, &quick_opts(5_000));
+        assert_eq!(reg.models().len(), 4);
+        let j = reg.to_json();
+        let back = ErrorModelRegistry::from_json(&j, ladder.tech).unwrap();
+        for (a, b) in reg.models().iter().zip(back.models()) {
+            assert_eq!(a.volts, b.volts);
+            assert_eq!(a.variance, b.variance);
+            assert_eq!(a.samples, b.samples);
+        }
+        let vars = back.column_variances(128);
+        assert_eq!(vars.len(), 4);
+        assert!(vars[0] > vars[2], "0.5 V column variance must exceed 0.7 V");
+        assert_eq!(vars[3], 0.0, "nominal level contributes no error");
+    }
+
+    #[test]
+    fn sample_column_error_statistics() {
+        let m = ErrorModel {
+            volts: 0.6,
+            mean: 0.0,
+            variance: 100.0,
+            skewness: 0.0,
+            kurtosis_excess: 0.0,
+            error_rate: 0.1,
+            samples: 1000,
+        };
+        let mut rng = Xoshiro256pp::seeded(3);
+        let samples: Vec<f64> =
+            (0..50_000).map(|_| m.sample_column_error(16, &mut rng)).collect();
+        let var = crate::util::stats::variance(&samples);
+        assert!((var / (16.0 * 100.0) - 1.0).abs() < 0.05, "var={var}");
+    }
+}

@@ -1,0 +1,194 @@
+//! Genetic-algorithm baseline for the voltage assignment.
+//!
+//! The paper argues (§IV.D) that evolutionary methods like the GA used in
+//! ref [13] "cannot guarantee the optimal solution for the zero/one
+//! problems" — this module exists to reproduce that comparison in the
+//! ablation bench (`benches/ablation_solvers.rs`).
+
+use super::mckp::{MckpError, MckpInstance, MckpSolution};
+use crate::util::rng::Xoshiro256pp;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_rate: f64,
+    pub mutation_rate: f64,
+    pub tournament: usize,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        Self {
+            population: 64,
+            generations: 200,
+            crossover_rate: 0.9,
+            mutation_rate: 0.05,
+            tournament: 3,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Penalized fitness: cost + big multiplier on budget violation (standard
+/// constraint handling for GAs).
+fn fitness(inst: &MckpInstance, genome: &[usize]) -> (f64, f64, f64) {
+    let mut cost = 0.0;
+    let mut weight = 0.0;
+    for (g, &c) in genome.iter().enumerate() {
+        cost += inst.cost[g][c];
+        weight += inst.weight[g][c];
+    }
+    let violation = (weight - inst.budget).max(0.0);
+    let max_cost: f64 = inst
+        .cost
+        .iter()
+        .map(|g| g.iter().cloned().fold(f64::NEG_INFINITY, f64::max))
+        .sum();
+    (cost + violation * (max_cost + 1.0), cost, weight)
+}
+
+pub fn solve_genetic(inst: &MckpInstance, cfg: &GaConfig) -> Result<MckpSolution, MckpError> {
+    let groups = inst.cost.len();
+    if groups == 0 {
+        return Err(MckpError::Malformed("empty instance".into()));
+    }
+    let mut rng = Xoshiro256pp::seeded(cfg.seed);
+    // Init population: random genomes plus the all-min-weight genome so a
+    // feasible individual exists whenever the instance is feasible.
+    let min_weight_genome: Vec<usize> = (0..groups)
+        .map(|g| {
+            (0..inst.weight[g].len())
+                .min_by(|&a, &b| inst.weight[g][a].partial_cmp(&inst.weight[g][b]).unwrap())
+                .unwrap()
+        })
+        .collect();
+    let feasible_floor: f64 =
+        min_weight_genome.iter().enumerate().map(|(g, &c)| inst.weight[g][c]).sum();
+    if feasible_floor > inst.budget + 1e-12 {
+        return Err(MckpError::Infeasible(feasible_floor - inst.budget));
+    }
+    let mut pop: Vec<Vec<usize>> = (0..cfg.population)
+        .map(|i| {
+            if i == 0 {
+                min_weight_genome.clone()
+            } else {
+                (0..groups).map(|g| rng.index(inst.cost[g].len())).collect()
+            }
+        })
+        .collect();
+    let mut best = min_weight_genome.clone();
+    let mut best_fit = fitness(inst, &best);
+    // Track the best *feasible* genome separately: the penalty formulation
+    // can rank a slightly-infeasible genome above the feasible elite, and
+    // only feasible solutions may be returned.
+    let mut best_feasible = min_weight_genome.clone();
+    let mut best_feasible_cost = best_fit.1;
+    let mut evals = cfg.population as u64;
+    for _gen in 0..cfg.generations {
+        let fits: Vec<(f64, f64, f64)> = pop.iter().map(|g| fitness(inst, g)).collect();
+        for (genome, fit) in pop.iter().zip(&fits) {
+            if fit.0 < best_fit.0 {
+                best_fit = *fit;
+                best = genome.clone();
+            }
+            if fit.2 <= inst.budget + 1e-12 && fit.1 < best_feasible_cost {
+                best_feasible_cost = fit.1;
+                best_feasible = genome.clone();
+            }
+        }
+        let mut next = Vec::with_capacity(cfg.population);
+        next.push(best.clone()); // elitism
+        while next.len() < cfg.population {
+            let pick = |rng: &mut Xoshiro256pp| {
+                let mut winner = rng.index(pop.len());
+                for _ in 1..cfg.tournament {
+                    let c = rng.index(pop.len());
+                    if fits[c].0 < fits[winner].0 {
+                        winner = c;
+                    }
+                }
+                winner
+            };
+            let a = pick(&mut rng);
+            let b = pick(&mut rng);
+            let mut child: Vec<usize> = if rng.chance(cfg.crossover_rate) {
+                let cut = rng.index(groups.max(1));
+                pop[a][..cut].iter().chain(pop[b][cut..].iter()).copied().collect()
+            } else {
+                pop[a].clone()
+            };
+            for (g, gene) in child.iter_mut().enumerate() {
+                if rng.chance(cfg.mutation_rate) {
+                    *gene = rng.index(inst.cost[g].len());
+                }
+            }
+            next.push(child);
+        }
+        evals += cfg.population as u64;
+        pop = next;
+    }
+    let (_, cost, weight) = fitness(inst, &best_feasible);
+    debug_assert!(weight <= inst.budget + 1e-9);
+    Ok(MckpSolution {
+        choice: best_feasible,
+        total_cost: cost,
+        total_weight: weight,
+        optimal: false,
+        nodes_explored: evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::mckp::solve_mckp;
+
+    fn instance() -> MckpInstance {
+        MckpInstance {
+            cost: (0..15).map(|_| vec![1.0, 2.0, 3.0, 4.0]).collect(),
+            weight: (0..15).map(|_| vec![9.0, 4.0, 1.0, 0.0]).collect(),
+            budget: 30.0,
+        }
+    }
+
+    #[test]
+    fn ga_finds_feasible_solution() {
+        let inst = instance();
+        let sol = solve_genetic(&inst, &GaConfig::default()).unwrap();
+        assert!(sol.total_weight <= inst.budget + 1e-9);
+        assert!(!sol.optimal);
+    }
+
+    #[test]
+    fn ga_never_beats_exact() {
+        let inst = instance();
+        let exact = solve_mckp(&inst).unwrap();
+        for seed in [1u64, 2, 3] {
+            let ga = solve_genetic(&inst, &GaConfig { seed, ..Default::default() }).unwrap();
+            assert!(ga.total_cost >= exact.total_cost - 1e-9);
+        }
+    }
+
+    #[test]
+    fn ga_deterministic_per_seed() {
+        let inst = instance();
+        let a = solve_genetic(&inst, &GaConfig::default()).unwrap();
+        let b = solve_genetic(&inst, &GaConfig::default()).unwrap();
+        assert_eq!(a.choice, b.choice);
+    }
+
+    #[test]
+    fn ga_infeasible_detected() {
+        let inst = MckpInstance {
+            cost: vec![vec![1.0, 2.0]],
+            weight: vec![vec![5.0, 6.0]],
+            budget: 4.0,
+        };
+        assert!(matches!(
+            solve_genetic(&inst, &GaConfig::default()),
+            Err(MckpError::Infeasible(_))
+        ));
+    }
+}

@@ -1,0 +1,132 @@
+//! Greedy heuristic for the MCKP voltage assignment — the fallback the
+//! paper suggests "in the cases that the solution time of the ILP problem
+//! becomes too much" (§V.A).
+//!
+//! Strategy: start from the safest (max-cost, min-weight) choice in every
+//! group, then repeatedly apply the downgrade with the best cost-saving per
+//! unit of weight increase that still fits the budget. O(total options ·
+//! iterations); no optimality guarantee (see the ablation bench).
+
+use super::mckp::{MckpError, MckpInstance, MckpSolution};
+
+pub fn solve_greedy(inst: &MckpInstance) -> Result<MckpSolution, MckpError> {
+    let groups = inst.cost.len();
+    if groups == 0 || inst.cost.len() != inst.weight.len() {
+        return Err(MckpError::Malformed("empty or mismatched instance".into()));
+    }
+    // Start: min-weight option per group (break ties on lower cost).
+    let mut choice: Vec<usize> = Vec::with_capacity(groups);
+    for g in 0..groups {
+        let mut best = 0usize;
+        for i in 1..inst.weight[g].len() {
+            let better_weight = inst.weight[g][i] < inst.weight[g][best] - 1e-15;
+            let tie_cheaper = (inst.weight[g][i] - inst.weight[g][best]).abs() <= 1e-15
+                && inst.cost[g][i] < inst.cost[g][best];
+            if better_weight || tie_cheaper {
+                best = i;
+            }
+        }
+        choice.push(best);
+    }
+    let mut weight: f64 = choice.iter().enumerate().map(|(g, &c)| inst.weight[g][c]).sum();
+    let mut cost: f64 = choice.iter().enumerate().map(|(g, &c)| inst.cost[g][c]).sum();
+    if weight > inst.budget + 1e-12 {
+        return Err(MckpError::Infeasible(weight - inst.budget));
+    }
+    // Iterative improvement.
+    loop {
+        let mut best_move: Option<(usize, usize, f64)> = None;
+        for g in 0..groups {
+            let ci = choice[g];
+            for i in 0..inst.cost[g].len() {
+                if i == ci {
+                    continue;
+                }
+                let dc = inst.cost[g][ci] - inst.cost[g][i]; // saving
+                let dw = inst.weight[g][i] - inst.weight[g][ci]; // extra weight
+                if dc <= 1e-15 {
+                    continue;
+                }
+                if weight + dw <= inst.budget + 1e-12 {
+                    let ratio = dc / dw.max(1e-12);
+                    if best_move.map_or(true, |b| ratio > b.2) {
+                        best_move = Some((g, i, ratio));
+                    }
+                }
+            }
+        }
+        match best_move {
+            Some((g, i, _)) => {
+                weight += inst.weight[g][i] - inst.weight[g][choice[g]];
+                cost -= inst.cost[g][choice[g]] - inst.cost[g][i];
+                choice[g] = i;
+            }
+            None => break,
+        }
+    }
+    Ok(MckpSolution {
+        choice,
+        total_cost: cost,
+        total_weight: weight,
+        optimal: false,
+        nodes_explored: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::mckp::solve_mckp;
+    use crate::util::checks::property;
+
+    #[test]
+    fn greedy_feasible_and_no_better_than_exact() {
+        property("greedy ≥ exact, feasible", 40, |rng, _| {
+            let groups = 1 + rng.index(6);
+            let opts = 2 + rng.index(3);
+            let cost: Vec<Vec<f64>> = (0..groups)
+                .map(|_| (0..opts).map(|_| rng.range_f64(0.1, 10.0)).collect())
+                .collect();
+            let weight: Vec<Vec<f64>> = (0..groups)
+                .map(|_| (0..opts).map(|_| rng.range_f64(0.0, 5.0)).collect())
+                .collect();
+            let min_w: f64 =
+                weight.iter().map(|g| g.iter().cloned().fold(f64::INFINITY, f64::min)).sum();
+            let budget = min_w + rng.range_f64(0.0, 5.0 * groups as f64);
+            let inst = MckpInstance { cost, weight, budget };
+            let g = solve_greedy(&inst).unwrap();
+            let e = solve_mckp(&inst).unwrap();
+            assert!(g.total_weight <= inst.budget + 1e-9);
+            assert!(
+                g.total_cost >= e.total_cost - 1e-9,
+                "greedy {} beat exact {}?!",
+                g.total_cost,
+                e.total_cost
+            );
+        });
+    }
+
+    #[test]
+    fn greedy_reaches_optimum_on_uniform_structure() {
+        // With identical monotone groups the greedy is optimal.
+        let groups = 10;
+        let inst = MckpInstance {
+            cost: (0..groups).map(|_| vec![1.0, 2.0, 4.0]).collect(),
+            weight: (0..groups).map(|_| vec![6.0, 2.0, 0.0]).collect(),
+            budget: 20.0,
+        };
+        let g = solve_greedy(&inst).unwrap();
+        let e = solve_mckp(&inst).unwrap();
+        assert!((g.total_cost - e.total_cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_reported() {
+        let inst = MckpInstance {
+            cost: vec![vec![1.0]],
+            weight: vec![vec![10.0]],
+            budget: 1.0,
+        };
+        assert!(matches!(solve_greedy(&inst), Err(MckpError::Infeasible(_))));
+    }
+}

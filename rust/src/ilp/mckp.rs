@@ -1,0 +1,479 @@
+//! Exact multiple-choice knapsack solver (branch-and-bound).
+//!
+//! Formulation (minimization form of the paper's eqs 20/22/29):
+//!
+//! ```text
+//! minimize   Σ_g cost[g][choice_g]
+//! subject to Σ_g weight[g][choice_g] ≤ budget
+//!            exactly one choice per group g
+//! ```
+//!
+//! For the X-TPU: groups = neurons, choices = voltage levels,
+//! cost = neuron energy at that voltage, weight = ES²·k·var(e)_v (the
+//! neuron's contribution to output MSE), budget = MSE_UB.
+//!
+//! Algorithm: per-group dominance pruning, greedy LP relaxation on
+//! incremental efficiencies for the lower bound, then depth-first
+//! branch-and-bound over groups in descending cost-spread order.
+
+/// Problem instance. `cost[g][i]` and `weight[g][i]` must have identical
+/// shapes; weights and costs must be non-negative.
+#[derive(Clone, Debug)]
+pub struct MckpInstance {
+    pub cost: Vec<Vec<f64>>,
+    pub weight: Vec<Vec<f64>>,
+    pub budget: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct MckpSolution {
+    /// Chosen option index per group (indices into the *original* arrays).
+    pub choice: Vec<usize>,
+    pub total_cost: f64,
+    pub total_weight: f64,
+    /// True when the branch-and-bound proved optimality (always, unless the
+    /// instance was infeasible).
+    pub optimal: bool,
+    /// Search statistics.
+    pub nodes_explored: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum MckpError {
+    #[error("infeasible: even the lightest choices exceed the budget by {0}")]
+    Infeasible(f64),
+    #[error("malformed instance: {0}")]
+    Malformed(String),
+}
+
+/// One surviving (non-dominated) option after preprocessing.
+#[derive(Clone, Copy, Debug)]
+struct Opt {
+    cost: f64,
+    weight: f64,
+    orig: usize,
+}
+
+/// Solve to proven optimality.
+pub fn solve_mckp(inst: &MckpInstance) -> Result<MckpSolution, MckpError> {
+    validate(inst)?;
+    let groups = preprocess(inst);
+    // Feasibility: min-weight choice per group.
+    let min_weight_sum: f64 =
+        groups.iter().map(|g| g.iter().map(|o| o.weight).fold(f64::INFINITY, f64::min)).sum();
+    if min_weight_sum > inst.budget + 1e-12 {
+        return Err(MckpError::Infeasible(min_weight_sum - inst.budget));
+    }
+
+    // Order groups by descending cost spread so branching decisions with the
+    // biggest objective impact happen near the root.
+    let mut order: Vec<usize> = (0..groups.len()).collect();
+    let spread = |g: &[Opt]| {
+        let lo = g.iter().map(|o| o.cost).fold(f64::INFINITY, f64::min);
+        let hi = g.iter().map(|o| o.cost).fold(f64::NEG_INFINITY, f64::max);
+        hi - lo
+    };
+    order.sort_by(|&a, &b| spread(&groups[b]).partial_cmp(&spread(&groups[a])).unwrap());
+    let ordered: Vec<&Vec<Opt>> = order.iter().map(|&i| &groups[i]).collect();
+
+    // Incumbent from the greedy LP rounding.
+    let (mut best_choice, mut best_cost) = greedy_incumbent(&ordered, inst.budget)
+        .ok_or(MckpError::Infeasible(0.0))?;
+
+    // Suffix bounds: for groups ordered[d..], the minimum possible extra
+    // cost and minimum possible extra weight.
+    let n = ordered.len();
+    let mut suffix_min_cost = vec![0.0f64; n + 1];
+    let mut suffix_min_weight = vec![0.0f64; n + 1];
+    for d in (0..n).rev() {
+        suffix_min_cost[d] = suffix_min_cost[d + 1]
+            + ordered[d].iter().map(|o| o.cost).fold(f64::INFINITY, f64::min);
+        suffix_min_weight[d] = suffix_min_weight[d + 1]
+            + ordered[d].iter().map(|o| o.weight).fold(f64::INFINITY, f64::min);
+    }
+
+    // Precompute, per depth, the LP-relaxation upgrade steps of the suffix
+    // groups, sorted by cost-per-unit-weight-reduction. This makes the LP
+    // bound O(|steps|) at every node instead of an O(S log S) rebuild.
+    let mut steps_by_depth: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n + 1];
+    // Suffix weight of the min-COST (index 0) choices, used by the LP bound.
+    let mut suffix_mincost_weight = vec![0.0f64; n + 1];
+    for d in (0..n).rev() {
+        suffix_mincost_weight[d] = suffix_mincost_weight[d + 1] + ordered[d][0].weight;
+        let mut steps = steps_by_depth[d + 1].clone();
+        for win in ordered[d].windows(2) {
+            let dc = win[1].cost - win[0].cost;
+            let dw = win[0].weight - win[1].weight;
+            if dw > 0.0 {
+                steps.push((dc / dw, dw));
+            }
+        }
+        steps.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        steps_by_depth[d] = steps;
+    }
+
+    let mut nodes = 0u64;
+    let mut cur = vec![0usize; n];
+    let mut ctx = DfsCtx {
+        groups: &ordered,
+        budget: inst.budget,
+        suffix_min_cost: &suffix_min_cost,
+        suffix_min_weight: &suffix_min_weight,
+        suffix_mincost_weight: &suffix_mincost_weight,
+        steps_by_depth: &steps_by_depth,
+        best_choice: &mut best_choice,
+        best_cost: &mut best_cost,
+        nodes: &mut nodes,
+        node_cap: 50_000_000,
+        capped: false,
+    };
+    dfs(&mut ctx, 0, 0.0, 0.0, &mut cur);
+    let proven_optimal = !ctx.capped;
+
+    // Map back to original group order and option indices.
+    let mut choice = vec![0usize; groups.len()];
+    let mut total_weight = 0.0;
+    for (pos, &gidx) in order.iter().enumerate() {
+        let opt = groups[gidx][best_choice[pos]];
+        choice[gidx] = opt.orig;
+        total_weight += opt.weight;
+    }
+    let total_cost: f64 =
+        order.iter().enumerate().map(|(pos, &g)| groups[g][best_choice[pos]].cost).sum();
+    Ok(MckpSolution {
+        choice,
+        total_cost,
+        total_weight,
+        optimal: proven_optimal,
+        nodes_explored: nodes,
+    })
+}
+
+fn validate(inst: &MckpInstance) -> Result<(), MckpError> {
+    if inst.cost.len() != inst.weight.len() || inst.cost.is_empty() {
+        return Err(MckpError::Malformed("cost/weight group count mismatch or empty".into()));
+    }
+    for (g, (c, w)) in inst.cost.iter().zip(&inst.weight).enumerate() {
+        if c.len() != w.len() || c.is_empty() {
+            return Err(MckpError::Malformed(format!("group {g} malformed")));
+        }
+        if c.iter().chain(w.iter()).any(|&v| !v.is_finite() || v < 0.0) {
+            return Err(MckpError::Malformed(format!("group {g} has negative/NaN entries")));
+        }
+    }
+    Ok(())
+}
+
+/// Remove dominated options: option A dominates B if cost_A ≤ cost_B and
+/// weight_A ≤ weight_B (strictly better in at least one).
+fn preprocess(inst: &MckpInstance) -> Vec<Vec<Opt>> {
+    inst.cost
+        .iter()
+        .zip(&inst.weight)
+        .map(|(costs, weights)| {
+            let mut opts: Vec<Opt> = costs
+                .iter()
+                .zip(weights)
+                .enumerate()
+                .map(|(i, (&c, &w))| Opt { cost: c, weight: w, orig: i })
+                .collect();
+            opts.sort_by(|a, b| {
+                a.cost.partial_cmp(&b.cost).unwrap().then(a.weight.partial_cmp(&b.weight).unwrap())
+            });
+            let mut kept: Vec<Opt> = Vec::new();
+            for o in opts {
+                if kept.last().map_or(true, |k| o.weight < k.weight - 1e-15) {
+                    kept.push(o);
+                }
+            }
+            kept // sorted ascending cost, strictly descending weight
+        })
+        .collect()
+}
+
+/// Greedy feasible incumbent: start with min-weight (max-cost) choice per
+/// group, then repeatedly take the cheapest downgrade (cost reduction per
+/// unit weight increase) that stays within budget.
+fn greedy_incumbent(groups: &[&Vec<Opt>], budget: f64) -> Option<(Vec<usize>, f64)> {
+    let n = groups.len();
+    // Start from the min-weight option of each group (last after sorting).
+    let mut choice: Vec<usize> = groups.iter().map(|g| g.len() - 1).collect();
+    let mut weight: f64 = groups.iter().zip(&choice).map(|(g, &c)| g[c].weight).sum();
+    let mut cost: f64 = groups.iter().zip(&choice).map(|(g, &c)| g[c].cost).sum();
+    if weight > budget + 1e-12 {
+        return None;
+    }
+    // Downgrades: moving to a lower index = cheaper but heavier.
+    loop {
+        let mut best: Option<(usize, usize, f64)> = None; // (group, new idx, ratio)
+        for g in 0..n {
+            let ci = choice[g];
+            for next in (0..ci).rev() {
+                let dw = groups[g][next].weight - groups[g][ci].weight;
+                let dc = groups[g][ci].cost - groups[g][next].cost;
+                if dc <= 0.0 {
+                    continue;
+                }
+                if weight + dw <= budget + 1e-12 {
+                    let ratio = dc / dw.max(1e-300);
+                    if best.map_or(true, |b| ratio > b.2) {
+                        best = Some((g, next, ratio));
+                    }
+                    break; // nearest feasible downgrade per group suffices per iteration
+                }
+            }
+        }
+        match best {
+            Some((g, next, _)) => {
+                weight += groups[g][next].weight - groups[g][choice[g]].weight;
+                cost -= groups[g][choice[g]].cost - groups[g][next].cost;
+                choice[g] = next;
+            }
+            None => break,
+        }
+    }
+    Some((choice, cost))
+}
+
+/// LP-relaxation lower bound for the remaining groups `d..`: take each
+/// remaining group's min-cost option and, if the weight budget is violated,
+/// pay the cheapest incremental upgrades (fractional at the end).
+/// `min_cost_sum`/`min_weight_sum` are precomputed suffix sums; `steps` is
+/// the presorted upgrade list for the suffix. The bound is a valid lower
+/// bound because steps may be taken out of group order (a relaxation that
+/// only lowers the bound).
+fn lp_bound(
+    min_cost_sum: f64,
+    min_weight_sum: f64,
+    steps: &[(f64, f64)],
+    cost_so_far: f64,
+    weight_left: f64,
+) -> f64 {
+    let bound = cost_so_far + min_cost_sum;
+    if min_weight_sum <= weight_left + 1e-12 {
+        return bound;
+    }
+    let mut bound = bound;
+    let mut excess = min_weight_sum - weight_left;
+    for &(rate, dw) in steps {
+        if excess <= 1e-12 {
+            break;
+        }
+        let take = dw.min(excess);
+        bound += rate * take;
+        excess -= take;
+    }
+    if excess > 1e-12 {
+        // Cannot become feasible from here.
+        return f64::INFINITY;
+    }
+    bound
+}
+
+struct DfsCtx<'a> {
+    groups: &'a [&'a Vec<Opt>],
+    budget: f64,
+    suffix_min_cost: &'a [f64],
+    suffix_min_weight: &'a [f64],
+    suffix_mincost_weight: &'a [f64],
+    steps_by_depth: &'a [Vec<(f64, f64)>],
+    best_choice: &'a mut Vec<usize>,
+    best_cost: &'a mut f64,
+    nodes: &'a mut u64,
+    node_cap: u64,
+    capped: bool,
+}
+
+fn dfs(ctx: &mut DfsCtx<'_>, depth: usize, cost: f64, weight: f64, cur: &mut [usize]) {
+    *ctx.nodes += 1;
+    if *ctx.nodes > ctx.node_cap {
+        ctx.capped = true;
+        return;
+    }
+    if depth == ctx.groups.len() {
+        if cost < *ctx.best_cost - 1e-12 {
+            *ctx.best_cost = cost;
+            ctx.best_choice.copy_from_slice(cur);
+        }
+        return;
+    }
+    // Prune on cost and weight feasibility.
+    if cost + ctx.suffix_min_cost[depth] >= *ctx.best_cost - 1e-12 {
+        return;
+    }
+    if weight + ctx.suffix_min_weight[depth] > ctx.budget + 1e-12 {
+        return;
+    }
+    // LP bound — O(|steps|) thanks to the per-depth presorted step lists.
+    let lb = lp_bound(
+        ctx.suffix_min_cost[depth],
+        suffix_min_weight_of_min_cost(ctx, depth),
+        &ctx.steps_by_depth[depth],
+        cost,
+        ctx.budget - weight,
+    );
+    if lb >= *ctx.best_cost - 1e-12 {
+        return;
+    }
+    for i in 0..ctx.groups[depth].len() {
+        let opt = ctx.groups[depth][i];
+        if weight + opt.weight + ctx.suffix_min_weight[depth + 1] > ctx.budget + 1e-12 {
+            continue;
+        }
+        cur[depth] = i;
+        dfs(ctx, depth + 1, cost + opt.cost, weight + opt.weight, cur);
+        if ctx.capped {
+            return;
+        }
+    }
+}
+
+/// Weight of the min-cost (index-0) suffix choices — needed by the LP
+/// bound. Note this differs from `suffix_min_weight` (which takes each
+/// group's min-WEIGHT option).
+fn suffix_min_weight_of_min_cost(ctx: &DfsCtx<'_>, depth: usize) -> f64 {
+    ctx.suffix_mincost_weight[depth]
+}
+
+/// Brute-force reference (exponential) — used by tests and tiny instances.
+pub fn solve_exhaustive(inst: &MckpInstance) -> Option<(Vec<usize>, f64)> {
+    let n = inst.cost.len();
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    let mut idx = vec![0usize; n];
+    loop {
+        let cost: f64 = idx.iter().enumerate().map(|(g, &i)| inst.cost[g][i]).sum();
+        let weight: f64 = idx.iter().enumerate().map(|(g, &i)| inst.weight[g][i]).sum();
+        if weight <= inst.budget + 1e-12 && best.as_ref().map_or(true, |b| cost < b.1) {
+            best = Some((idx.clone(), cost));
+        }
+        // Odometer increment.
+        let mut d = 0;
+        loop {
+            if d == n {
+                return best;
+            }
+            idx[d] += 1;
+            if idx[d] < inst.cost[d].len() {
+                break;
+            }
+            idx[d] = 0;
+            d += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::checks::{assert_close, property};
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_instance(rng: &mut Xoshiro256pp, groups: usize, opts: usize) -> MckpInstance {
+        let cost: Vec<Vec<f64>> = (0..groups)
+            .map(|_| (0..opts).map(|_| rng.range_f64(0.1, 10.0)).collect())
+            .collect();
+        let weight: Vec<Vec<f64>> = (0..groups)
+            .map(|_| (0..opts).map(|_| rng.range_f64(0.0, 5.0)).collect())
+            .collect();
+        // Budget between the min and max achievable weight.
+        let min_w: f64 = weight.iter().map(|g| g.iter().cloned().fold(f64::INFINITY, f64::min)).sum();
+        let max_w: f64 =
+            weight.iter().map(|g| g.iter().cloned().fold(f64::NEG_INFINITY, f64::max)).sum();
+        let budget = rng.range_f64(min_w, max_w);
+        MckpInstance { cost, weight, budget }
+    }
+
+    #[test]
+    fn simple_known_instance() {
+        // Two groups, budget forces the expensive/light option in group 0.
+        let inst = MckpInstance {
+            cost: vec![vec![1.0, 5.0], vec![1.0, 4.0]],
+            weight: vec![vec![10.0, 1.0], vec![10.0, 1.0]],
+            budget: 11.0,
+        };
+        let sol = solve_mckp(&inst).unwrap();
+        // Feasible combos: (1,0): cost 6 w 11 ✓; (0,1): cost 5 w 11 ✓;
+        // (1,1): cost 9 w 2 ✓; (0,0) w 20 ✗. Optimum = (0,1) cost 5.
+        assert_close(sol.total_cost, 5.0, 1e-12);
+        assert_eq!(sol.choice, vec![0, 1]);
+        assert!(sol.optimal);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let inst = MckpInstance {
+            cost: vec![vec![1.0, 2.0]],
+            weight: vec![vec![5.0, 4.0]],
+            budget: 3.0,
+        };
+        assert!(matches!(solve_mckp(&inst), Err(MckpError::Infeasible(_))));
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        let inst = MckpInstance {
+            cost: vec![vec![1.0], vec![1.0]],
+            weight: vec![vec![1.0]],
+            budget: 1.0,
+        };
+        assert!(matches!(solve_mckp(&inst), Err(MckpError::Malformed(_))));
+        let inst = MckpInstance {
+            cost: vec![vec![-1.0]],
+            weight: vec![vec![1.0]],
+            budget: 1.0,
+        };
+        assert!(matches!(solve_mckp(&inst), Err(MckpError::Malformed(_))));
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_instances() {
+        property("mckp = brute force", 60, |rng, _| {
+            let groups = 1 + rng.index(5);
+            let opts = 2 + rng.index(3);
+            let inst = random_instance(rng, groups, opts);
+            let got = solve_mckp(&inst);
+            let reference = solve_exhaustive(&inst);
+            match (got, reference) {
+                (Ok(sol), Some((_, ref_cost))) => {
+                    assert!(
+                        (sol.total_cost - ref_cost).abs() < 1e-9,
+                        "bb={} brute={}",
+                        sol.total_cost,
+                        ref_cost
+                    );
+                    assert!(sol.total_weight <= inst.budget + 1e-9);
+                }
+                (Err(MckpError::Infeasible(_)), None) => {}
+                (g, r) => panic!("solver/reference disagree: {g:?} vs {r:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn large_instance_solves_fast_and_respects_budget() {
+        // Paper scale: 138 neurons × 4 voltages.
+        let mut rng = Xoshiro256pp::seeded(99);
+        let inst = random_instance(&mut rng, 138, 4);
+        let t0 = std::time::Instant::now();
+        let sol = solve_mckp(&inst).unwrap();
+        let dt = t0.elapsed();
+        assert!(sol.total_weight <= inst.budget + 1e-9);
+        assert!(dt.as_secs_f64() < 5.0, "took {dt:?} (paper's Gurobi: ≤54.7 s)");
+    }
+
+    #[test]
+    fn tight_budget_forces_expensive_choices() {
+        // Monotone structure like the real problem: cheaper ⇒ heavier.
+        let groups = 20;
+        let cost: Vec<Vec<f64>> = (0..groups).map(|_| vec![1.0, 2.0, 3.0, 4.0]).collect();
+        let weight: Vec<Vec<f64>> = (0..groups).map(|_| vec![8.0, 4.0, 2.0, 0.0]).collect();
+        // Budget 0 → must take the most expensive (zero-weight) everywhere.
+        let inst = MckpInstance { cost: cost.clone(), weight: weight.clone(), budget: 0.0 };
+        let sol = solve_mckp(&inst).unwrap();
+        assert!(sol.choice.iter().all(|&c| c == 3));
+        // Huge budget → cheapest everywhere.
+        let inst = MckpInstance { cost, weight, budget: 1e9 };
+        let sol = solve_mckp(&inst).unwrap();
+        assert!(sol.choice.iter().all(|&c| c == 0));
+    }
+}

@@ -1,0 +1,22 @@
+//! Integer-programming substrate for the voltage-assignment problem.
+//!
+//! The paper solves eqs (20)(22)(29) with Gurobi; offline we carry our own
+//! solvers. The problem is a **multiple-choice knapsack** (MCKP): one
+//! voltage per neuron (choice group), minimize total energy (cost), keep the
+//! summed variance contribution under the MSE budget (weight ≤ budget).
+//!
+//! - [`mckp`]: exact branch-and-bound with dominance pruning and the
+//!   Sinha–Zoltners LP-relaxation bound — guaranteed optimal, like the
+//!   paper's ILP claim.
+//! - [`greedy`]: the heuristic alternative the paper suggests for huge
+//!   models.
+//! - [`genetic`]: a GA baseline reproducing the paper's argument that
+//!   evolutionary methods don't guarantee optimality (§IV.D, vs ref [13]).
+
+pub mod genetic;
+pub mod greedy;
+pub mod mckp;
+
+pub use genetic::{solve_genetic, GaConfig};
+pub use greedy::solve_greedy;
+pub use mckp::{solve_mckp, MckpInstance, MckpSolution};

@@ -1,0 +1,51 @@
+//! # X-TPU: quality-aware voltage overscaling for TPUs
+//!
+//! Reproduction of Senobari et al., *"A Quality-Aware Voltage Overscaling
+//! Framework to Improve the Energy Efficiency and Lifetime of TPUs based on
+//! Statistical Error Modeling"* (IEEE Access 2024).
+//!
+//! The crate is organised bottom-up (see DESIGN.md for the full inventory):
+//!
+//! - [`util`] — offline substrates: PRNG, stats, JSON, CLI, thread pool.
+//! - [`timing`] — gate-level netlists + static/dynamic timing under voltage
+//!   overscaling (replaces the paper's Synopsys/ModelSim flow).
+//! - [`power`] — energy model (E ∝ V²), PE power decomposition.
+//! - [`errormodel`] — per-voltage statistical error models (paper §IV.B).
+//! - [`aging`] — BTI threshold-voltage drift and aged timing (paper §V.C).
+//! - [`nn`] — quantized-NN substrate: tensors, layers, models, synthetic
+//!   datasets, training.
+//! - [`quality`] — MSE/MAE/MRED/CE/accuracy metrics (paper eqs 5–8, 23–26).
+//! - [`sensitivity`] — neuron error sensitivity (paper §IV.C).
+//! - [`ilp`] — exact branch-and-bound MCKP/ILP solver + baselines.
+//! - [`assign`] — the voltage-assignment problem (paper eqs 18–22, 29).
+//! - [`simulator`] — cycle-level X-TPU systolic-array simulator.
+//! - [`runtime`] — PJRT client; loads AOT artifacts from `python/compile`.
+//! - [`coordinator`] — the Fig-4 pipeline gluing everything together.
+//! - [`server`] — threaded inference server with runtime quality levels.
+
+pub mod aging;
+pub mod assign;
+pub mod config;
+pub mod coordinator;
+pub mod errormodel;
+pub mod ilp;
+pub mod nn;
+pub mod sensitivity;
+pub mod simulator;
+pub mod power;
+pub mod quality;
+pub mod runtime;
+pub mod server;
+pub mod timing;
+pub mod util;
+
+/// Convenient re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::assign::{AssignmentProblem, Solver, VoltageAssignment};
+    pub use crate::config::ExperimentConfig;
+    pub use crate::coordinator::Pipeline;
+    pub use crate::errormodel::{ErrorModel, ErrorModelRegistry};
+    pub use crate::nn::model::Model;
+    pub use crate::timing::voltage::{Technology, VoltageLadder, VoltageLevel};
+    pub use crate::util::rng::Xoshiro256pp;
+}

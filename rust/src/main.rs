@@ -1,0 +1,461 @@
+//! `xtpu` — CLI for the X-TPU quality-aware voltage-overscaling framework.
+//!
+//! Subcommands mirror the Fig-4 pipeline stages plus operational tooling:
+//!
+//! ```text
+//! xtpu characterize   extract per-voltage statistical error models
+//! xtpu train          train + cache an evaluation model
+//! xtpu sensitivity    compute per-neuron error sensitivities
+//! xtpu assign         solve the ILP voltage assignment for one budget
+//! xtpu pipeline       full sweep: train → characterize → ES → ILP → validate
+//! xtpu aging          BTI aging study (Fig 15)
+//! xtpu simulate       run a matmul on the cycle-level X-TPU simulator
+//! xtpu serve          start the quality-adjustable inference server
+//! xtpu info           list artifacts + PJRT platform
+//! ```
+
+use anyhow::Result;
+use xtpu::aging::{BtiModel, Device};
+use xtpu::assign::{AssignmentProblem, Solver};
+use xtpu::config::ExperimentConfig;
+use xtpu::coordinator::Pipeline;
+use xtpu::errormodel::{CharacterizeOptions, ErrorModelRegistry};
+use xtpu::nn::quant::NoiseSpec;
+use xtpu::server::{BatchPolicy, Engine, QualityLevel, Server};
+use xtpu::simulator::{ErrorInjector, XTpu};
+use xtpu::timing::sta::ChipInstance;
+use xtpu::timing::voltage::{Technology, VoltageLadder};
+use xtpu::timing::baugh_wooley_8x8;
+use xtpu::util::cli::{usage, Args, OptSpec};
+use xtpu::util::rng::Xoshiro256pp;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "characterize" => cmd_characterize(rest),
+        "train" => cmd_train(rest),
+        "sensitivity" => cmd_sensitivity(rest),
+        "assign" => cmd_assign(rest),
+        "pipeline" => cmd_pipeline(rest),
+        "aging" => cmd_aging(rest),
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `xtpu help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "xtpu — quality-aware voltage overscaling for TPUs (X-TPU reproduction)\n\n\
+         Commands:\n\
+           characterize  extract per-voltage statistical error models\n\
+           train         train + cache an evaluation model\n\
+           sensitivity   per-neuron error sensitivities\n\
+           assign        solve the voltage assignment for one MSE budget\n\
+           pipeline      full framework sweep (train→characterize→ES→ILP→validate)\n\
+           aging         BTI aging study (Fig 15)\n\
+           simulate      matmul on the cycle-level X-TPU simulator\n\
+           serve         quality-adjustable inference server\n\
+           info          list artifacts + PJRT platform\n\n\
+         Run `xtpu <command> --help` for options."
+    );
+}
+
+fn common_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec::opt("config", "", "path to an experiment-config JSON"),
+        OptSpec::opt("model", "fc_mnist", "fc_mnist | lenet5 | resnet_tiny"),
+        OptSpec::opt("activation", "linear", "linear | relu | sigmoid | tanh"),
+        OptSpec::opt("seed", "684045", "experiment seed"),
+        OptSpec::opt("artifacts", "artifacts", "artifacts directory"),
+        OptSpec::flag("help", "show usage"),
+    ]
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if args.str("config").is_empty() {
+        ExperimentConfig::default()
+    } else {
+        ExperimentConfig::load(std::path::Path::new(args.str("config")))?
+    };
+    if !args.str("model").is_empty() {
+        cfg.model = args.str("model").to_string();
+    }
+    cfg.activation = xtpu::nn::layers::Activation::from_name(args.str("activation"))?;
+    cfg.seed = args.u64("seed")?;
+    cfg.artifacts_dir = args.str("artifacts").to_string();
+    Ok(cfg)
+}
+
+fn parse_or_help(
+    argv: &[String],
+    cmd: &str,
+    about: &str,
+    extra: Vec<OptSpec>,
+) -> Result<Option<Args>> {
+    let mut specs = common_specs();
+    specs.extend(extra);
+    let args = Args::parse(argv, &specs).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.flag("help") {
+        println!("{}", usage("xtpu", cmd, about, &specs));
+        return Ok(None);
+    }
+    Ok(Some(args))
+}
+
+fn cmd_characterize(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "characterize",
+        "Monte-Carlo the PE multiplier per voltage, fit error models (Table 2).",
+        vec![
+            OptSpec::opt("samples", "1000000", "input vectors per voltage"),
+            OptSpec::opt("voltages", "0.5,0.6,0.7,0.8", "voltage ladder"),
+        ],
+    )?
+    else {
+        return Ok(());
+    };
+    let tech = Technology::default();
+    let ladder = VoltageLadder::new(&args.f64_list("voltages")?, tech);
+    let netlist = baugh_wooley_8x8("pe_multiplier");
+    let mut rng = Xoshiro256pp::seeded(args.u64("seed")? ^ 0xC41);
+    let chip = ChipInstance::sample(&netlist, &tech, &mut rng);
+    let opts = CharacterizeOptions {
+        samples: args.u64("samples")?,
+        seed: args.u64("seed")? ^ 0xE44,
+        ..Default::default()
+    };
+    println!("characterizing {} gates × {} voltages × {} samples…",
+        netlist.num_cells(), ladder.len(), opts.samples);
+    let t0 = std::time::Instant::now();
+    let reg = ErrorModelRegistry::characterize(&netlist, &chip, &ladder, &opts);
+    println!("done in {:.1}s\n", t0.elapsed().as_secs_f64());
+    println!("{:>8} {:>14} {:>12} {:>10} {:>10}", "V", "variance", "std", "err-rate", "skew");
+    for m in reg.models() {
+        println!(
+            "{:>8.2} {:>14.4e} {:>12.2} {:>10.4} {:>10.3}",
+            m.volts, m.variance, m.std_dev(), m.error_rate, m.skewness
+        );
+    }
+    let out = std::path::Path::new(args.str("artifacts")).join("error_models.json");
+    reg.save(&out)?;
+    println!("\nsaved {}", out.display());
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "train",
+        "Train + cache an evaluation model on the synthetic dataset.",
+        vec![
+            OptSpec::opt("epochs", "6", "training epochs"),
+            OptSpec::opt("samples", "4000", "training set size"),
+        ],
+    )?
+    else {
+        return Ok(());
+    };
+    let mut cfg = build_config(&args)?;
+    cfg.epochs = args.usize("epochs")?;
+    cfg.train_samples = args.usize("samples")?;
+    let pipeline = Pipeline::new(cfg);
+    let t0 = std::time::Instant::now();
+    let (mut model, _train, test) = pipeline.trained_model()?;
+    let acc = xtpu::nn::train::evaluate(&mut model, &test, 64);
+    let params = model.num_params();
+    println!(
+        "model {} trained ({} params) in {:.1}s — test accuracy {:.3}",
+        model.name,
+        params,
+        t0.elapsed().as_secs_f64(),
+        acc
+    );
+    Ok(())
+}
+
+fn cmd_sensitivity(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "sensitivity",
+        "Per-neuron error sensitivities of the trained model (Fig 11).",
+        vec![],
+    )?
+    else {
+        return Ok(());
+    };
+    let cfg = build_config(&args)?;
+    let pipeline = Pipeline::new(cfg);
+    let sys = pipeline.prepare()?;
+    println!("{} neurons (ES, fan-in):", sys.es.len());
+    for (i, (&es, &k)) in sys.es.iter().zip(&sys.fan_in).enumerate() {
+        println!("{i:>5} {es:>12.4e} {k:>6}");
+    }
+    Ok(())
+}
+
+fn cmd_assign(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "assign",
+        "Solve the voltage assignment for one MSE-increment budget.",
+        vec![
+            OptSpec::opt("mse-ub", "2.0", "MSE increment bound (fraction of nominal MSE)"),
+            OptSpec::opt("solver", "ilp", "ilp | greedy | genetic"),
+        ],
+    )?
+    else {
+        return Ok(());
+    };
+    let cfg = build_config(&args)?;
+    let pipeline = Pipeline::new(cfg);
+    let sys = pipeline.prepare()?;
+    let fraction = args.f64("mse-ub")?;
+    let solver = Solver::from_name(args.str("solver"))?;
+    let report = pipeline.run_budget_with(&sys, fraction, solver)?;
+    let hist = report.assignment.level_histogram(sys.registry.ladder.len());
+    println!("budget       : {:.1}% of nominal MSE ({:.4})", fraction * 100.0, report.budget_abs);
+    println!("solver       : {:?} (optimal={})", solver, report.assignment.optimal);
+    println!("solve time   : {:.3}s", report.assignment.solve_seconds);
+    println!("levels       : {hist:?} (0.5V → nominal)");
+    println!("energy saving: {:.1}%", report.assignment.energy_saving * 100.0);
+    println!("predicted MSE: {:.4}", report.assignment.predicted_mse);
+    println!("measured MSE : {:.4} (violated: {})", report.validated_mse, report.violated);
+    println!("accuracy     : {:.4} (drop {:.4})", report.accuracy, report.accuracy_drop);
+    Ok(())
+}
+
+fn cmd_pipeline(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "pipeline",
+        "Full framework sweep over MSE budgets (Figs 10/13/14).",
+        vec![OptSpec::opt("mse-ubs", "0.01,0.1,0.5,1.0,2.0,5.0,10.0", "budget fractions")],
+    )?
+    else {
+        return Ok(());
+    };
+    let mut cfg = build_config(&args)?;
+    cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
+    let pipeline = Pipeline::new(cfg);
+    let sys = pipeline.prepare()?;
+    println!(
+        "model={} acc={:.3} nominal-MSE={:.4} (train {:.1}s, characterize {:.1}s, ES {:.1}s)",
+        sys.model.name,
+        sys.baseline_accuracy,
+        sys.baseline_mse,
+        sys.train_seconds,
+        sys.characterize_seconds,
+        sys.es_seconds
+    );
+    println!(
+        "{:>9} {:>10} {:>10} {:>9} {:>9} {:>9}",
+        "MSE_UB%", "pred MSE", "meas MSE", "acc", "acc drop", "saving%"
+    );
+    for &f in &pipeline.cfg.mse_ub_fractions.clone() {
+        let r = pipeline.run_budget(&sys, f)?;
+        println!(
+            "{:>9.1} {:>10.4} {:>10.4} {:>9.4} {:>9.4} {:>9.2}",
+            f * 100.0,
+            r.assignment.predicted_mse,
+            r.validated_mse,
+            r.accuracy,
+            r.accuracy_drop,
+            r.assignment.energy_saving * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_aging(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "aging",
+        "BTI aging study: ΔVth, delay degradation, lifetime (Fig 15).",
+        vec![OptSpec::opt("years", "10", "stress duration")],
+    )?
+    else {
+        return Ok(());
+    };
+    let years = args.f64("years")?;
+    let bti = BtiModel::default();
+    let tech = Technology::default();
+    println!("{:>6} {:>12} {:>12} {:>14}", "V", "ΔVth% PMOS", "ΔVth% NMOS", "delay factor");
+    for v in [0.5, 0.6, 0.7, 0.8] {
+        println!(
+            "{v:>6.2} {:>12.3} {:>12.3} {:>14.4}",
+            bti.delta_vth_percent(Device::Pmos, &tech, v, years),
+            bti.delta_vth_percent(Device::Nmos, &tech, v, years),
+            bti.delay_degradation(&tech, v, years)
+        );
+    }
+    let imp = bti.lifetime_improvement(&tech, &[0.5, 0.6, 0.7, 0.8], &[0.25; 4]);
+    println!(
+        "\nuniform voltage mix → lifetime improvement {:.1}% (paper: 12%)",
+        imp * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "simulate",
+        "Random matmul on the cycle-level X-TPU simulator.",
+        vec![
+            OptSpec::opt("m", "64", "batch rows"),
+            OptSpec::opt("k", "128", "inner dim"),
+            OptSpec::opt("n", "16", "output columns"),
+            OptSpec::opt("level", "0", "ladder level for all columns (0=0.5V, 3=nominal)"),
+            OptSpec::opt("samples", "200000", "characterization samples"),
+        ],
+    )?
+    else {
+        return Ok(());
+    };
+    let cfg = build_config(&args)?;
+    let pipeline = Pipeline::new(cfg);
+    let reg = pipeline.error_models()?;
+    let power = pipeline.power_model();
+    let (m, k, n) = (args.usize("m")?, args.usize("k")?, args.usize("n")?);
+    let level = args.usize("level")?;
+    let ladder = reg.ladder.clone();
+    let mut tpu =
+        XTpu::new(128, 128, ladder, ErrorInjector::Statistical(reg)).with_power(power);
+    let mut rng = Xoshiro256pp::seeded(args.u64("seed")?);
+    let a: Vec<i8> = (0..m * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let w: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let t0 = std::time::Instant::now();
+    let out = tpu.matmul(&a, &w, m, k, n, &vec![level; n], &mut rng);
+    let dt = t0.elapsed();
+    let mut err = 0u64;
+    for s in 0..m {
+        for c in 0..n {
+            let mut exact = 0i64;
+            for r in 0..k {
+                exact += (a[s * k + r] as i64) * (w[r * n + c] as i64);
+            }
+            if out[s * n + c] as i64 != exact {
+                err += 1;
+            }
+        }
+    }
+    println!(
+        "matmul {m}×{k}×{n} at level {level}: {} cycles, {} MACs, {:.1}% outputs erroneous",
+        tpu.stats.cycles,
+        tpu.stats.macs,
+        err as f64 / (m * n) as f64 * 100.0
+    );
+    println!(
+        "energy saving {:.1}%, wall {:.3}s ({:.1} MMAC/s)",
+        tpu.stats.energy_saving() * 100.0,
+        dt.as_secs_f64(),
+        tpu.stats.macs as f64 / dt.as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "serve",
+        "Quality-adjustable inference server (newline-JSON over TCP).",
+        vec![
+            OptSpec::opt("port", "7433", "TCP port (0 = ephemeral)"),
+            OptSpec::opt("mse-ubs", "0.0,0.5,2.0,10.0", "quality levels (budget fractions)"),
+            OptSpec::opt("max-batch", "16", "dynamic batch size"),
+        ],
+    )?
+    else {
+        return Ok(());
+    };
+    let mut cfg = build_config(&args)?;
+    cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
+    let pipeline = Pipeline::new(cfg);
+    let sys = pipeline.prepare()?;
+    let mut levels = Vec::new();
+    for &f in &pipeline.cfg.mse_ub_fractions {
+        if f == 0.0 {
+            levels.push(QualityLevel {
+                name: "exact".into(),
+                noise: NoiseSpec::silent(sys.es.len()),
+                energy_saving: 0.0,
+            });
+            continue;
+        }
+        let r = pipeline.run_budget(&sys, f)?;
+        let problem = AssignmentProblem::build(
+            &sys.es,
+            &sys.fan_in,
+            &sys.registry,
+            &sys.power,
+            r.budget_abs,
+        );
+        levels.push(QualityLevel {
+            name: format!("mse_ub_{:.0}%", f * 100.0),
+            noise: problem.noise_spec(&r.assignment, &sys.registry),
+            energy_saving: r.assignment.energy_saving,
+        });
+    }
+    for (i, l) in levels.iter().enumerate() {
+        println!("quality {i}: {} (saving {:.1}%)", l.name, l.energy_saving * 100.0);
+    }
+    let input_dim = sys.model.input.numel();
+    let engine = Engine { quantized: sys.quantized.clone(), levels, input_dim };
+    let server = Server::spawn(
+        engine,
+        args.usize("port")? as u16,
+        BatchPolicy { max_batch: args.usize("max-batch")?, ..Default::default() },
+    )?;
+    println!("serving on {}", server.addr);
+    println!("protocol: {{\"pixels\": [f32 × {input_dim}], \"quality\": idx}} per line");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(argv, "info", "List artifacts and PJRT platform.", vec![])?
+    else {
+        return Ok(());
+    };
+    let dir = std::path::PathBuf::from(args.str("artifacts"));
+    match xtpu::runtime::Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            match rt.available() {
+                Ok(names) if !names.is_empty() => {
+                    println!("artifacts in {}:", dir.display());
+                    for n in names {
+                        println!("  {n}");
+                    }
+                }
+                _ => println!("no artifacts in {} (run `make artifacts`)", dir.display()),
+            }
+        }
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    Ok(())
+}

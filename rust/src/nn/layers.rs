@@ -1,0 +1,517 @@
+//! Neural-network layers with explicit forward/backward passes.
+//!
+//! The framework needs to *train* its evaluation networks in-repo (no
+//! dataset/model downloads offline), so each layer carries its backward
+//! pass; gradients are verified against finite differences in the tests.
+//! Layers are an enum (not trait objects) so the optimizer, quantizer and
+//! neuron-enumeration passes can pattern-match on structure.
+
+use super::tensor::{matmul, matmul_nt, matmul_tn, Tensor};
+use crate::util::rng::Xoshiro256pp;
+
+/// Activation functions evaluated elementwise after a MAC layer.
+/// The paper studies Linear, Sigmoid, ReLU and TanH (Table 3, Fig 13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Linear,
+    Relu,
+    Sigmoid,
+    Tanh,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Activation::Linear => x,
+            Activation::Relu => x.max(0.0),
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Tanh => x.tanh(),
+        }
+    }
+
+    /// Derivative dy/dx expressed through the *output* y (all four have
+    /// this property: 1, step, y(1−y), 1−y²).
+    #[inline]
+    pub fn derivative_from_output(self, y: f32) -> f32 {
+        match self {
+            Activation::Linear => 1.0,
+            Activation::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Sigmoid => y * (1.0 - y),
+            Activation::Tanh => 1.0 - y * y,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Linear => "linear",
+            Activation::Relu => "relu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "linear" => Activation::Linear,
+            "relu" => Activation::Relu,
+            "sigmoid" => Activation::Sigmoid,
+            "tanh" => Activation::Tanh,
+            other => anyhow::bail!("unknown activation '{other}'"),
+        })
+    }
+}
+
+fn apply_activation(act: Activation, t: &mut Tensor) {
+    for v in t.data.iter_mut() {
+        *v = act.apply(*v);
+    }
+}
+
+/// Fully connected layer `y = act(W·x + b)`, `w` stored `[out, in]`
+/// row-major (one row per output neuron — a TPU column).
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub in_f: usize,
+    pub out_f: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub act: Activation,
+    pub gw: Vec<f32>,
+    pub gb: Vec<f32>,
+    cache_x: Tensor,
+    cache_y: Tensor,
+}
+
+impl Dense {
+    pub fn new(in_f: usize, out_f: usize, act: Activation, rng: &mut Xoshiro256pp) -> Self {
+        // He/Glorot-ish init.
+        let scale = (2.0 / in_f as f64).sqrt();
+        let w = (0..in_f * out_f).map(|_| rng.gaussian(0.0, scale) as f32).collect();
+        Self {
+            in_f,
+            out_f,
+            w,
+            b: vec![0.0; out_f],
+            act,
+            gw: vec![0.0; in_f * out_f],
+            gb: vec![0.0; out_f],
+            cache_x: Tensor::zeros(&[0]),
+            cache_y: Tensor::zeros(&[0]),
+        }
+    }
+
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let batch = x.shape[0];
+        assert_eq!(x.shape[1], self.in_f);
+        let wt = Tensor::from_vec(&[self.out_f, self.in_f], self.w.clone());
+        let mut y = matmul_nt(x, &wt); // [batch, out]
+        for r in 0..batch {
+            let row = y.row_mut(r);
+            for (v, &bias) in row.iter_mut().zip(&self.b) {
+                *v += bias;
+            }
+        }
+        apply_activation(self.act, &mut y);
+        if train {
+            self.cache_x = x.clone();
+            self.cache_y = y.clone();
+        }
+        y
+    }
+
+    pub fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let batch = grad_out.shape[0];
+        // dL/dpre = dL/dy * act'(y)
+        let mut gpre = grad_out.clone();
+        for (g, &y) in gpre.data.iter_mut().zip(&self.cache_y.data) {
+            *g *= self.act.derivative_from_output(y);
+        }
+        // gw[out, in] += gpreᵀ[out, batch] × x[batch, in]
+        let gw = matmul_tn(&gpre, &self.cache_x); // [out, in]
+        for (acc, g) in self.gw.iter_mut().zip(&gw.data) {
+            *acc += g;
+        }
+        for r in 0..batch {
+            for (acc, &g) in self.gb.iter_mut().zip(gpre.row(r)) {
+                *acc += g;
+            }
+        }
+        // dL/dx = gpre[batch, out] × w[out, in]
+        let wt = Tensor::from_vec(&[self.out_f, self.in_f], self.w.clone());
+        matmul(&gpre, &wt)
+    }
+}
+
+/// 2-D convolution (valid or same padding, stride 1) via im2col.
+/// Weights `[cout, cin*kh*kw]`, inputs `[batch, cin, h, w]` flattened.
+#[derive(Clone, Debug)]
+pub struct Conv2d {
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub pad: usize,
+    pub act: Activation,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub gw: Vec<f32>,
+    pub gb: Vec<f32>,
+    cache_cols: Vec<Tensor>,
+    cache_y: Tensor,
+    cache_in_hw: (usize, usize),
+}
+
+impl Conv2d {
+    pub fn new(
+        cin: usize,
+        cout: usize,
+        k: usize,
+        pad: usize,
+        act: Activation,
+        rng: &mut Xoshiro256pp,
+    ) -> Self {
+        let fan_in = cin * k * k;
+        let scale = (2.0 / fan_in as f64).sqrt();
+        let w = (0..cout * fan_in).map(|_| rng.gaussian(0.0, scale) as f32).collect();
+        Self {
+            cin,
+            cout,
+            k,
+            pad,
+            act,
+            w,
+            b: vec![0.0; cout],
+            gw: vec![0.0; cout * fan_in],
+            gb: vec![0.0; cout],
+            cache_cols: Vec::new(),
+            cache_y: Tensor::zeros(&[0]),
+            cache_in_hw: (0, 0),
+        }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (h + 2 * self.pad + 1 - self.k, w + 2 * self.pad + 1 - self.k)
+    }
+
+    fn im2col(&self, img: &[f32], h: usize, w: usize) -> Tensor {
+        let (ho, wo) = self.out_hw(h, w);
+        let fan_in = self.cin * self.k * self.k;
+        let mut cols = Tensor::zeros(&[fan_in, ho * wo]);
+        let pad = self.pad as isize;
+        for c in 0..self.cin {
+            for ky in 0..self.k {
+                for kx in 0..self.k {
+                    let row = (c * self.k + ky) * self.k + kx;
+                    let dst = &mut cols.data[row * ho * wo..(row + 1) * ho * wo];
+                    for oy in 0..ho {
+                        let iy = oy as isize + ky as isize - pad;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for ox in 0..wo {
+                            let ix = ox as isize + kx as isize - pad;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            dst[oy * wo + ox] =
+                                img[(c * h + iy as usize) * w + ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    pub fn forward(&mut self, x: &Tensor, h: usize, w: usize, train: bool) -> Tensor {
+        let batch = x.shape[0];
+        let (ho, wo) = self.out_hw(h, w);
+        let mut y = Tensor::zeros(&[batch, self.cout * ho * wo]);
+        let wmat = Tensor::from_vec(&[self.cout, self.cin * self.k * self.k], self.w.clone());
+        if train {
+            self.cache_cols.clear();
+            self.cache_in_hw = (h, w);
+        }
+        for s in 0..batch {
+            let cols = self.im2col(x.row(s), h, w);
+            let out = matmul(&wmat, &cols); // [cout, ho*wo]
+            let dst = y.row_mut(s);
+            for c in 0..self.cout {
+                for p in 0..ho * wo {
+                    dst[c * ho * wo + p] = out.data[c * ho * wo + p] + self.b[c];
+                }
+            }
+            if train {
+                self.cache_cols.push(cols);
+            }
+        }
+        apply_activation(self.act, &mut y);
+        if train {
+            self.cache_y = y.clone();
+        }
+        y
+    }
+
+    pub fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let batch = grad_out.shape[0];
+        let (h, w) = self.cache_in_hw;
+        let (ho, wo) = self.out_hw(h, w);
+        let fan_in = self.cin * self.k * self.k;
+        let mut gx = Tensor::zeros(&[batch, self.cin * h * w]);
+        let mut gpre = grad_out.clone();
+        for (g, &y) in gpre.data.iter_mut().zip(&self.cache_y.data) {
+            *g *= self.act.derivative_from_output(y);
+        }
+        let wmat = Tensor::from_vec(&[self.cout, fan_in], self.w.clone());
+        for s in 0..batch {
+            let g = Tensor::from_vec(&[self.cout, ho * wo], gpre.row(s).to_vec());
+            // gw += g × colsᵀ
+            let cols = &self.cache_cols[s];
+            let gw = matmul_nt(&g, cols); // [cout, fan_in]
+            for (acc, &v) in self.gw.iter_mut().zip(&gw.data) {
+                *acc += v;
+            }
+            for c in 0..self.cout {
+                self.gb[c] += g.row(c).iter().sum::<f32>();
+            }
+            // gcols = wᵀ × g : [fan_in, ho*wo]
+            let gcols = matmul_tn(&wmat, &g);
+            // col2im scatter-add.
+            let img = gx.row_mut(s);
+            let pad = self.pad as isize;
+            for c in 0..self.cin {
+                for ky in 0..self.k {
+                    for kx in 0..self.k {
+                        let row = (c * self.k + ky) * self.k + kx;
+                        let src = &gcols.data[row * ho * wo..(row + 1) * ho * wo];
+                        for oy in 0..ho {
+                            let iy = oy as isize + ky as isize - pad;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for ox in 0..wo {
+                                let ix = ox as isize + kx as isize - pad;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                img[(c * h + iy as usize) * w + ix as usize] +=
+                                    src[oy * wo + ox];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        gx
+    }
+}
+
+/// 2×2 max pooling, stride 2.
+#[derive(Clone, Debug)]
+pub struct MaxPool2 {
+    pub channels: usize,
+    cache_mask: Vec<u32>,
+    cache_in_hw: (usize, usize),
+    cache_batch: usize,
+}
+
+impl MaxPool2 {
+    pub fn new(channels: usize) -> Self {
+        Self { channels, cache_mask: Vec::new(), cache_in_hw: (0, 0), cache_batch: 0 }
+    }
+
+    pub fn forward(&mut self, x: &Tensor, h: usize, w: usize, train: bool) -> Tensor {
+        let batch = x.shape[0];
+        let (ho, wo) = (h / 2, w / 2);
+        let c = self.channels;
+        let mut y = Tensor::zeros(&[batch, c * ho * wo]);
+        if train {
+            self.cache_mask = vec![0; batch * c * ho * wo];
+            self.cache_in_hw = (h, w);
+            self.cache_batch = batch;
+        }
+        for s in 0..batch {
+            let img = x.row(s);
+            let dst = y.row_mut(s);
+            for ch in 0..c {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut best_idx = 0u32;
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                let iy = oy * 2 + dy;
+                                let ix = ox * 2 + dx;
+                                let idx = (ch * h + iy) * w + ix;
+                                if img[idx] > best {
+                                    best = img[idx];
+                                    best_idx = idx as u32;
+                                }
+                            }
+                        }
+                        let o = (ch * ho + oy) * wo + ox;
+                        dst[o] = best;
+                        if train {
+                            self.cache_mask[s * c * ho * wo + o] = best_idx;
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    pub fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let (h, w) = self.cache_in_hw;
+        let c = self.channels;
+        let (ho, wo) = (h / 2, w / 2);
+        let batch = self.cache_batch;
+        let mut gx = Tensor::zeros(&[batch, c * h * w]);
+        for s in 0..batch {
+            let g = grad_out.row(s);
+            let dst = gx.row_mut(s);
+            for o in 0..c * ho * wo {
+                dst[self.cache_mask[s * c * ho * wo + o] as usize] += g[o];
+            }
+        }
+        gx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::checks::assert_close;
+
+    /// Numerical gradient check for Dense.
+    #[test]
+    fn dense_gradients_match_finite_difference() {
+        let mut rng = Xoshiro256pp::seeded(3);
+        for act in [Activation::Linear, Activation::Relu, Activation::Sigmoid, Activation::Tanh]
+        {
+            let mut layer = Dense::new(5, 4, act, &mut rng);
+            let x = Tensor::from_vec(
+                &[2, 5],
+                (0..10).map(|_| rng.gaussian(0.0, 1.0) as f32).collect(),
+            );
+            // Loss = sum(y²)/2 → grad_out = y.
+            let y = layer.forward(&x, true);
+            let gin = layer.backward(&y.clone());
+            let eps = 1e-3f32;
+            // Check dL/dw for a few weights.
+            for &wi in &[0usize, 7, 19] {
+                let mut lp = layer.clone();
+                lp.w[wi] += eps;
+                let yp = lp.forward(&x, false);
+                let mut lm = layer.clone();
+                lm.w[wi] -= eps;
+                let ym = lm.forward(&x, false);
+                let lossp: f32 = yp.data.iter().map(|v| v * v / 2.0).sum();
+                let lossm: f32 = ym.data.iter().map(|v| v * v / 2.0).sum();
+                let numeric = (lossp - lossm) / (2.0 * eps);
+                assert_close(layer.gw[wi] as f64, numeric as f64, 2e-2);
+            }
+            // Check dL/dx.
+            for &xi in &[0usize, 4, 9] {
+                let mut xp = x.clone();
+                xp.data[xi] += eps;
+                let mut xm = x.clone();
+                xm.data[xi] -= eps;
+                let mut l2 = layer.clone();
+                let yp = l2.forward(&xp, false);
+                let ym = l2.forward(&xm, false);
+                let lossp: f32 = yp.data.iter().map(|v| v * v / 2.0).sum();
+                let lossm: f32 = ym.data.iter().map(|v| v * v / 2.0).sum();
+                let numeric = (lossp - lossm) / (2.0 * eps);
+                assert_close(gin.data[xi] as f64, numeric as f64, 2e-2);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_forward_known_values() {
+        let mut rng = Xoshiro256pp::seeded(4);
+        let mut conv = Conv2d::new(1, 1, 3, 0, Activation::Linear, &mut rng);
+        conv.w = vec![0., 0., 0., 0., 1., 0., 0., 0., 0.]; // identity kernel
+        conv.b = vec![0.5];
+        let x = Tensor::from_vec(&[1, 16], (0..16).map(|v| v as f32).collect());
+        let y = conv.forward(&x, 4, 4, false);
+        // Valid 3x3 on 4x4 → 2x2 centers: pixels (1,1),(1,2),(2,1),(2,2).
+        assert_eq!(y.data, vec![5.5, 6.5, 9.5, 10.5]);
+    }
+
+    #[test]
+    fn conv_gradients_match_finite_difference() {
+        let mut rng = Xoshiro256pp::seeded(5);
+        let mut conv = Conv2d::new(2, 3, 3, 1, Activation::Tanh, &mut rng);
+        let x = Tensor::from_vec(
+            &[1, 2 * 5 * 5],
+            (0..50).map(|_| rng.gaussian(0.0, 0.5) as f32).collect(),
+        );
+        let y = conv.forward(&x, 5, 5, true);
+        let gin = conv.backward(&y.clone());
+        let eps = 1e-3f32;
+        for &wi in &[0usize, 10, 30, 53] {
+            let mut cp = conv.clone();
+            cp.w[wi] += eps;
+            let yp = cp.forward(&x, 5, 5, false);
+            let mut cm = conv.clone();
+            cm.w[wi] -= eps;
+            let ym = cm.forward(&x, 5, 5, false);
+            let lossp: f32 = yp.data.iter().map(|v| v * v / 2.0).sum();
+            let lossm: f32 = ym.data.iter().map(|v| v * v / 2.0).sum();
+            let numeric = (lossp - lossm) / (2.0 * eps);
+            assert_close(conv.gw[wi] as f64, numeric as f64, 3e-2);
+        }
+        for &xi in &[0usize, 12, 49] {
+            let mut xp = x.clone();
+            xp.data[xi] += eps;
+            let mut xm = x.clone();
+            xm.data[xi] -= eps;
+            let mut c2 = conv.clone();
+            let yp = c2.forward(&xp, 5, 5, false);
+            let ym = c2.forward(&xm, 5, 5, false);
+            let lossp: f32 = yp.data.iter().map(|v| v * v / 2.0).sum();
+            let lossm: f32 = ym.data.iter().map(|v| v * v / 2.0).sum();
+            let numeric = (lossp - lossm) / (2.0 * eps);
+            assert_close(gin.data[xi] as f64, numeric as f64, 3e-2);
+        }
+    }
+
+    #[test]
+    fn maxpool_forward_backward() {
+        let mut pool = MaxPool2::new(1);
+        let x = Tensor::from_vec(
+            &[1, 16],
+            vec![
+                1., 2., 5., 6., //
+                3., 4., 7., 8., //
+                9., 10., 13., 14., //
+                11., 12., 15., 16.,
+            ],
+        );
+        let y = pool.forward(&x, 4, 4, true);
+        assert_eq!(y.data, vec![4., 8., 12., 16.]);
+        let g = Tensor::from_vec(&[1, 4], vec![1., 2., 3., 4.]);
+        let gx = pool.backward(&g);
+        assert_eq!(gx.data[5], 1.); // position of the 4
+        assert_eq!(gx.data[7], 2.); // position of the 8
+        assert_eq!(gx.data[13], 3.);
+        assert_eq!(gx.data[15], 4.);
+        assert_eq!(gx.data.iter().sum::<f32>(), 10.);
+    }
+
+    #[test]
+    fn activation_roundtrip_names() {
+        for a in [Activation::Linear, Activation::Relu, Activation::Sigmoid, Activation::Tanh] {
+            assert_eq!(Activation::from_name(a.name()).unwrap(), a);
+        }
+        assert!(Activation::from_name("softmax9").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Quantized-NN substrate: tensors, trainable layers, model composition,
+//! synthetic datasets, training, and int8 inference with VOS noise
+//! injection.
+
+pub mod data;
+pub mod layers;
+pub mod model;
+pub mod quant;
+pub mod tensor;
+pub mod train;
+
+pub use data::{synth_cifar, synth_mnist, Dataset};
+pub use layers::Activation;
+pub use model::{fc_mnist, lenet5, resnet_tiny, DataShape, Model, Neuron};
+pub use quant::{NoiseSpec, QuantizedModel};
+pub use tensor::Tensor;

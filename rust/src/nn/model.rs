@@ -1,0 +1,629 @@
+//! Composable model definition: a stack of layers with shape tracking,
+//! training-mode forward/backward, neuron enumeration (the paper's unit of
+//! voltage assignment), and JSON persistence.
+
+use super::layers::{Activation, Conv2d, Dense, MaxPool2};
+use super::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256pp;
+
+/// A residual block (ResNet-tiny): `y = relu(conv2(relu(conv1(x))) + skip)`
+/// where `skip` is identity or a 1×1 projection when channel counts differ.
+#[derive(Clone, Debug)]
+pub struct ResBlock {
+    pub conv1: Conv2d,
+    pub conv2: Conv2d,
+    pub proj: Option<Conv2d>,
+    cache_sum_y: Tensor,
+}
+
+impl ResBlock {
+    pub fn new(cin: usize, cout: usize, rng: &mut Xoshiro256pp) -> Self {
+        let conv1 = Conv2d::new(cin, cout, 3, 1, Activation::Relu, rng);
+        let conv2 = Conv2d::new(cout, cout, 3, 1, Activation::Linear, rng);
+        let proj = if cin != cout {
+            Some(Conv2d::new(cin, cout, 1, 0, Activation::Linear, rng))
+        } else {
+            None
+        };
+        Self { conv1, conv2, proj, cache_sum_y: Tensor::zeros(&[0]) }
+    }
+
+    pub fn forward(&mut self, x: &Tensor, h: usize, w: usize, train: bool) -> Tensor {
+        let a = self.conv1.forward(x, h, w, train);
+        let mut y = self.conv2.forward(&a, h, w, train);
+        let skip = match &mut self.proj {
+            Some(p) => p.forward(x, h, w, train),
+            None => x.clone(),
+        };
+        for (v, &s) in y.data.iter_mut().zip(&skip.data) {
+            *v = (*v + s).max(0.0); // final ReLU on the sum
+        }
+        if train {
+            self.cache_sum_y = y.clone();
+        }
+        y
+    }
+
+    pub fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let mut g = grad_out.clone();
+        for (gv, &y) in g.data.iter_mut().zip(&self.cache_sum_y.data) {
+            if y <= 0.0 {
+                *gv = 0.0;
+            }
+        }
+        let g_main = self.conv2.backward(&g);
+        let g_in_main = self.conv1.backward(&g_main);
+        let g_in_skip = match &mut self.proj {
+            Some(p) => p.backward(&g),
+            None => g.clone(),
+        };
+        let mut gx = g_in_main;
+        for (v, &s) in gx.data.iter_mut().zip(&g_in_skip.data) {
+            *v += s;
+        }
+        gx
+    }
+}
+
+/// One layer of a model.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    Dense(Dense),
+    Conv(Conv2d),
+    Pool(MaxPool2),
+    Res(ResBlock),
+}
+
+/// Shape of the data entering a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataShape {
+    /// Flat feature vector.
+    Flat(usize),
+    /// Channels × height × width.
+    Spatial(usize, usize, usize),
+}
+
+impl DataShape {
+    pub fn numel(&self) -> usize {
+        match *self {
+            DataShape::Flat(n) => n,
+            DataShape::Spatial(c, h, w) => c * h * w,
+        }
+    }
+}
+
+/// A MAC "neuron" — the paper's unit of voltage assignment (an FC output
+/// unit or a CNN kernel; §IV.A "each column in the TPU represents a neuron
+/// in a fully connected network or a kernel in a CNN").
+#[derive(Clone, Debug)]
+pub struct Neuron {
+    /// Index of the MAC layer this neuron belongs to (0-based over MAC
+    /// layers only, in forward order).
+    pub mac_layer: usize,
+    /// Unit (output-feature / filter) index within the layer.
+    pub unit: usize,
+    /// Fan-in `k`: MAC count per output value — the PE column height.
+    pub fan_in: usize,
+    /// L2 norm of the neuron's weight vector (ES surrogate for linear
+    /// activations, paper §IV.D).
+    pub weight_l2: f64,
+    /// Whether the neuron sits in the final (output) layer.
+    pub is_output: bool,
+}
+
+/// A feed-forward model with tracked shapes.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub input: DataShape,
+    pub layers: Vec<Layer>,
+    /// Shape entering each layer (computed at build time).
+    shapes: Vec<DataShape>,
+    pub output_dim: usize,
+}
+
+pub struct ModelBuilder {
+    name: String,
+    input: DataShape,
+    layers: Vec<Layer>,
+    shapes: Vec<DataShape>,
+    cur: DataShape,
+}
+
+impl ModelBuilder {
+    pub fn new(name: &str, input: DataShape) -> Self {
+        Self { name: name.to_string(), input, layers: Vec::new(), shapes: Vec::new(), cur: input }
+    }
+
+    pub fn dense(mut self, out_f: usize, act: Activation, rng: &mut Xoshiro256pp) -> Self {
+        let in_f = self.cur.numel();
+        self.shapes.push(self.cur);
+        self.layers.push(Layer::Dense(Dense::new(in_f, out_f, act, rng)));
+        self.cur = DataShape::Flat(out_f);
+        self
+    }
+
+    pub fn conv(
+        mut self,
+        cout: usize,
+        k: usize,
+        pad: usize,
+        act: Activation,
+        rng: &mut Xoshiro256pp,
+    ) -> Self {
+        let (c, h, w) = match self.cur {
+            DataShape::Spatial(c, h, w) => (c, h, w),
+            _ => panic!("conv requires spatial input"),
+        };
+        let conv = Conv2d::new(c, cout, k, pad, act, rng);
+        let (ho, wo) = conv.out_hw(h, w);
+        self.shapes.push(self.cur);
+        self.layers.push(Layer::Conv(conv));
+        self.cur = DataShape::Spatial(cout, ho, wo);
+        self
+    }
+
+    pub fn pool(mut self) -> Self {
+        let (c, h, w) = match self.cur {
+            DataShape::Spatial(c, h, w) => (c, h, w),
+            _ => panic!("pool requires spatial input"),
+        };
+        self.shapes.push(self.cur);
+        self.layers.push(Layer::Pool(MaxPool2::new(c)));
+        self.cur = DataShape::Spatial(c, h / 2, w / 2);
+        self
+    }
+
+    pub fn res_block(mut self, cout: usize, rng: &mut Xoshiro256pp) -> Self {
+        let (c, h, w) = match self.cur {
+            DataShape::Spatial(c, h, w) => (c, h, w),
+            _ => panic!("res_block requires spatial input"),
+        };
+        self.shapes.push(self.cur);
+        self.layers.push(Layer::Res(ResBlock::new(c, cout, rng)));
+        self.cur = DataShape::Spatial(cout, h, w);
+        self
+    }
+
+    pub fn build(self) -> Model {
+        let output_dim = self.cur.numel();
+        Model {
+            name: self.name,
+            input: self.input,
+            layers: self.layers,
+            shapes: self.shapes,
+            output_dim,
+        }
+    }
+}
+
+impl Model {
+    /// Forward pass over a batch `[batch, input_numel]`.
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let mut cur = x.clone();
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            let shape = self.shapes[i];
+            cur = match layer {
+                Layer::Dense(d) => d.forward(&cur, train),
+                Layer::Conv(c) => {
+                    let (_, h, w) = spatial(shape);
+                    c.forward(&cur, h, w, train)
+                }
+                Layer::Pool(p) => {
+                    let (_, h, w) = spatial(shape);
+                    p.forward(&cur, h, w, train)
+                }
+                Layer::Res(r) => {
+                    let (_, h, w) = spatial(shape);
+                    r.forward(&cur, h, w, train)
+                }
+            };
+        }
+        cur
+    }
+
+    /// Backward pass (after a `forward(..., train=true)`), accumulating
+    /// parameter gradients.
+    pub fn backward(&mut self, grad_out: &Tensor) {
+        let mut g = grad_out.clone();
+        for layer in self.layers.iter_mut().rev() {
+            g = match layer {
+                Layer::Dense(d) => d.backward(&g),
+                Layer::Conv(c) => c.backward(&g),
+                Layer::Pool(p) => p.backward(&g),
+                Layer::Res(r) => r.backward(&g),
+            };
+        }
+    }
+
+    /// Visit every (param, grad) pair (optimizer hook).
+    pub fn visit_params(&mut self, mut f: impl FnMut(&mut [f32], &mut [f32])) {
+        for layer in self.layers.iter_mut() {
+            match layer {
+                Layer::Dense(d) => {
+                    f(&mut d.w, &mut d.gw);
+                    f(&mut d.b, &mut d.gb);
+                }
+                Layer::Conv(c) => {
+                    f(&mut c.w, &mut c.gw);
+                    f(&mut c.b, &mut c.gb);
+                }
+                Layer::Pool(_) => {}
+                Layer::Res(r) => {
+                    f(&mut r.conv1.w, &mut r.conv1.gw);
+                    f(&mut r.conv1.b, &mut r.conv1.gb);
+                    f(&mut r.conv2.w, &mut r.conv2.gw);
+                    f(&mut r.conv2.b, &mut r.conv2.gb);
+                    if let Some(p) = &mut r.proj {
+                        f(&mut p.w, &mut p.gw);
+                        f(&mut p.b, &mut p.gb);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn num_params(&mut self) -> usize {
+        let mut n = 0;
+        self.visit_params(|p, _| n += p.len());
+        n
+    }
+
+    /// Enumerate MAC layers in forward order as (weights, fan_in, out_units).
+    fn mac_layers(&self) -> Vec<(&[f32], usize, usize)> {
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            match layer {
+                Layer::Dense(d) => out.push((d.w.as_slice(), d.in_f, d.out_f)),
+                Layer::Conv(c) => {
+                    out.push((c.w.as_slice(), c.cin * c.k * c.k, c.cout));
+                }
+                Layer::Pool(_) => {}
+                Layer::Res(r) => {
+                    out.push((
+                        r.conv1.w.as_slice(),
+                        r.conv1.cin * r.conv1.k * r.conv1.k,
+                        r.conv1.cout,
+                    ));
+                    out.push((
+                        r.conv2.w.as_slice(),
+                        r.conv2.cin * r.conv2.k * r.conv2.k,
+                        r.conv2.cout,
+                    ));
+                    if let Some(p) = &r.proj {
+                        out.push((p.w.as_slice(), p.cin, p.cout));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Enumerate all neurons (the voltage-assignment domain).
+    pub fn neurons(&self) -> Vec<Neuron> {
+        let macs = self.mac_layers();
+        let last = macs.len().saturating_sub(1);
+        let mut out = Vec::new();
+        for (li, (w, fan_in, units)) in macs.iter().enumerate() {
+            for u in 0..*units {
+                let row = &w[u * fan_in..(u + 1) * fan_in];
+                let l2 = row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+                out.push(Neuron {
+                    mac_layer: li,
+                    unit: u,
+                    fan_in: *fan_in,
+                    weight_l2: l2,
+                    is_output: li == last,
+                });
+            }
+        }
+        out
+    }
+
+    pub fn num_mac_layers(&self) -> usize {
+        self.mac_layers().len()
+    }
+
+    // --- persistence --------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        fn conv_json(c: &Conv2d) -> Json {
+            Json::obj(vec![
+                ("cin", Json::Num(c.cin as f64)),
+                ("cout", Json::Num(c.cout as f64)),
+                ("k", Json::Num(c.k as f64)),
+                ("pad", Json::Num(c.pad as f64)),
+                ("act", Json::Str(c.act.name().into())),
+                ("w", Json::arr_f64(&c.w.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+                ("b", Json::arr_f64(&c.b.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+            ])
+        }
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Dense(d) => Json::obj(vec![
+                    ("type", Json::Str("dense".into())),
+                    ("in", Json::Num(d.in_f as f64)),
+                    ("out", Json::Num(d.out_f as f64)),
+                    ("act", Json::Str(d.act.name().into())),
+                    (
+                        "w",
+                        Json::arr_f64(&d.w.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+                    ),
+                    (
+                        "b",
+                        Json::arr_f64(&d.b.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+                    ),
+                ]),
+                Layer::Conv(c) => {
+                    let mut obj = conv_json(c);
+                    if let Json::Obj(m) = &mut obj {
+                        m.insert("type".into(), Json::Str("conv".into()));
+                    }
+                    obj
+                }
+                Layer::Pool(p) => Json::obj(vec![
+                    ("type", Json::Str("pool".into())),
+                    ("channels", Json::Num(p.channels as f64)),
+                ]),
+                Layer::Res(r) => {
+                    let mut fields = vec![
+                        ("type", Json::Str("res".into())),
+                        ("conv1", conv_json(&r.conv1)),
+                        ("conv2", conv_json(&r.conv2)),
+                    ];
+                    if let Some(p) = &r.proj {
+                        fields.push(("proj", conv_json(p)));
+                    }
+                    Json::obj(fields)
+                }
+            })
+            .collect();
+        let input = match self.input {
+            DataShape::Flat(n) => Json::arr_f64(&[n as f64]),
+            DataShape::Spatial(c, h, w) => Json::arr_f64(&[c as f64, h as f64, w as f64]),
+        };
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("input", input),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Model> {
+        fn conv_from(j: &Json) -> anyhow::Result<Conv2d> {
+            let mut rng = Xoshiro256pp::seeded(0);
+            let mut c = Conv2d::new(
+                j.get("cin")?.as_usize()?,
+                j.get("cout")?.as_usize()?,
+                j.get("k")?.as_usize()?,
+                j.get("pad")?.as_usize()?,
+                Activation::from_name(j.get("act")?.as_str()?)?,
+                &mut rng,
+            );
+            c.w = j.get("w")?.as_f64_vec()?.iter().map(|&v| v as f32).collect();
+            c.b = j.get("b")?.as_f64_vec()?.iter().map(|&v| v as f32).collect();
+            anyhow::ensure!(c.w.len() == c.cout * c.cin * c.k * c.k, "conv weight size");
+            Ok(c)
+        }
+        let input_v = j.get("input")?.as_f64_vec()?;
+        let input = match input_v.len() {
+            1 => DataShape::Flat(input_v[0] as usize),
+            3 => DataShape::Spatial(
+                input_v[0] as usize,
+                input_v[1] as usize,
+                input_v[2] as usize,
+            ),
+            n => anyhow::bail!("bad input shape rank {n}"),
+        };
+        let mut b = ModelBuilder::new(j.get("name")?.as_str()?, input);
+        for lj in j.get("layers")?.as_arr()? {
+            match lj.get("type")?.as_str()? {
+                "dense" => {
+                    let mut rng = Xoshiro256pp::seeded(0);
+                    let in_f = lj.get("in")?.as_usize()?;
+                    let out_f = lj.get("out")?.as_usize()?;
+                    let mut d = Dense::new(
+                        in_f,
+                        out_f,
+                        Activation::from_name(lj.get("act")?.as_str()?)?,
+                        &mut rng,
+                    );
+                    d.w = lj.get("w")?.as_f64_vec()?.iter().map(|&v| v as f32).collect();
+                    d.b = lj.get("b")?.as_f64_vec()?.iter().map(|&v| v as f32).collect();
+                    anyhow::ensure!(d.w.len() == in_f * out_f, "dense weight size");
+                    anyhow::ensure!(b.cur.numel() == in_f, "dense input mismatch");
+                    b.shapes.push(b.cur);
+                    b.layers.push(Layer::Dense(d));
+                    b.cur = DataShape::Flat(out_f);
+                }
+                "conv" => {
+                    let c = conv_from(lj)?;
+                    let (cc, h, w) = spatial(b.cur);
+                    anyhow::ensure!(cc == c.cin, "conv input channels");
+                    let (ho, wo) = c.out_hw(h, w);
+                    let cout = c.cout;
+                    b.shapes.push(b.cur);
+                    b.layers.push(Layer::Conv(c));
+                    b.cur = DataShape::Spatial(cout, ho, wo);
+                }
+                "pool" => {
+                    let (c, h, w) = spatial(b.cur);
+                    b.shapes.push(b.cur);
+                    b.layers.push(Layer::Pool(MaxPool2::new(c)));
+                    b.cur = DataShape::Spatial(c, h / 2, w / 2);
+                }
+                "res" => {
+                    let conv1 = conv_from(lj.get("conv1")?)?;
+                    let conv2 = conv_from(lj.get("conv2")?)?;
+                    let proj = match lj.opt("proj") {
+                        Some(p) => Some(conv_from(p)?),
+                        None => None,
+                    };
+                    let (c, h, w) = spatial(b.cur);
+                    anyhow::ensure!(c == conv1.cin, "res input channels");
+                    let cout = conv2.cout;
+                    b.shapes.push(b.cur);
+                    b.layers.push(Layer::Res(ResBlock {
+                        conv1,
+                        conv2,
+                        proj,
+                        cache_sum_y: Tensor::zeros(&[0]),
+                    }));
+                    b.cur = DataShape::Spatial(cout, h, w);
+                }
+                other => anyhow::bail!("unknown layer type '{other}'"),
+            }
+        }
+        Ok(b.build())
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        crate::util::json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Model> {
+        Self::from_json(&crate::util::json::read_file(path)?)
+    }
+}
+
+fn spatial(s: DataShape) -> (usize, usize, usize) {
+    match s {
+        DataShape::Spatial(c, h, w) => (c, h, w),
+        _ => panic!("expected spatial shape"),
+    }
+}
+
+/// The paper's FC benchmark: 784 → 128 hidden → 10 out (Fig 5/11/12/13).
+pub fn fc_mnist(hidden_act: Activation, rng: &mut Xoshiro256pp) -> Model {
+    ModelBuilder::new("fc_mnist", DataShape::Flat(784))
+        .dense(128, hidden_act, rng)
+        .dense(10, Activation::Linear, rng)
+        .build()
+}
+
+/// LeNet-5-style CNN for 28×28 grayscale (Fig 14a).
+pub fn lenet5(rng: &mut Xoshiro256pp) -> Model {
+    ModelBuilder::new("lenet5", DataShape::Spatial(1, 28, 28))
+        .conv(6, 5, 0, Activation::Relu, rng) // 24×24
+        .pool() // 12×12
+        .conv(16, 5, 0, Activation::Relu, rng) // 8×8
+        .pool() // 4×4
+        .dense(120, Activation::Relu, rng)
+        .dense(84, Activation::Relu, rng)
+        .dense(10, Activation::Linear, rng)
+        .build()
+}
+
+/// ResNet-tiny for 32×32×3 (CIFAR-like) — the in-budget stand-in for the
+/// paper's ResNet-50 (substitution documented in DESIGN.md §3).
+pub fn resnet_tiny(rng: &mut Xoshiro256pp) -> Model {
+    ModelBuilder::new("resnet_tiny", DataShape::Spatial(3, 32, 32))
+        .conv(8, 3, 1, Activation::Relu, rng) // 32×32
+        .res_block(8, rng)
+        .pool() // 16×16
+        .res_block(16, rng)
+        .pool() // 8×8
+        .res_block(16, rng)
+        .pool() // 4×4
+        .dense(10, Activation::Linear, rng)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_shapes_and_neurons() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        let mut m = fc_mnist(Activation::Linear, &mut rng);
+        assert_eq!(m.output_dim, 10);
+        assert_eq!(m.num_params(), 784 * 128 + 128 + 128 * 10 + 10);
+        let neurons = m.neurons();
+        assert_eq!(neurons.len(), 138); // 128 hidden + 10 output
+        assert_eq!(neurons[0].fan_in, 784);
+        assert_eq!(neurons[128].fan_in, 128);
+        assert!(neurons[137].is_output);
+        assert!(!neurons[0].is_output);
+        assert!(neurons.iter().all(|n| n.weight_l2 > 0.0));
+    }
+
+    #[test]
+    fn forward_shapes_fc_and_lenet() {
+        let mut rng = Xoshiro256pp::seeded(2);
+        let mut fc = fc_mnist(Activation::Sigmoid, &mut rng);
+        let x = Tensor::zeros(&[3, 784]);
+        assert_eq!(fc.forward(&x, false).shape, vec![3, 10]);
+
+        let mut ln = lenet5(&mut rng);
+        let x = Tensor::zeros(&[2, 784]);
+        let y = ln.forward(&x, false);
+        assert_eq!(y.shape, vec![2, 10]);
+        // LeNet neurons: 6 + 16 + 120 + 84 + 10.
+        assert_eq!(ln.neurons().len(), 236);
+    }
+
+    #[test]
+    fn resnet_tiny_forward_and_neurons() {
+        let mut rng = Xoshiro256pp::seeded(3);
+        let mut rn = resnet_tiny(&mut rng);
+        let x = Tensor::zeros(&[1, 3 * 32 * 32]);
+        let y = rn.forward(&x, false);
+        assert_eq!(y.shape, vec![1, 10]);
+        let n = rn.neurons();
+        // conv(8) + res(8,8) + res(8→16: 16+16+proj16) + res(16,16) + dense10
+        assert_eq!(n.len(), 8 + (8 + 8) + (16 + 16 + 16) + (16 + 16) + 10);
+        assert!(n.last().unwrap().is_output);
+    }
+
+    #[test]
+    fn model_json_roundtrip_preserves_forward() {
+        let mut rng = Xoshiro256pp::seeded(4);
+        let mut m = lenet5(&mut rng);
+        let x = Tensor::from_vec(
+            &[1, 784],
+            (0..784).map(|i| ((i * 37) % 256) as f32 / 255.0).collect(),
+        );
+        let y1 = m.forward(&x, false);
+        let j = m.to_json();
+        let mut m2 = Model::from_json(&j).unwrap();
+        let y2 = m2.forward(&x, false);
+        crate::util::checks::assert_allclose(&y1.data, &y2.data, 1e-6);
+        assert_eq!(m.neurons().len(), m2.neurons().len());
+    }
+
+    #[test]
+    fn resblock_gradcheck() {
+        let mut rng = Xoshiro256pp::seeded(5);
+        let mut rb = ResBlock::new(2, 3, &mut rng);
+        let x = Tensor::from_vec(
+            &[1, 2 * 4 * 4],
+            (0..32).map(|_| rng.gaussian(0.0, 0.5) as f32).collect(),
+        );
+        let y = rb.forward(&x, 4, 4, true);
+        let gin = rb.backward(&y.clone());
+        let eps = 1e-3f32;
+        for &xi in &[0usize, 15, 31] {
+            let mut xp = x.clone();
+            xp.data[xi] += eps;
+            let mut xm = x.clone();
+            xm.data[xi] -= eps;
+            let mut rb2 = rb.clone();
+            let yp = rb2.forward(&xp, 4, 4, false);
+            let ym = rb2.forward(&xm, 4, 4, false);
+            let lossp: f32 = yp.data.iter().map(|v| v * v / 2.0).sum();
+            let lossm: f32 = ym.data.iter().map(|v| v * v / 2.0).sum();
+            let numeric = (lossp - lossm) / (2.0 * eps);
+            crate::util::checks::assert_close(gin.data[xi] as f64, numeric as f64, 5e-2);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        let j = Json::parse(r#"{"name":"x","input":[4],"layers":[{"type":"warp"}]}"#).unwrap();
+        assert!(Model::from_json(&j).is_err());
+    }
+}

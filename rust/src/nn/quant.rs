@@ -1,0 +1,572 @@
+//! Post-training int8 quantization and VOS-noise-aware quantized inference.
+//!
+//! The baseline TPU runs 8-bit fixed-point inference (paper §IV.A). This
+//! module converts a trained float [`Model`] into symmetric-int8 form
+//! (per-layer weight scale + calibrated activation scale) and provides the
+//! quantized forward pass with **per-neuron error injection in the integer
+//! product domain** — the exact domain where the gate-level multiplier
+//! errors live, so the statistical error models plug in without unit
+//! conversion: a neuron at voltage `v` with fan-in `k` receives additive
+//! noise `N(k·μ_v, k·σ²_v)` on its accumulator (paper eqs 10–13).
+
+use super::layers::Activation;
+use super::model::{DataShape, Layer, Model};
+use super::tensor::Tensor;
+use crate::util::rng::Xoshiro256pp;
+
+/// Per-neuron injected-noise specification, indexed like
+/// [`Model::neurons`]. `mean`/`std` are in integer-product units.
+#[derive(Clone, Debug, Default)]
+pub struct NoiseSpec {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl NoiseSpec {
+    pub fn silent(n: usize) -> Self {
+        Self { mean: vec![0.0; n], std: vec![0.0; n] }
+    }
+
+    pub fn is_silent(&self) -> bool {
+        self.std.iter().all(|&s| s == 0.0) && self.mean.iter().all(|&m| m == 0.0)
+    }
+}
+
+/// A quantized MAC layer: weights int8, `w[u]·x ≈ Σ wq·xq · (sw·sx)`.
+#[derive(Clone, Debug)]
+pub struct QuantMac {
+    /// int8 weights `[out, fan_in]` row-major.
+    pub wq: Vec<i8>,
+    pub fan_in: usize,
+    pub out: usize,
+    pub w_scale: f32,
+    /// Calibrated input activation scale.
+    pub x_scale: f32,
+    pub bias: Vec<f32>,
+    pub act: Activation,
+}
+
+impl QuantMac {
+    fn quantize_weights(w: &[f32], fan_in: usize, out: usize) -> (Vec<i8>, f32) {
+        let max_abs = w.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-12);
+        let scale = max_abs / 127.0;
+        let wq = w.iter().map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8).collect();
+        let _ = (fan_in, out);
+        (wq, scale)
+    }
+
+    /// Quantize an input row to int8 with this layer's activation scale.
+    #[inline]
+    fn quantize_input(&self, x: &[f32], out: &mut [i8]) {
+        let s = self.x_scale.max(1e-12);
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o = (v / s).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+
+    /// Integer MAC for one output unit over a quantized input row.
+    #[inline]
+    fn mac(&self, unit: usize, xq: &[i8]) -> i32 {
+        let row = &self.wq[unit * self.fan_in..(unit + 1) * self.fan_in];
+        let mut acc = 0i32;
+        for (&w, &x) in row.iter().zip(xq) {
+            acc += (w as i32) * (x as i32);
+        }
+        acc
+    }
+
+    /// Dequantize an accumulator value.
+    #[inline]
+    fn dequant(&self, acc: f64, unit: usize) -> f32 {
+        (acc as f32) * self.w_scale * self.x_scale + self.bias[unit]
+    }
+}
+
+/// Structure of the quantized network (mirrors [`Model`] layer-for-layer).
+#[derive(Clone, Debug)]
+pub enum QLayer {
+    Dense(QuantMac),
+    Conv {
+        mac: QuantMac,
+        cin: usize,
+        k: usize,
+        pad: usize,
+        h: usize,
+        w: usize,
+    },
+    Pool {
+        channels: usize,
+        h: usize,
+        w: usize,
+    },
+    /// Residual block: conv1, conv2, optional projection; spatial dims.
+    Res {
+        conv1: Box<QLayer>,
+        conv2: Box<QLayer>,
+        proj: Option<Box<QLayer>>,
+    },
+}
+
+/// Quantized model with the neuron enumeration aligned to [`Model::neurons`].
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub name: String,
+    pub layers: Vec<QLayer>,
+    pub input: DataShape,
+    pub output_dim: usize,
+    /// fan_in per neuron (flat enumeration), for assignment bookkeeping.
+    pub neuron_fan_in: Vec<usize>,
+}
+
+/// Calibrate activation scales: run `calib` through the float model and
+/// record the max |input| entering each MAC layer (including those inside
+/// residual blocks, in enumeration order).
+fn calibrate_scales(model: &mut Model, calib: &Tensor) -> Vec<f32> {
+    // Forward manually, mirroring Model::forward, recording scales.
+    let mut scales = Vec::new();
+    let mut cur = calib.clone();
+    let mut shape = model.input;
+    let max_abs = |t: &Tensor| t.data.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-6);
+    for layer in model.layers.iter_mut() {
+        match layer {
+            Layer::Dense(d) => {
+                scales.push(max_abs(&cur) / 127.0);
+                cur = d.forward(&cur, false);
+                shape = DataShape::Flat(d.out_f);
+            }
+            Layer::Conv(c) => {
+                let (_, h, w) = spatial(shape);
+                scales.push(max_abs(&cur) / 127.0);
+                cur = c.forward(&cur, h, w, false);
+                let (ho, wo) = c.out_hw(h, w);
+                shape = DataShape::Spatial(c.cout, ho, wo);
+            }
+            Layer::Pool(p) => {
+                let (c, h, w) = spatial(shape);
+                cur = p.forward(&cur, h, w, false);
+                shape = DataShape::Spatial(c, h / 2, w / 2);
+            }
+            Layer::Res(r) => {
+                let (_, h, w) = spatial(shape);
+                let s_in = max_abs(&cur) / 127.0;
+                scales.push(s_in); // conv1 input
+                let a = r.conv1.forward(&cur, h, w, false);
+                scales.push(max_abs(&a) / 127.0); // conv2 input
+                if r.proj.is_some() {
+                    scales.push(s_in); // proj input = block input
+                }
+                cur = r.forward(&cur, h, w, false);
+                shape = DataShape::Spatial(r.conv2.cout, h, w);
+            }
+        }
+    }
+    scales
+}
+
+fn spatial(s: DataShape) -> (usize, usize, usize) {
+    match s {
+        DataShape::Spatial(c, h, w) => (c, h, w),
+        _ => panic!("expected spatial shape"),
+    }
+}
+
+impl QuantizedModel {
+    /// Quantize a trained model, calibrating activation scales on `calib`
+    /// (a representative input batch).
+    pub fn quantize(model: &Model, calib: &Tensor) -> Self {
+        let mut m = model.clone();
+        let scales = calibrate_scales(&mut m, calib);
+        let mut si = 0usize;
+        let mut next_scale = || {
+            let s = scales[si];
+            si += 1;
+            s
+        };
+        let mut layers = Vec::new();
+        let mut shape = model.input;
+        let mut neuron_fan_in = Vec::new();
+        let conv_to_q = |c: &super::layers::Conv2d,
+                             h: usize,
+                             w: usize,
+                             x_scale: f32,
+                             fan_acc: &mut Vec<usize>| {
+            let fan_in = c.cin * c.k * c.k;
+            let (wq, w_scale) = QuantMac::quantize_weights(&c.w, fan_in, c.cout);
+            for _ in 0..c.cout {
+                fan_acc.push(fan_in);
+            }
+            QLayer::Conv {
+                mac: QuantMac {
+                    wq,
+                    fan_in,
+                    out: c.cout,
+                    w_scale,
+                    x_scale,
+                    bias: c.b.clone(),
+                    act: c.act,
+                },
+                cin: c.cin,
+                k: c.k,
+                pad: c.pad,
+                h,
+                w,
+            }
+        };
+        for layer in &model.layers {
+            match layer {
+                Layer::Dense(d) => {
+                    let (wq, w_scale) = QuantMac::quantize_weights(&d.w, d.in_f, d.out_f);
+                    for _ in 0..d.out_f {
+                        neuron_fan_in.push(d.in_f);
+                    }
+                    layers.push(QLayer::Dense(QuantMac {
+                        wq,
+                        fan_in: d.in_f,
+                        out: d.out_f,
+                        w_scale,
+                        x_scale: next_scale(),
+                        bias: d.b.clone(),
+                        act: d.act,
+                    }));
+                    shape = DataShape::Flat(d.out_f);
+                }
+                Layer::Conv(c) => {
+                    let (_, h, w) = spatial(shape);
+                    let s = next_scale();
+                    layers.push(conv_to_q(c, h, w, s, &mut neuron_fan_in));
+                    let (ho, wo) = c.out_hw(h, w);
+                    shape = DataShape::Spatial(c.cout, ho, wo);
+                }
+                Layer::Pool(p) => {
+                    let (c, h, w) = spatial(shape);
+                    layers.push(QLayer::Pool { channels: p.channels, h, w });
+                    shape = DataShape::Spatial(c, h / 2, w / 2);
+                }
+                Layer::Res(r) => {
+                    let (_, h, w) = spatial(shape);
+                    let s1 = next_scale();
+                    let q1 = conv_to_q(&r.conv1, h, w, s1, &mut neuron_fan_in);
+                    let s2 = next_scale();
+                    let q2 = conv_to_q(&r.conv2, h, w, s2, &mut neuron_fan_in);
+                    let qp = r.proj.as_ref().map(|p| {
+                        let sp = next_scale();
+                        Box::new(conv_to_q(p, h, w, sp, &mut neuron_fan_in))
+                    });
+                    layers.push(QLayer::Res { conv1: Box::new(q1), conv2: Box::new(q2), proj: qp });
+                    shape = DataShape::Spatial(r.conv2.cout, h, w);
+                }
+            }
+        }
+        QuantizedModel {
+            name: model.name.clone(),
+            layers,
+            input: model.input,
+            output_dim: model.output_dim,
+            neuron_fan_in,
+        }
+    }
+
+    pub fn num_neurons(&self) -> usize {
+        self.neuron_fan_in.len()
+    }
+
+    /// Quantized forward pass with optional per-neuron noise injection.
+    /// `noise` must be indexed like [`Model::neurons`]; `rng` is used only
+    /// when noise is present.
+    pub fn forward(
+        &self,
+        x: &Tensor,
+        noise: Option<&NoiseSpec>,
+        rng: &mut Xoshiro256pp,
+    ) -> Tensor {
+        if let Some(ns) = noise {
+            assert_eq!(ns.mean.len(), self.num_neurons(), "noise spec length");
+            assert_eq!(ns.std.len(), self.num_neurons(), "noise spec length");
+        }
+        let batch = x.shape[0];
+        let mut cur = x.clone();
+        let mut neuron_base;
+        for s in 0..1 {
+            let _ = s;
+        }
+        // Process layer by layer; track the neuron base index.
+        neuron_base = 0;
+        for layer in &self.layers {
+            cur = self.forward_layer(layer, &cur, batch, &mut neuron_base, noise, rng);
+        }
+        cur
+    }
+
+    fn forward_layer(
+        &self,
+        layer: &QLayer,
+        cur: &Tensor,
+        batch: usize,
+        neuron_base: &mut usize,
+        noise: Option<&NoiseSpec>,
+        rng: &mut Xoshiro256pp,
+    ) -> Tensor {
+        match layer {
+            QLayer::Dense(mac) => {
+                let mut y = Tensor::zeros(&[batch, mac.out]);
+                let mut xq = vec![0i8; mac.fan_in];
+                for r in 0..batch {
+                    mac.quantize_input(cur.row(r), &mut xq);
+                    let dst = y.row_mut(r);
+                    for u in 0..mac.out {
+                        let mut acc = mac.mac(u, &xq) as f64;
+                        if let Some(ns) = noise {
+                            let gi = *neuron_base + u;
+                            if ns.std[gi] > 0.0 || ns.mean[gi] != 0.0 {
+                                acc += rng.gaussian(ns.mean[gi], ns.std[gi]).round();
+                            }
+                        }
+                        dst[u] = mac.act.apply(mac.dequant(acc, u));
+                    }
+                }
+                *neuron_base += mac.out;
+                y
+            }
+            QLayer::Conv { mac, cin, k, pad, h, w } => {
+                let y = self.conv_forward(mac, *cin, *k, *pad, *h, *w, cur, batch, *neuron_base, noise, rng);
+                *neuron_base += mac.out;
+                y
+            }
+            QLayer::Pool { channels, h, w } => {
+                let (ho, wo) = (h / 2, w / 2);
+                let c = *channels;
+                let mut y = Tensor::zeros(&[batch, c * ho * wo]);
+                for s in 0..batch {
+                    let img = cur.row(s);
+                    let dst = y.row_mut(s);
+                    for ch in 0..c {
+                        for oy in 0..ho {
+                            for ox in 0..wo {
+                                let mut best = f32::NEG_INFINITY;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let v = img[(ch * h + oy * 2 + dy) * w + ox * 2 + dx];
+                                        if v > best {
+                                            best = v;
+                                        }
+                                    }
+                                }
+                                dst[(ch * ho + oy) * wo + ox] = best;
+                            }
+                        }
+                    }
+                }
+                y
+            }
+            QLayer::Res { conv1, conv2, proj } => {
+                let a = self.forward_layer(conv1, cur, batch, neuron_base, noise, rng);
+                let mut y = self.forward_layer(conv2, &a, batch, neuron_base, noise, rng);
+                let skip = match proj {
+                    Some(p) => self.forward_layer(p, cur, batch, neuron_base, noise, rng),
+                    None => cur.clone(),
+                };
+                for (v, &s) in y.data.iter_mut().zip(&skip.data) {
+                    *v = (*v + s).max(0.0);
+                }
+                y
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv_forward(
+        &self,
+        mac: &QuantMac,
+        cin: usize,
+        k: usize,
+        pad: usize,
+        h: usize,
+        w: usize,
+        cur: &Tensor,
+        batch: usize,
+        neuron_base: usize,
+        noise: Option<&NoiseSpec>,
+        rng: &mut Xoshiro256pp,
+    ) -> Tensor {
+        let ho = h + 2 * pad + 1 - k;
+        let wo = w + 2 * pad + 1 - k;
+        let fan_in = cin * k * k;
+        let mut y = Tensor::zeros(&[batch, mac.out * ho * wo]);
+        let mut patch = vec![0i8; fan_in];
+        let s_in = mac.x_scale.max(1e-12);
+        for s in 0..batch {
+            let img = cur.row(s);
+            let dst = y.row_mut(s);
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    // Quantized im2col patch.
+                    let mut pi = 0;
+                    for c in 0..cin {
+                        for ky in 0..k {
+                            let iy = oy as isize + ky as isize - pad as isize;
+                            for kx in 0..k {
+                                let ix = ox as isize + kx as isize - pad as isize;
+                                patch[pi] = if iy < 0
+                                    || iy >= h as isize
+                                    || ix < 0
+                                    || ix >= w as isize
+                                {
+                                    0
+                                } else {
+                                    (img[(c * h + iy as usize) * w + ix as usize] / s_in)
+                                        .round()
+                                        .clamp(-127.0, 127.0)
+                                        as i8
+                                };
+                                pi += 1;
+                            }
+                        }
+                    }
+                    for u in 0..mac.out {
+                        let mut acc = mac.mac(u, &patch) as f64;
+                        if let Some(ns) = noise {
+                            let gi = neuron_base + u;
+                            if ns.std[gi] > 0.0 || ns.mean[gi] != 0.0 {
+                                acc += rng.gaussian(ns.mean[gi], ns.std[gi]).round();
+                            }
+                        }
+                        dst[(u * ho + oy) * wo + ox] = mac.act.apply(mac.dequant(acc, u));
+                    }
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::data::synth_mnist;
+    use crate::nn::model::{fc_mnist, lenet5, resnet_tiny};
+    use crate::nn::train::{evaluate, train, TrainConfig};
+    use crate::util::checks::assert_allclose;
+
+    fn trained_fc() -> (Model, crate::nn::data::Dataset) {
+        let mut rng = Xoshiro256pp::seeded(31);
+        let mut model = fc_mnist(Activation::Relu, &mut rng);
+        let train_set = synth_mnist(600, 51);
+        train(
+            &mut model,
+            &train_set,
+            &TrainConfig { epochs: 3, lr: 0.08, ..Default::default() },
+        );
+        (model, synth_mnist(200, 52))
+    }
+
+    #[test]
+    fn quantized_matches_float_closely() {
+        let (mut model, test) = trained_fc();
+        let calib = test.batch(&(0..64).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let (x, _) = test.batch(&(0..32).collect::<Vec<_>>());
+        let yf = model.forward(&x, false);
+        let yq = q.forward(&x, None, &mut rng);
+        // int8 quantization error is small relative to logit magnitudes.
+        let max_logit = yf.data.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        for (a, b) in yf.data.iter().zip(&yq.data) {
+            assert!((a - b).abs() < 0.1 * max_logit + 0.5, "float {a} vs quant {b}");
+        }
+    }
+
+    #[test]
+    fn quantized_accuracy_close_to_float() {
+        let (mut model, test) = trained_fc();
+        let calib = test.batch(&(0..64).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let float_acc = evaluate(&mut model, &test, 64);
+        let mut rng = Xoshiro256pp::seeded(2);
+        let idx: Vec<usize> = (0..test.len()).collect();
+        let mut correct = 0usize;
+        for chunk in idx.chunks(64) {
+            let (x, y) = test.batch(chunk);
+            let logits = q.forward(&x, None, &mut rng);
+            correct +=
+                (crate::nn::train::batch_accuracy(&logits, &y) * y.len() as f64) as usize;
+        }
+        let q_acc = correct as f64 / test.len() as f64;
+        assert!((float_acc - q_acc).abs() < 0.05, "float {float_acc} quant {q_acc}");
+    }
+
+    #[test]
+    fn silent_noise_equals_no_noise() {
+        let (model, test) = trained_fc();
+        let calib = test.batch(&(0..32).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let (x, _) = test.batch(&[0, 1, 2]);
+        let mut rng1 = Xoshiro256pp::seeded(3);
+        let mut rng2 = Xoshiro256pp::seeded(3);
+        let a = q.forward(&x, None, &mut rng1);
+        let spec = NoiseSpec::silent(q.num_neurons());
+        assert!(spec.is_silent());
+        let b = q.forward(&x, Some(&spec), &mut rng2);
+        assert_allclose(&a.data, &b.data, 1e-9);
+    }
+
+    #[test]
+    fn noise_degrades_output_monotonically() {
+        let (model, test) = trained_fc();
+        let calib = test.batch(&(0..32).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let (x, _) = test.batch(&(0..16).collect::<Vec<_>>());
+        let mut rng = Xoshiro256pp::seeded(4);
+        let clean = q.forward(&x, None, &mut rng);
+        let mse = |a: &Tensor, b: &Tensor| {
+            a.data.iter().zip(&b.data).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
+                / a.data.len() as f64
+        };
+        let mut last = 0.0;
+        for std in [50.0, 500.0, 5000.0] {
+            let mut spec = NoiseSpec::silent(q.num_neurons());
+            spec.std.iter_mut().for_each(|s| *s = std);
+            let mut rng = Xoshiro256pp::seeded(5);
+            let noisy = q.forward(&x, Some(&spec), &mut rng);
+            let m = mse(&clean, &noisy);
+            assert!(m > last, "MSE must grow with noise std: {m} vs {last}");
+            last = m;
+        }
+    }
+
+    #[test]
+    fn neuron_enumeration_matches_model() {
+        let mut rng = Xoshiro256pp::seeded(6);
+        for model in [lenet5(&mut rng), resnet_tiny(&mut rng)] {
+            let input_len = model.input.numel();
+            let calib = Tensor::zeros(&[2, input_len]);
+            let q = QuantizedModel::quantize(&model, &calib);
+            let neurons = model.neurons();
+            assert_eq!(q.num_neurons(), neurons.len(), "{}", model.name);
+            for (qf, n) in q.neuron_fan_in.iter().zip(&neurons) {
+                assert_eq!(*qf, n.fan_in);
+            }
+        }
+    }
+
+    #[test]
+    fn noise_on_single_output_neuron_only_moves_that_logit() {
+        let (model, test) = trained_fc();
+        let calib = test.batch(&(0..32).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let (x, _) = test.batch(&[0]);
+        let mut rng = Xoshiro256pp::seeded(7);
+        let clean = q.forward(&x, None, &mut rng);
+        let mut spec = NoiseSpec::silent(q.num_neurons());
+        // Neuron 128+3 is output logit 3 in the FC enumeration.
+        spec.std[128 + 3] = 10000.0;
+        let mut rng = Xoshiro256pp::seeded(8);
+        let noisy = q.forward(&x, Some(&spec), &mut rng);
+        for c in 0..10 {
+            if c == 3 {
+                assert!((clean.data[c] - noisy.data[c]).abs() > 1e-3);
+            } else {
+                assert!((clean.data[c] - noisy.data[c]).abs() < 1e-6, "logit {c} moved");
+            }
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Minimal dense tensor used by the NN substrate.
+//!
+//! Row-major `f32` storage with explicit shapes; the only heavy primitive is
+//! [`matmul`], which the training loop and the im2col convolution lowering
+//! both reduce to. It is cache-blocked and thread-parallel (see the §Perf
+//! log in EXPERIMENTS.md).
+
+use crate::util::threadpool::parallel_chunks;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows when viewed as a 2-D matrix `[rows, cols]`.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+}
+
+/// C = A[m,k] × B[k,n]. Parallel over rows of A, with a k-blocked inner loop
+/// writing linearly into C (good autovectorization on the `n` axis).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let bdata = &b.data;
+    let adata = &a.data;
+    // Parallel chunk over output rows; each worker fills disjoint rows.
+    let rows: Vec<(usize, Vec<f32>)> = parallel_chunks(m, |range, _| {
+        let mut block = vec![0.0f32; range.len() * n];
+        for (local, i) in range.clone().enumerate() {
+            let arow = &adata[i * k..(i + 1) * k];
+            let crow = &mut block[local * n..(local + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bdata[p * n..(p + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        (range.start, block)
+    });
+    for (start, block) in rows {
+        let rows_here = block.len() / n;
+        out.data[start * n..start * n + rows_here * n].copy_from_slice(&block);
+    }
+    out
+}
+
+/// C = Aᵀ[k,m]ᵀ... i.e. `matmul_tn(a, b) = aᵀ × b` with `a: [k, m]`,
+/// `b: [k, n]` → `[m, n]`. Used for weight gradients without materializing
+/// transposes.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    for p in 0..k {
+        let arow = &a.data[p * m..(p + 1) * m];
+        let brow = &b.data[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut out.data[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// C = A[m,k] × Bᵀ with `b: [n, k]` → `[m, n]`. Used for input gradients.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let rows: Vec<(usize, Vec<f32>)> = parallel_chunks(m, |range, _| {
+        let mut block = vec![0.0f32; range.len() * n];
+        for (local, i) in range.clone().enumerate() {
+            let arow = &a.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                block[local * n + j] = acc;
+            }
+        }
+        (range.start, block)
+    });
+    for (start, block) in rows {
+        let rows_here = block.len() / n;
+        out.data[start * n..start * n + rows_here * n].copy_from_slice(&block);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::checks::assert_allclose;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.shape[0], a.shape[1], b.shape[1]);
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a.data[i * k + p] * b.data[p * n + j];
+                }
+                c.data[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn random_tensor(shape: &[usize], rng: &mut Xoshiro256pp) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.gaussian(0.0, 1.0) as f32).collect())
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (17, 9, 23), (64, 32, 16)] {
+            let a = random_tensor(&[m, k], &mut rng);
+            let b = random_tensor(&[k, n], &mut rng);
+            let fast = matmul(&a, &b);
+            let slow = naive_matmul(&a, &b);
+            assert_allclose(&fast.data, &slow.data, 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_tn_and_nt_match_transposed_naive() {
+        let mut rng = Xoshiro256pp::seeded(2);
+        let a = random_tensor(&[7, 5], &mut rng); // k=7, m=5
+        let b = random_tensor(&[7, 3], &mut rng); // k=7, n=3
+        let got = matmul_tn(&a, &b);
+        // aT: [5,7]
+        let mut at = Tensor::zeros(&[5, 7]);
+        for i in 0..7 {
+            for j in 0..5 {
+                at.data[j * 7 + i] = a.data[i * 5 + j];
+            }
+        }
+        let expect = naive_matmul(&at, &b);
+        assert_allclose(&got.data, &expect.data, 1e-4);
+
+        let x = random_tensor(&[4, 6], &mut rng);
+        let y = random_tensor(&[9, 6], &mut rng);
+        let got = matmul_nt(&x, &y);
+        let mut yt = Tensor::zeros(&[6, 9]);
+        for i in 0..9 {
+            for j in 0..6 {
+                yt.data[j * 9 + i] = y.data[i * 6 + j];
+            }
+        }
+        let expect = naive_matmul(&x, &yt);
+        assert_allclose(&got.data, &expect.data, 1e-4);
+    }
+
+    #[test]
+    fn reshape_and_rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.row(2), &[5., 6.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,273 @@
+//! Power / energy model of the (X-)TPU processing element.
+//!
+//! The paper's numbers come from Synopsys DC power reports on the
+//! synthesized 15-nm FinFET PE. Our model reconstructs them from first
+//! principles on the same netlists the timing simulator uses:
+//!
+//! - **dynamic energy** = Σ over toggling gates of `toggle_energy · V²`
+//!   (switched-capacitance model; per-gate toggle counts come straight from
+//!   the [`crate::timing::vos::VosSimulator`]),
+//! - **register/clock energy** = per-bit constant each cycle (registers are
+//!   in the exact region and never overscaled),
+//! - **leakage** = per-gate `leakage · V` per cycle,
+//! - **level shifters** = fixed per-bit overhead on the product bus, charged
+//!   only when the column runs below nominal voltage (paper §IV.A notes this
+//!   as the cost of VOS support).
+//!
+//! All energies are in normalized "gate-energy units" (NAND2 toggle at
+//! nominal voltage = 1); the paper's claims are all *relative* (% savings),
+//! which this normalization preserves.
+
+use crate::timing::circuits::PeDatapath;
+use crate::timing::gate::Netlist;
+use crate::timing::voltage::Technology;
+
+/// Per-cycle clock/register energy per register bit (normalized units).
+/// Calibrated so the PE decomposition lands near the paper's Fig 1b
+/// (multiplier ≈ 56 %, registers ≈ 30 %, adder ≈ 14 %).
+pub const REGISTER_ENERGY_PER_BIT: f64 = 1.35;
+
+/// Per-cycle level-shifter energy per product bit when a column is
+/// overscaled (the LS cells of Fig 6b/c).
+pub const LEVEL_SHIFTER_ENERGY_PER_BIT: f64 = 0.4;
+
+/// Leakage weight per cycle (fraction of a gate's leakage constant charged
+/// each cycle; keeps leakage a realistic ~10 % of PE energy at nominal).
+pub const LEAKAGE_WEIGHT: f64 = 0.02;
+
+/// Register bits in one PE: 8 weight + 8 activation pipeline + 24 psum.
+pub const PE_REGISTER_BITS: usize = 8 + 8 + 24;
+
+/// Static (activity-independent) energy description of one PE cycle.
+#[derive(Clone, Copy, Debug)]
+pub struct PeEnergyBreakdown {
+    /// Multiplier dynamic + leakage energy (the approximate region).
+    pub multiplier: f64,
+    /// Accumulator adder energy (exact region).
+    pub adder: f64,
+    /// Register/clock energy (exact region).
+    pub registers: f64,
+    /// Level-shifter overhead (zero when running at nominal voltage).
+    pub level_shifters: f64,
+}
+
+impl PeEnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.multiplier + self.adder + self.registers + self.level_shifters
+    }
+
+    /// Percentage shares `(multiplier, adder, registers, shifters)`.
+    pub fn shares(&self) -> (f64, f64, f64, f64) {
+        let t = self.total();
+        (
+            self.multiplier / t * 100.0,
+            self.adder / t * 100.0,
+            self.registers / t * 100.0,
+            self.level_shifters / t * 100.0,
+        )
+    }
+}
+
+/// Average switching activity of a netlist region: expected toggle energy
+/// per cycle at nominal voltage (before V² scaling), plus leakage constant.
+#[derive(Clone, Copy, Debug)]
+pub struct RegionActivity {
+    /// Mean toggle energy per cycle (Σ toggle_energy over toggles / cycles).
+    pub toggle_energy_per_cycle: f64,
+    /// Σ leakage constants over gates in the region.
+    pub leakage_sum: f64,
+}
+
+/// Compute a region's activity from cumulative toggle counts.
+pub fn region_activity(
+    netlist: &Netlist,
+    toggle_counts: &[u64],
+    range: &std::ops::Range<usize>,
+    cycles: u64,
+) -> RegionActivity {
+    assert!(cycles > 0);
+    let gates = netlist.gates();
+    let mut toggle_energy = 0.0;
+    let mut leakage = 0.0;
+    for i in range.clone() {
+        toggle_energy += gates[i].kind.toggle_energy() as f64 * toggle_counts[i] as f64;
+        leakage += gates[i].kind.leakage() as f64;
+    }
+    RegionActivity {
+        toggle_energy_per_cycle: toggle_energy / cycles as f64,
+        leakage_sum: leakage,
+    }
+}
+
+/// Calibrated per-cycle energy model of one PE, derived from measured
+/// switching activity of the multiplier and adder regions.
+#[derive(Clone, Copy, Debug)]
+pub struct PePowerModel {
+    pub mult: RegionActivity,
+    pub adder: RegionActivity,
+    pub tech: Technology,
+}
+
+impl PePowerModel {
+    pub fn new(mult: RegionActivity, adder: RegionActivity, tech: Technology) -> Self {
+        Self { mult, adder, tech }
+    }
+
+    /// Build from a finished VOS simulation of the PE datapath.
+    pub fn from_simulation(
+        pe: &PeDatapath,
+        toggle_counts: &[u64],
+        cycles: u64,
+        tech: Technology,
+    ) -> Self {
+        let mult = region_activity(&pe.netlist, toggle_counts, &pe.mult_gates, cycles);
+        let adder = region_activity(&pe.netlist, toggle_counts, &pe.adder_gates, cycles);
+        Self::new(mult, adder, tech)
+    }
+
+    /// Per-cycle energy of one PE whose multiplier runs at `v_mult` while
+    /// the exact region stays at nominal voltage.
+    pub fn pe_energy(&self, v_mult: f64) -> PeEnergyBreakdown {
+        let vn = self.tech.v_nominal;
+        let dyn_scale = self.tech.energy_scale(v_mult);
+        let overscaled = (v_mult - vn).abs() > 1e-9;
+        let mult_dynamic = self.mult.toggle_energy_per_cycle * dyn_scale;
+        let mult_leak = self.mult.leakage_sum * LEAKAGE_WEIGHT * (v_mult / vn);
+        let adder_dynamic = self.adder.toggle_energy_per_cycle;
+        let adder_leak = self.adder.leakage_sum * LEAKAGE_WEIGHT;
+        PeEnergyBreakdown {
+            multiplier: mult_dynamic + mult_leak,
+            adder: adder_dynamic + adder_leak,
+            registers: REGISTER_ENERGY_PER_BIT * PE_REGISTER_BITS as f64,
+            level_shifters: if overscaled {
+                LEVEL_SHIFTER_ENERGY_PER_BIT * 16.0
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Fractional PE energy saving of running the multiplier at `v_mult`
+    /// (0.0 = none, 1.0 = everything).
+    pub fn pe_saving(&self, v_mult: f64) -> f64 {
+        let nominal = self.pe_energy(self.tech.v_nominal).total();
+        1.0 - self.pe_energy(v_mult).total() / nominal
+    }
+
+    /// Energy of a *neuron* = column of `k` PEs at multiplier voltage `v`.
+    pub fn neuron_energy(&self, k: usize, v_mult: f64) -> f64 {
+        self.pe_energy(v_mult).total() * k as f64
+    }
+}
+
+/// Energy accounting for a whole voltage assignment: `columns[i]` is the
+/// PE count (fan-in) of neuron `i`, `volts[i]` its multiplier voltage.
+pub fn total_energy(model: &PePowerModel, columns: &[usize], volts: &[f64]) -> f64 {
+    assert_eq!(columns.len(), volts.len());
+    columns.iter().zip(volts).map(|(&k, &v)| model.neuron_energy(k, v)).sum()
+}
+
+/// Fractional saving of an assignment vs. running everything at nominal.
+pub fn assignment_saving(model: &PePowerModel, columns: &[usize], volts: &[f64]) -> f64 {
+    let nominal: f64 = columns
+        .iter()
+        .map(|&k| model.neuron_energy(k, model.tech.v_nominal))
+        .sum();
+    1.0 - total_energy(model, columns, volts) / nominal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::circuits::pe_datapath;
+    use crate::timing::gate::i64_to_bits;
+    use crate::timing::sta::{clock_period, ChipInstance};
+    use crate::timing::vos::VosSimulator;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn measured_model() -> PePowerModel {
+        let pe = pe_datapath(24);
+        let tech = Technology::default();
+        let chip = ChipInstance::ideal(&pe.netlist);
+        let clock = clock_period(&pe.netlist, &chip, &tech);
+        let mut sim =
+            VosSimulator::new(&pe.netlist, chip.delays_at(&pe.netlist, &tech, 0.8), clock);
+        let mut rng = Xoshiro256pp::seeded(42);
+        let cycles = 2000u64;
+        for _ in 0..cycles {
+            let a = rng.range_i64(-128, 127);
+            let w = rng.range_i64(-128, 127);
+            let p = rng.range_i64(-(1 << 20), 1 << 20);
+            let packed: i64 = (a & 0xFF) | ((w & 0xFF) << 8) | ((p & 0xFF_FFFF) << 16);
+            sim.step(&i64_to_bits(packed, 40));
+        }
+        PePowerModel::from_simulation(&pe, sim.toggle_counts(), cycles, tech)
+    }
+
+    #[test]
+    fn decomposition_matches_paper_shape() {
+        let m = measured_model();
+        let e = m.pe_energy(0.8);
+        let (mult, adder, regs, ls) = e.shares();
+        // Fig 1b: multiplier ≈ 56 % — dominant, registers next, adder small.
+        assert!(mult > 45.0 && mult < 70.0, "multiplier share {mult:.1}%");
+        assert!(mult > adder && mult > regs, "multiplier must dominate");
+        assert!(adder < 30.0, "adder share {adder:.1}%");
+        assert_eq!(ls, 0.0, "no level shifters at nominal");
+    }
+
+    #[test]
+    fn saving_monotone_and_near_paper_at_04() {
+        let m = measured_model();
+        let s7 = m.pe_saving(0.7);
+        let s6 = m.pe_saving(0.6);
+        let s5 = m.pe_saving(0.5);
+        let s4 = m.pe_saving(0.4);
+        assert!(s4 > s5 && s5 > s6 && s6 > s7 && s7 > 0.0, "{s7} {s6} {s5} {s4}");
+        // Paper pointer ①: ~79 % *PE power* cut at 0.4 V refers to the PE
+        // measured in the Fig-1 intro experiment; our whole-PE model keeps
+        // exact-region energy, so expect the multiplier-driven saving to be
+        // a large fraction of the multiplier share (>30 % of total).
+        assert!(s4 > 0.3, "saving at 0.4 V = {s4}");
+    }
+
+    #[test]
+    fn nominal_assignment_saves_nothing() {
+        let m = measured_model();
+        let cols = vec![128usize; 10];
+        let volts = vec![0.8f64; 10];
+        assert!(assignment_saving(&m, &cols, &volts).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_assignment_saving_between_extremes() {
+        let m = measured_model();
+        let cols = vec![100usize; 8];
+        let all_low = vec![0.5f64; 8];
+        let mut mixed = vec![0.8f64; 8];
+        for v in mixed.iter_mut().take(4) {
+            *v = 0.5;
+        }
+        let s_low = assignment_saving(&m, &cols, &all_low);
+        let s_mixed = assignment_saving(&m, &cols, &mixed);
+        assert!(s_low > s_mixed && s_mixed > 0.0);
+        assert!((s_mixed - s_low / 2.0).abs() < 1e-9, "uniform columns halve the saving");
+    }
+
+    #[test]
+    fn level_shifter_overhead_reduces_saving() {
+        let m = measured_model();
+        // At a voltage very close to nominal the V² gain is tiny but the
+        // level-shifter tax is charged → saving can go negative.
+        let s = m.pe_saving(0.799);
+        assert!(s < 0.01);
+    }
+
+    #[test]
+    fn neuron_energy_scales_with_column_height() {
+        let m = measured_model();
+        let e1 = m.neuron_energy(1, 0.6);
+        let e128 = m.neuron_energy(128, 0.6);
+        assert!((e128 / e1 - 128.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,118 @@
+//! Output-quality metrics (paper §III.C eqs 5–8 and §IV.D eqs 23–26).
+
+use crate::nn::tensor::Tensor;
+
+/// Mean absolute error (eq. 5).
+pub fn mae(target: &[f32], output: &[f32]) -> f64 {
+    assert_eq!(target.len(), output.len());
+    if target.is_empty() {
+        return 0.0;
+    }
+    target.iter().zip(output).map(|(&t, &o)| (t - o).abs() as f64).sum::<f64>()
+        / target.len() as f64
+}
+
+/// Mean squared error (eq. 6).
+pub fn mse(target: &[f32], output: &[f32]) -> f64 {
+    assert_eq!(target.len(), output.len());
+    if target.is_empty() {
+        return 0.0;
+    }
+    target.iter().zip(output).map(|(&t, &o)| ((t - o) as f64).powi(2)).sum::<f64>()
+        / target.len() as f64
+}
+
+/// Mean relative error distance (eq. 7); guards against division by ~0.
+pub fn mred(target: &[f32], output: &[f32]) -> f64 {
+    assert_eq!(target.len(), output.len());
+    if target.is_empty() {
+        return 0.0;
+    }
+    target
+        .iter()
+        .zip(output)
+        .map(|(&t, &o)| {
+            let denom = (t as f64).abs().max(1e-9);
+            ((t - o) as f64).abs() / denom
+        })
+        .sum::<f64>()
+        / target.len() as f64
+}
+
+/// Cross-entropy of softmaxed logits vs a one-hot class (eq. 8).
+pub fn cross_entropy(logits: &[f32], class: usize) -> f64 {
+    let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let sum: f64 = logits.iter().map(|&v| ((v - maxv) as f64).exp()).sum();
+    -(((logits[class] - maxv) as f64).exp() / sum).max(1e-300).ln()
+}
+
+/// Batch MSE between two logits tensors (clean vs noisy inference) — the
+/// quantity Fig 10/13 sweeps against the user bound MSE_UB.
+pub fn batch_mse(a: &Tensor, b: &Tensor) -> f64 {
+    mse(&a.data, &b.data)
+}
+
+/// Error variance of the network output under noise, with Bessel's
+/// correction (paper eqs 24–26): `var(e) = Σ(e_i − ē)² / (n−1)`.
+pub fn output_error_variance(clean: &Tensor, noisy: &Tensor) -> f64 {
+    assert_eq!(clean.data.len(), noisy.data.len());
+    let n = clean.data.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let errs: Vec<f64> =
+        clean.data.iter().zip(&noisy.data).map(|(&c, &x)| (x - c) as f64).collect();
+    let mean = errs.iter().sum::<f64>() / n as f64;
+    errs.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / (n as f64 - 1.0)
+}
+
+/// Top-1 accuracy of logits vs labels.
+pub fn accuracy(logits: &Tensor, labels: &[u8]) -> f64 {
+    crate::nn::train::batch_accuracy(logits, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::checks::assert_close;
+
+    #[test]
+    fn metrics_zero_for_identical() {
+        let t = [1.0f32, -2.0, 3.0];
+        assert_eq!(mae(&t, &t), 0.0);
+        assert_eq!(mse(&t, &t), 0.0);
+        assert_eq!(mred(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn metric_values_known() {
+        let t = [1.0f32, 2.0];
+        let o = [2.0f32, 0.0];
+        assert_close(mae(&t, &o), 1.5, 1e-12);
+        assert_close(mse(&t, &o), 2.5, 1e-12);
+        assert_close(mred(&t, &o), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn cross_entropy_prefers_correct_class() {
+        let logits = [3.0f32, 0.0, 0.0];
+        assert!(cross_entropy(&logits, 0) < cross_entropy(&logits, 1));
+        // Uniform logits → CE = ln(3).
+        assert_close(cross_entropy(&[0.0; 3], 1), 3f64.ln(), 1e-9);
+    }
+
+    #[test]
+    fn output_error_variance_bessel() {
+        let clean = Tensor::from_vec(&[1, 3], vec![0.0, 0.0, 0.0]);
+        let noisy = Tensor::from_vec(&[1, 3], vec![1.0, -1.0, 0.0]);
+        // errors: 1, -1, 0; mean 0; var = (1+1+0)/2 = 1.
+        assert_close(output_error_variance(&clean, &noisy), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn mred_guards_zero_target() {
+        let t = [0.0f32];
+        let o = [1.0f32];
+        assert!(mred(&t, &o).is_finite());
+    }
+}

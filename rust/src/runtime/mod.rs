@@ -1,0 +1,227 @@
+//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
+//! and executes them from rust. Python never runs on this path — the HLO
+//! text is parsed and compiled by the XLA CPU plugin in-process.
+//!
+//! See /opt/xla-example/README.md for the interchange-format constraints
+//! (HLO text, `return_tuple=True`, interpret-mode Pallas).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::nn::quant::{NoiseSpec, QLayer, QuantizedModel};
+use crate::util::rng::Xoshiro256pp;
+
+/// A loaded artifact registry + PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir: artifacts_dir.to_path_buf(), executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) one artifact by name (`<name>.hlo.txt`).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("compiling artifact")?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute a loaded artifact; unwraps the tuple the lowering produces.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        Ok(tuple)
+    }
+
+    /// List artifact names present on disk.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if let Some(fname) = path.file_name().and_then(|s| s.to_str()) {
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+/// Build an int8 literal of the given dimensions. The `xla` crate has no
+/// `NativeType` impl for `i8`, so the bytes go through the untyped-data
+/// constructor (two's-complement `i8` bytes are exactly XLA `S8`).
+pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal size mismatch");
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Build an f32 literal of the given dimensions.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal size mismatch");
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// The FC-MNIST executor: binds a rust-trained quantized model's weights to
+/// the generic `fc_mnist_<act>_b<m>` artifact and serves logits.
+pub struct FcExecutor {
+    pub artifact: String,
+    pub batch: usize,
+    w1: xla::Literal,
+    b1: xla::Literal,
+    s1: xla::Literal,
+    sx2: xla::Literal,
+    w2: xla::Literal,
+    b2: xla::Literal,
+    s2: xla::Literal,
+    /// Quantization scale for raw input pixels.
+    pub x_scale: f32,
+    /// Per-neuron noise (mean, std), enumeration order = hidden then output.
+    pub noise: NoiseSpec,
+}
+
+impl FcExecutor {
+    /// Extract weights/scales from a quantized FC model (two dense layers).
+    pub fn from_quantized(q: &QuantizedModel, activation: &str, batch: usize) -> Result<Self> {
+        let macs: Vec<&crate::nn::quant::QuantMac> = q
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                QLayer::Dense(m) => Some(m),
+                _ => None,
+            })
+            .collect();
+        anyhow::ensure!(macs.len() == 2, "FC executor needs exactly 2 dense layers");
+        let (l1, l2) = (macs[0], macs[1]);
+        anyhow::ensure!(l1.fan_in == 784 && l1.out == 128 && l2.out == 10, "FC shape");
+        // jax layout: w[fan_in, out] with column j = neuron j; rust stores
+        // [out, fan_in] row-major → transpose.
+        let mut w1t = vec![0i8; 784 * 128];
+        for u in 0..128 {
+            for i in 0..784 {
+                w1t[i * 128 + u] = l1.wq[u * 784 + i];
+            }
+        }
+        let mut w2t = vec![0i8; 128 * 10];
+        for u in 0..10 {
+            for i in 0..128 {
+                w2t[i * 10 + u] = l2.wq[u * 128 + i];
+            }
+        }
+        Ok(Self {
+            artifact: format!("fc_mnist_{activation}_b{batch}"),
+            batch,
+            w1: literal_i8(&w1t, &[784, 128])?,
+            b1: literal_f32(&l1.bias, &[128])?,
+            s1: literal_f32(&[l1.w_scale * l1.x_scale], &[1])?,
+            sx2: literal_f32(&[l2.x_scale], &[1])?,
+            w2: literal_i8(&w2t, &[128, 10])?,
+            b2: literal_f32(&l2.bias, &[10])?,
+            s2: literal_f32(&[l2.w_scale * l2.x_scale], &[1])?,
+            x_scale: l1.x_scale,
+            noise: NoiseSpec::silent(138),
+        })
+    }
+
+    /// Set the per-neuron noise implied by a voltage assignment.
+    pub fn set_noise(&mut self, noise: NoiseSpec) {
+        assert_eq!(noise.mean.len(), 138);
+        self.noise = noise;
+    }
+
+    /// Run one batch of raw images (f32 pixels, `batch × 784`); returns
+    /// logits (`batch × 10`). Noise is sampled fresh per call — this is the
+    /// request path: rust-side RNG, no python.
+    pub fn run(&self, rt: &Runtime, images: &[f32], rng: &mut Xoshiro256pp) -> Result<Vec<f32>> {
+        anyhow::ensure!(images.len() == self.batch * 784, "batch size mismatch");
+        let s = self.x_scale.max(1e-12);
+        let xq: Vec<i8> = images
+            .iter()
+            .map(|&v| (v / s).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        let mut noise1 = vec![0f32; self.batch * 128];
+        let mut noise2 = vec![0f32; self.batch * 10];
+        for b in 0..self.batch {
+            for u in 0..128 {
+                let (m, sd) = (self.noise.mean[u], self.noise.std[u]);
+                if sd > 0.0 || m != 0.0 {
+                    noise1[b * 128 + u] = rng.gaussian(m, sd) as f32;
+                }
+            }
+            for u in 0..10 {
+                let (m, sd) = (self.noise.mean[128 + u], self.noise.std[128 + u]);
+                if sd > 0.0 || m != 0.0 {
+                    noise2[b * 10 + u] = rng.gaussian(m, sd) as f32;
+                }
+            }
+        }
+        let inputs = vec![
+            literal_i8(&xq, &[self.batch, 784])?,
+            self.w1.clone(),
+            self.b1.clone(),
+            self.s1.clone(),
+            self.sx2.clone(),
+            self.w2.clone(),
+            self.b2.clone(),
+            self.s2.clone(),
+            literal_f32(&noise1, &[self.batch, 128])?,
+            literal_f32(&noise2, &[self.batch, 10])?,
+        ];
+        let out = rt.execute(&self.artifact, &inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1-tuple output");
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+/// Locate the repo's artifacts directory (env override → ./artifacts).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("XTPU_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from("artifacts")
+}

@@ -1,0 +1,214 @@
+//! Error sensitivity (ES) of neurons — paper §IV.C.
+//!
+//! `ES_n` measures how much one unit of RMS error on neuron `n`'s
+//! accumulator moves the network output (RMS over output logits). The ILP
+//! constraint (eq. 29) then prices voltage `v` for neuron `n` at
+//! `ES_n² · k_n · var(e)_v` of output MSE.
+//!
+//! Two estimators are provided, mirroring the paper:
+//! - [`statistical_es`]: noise injection per neuron (eq. 14) on the
+//!   quantized model — general, works for any activation;
+//! - [`analytic_es_fc`]: the closed form for linear activations via weight
+//!   L2 norms (eqs 15–17, "ES can be replaced by the corresponding L2 norm
+//!   of the neuron's weights").
+
+use crate::nn::quant::{NoiseSpec, QLayer, QuantizedModel};
+use crate::nn::tensor::Tensor;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::parallel_chunks;
+
+/// Options for the statistical (injection) estimator.
+#[derive(Clone, Copy, Debug)]
+pub struct EsOptions {
+    /// Injected accumulator noise std (integer-product units). Must be
+    /// large enough that the perturbation reaching the next layer's
+    /// requantizer spans several LSBs — sub-LSB probes get inflated by
+    /// rounding dither (E[(round(x+δ)−round(x))²] ≈ |δ| for |δ|≪1, not δ²).
+    /// The default matches the magnitude of real column errors
+    /// (√(k·var(e)_v) is O(10³–10⁴) for Table-2 variances).
+    pub probe_std: f64,
+    /// Independent injection trials averaged per neuron.
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for EsOptions {
+    fn default() -> Self {
+        Self { probe_std: 8192.0, trials: 4, seed: 0x5EED }
+    }
+}
+
+/// Statistical ES per neuron (indexed like [`QuantizedModel`] neurons):
+/// `ES_n = RMS(output error) / probe_std` with noise injected *only* on
+/// neuron `n` (paper eq. 14). Parallel over neurons.
+pub fn statistical_es(q: &QuantizedModel, probe: &Tensor, opts: &EsOptions) -> Vec<f64> {
+    let n = q.num_neurons();
+    let mut warm_rng = Xoshiro256pp::seeded(opts.seed);
+    let clean = q.forward(probe, None, &mut warm_rng);
+    let out_len = clean.data.len() as f64;
+    let parts = parallel_chunks(n, |range, _| {
+        let mut out = Vec::with_capacity(range.len());
+        for ni in range {
+            let mut spec = NoiseSpec::silent(n);
+            spec.std[ni] = opts.probe_std;
+            let mut sum_sq = 0.0f64;
+            for t in 0..opts.trials {
+                let mut rng =
+                    Xoshiro256pp::seeded(opts.seed ^ ((ni as u64) << 20) ^ (t as u64 + 1));
+                let noisy = q.forward(probe, Some(&spec), &mut rng);
+                sum_sq += clean
+                    .data
+                    .iter()
+                    .zip(&noisy.data)
+                    .map(|(&c, &x)| ((x - c) as f64).powi(2))
+                    .sum::<f64>()
+                    / out_len;
+            }
+            let mse = sum_sq / opts.trials as f64;
+            out.push(mse.sqrt() / opts.probe_std);
+        }
+        out
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Analytic ES for a purely dense (FC) quantized model with linear hidden
+/// activations: hidden neuron `j` of layer `l` propagates an accumulator
+/// error `e` to the logits as `e · Π(scales) · column-L2`, giving
+/// `ES = (Π scale) · ‖W_next[:,j]‖₂ / √n_out`; output neurons get
+/// `ES = s_w·s_x / √n_out`. Returns `None` if the model is not all-dense.
+pub fn analytic_es_fc(q: &QuantizedModel) -> Option<Vec<f64>> {
+    let macs: Vec<&crate::nn::quant::QuantMac> = q
+        .layers
+        .iter()
+        .map(|l| match l {
+            QLayer::Dense(m) => Some(m),
+            _ => None,
+        })
+        .collect::<Option<Vec<_>>>()?;
+    let n_out = macs.last()?.out as f64;
+    let mut es = Vec::with_capacity(q.num_neurons());
+    for (li, mac) in macs.iter().enumerate() {
+        // Error on this layer's accumulator is scaled into activation space
+        // by s_w·s_x of *this* layer…
+        let own_scale = (mac.w_scale * mac.x_scale) as f64;
+        for u in 0..mac.out {
+            let mut gain = own_scale;
+            // …then propagated through every following dense layer:
+            // requantization divides by the next x_scale, the int matmul
+            // multiplies by the column and rescales by s_w·s_x.
+            let mut col_indices = vec![u];
+            for next in &macs[li + 1..] {
+                // Aggregate column L2 across the (possibly already fanned
+                // out) set: for a single source unit this is the exact
+                // column; deeper layers use the Frobenius approximation.
+                let mut col_l2_sq = 0.0f64;
+                for &j in &col_indices {
+                    for o in 0..next.out {
+                        let wq = next.wq[o * next.fan_in + j] as f64;
+                        col_l2_sq += wq * wq;
+                    }
+                }
+                let col_l2 = (col_l2_sq / col_indices.len() as f64).sqrt();
+                gain *= col_l2 * next.w_scale as f64;
+                // After the first hop, track all units (approximation only
+                // needed for ≥3-layer nets; the paper's FC has one hop).
+                col_indices = (0..next.out).collect();
+            }
+            es.push(gain / n_out.sqrt());
+        }
+    }
+    Some(es)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::data::synth_mnist;
+    use crate::nn::layers::Activation;
+    use crate::nn::model::fc_mnist;
+    use crate::nn::quant::QuantizedModel;
+    use crate::nn::train::{train, TrainConfig};
+
+    fn quantized_fc(act: Activation) -> (QuantizedModel, Tensor) {
+        let mut rng = Xoshiro256pp::seeded(77);
+        let mut model = fc_mnist(act, &mut rng);
+        let train_set = synth_mnist(400, 91);
+        train(&mut model, &train_set, &TrainConfig { epochs: 2, ..Default::default() });
+        let probe = synth_mnist(16, 92).images;
+        let q = QuantizedModel::quantize(&model, &probe);
+        (q, probe)
+    }
+
+    #[test]
+    fn hidden_neurons_less_sensitive_than_output() {
+        // Paper Fig 11: hidden-layer ES < output-layer ES (output ≈ 1 in
+        // their normalization).
+        let (q, probe) = quantized_fc(Activation::Linear);
+        let es = statistical_es(&q, &probe, &EsOptions { trials: 2, ..Default::default() });
+        assert_eq!(es.len(), 138);
+        let hidden_mean = es[..128].iter().sum::<f64>() / 128.0;
+        let output_mean = es[128..].iter().sum::<f64>() / 10.0;
+        assert!(
+            output_mean > hidden_mean,
+            "output ES {output_mean:.3e} must exceed hidden ES {hidden_mean:.3e}"
+        );
+        assert!(es.iter().all(|&v| v.is_finite() && v >= 0.0));
+    }
+
+    #[test]
+    fn analytic_matches_statistical_for_linear_fc() {
+        let (q, probe) = quantized_fc(Activation::Linear);
+        let stat = statistical_es(&q, &probe, &EsOptions { trials: 3, ..Default::default() });
+        let analytic = analytic_es_fc(&q).expect("FC model must be analyzable");
+        assert_eq!(analytic.len(), stat.len());
+        // Compare on aggregate scale: hidden-layer means within 40 %
+        // (quantization + rounding noise makes the statistical estimate
+        // fuzzy per-neuron, but the scale must agree).
+        let ms = stat[..128].iter().sum::<f64>() / 128.0;
+        let ma = analytic[..128].iter().sum::<f64>() / 128.0;
+        let ratio = ms / ma;
+        assert!((0.6..1.6).contains(&ratio), "stat {ms:.3e} vs analytic {ma:.3e}");
+        // Output-layer ES must match closely (exact linear path).
+        let os = stat[128..].iter().sum::<f64>() / 10.0;
+        let oa = analytic[128..].iter().sum::<f64>() / 10.0;
+        let oratio = os / oa;
+        assert!((0.7..1.4).contains(&oratio), "out stat {os:.3e} vs analytic {oa:.3e}");
+        // Per-neuron rank correlation on the hidden layer should be strong.
+        let corr = crate::util::stats::pearson(&stat[..128], &analytic[..128]);
+        assert!(corr > 0.8, "hidden-layer ES correlation {corr}");
+    }
+
+    #[test]
+    fn sigmoid_saturation_lowers_sensitivity() {
+        let (ql, probe) = quantized_fc(Activation::Linear);
+        let (qs, probe_s) = quantized_fc(Activation::Sigmoid);
+        let opts = EsOptions { trials: 2, ..Default::default() };
+        let el = statistical_es(&ql, &probe, &opts);
+        let es = statistical_es(&qs, &probe_s, &opts);
+        let hl = el[..128].iter().sum::<f64>() / 128.0;
+        let hs = es[..128].iter().sum::<f64>() / 128.0;
+        // Sigmoid squashes hidden outputs into (0,1): injected accumulator
+        // noise is attenuated (paper: "for the sigmoid activation function,
+        // output MSEs are relatively small").
+        assert!(hs < hl, "sigmoid hidden ES {hs:.3e} ≥ linear {hl:.3e}");
+    }
+
+    #[test]
+    fn analytic_rejects_cnn() {
+        let mut rng = Xoshiro256pp::seeded(5);
+        let model = crate::nn::model::lenet5(&mut rng);
+        let calib = Tensor::zeros(&[1, 784]);
+        let q = QuantizedModel::quantize(&model, &calib);
+        assert!(analytic_es_fc(&q).is_none());
+    }
+
+    #[test]
+    fn es_deterministic() {
+        let (q, probe) = quantized_fc(Activation::Linear);
+        let opts = EsOptions { trials: 1, ..Default::default() };
+        let a = statistical_es(&q, &probe, &opts);
+        let b = statistical_es(&q, &probe, &opts);
+        assert_eq!(a, b);
+    }
+}

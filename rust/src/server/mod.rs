@@ -1,0 +1,384 @@
+//! Threaded TCP inference server with runtime-adjustable quality — the
+//! serving face of the X-TPU's "dynamic accuracy configuration" (paper
+//! contribution 1): each request picks a quality level, the engine applies
+//! the corresponding pre-solved voltage assignment's noise spec, and the
+//! response reports the energy saving that level buys.
+//!
+//! Protocol: newline-delimited JSON.
+//!   → {"pixels": [784 × f32], "quality": <level index>}
+//!   ← {"class": c, "logits": [...], "quality": q, "energy_saving": s}
+//!
+//! Requests are funneled through a dynamic batcher (size- or deadline-
+//! triggered) so concurrent clients share quantized forward passes, like a
+//! production serving stack would.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::nn::quant::{NoiseSpec, QuantizedModel};
+use crate::nn::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256pp;
+
+/// A quality level: pre-solved assignment → noise spec + energy saving.
+#[derive(Clone, Debug)]
+pub struct QualityLevel {
+    pub name: String,
+    pub noise: NoiseSpec,
+    pub energy_saving: f64,
+}
+
+/// The inference engine shared by all connections.
+pub struct Engine {
+    pub quantized: QuantizedModel,
+    pub levels: Vec<QualityLevel>,
+    pub input_dim: usize,
+}
+
+struct Job {
+    pixels: Vec<f32>,
+    quality: usize,
+    reply: Sender<(usize, Vec<f32>)>,
+}
+
+/// Server statistics (exposed for tests/benches).
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    batch_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Batching parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: Duration::from_millis(5) }
+    }
+}
+
+impl Server {
+    /// Bind to `127.0.0.1:port` (0 = ephemeral) and start serving.
+    pub fn spawn(engine: Engine, port: u16, policy: BatchPolicy) -> Result<Server> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", port)).context("binding server socket")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let (tx, rx) = channel::<Job>();
+        let engine = Arc::new(engine);
+
+        // Batcher thread.
+        let batch_handle = {
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            let engine = engine.clone();
+            std::thread::spawn(move || batch_loop(engine, rx, policy, shutdown, stats))
+        };
+
+        // Acceptor thread: one handler thread per connection. Handlers are
+        // detached — they exit when their client disconnects or the process
+        // ends; joining them here would deadlock shutdown against clients
+        // that keep their sockets open.
+        let accept_handle = {
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                while !shutdown.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let tx = tx.clone();
+                            let stats = stats.clone();
+                            let shutdown = shutdown.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_connection(stream, tx, stats, shutdown);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+        };
+        Ok(Server {
+            addr,
+            stats,
+            shutdown,
+            accept_handle: Some(accept_handle),
+            batch_handle: Some(batch_handle),
+        })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.batch_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn batch_loop(
+    engine: Arc<Engine>,
+    rx: Receiver<Job>,
+    policy: BatchPolicy,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+) {
+    let rng = Mutex::new(Xoshiro256pp::seeded(0x5E47E ^ 0x1234));
+    while !shutdown.load(Ordering::Relaxed) {
+        // Collect a batch: block briefly for the first job, then drain up
+        // to max_batch or until the deadline.
+        let first = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(j) => j,
+            Err(_) => continue,
+        };
+        let mut jobs = vec![first];
+        let deadline = std::time::Instant::now() + policy.max_wait;
+        while jobs.len() < policy.max_batch {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
+            }
+        }
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        // Group by quality level (each level has its own noise spec).
+        let mut by_level: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for (i, j) in jobs.iter().enumerate() {
+            by_level.entry(j.quality.min(engine.levels.len() - 1)).or_default().push(i);
+        }
+        for (level, idxs) in by_level {
+            let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
+            for (r, &i) in idxs.iter().enumerate() {
+                x.row_mut(r).copy_from_slice(&jobs[i].pixels);
+            }
+            let spec = &engine.levels[level].noise;
+            let noise_opt = if spec.is_silent() { None } else { Some(spec) };
+            let logits = {
+                let mut rng = rng.lock().unwrap();
+                engine.quantized.forward(&x, noise_opt, &mut rng)
+            };
+            for (r, &i) in idxs.iter().enumerate() {
+                let _ = jobs[i].reply.send((level, logits.row(r).to_vec()));
+            }
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    tx: Sender<Job>,
+    _stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Read timeout so idle handlers notice shutdown instead of blocking
+    // forever on a silent client.
+    stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = Json::parse(&line)?;
+        let pixels: Vec<f32> = req
+            .get("pixels")?
+            .as_f64_vec()?
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let quality = req.opt("quality").map(|v| v.as_usize()).transpose()?.unwrap_or(0);
+        let (reply_tx, reply_rx) = channel();
+        tx.send(Job { pixels, quality, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        let (level, logits) = reply_rx
+            .recv_timeout(Duration::from_secs(30))
+            .map_err(|_| anyhow::anyhow!("inference timed out"))?;
+        let class = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let resp = Json::obj(vec![
+            ("class", Json::Num(class as f64)),
+            (
+                "logits",
+                Json::arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+            ),
+            ("quality", Json::Num(level as f64)),
+        ]);
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+/// Simple blocking client for tests/examples.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream })
+    }
+
+    pub fn infer(&mut self, pixels: &[f32], quality: usize) -> Result<(usize, Vec<f32>)> {
+        let req = Json::obj(vec![
+            (
+                "pixels",
+                Json::arr_f64(&pixels.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+            ),
+            ("quality", Json::Num(quality as f64)),
+        ]);
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let resp = Json::parse(&line)?;
+        let class = resp.get("class")?.as_usize()?;
+        let logits: Vec<f32> =
+            resp.get("logits")?.as_f64_vec()?.iter().map(|&v| v as f32).collect();
+        Ok((class, logits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::data::synth_mnist;
+    use crate::nn::layers::Activation;
+    use crate::nn::model::fc_mnist;
+    use crate::nn::quant::QuantizedModel;
+    use crate::nn::train::{train, TrainConfig};
+
+    fn test_engine() -> (Engine, crate::nn::data::Dataset) {
+        let mut rng = Xoshiro256pp::seeded(1);
+        let mut model = fc_mnist(Activation::Relu, &mut rng);
+        let train_set = synth_mnist(400, 5);
+        train(&mut model, &train_set, &TrainConfig { epochs: 2, ..Default::default() });
+        let test = synth_mnist(50, 6);
+        let calib = test.batch(&(0..32).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let n = q.num_neurons();
+        let mut noisy = NoiseSpec::silent(n);
+        for s in noisy.std.iter_mut().take(128) {
+            *s = 2000.0;
+        }
+        let levels = vec![
+            QualityLevel { name: "exact".into(), noise: NoiseSpec::silent(n), energy_saving: 0.0 },
+            QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3 },
+        ];
+        (Engine { quantized: q, levels, input_dim: 784 }, test)
+    }
+
+    #[test]
+    fn serve_roundtrip_and_quality_levels() {
+        let (engine, test) = test_engine();
+        let mut server = Server::spawn(engine, 0, BatchPolicy::default()).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        let mut correct = 0;
+        let n = 20;
+        for i in 0..n {
+            let (class, logits) = client.infer(test.images.row(i), 0).unwrap();
+            assert_eq!(logits.len(), 10);
+            if class == test.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > n / 2, "server accuracy too low: {correct}/{n}");
+        // Quality level 1 exists and responds.
+        let (_, logits) = client.infer(test.images.row(0), 1).unwrap();
+        assert_eq!(logits.len(), 10);
+        // Out-of-range quality clamps rather than erroring.
+        let (_, logits) = client.infer(test.images.row(0), 99).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(server.stats.requests.load(Ordering::Relaxed) >= n as u64 + 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_batch() {
+        let (engine, test) = test_engine();
+        let mut server = Server::spawn(
+            engine,
+            0,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+        )
+        .unwrap();
+        let addr = server.addr;
+        let pixels: Vec<Vec<f32>> = (0..8).map(|i| test.images.row(i).to_vec()).collect();
+        let handles: Vec<_> = pixels
+            .into_iter()
+            .map(|p| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    c.infer(&p, 0).unwrap().0
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let reqs = server.stats.requests.load(Ordering::Relaxed);
+        let batches = server.stats.batches.load(Ordering::Relaxed);
+        assert_eq!(reqs, 8);
+        assert!(batches <= 8, "batching should coalesce ({batches} batches for 8 reqs)");
+        server.shutdown();
+    }
+}

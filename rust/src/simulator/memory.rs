@@ -1,0 +1,142 @@
+//! The X-TPU weight memory with voltage-selection bits (paper Fig 7).
+//!
+//! Each word stores the int8 weight plus `sel_bits` MSB-side voltage-
+//! selection bits. Loading a tile decodes the weights and drives the
+//! per-column voltage switch boxes; the paper requires all words of a
+//! column (= one neuron's weights) to agree on the level, which this
+//! module enforces.
+
+use crate::assign::{decode_weight_word, encode_weight_word};
+
+/// Weight memory for a `k × n` weight matrix (column-major neuron layout:
+/// column `j` holds neuron `j`'s weights).
+#[derive(Clone, Debug)]
+pub struct WeightMemory {
+    pub k: usize,
+    pub n: usize,
+    pub sel_bits: usize,
+    words: Vec<u16>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum MemoryError {
+    #[error("column {col} has inconsistent voltage-selection bits ({a} vs {b})")]
+    InconsistentColumn { col: usize, a: usize, b: usize },
+    #[error("dimension mismatch: expected {expected} words, got {got}")]
+    Dimension { expected: usize, got: usize },
+}
+
+impl WeightMemory {
+    /// Encode a weight matrix `w[k×n]` (row-major) + per-column levels.
+    pub fn encode(w: &[i8], k: usize, n: usize, levels: &[usize], sel_bits: usize) -> Self {
+        assert_eq!(w.len(), k * n);
+        assert_eq!(levels.len(), n);
+        let mut words = Vec::with_capacity(k * n);
+        for r in 0..k {
+            for c in 0..n {
+                words.push(encode_weight_word(w[r * n + c], levels[c], sel_bits));
+            }
+        }
+        Self { k, n, sel_bits, words }
+    }
+
+    /// Raw augmented words (what the DDR/weight-FIFO would carry).
+    pub fn words(&self) -> &[u16] {
+        &self.words
+    }
+
+    /// Construct from raw words, validating column consistency.
+    pub fn from_words(
+        words: Vec<u16>,
+        k: usize,
+        n: usize,
+        sel_bits: usize,
+    ) -> Result<Self, MemoryError> {
+        if words.len() != k * n {
+            return Err(MemoryError::Dimension { expected: k * n, got: words.len() });
+        }
+        let mem = Self { k, n, sel_bits, words };
+        mem.column_levels()?;
+        Ok(mem)
+    }
+
+    /// Decode the weight matrix (row-major `k × n`).
+    pub fn weights(&self) -> Vec<i8> {
+        self.words.iter().map(|&w| decode_weight_word(w, self.sel_bits).0).collect()
+    }
+
+    /// Decode per-column voltage levels, checking that every word in a
+    /// column agrees (the switch box has a single setting per column).
+    pub fn column_levels(&self) -> Result<Vec<usize>, MemoryError> {
+        let mut levels = vec![0usize; self.n];
+        for c in 0..self.n {
+            let first = decode_weight_word(self.words[c], self.sel_bits).1;
+            for r in 1..self.k {
+                let l = decode_weight_word(self.words[r * self.n + c], self.sel_bits).1;
+                if l != first {
+                    return Err(MemoryError::InconsistentColumn { col: c, a: first, b: l });
+                }
+            }
+            levels[c] = first;
+        }
+        Ok(levels)
+    }
+
+    /// Memory footprint in bits (paper §IV.A overhead discussion): the
+    /// augmented word costs `8 + sel_bits` per weight.
+    pub fn footprint_bits(&self) -> usize {
+        self.words.len() * (8 + self.sel_bits)
+    }
+
+    /// Overhead fraction vs. plain 8-bit weight storage.
+    pub fn overhead(&self) -> f64 {
+        self.sel_bits as f64 / 8.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        let (k, n) = (16, 8);
+        let w: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-128, 127) as i8).collect();
+        let levels: Vec<usize> = (0..n).map(|_| rng.index(4)).collect();
+        let mem = WeightMemory::encode(&w, k, n, &levels, 2);
+        assert_eq!(mem.weights(), w);
+        assert_eq!(mem.column_levels().unwrap(), levels);
+        assert_eq!(mem.footprint_bits(), k * n * 10);
+        assert!((mem.overhead() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inconsistent_column_detected() {
+        let w = vec![1i8, 2, 3, 4];
+        let mem = WeightMemory::encode(&w, 2, 2, &[0, 1], 2);
+        let mut words = mem.words().to_vec();
+        // Corrupt one word's selection bits in column 0.
+        words[2] = crate::assign::encode_weight_word(3, 3, 2);
+        let err = WeightMemory::from_words(words, 2, 2, 2);
+        assert!(matches!(err, Err(MemoryError::InconsistentColumn { col: 0, .. })));
+    }
+
+    #[test]
+    fn dimension_checked() {
+        assert!(matches!(
+            WeightMemory::from_words(vec![0; 5], 2, 2, 2),
+            Err(MemoryError::Dimension { .. })
+        ));
+    }
+
+    #[test]
+    fn roundtrip_through_raw_words() {
+        let w = vec![-128i8, 127, 0, -1, 55, -77];
+        let mem = WeightMemory::encode(&w, 3, 2, &[2, 0], 2);
+        let mem2 = WeightMemory::from_words(mem.words().to_vec(), 3, 2, 2).unwrap();
+        assert_eq!(mem2.weights(), w);
+        assert_eq!(mem2.column_levels().unwrap(), vec![2, 0]);
+    }
+}

@@ -1,0 +1,319 @@
+//! Structural circuit generators: adders, the Baugh-Wooley signed
+//! multiplier (column-reduction / Dadda style), and the PE arithmetic
+//! datapath (multiplier + accumulator adder) the paper's TPU uses.
+//!
+//! The X-TPU quantizes to int8 weights/activations with wide accumulators
+//! (paper §IV.A), so the central circuit is the 8×8 two's-complement
+//! multiplier — the component the paper applies VOS to.
+
+use super::gate::{Bus, Netlist, SignalId};
+
+/// Half adder: returns (sum, carry).
+pub fn half_adder(n: &mut Netlist, a: SignalId, b: SignalId) -> (SignalId, SignalId) {
+    let s = n.xor2(a, b);
+    let c = n.and2(a, b);
+    (s, c)
+}
+
+/// Full adder: returns (sum, carry). 5 gates, XOR-chain critical path.
+pub fn full_adder(n: &mut Netlist, a: SignalId, b: SignalId, cin: SignalId) -> (SignalId, SignalId) {
+    let axb = n.xor2(a, b);
+    let s = n.xor2(axb, cin);
+    let t1 = n.and2(a, b);
+    let t2 = n.and2(axb, cin);
+    let c = n.or2(t1, t2);
+    (s, c)
+}
+
+/// Ripple-carry adder over two equal-width buses; returns sum bus of width
+/// `w + 1` (final carry appended as MSB).
+pub fn ripple_carry_adder(n: &mut Netlist, a: &Bus, b: &Bus) -> Bus {
+    assert_eq!(a.width(), b.width());
+    let mut sum = Vec::with_capacity(a.width() + 1);
+    let (s0, mut carry) = half_adder(n, a.bit(0), b.bit(0));
+    sum.push(s0);
+    for i in 1..a.width() {
+        let (s, c) = full_adder(n, a.bit(i), b.bit(i), carry);
+        sum.push(s);
+        carry = c;
+    }
+    sum.push(carry);
+    Bus(sum)
+}
+
+/// Two's-complement ripple adder with both operands sign-extended by one bit
+/// and the result truncated to `width` bits (wrap-around semantics), used
+/// for the PE accumulator.
+pub fn adder_mod(n: &mut Netlist, a: &Bus, b: &Bus, width: usize) -> Bus {
+    assert_eq!(a.width(), width);
+    assert_eq!(b.width(), width);
+    let full = ripple_carry_adder(n, a, b);
+    Bus(full.0[..width].to_vec())
+}
+
+/// Reduce a partial-product matrix (per-output-column signal lists) to a
+/// final two-row form with half/full adders, then ripple-add. This is the
+/// classic Dadda/Wallace column-compression scheme; the exact compression
+/// order follows a simple greedy (take three, emit sum+carry), which yields
+/// the same depth class as Dadda for these sizes.
+///
+/// `columns[k]` holds all signals of weight 2^k. Returns the sum bus of
+/// width `columns.len()` (extra carries beyond the top column are dropped —
+/// callers arrange widths so that the result is exact or intentionally
+/// modular).
+pub fn reduce_columns(n: &mut Netlist, mut columns: Vec<Vec<SignalId>>) -> Bus {
+    let width = columns.len();
+    // Phase 1: compress until every column has ≤ 2 entries.
+    loop {
+        let mut busy = false;
+        for k in 0..width {
+            while columns[k].len() > 2 {
+                busy = true;
+                if columns[k].len() >= 3 {
+                    let a = columns[k].pop().unwrap();
+                    let b = columns[k].pop().unwrap();
+                    let c = columns[k].pop().unwrap();
+                    let (s, carry) = full_adder(n, a, b, c);
+                    columns[k].push(s);
+                    if k + 1 < width {
+                        columns[k + 1].push(carry);
+                    }
+                }
+            }
+            // A column with exactly 2 entries is fine — the final adder
+            // handles it.
+        }
+        if !busy {
+            break;
+        }
+    }
+    // Phase 2: final carry-propagate add of the two rows.
+    let zero = n.const0();
+    let mut row_a = Vec::with_capacity(width);
+    let mut row_b = Vec::with_capacity(width);
+    for k in 0..width {
+        row_a.push(columns[k].first().copied().unwrap_or(zero));
+        row_b.push(columns[k].get(1).copied().unwrap_or(zero));
+    }
+    let a = Bus(row_a);
+    let b = Bus(row_b);
+    adder_mod(n, &a, &b, width)
+}
+
+/// Baugh-Wooley 8×8 two's-complement multiplier producing the exact 16-bit
+/// signed product. Partial-product matrix:
+///
+/// - `a_i·b_j`            for i<7, j<7 and for i=j=7
+/// - `NOT(a_i·b_7)`       for i<7  (weight 2^{i+7})
+/// - `NOT(a_7·b_j)`       for j<7  (weight 2^{j+7})
+/// - correction constants +2^8 and +2^15
+///
+/// Verified exhaustively against `i8 * i8` in the tests.
+pub fn baugh_wooley_8x8(name: &str) -> Netlist {
+    let mut n = Netlist::new(name);
+    let a = Bus::inputs(&mut n, 8);
+    let b = Bus::inputs(&mut n, 8);
+    let product = baugh_wooley_into(&mut n, &a, &b);
+    product.mark_outputs(&mut n);
+    n
+}
+
+/// Build the Baugh-Wooley multiplier inside an existing netlist (used by
+/// the composite PE datapath). Returns the 16-bit product bus.
+pub fn baugh_wooley_into(n: &mut Netlist, a: &Bus, b: &Bus) -> Bus {
+    assert_eq!(a.width(), 8);
+    assert_eq!(b.width(), 8);
+    let mut columns: Vec<Vec<SignalId>> = vec![Vec::new(); 16];
+    for i in 0..7 {
+        for j in 0..7 {
+            let pp = n.and2(a.bit(i), b.bit(j));
+            columns[i + j].push(pp);
+        }
+    }
+    // pp_{7,7} positive term.
+    let pp77 = n.and2(a.bit(7), b.bit(7));
+    columns[14].push(pp77);
+    // Complemented cross terms.
+    for i in 0..7 {
+        let t = n.nand2(a.bit(i), b.bit(7));
+        columns[i + 7].push(t);
+    }
+    for j in 0..7 {
+        let t = n.nand2(a.bit(7), b.bit(j));
+        columns[j + 7].push(t);
+    }
+    // Correction constants: +2^8 and +2^15.
+    let one8 = n.const1();
+    columns[8].push(one8);
+    let one15 = n.const1();
+    columns[15].push(one15);
+    reduce_columns(n, columns)
+}
+
+/// The PE arithmetic datapath of the TPU (paper Fig 1a): an 8×8 signed
+/// multiplier followed by the partial-sum accumulator adder.
+///
+/// Inputs (in creation order): activation[8], weight[8], psum_in[acc_width].
+/// Outputs: psum_out[acc_width] = psum_in + sign_extend(a×w).
+///
+/// `mult_gate_range` / `adder_gate_range` let the power model attribute
+/// toggles to the multiplier vs. the adder region — the paper's VOS is
+/// applied to the *multiplier region only* (§IV.A).
+pub struct PeDatapath {
+    pub netlist: Netlist,
+    /// Gate-index range belonging to the multiplier (approximate region).
+    pub mult_gates: std::ops::Range<usize>,
+    /// Gate-index range belonging to the accumulator adder (exact region).
+    pub adder_gates: std::ops::Range<usize>,
+    /// Product bit signals (the boundary crossing the level shifters).
+    pub product: Bus,
+    pub acc_width: usize,
+}
+
+pub fn pe_datapath(acc_width: usize) -> PeDatapath {
+    assert!((17..=32).contains(&acc_width), "accumulator must cover the product range");
+    let mut n = Netlist::new("pe_datapath");
+    let act = Bus::inputs(&mut n, 8);
+    let wgt = Bus::inputs(&mut n, 8);
+    let psum = Bus::inputs(&mut n, acc_width);
+    let mult_start = n.num_gates();
+    let product = baugh_wooley_into(&mut n, &act, &wgt);
+    let mult_end = n.num_gates();
+    // Sign-extend the 16-bit product to acc_width (buffers replicate the MSB
+    // through the level-shifter boundary).
+    let mut ext = product.0.clone();
+    let msb = product.bit(15);
+    for _ in 16..acc_width {
+        ext.push(n.buf(msb));
+    }
+    let ext = Bus(ext);
+    let adder_start = n.num_gates();
+    let out = adder_mod(&mut n, &psum, &ext, acc_width);
+    let adder_end = n.num_gates();
+    out.mark_outputs(&mut n);
+    PeDatapath {
+        netlist: n,
+        mult_gates: mult_start..mult_end,
+        adder_gates: adder_start..adder_end,
+        product,
+        acc_width,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::gate::bits_to_i64;
+    use crate::util::checks::property;
+
+    #[test]
+    fn half_and_full_adder_truth() {
+        let mut n = Netlist::new("ha_fa");
+        let a = n.input();
+        let b = n.input();
+        let c = n.input();
+        let (hs, hc) = half_adder(&mut n, a, b);
+        let (fs, fc) = full_adder(&mut n, a, b, c);
+        for &s in &[hs, hc, fs, fc] {
+            n.mark_output(s);
+        }
+        for va in 0..2u8 {
+            for vb in 0..2u8 {
+                for vc in 0..2u8 {
+                    let out = n.eval(&[va == 1, vb == 1, vc == 1]);
+                    let h = va + vb;
+                    let f = va + vb + vc;
+                    assert_eq!(out[0] as u8, h & 1);
+                    assert_eq!(out[1] as u8, h >> 1);
+                    assert_eq!(out[2] as u8, f & 1);
+                    assert_eq!(out[3] as u8, f >> 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ripple_adder_exhaustive_6bit() {
+        let mut n = Netlist::new("rca6");
+        let a = Bus::inputs(&mut n, 6);
+        let b = Bus::inputs(&mut n, 6);
+        let sum = ripple_carry_adder(&mut n, &a, &b);
+        sum.mark_outputs(&mut n);
+        for x in 0..64u64 {
+            for y in 0..64u64 {
+                assert_eq!(n.eval_bus(&[(x, 6), (y, 6)]), x + y);
+            }
+        }
+    }
+
+    #[test]
+    fn baugh_wooley_exhaustive_i8() {
+        let n = baugh_wooley_8x8("bw8_test");
+        n.validate().unwrap();
+        // Full 65536-case exhaustive check against native i8 multiply.
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                let bits = n.eval(&crate::timing::gate::i64_to_bits(
+                    ((a as i64) & 0xFF) | ((((b as i64) & 0xFF) as i64) << 8),
+                    16,
+                ));
+                let got = bits_to_i64(&bits);
+                assert_eq!(got, (a * b) as i64, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiplier_size_is_plausible() {
+        let n = baugh_wooley_8x8("bw8_size");
+        // A synthesized 8×8 BW multiplier is a few hundred cells.
+        assert!(n.num_cells() > 200 && n.num_cells() < 800, "cells={}", n.num_cells());
+    }
+
+    #[test]
+    fn pe_datapath_accumulates() {
+        let pe = pe_datapath(24);
+        pe.netlist.validate().unwrap();
+        property("pe accumulate matches i64 math", 200, |rng, _| {
+            let a = rng.range_i64(-128, 127);
+            let w = rng.range_i64(-128, 127);
+            let p = rng.range_i64(-(1 << 20), 1 << 20);
+            let packed: u64 = ((a as u64) & 0xFF)
+                | (((w as u64) & 0xFF) << 8)
+                | (((p as u64) & 0xFF_FFFF) << 16);
+            let out = pe.netlist.eval(&crate::timing::gate::i64_to_bits(packed as i64, 40));
+            let got = bits_to_i64(&out);
+            let expect = (p + a * w) & ((1 << 24) - 1);
+            let expect = if expect >= (1 << 23) { expect - (1 << 24) } else { expect };
+            assert_eq!(got, expect, "a={a} w={w} p={p}");
+        });
+    }
+
+    #[test]
+    fn pe_regions_are_disjoint_and_ordered() {
+        let pe = pe_datapath(24);
+        assert!(pe.mult_gates.end <= pe.adder_gates.start);
+        assert!(!pe.mult_gates.is_empty());
+        assert!(!pe.adder_gates.is_empty());
+        // Multiplier should dominate the cell count (paper Fig 1b: ~56 % of
+        // PE power is the multiplier).
+        let mult_cells = pe.mult_gates.len();
+        let adder_cells = pe.adder_gates.len();
+        assert!(mult_cells > 2 * adder_cells, "mult={mult_cells} adder={adder_cells}");
+    }
+
+    #[test]
+    fn reduce_columns_handles_empty_columns() {
+        let mut n = Netlist::new("sparse");
+        let a = n.input();
+        let b = n.input();
+        let mut cols: Vec<Vec<SignalId>> = vec![Vec::new(); 4];
+        cols[0].push(a);
+        cols[2].push(b);
+        let out = reduce_columns(&mut n, cols);
+        out.mark_outputs(&mut n);
+        // value = a + 4b
+        assert_eq!(n.eval_bus(&[(1, 1), (1, 1)]), 0b101);
+        assert_eq!(n.eval_bus(&[(0, 1), (1, 1)]), 0b100);
+    }
+}

@@ -1,0 +1,422 @@
+//! Gate-level netlist intermediate representation.
+//!
+//! The paper characterizes a synthesized 15-nm FinFET processing element
+//! (Synopsys DC netlist + SDF, simulated in ModelSim). Offline we carry our
+//! own structural netlists: a flat vector of two-input gates in topological
+//! order (builders may only reference already-created signals, so the order
+//! is correct by construction), which makes both functional evaluation and
+//! timing propagation a single linear pass — fast enough for the 10^6-vector
+//! Monte-Carlo characterization the paper performs.
+
+/// Signal id: index into the netlist's gate vector.
+pub type SignalId = u32;
+
+/// Two-input gate vocabulary (plus sources). `a`/`b` are fanin signal ids;
+/// unary gates use only `a`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateKind {
+    /// Primary input (value set externally).
+    Input,
+    /// Constant 0 / 1 sources (used for Baugh-Wooley correction bits).
+    Const0,
+    Const1,
+    Not,
+    Buf,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Xor2,
+    Xnor2,
+}
+
+impl GateKind {
+    /// Nominal propagation delay in normalized delay units (≈ FO4-ish
+    /// ratios for a generic standard-cell library; absolute scale cancels
+    /// out because the clock period is derived from the same numbers).
+    pub fn base_delay(self) -> f32 {
+        match self {
+            GateKind::Input | GateKind::Const0 | GateKind::Const1 => 0.0,
+            GateKind::Not => 0.6,
+            GateKind::Buf => 0.7,
+            GateKind::Nand2 => 1.0,
+            GateKind::Nor2 => 1.1,
+            GateKind::And2 => 1.4,
+            GateKind::Or2 => 1.5,
+            GateKind::Xor2 => 1.8,
+            GateKind::Xnor2 => 1.8,
+        }
+    }
+
+    /// Relative switching energy per output toggle (normalized to NAND2 = 1;
+    /// roughly proportional to cell input capacitance + internal cap).
+    pub fn toggle_energy(self) -> f32 {
+        match self {
+            GateKind::Input | GateKind::Const0 | GateKind::Const1 => 0.0,
+            GateKind::Not => 0.6,
+            GateKind::Buf => 0.8,
+            GateKind::Nand2 => 1.0,
+            GateKind::Nor2 => 1.0,
+            GateKind::And2 => 1.3,
+            GateKind::Or2 => 1.3,
+            GateKind::Xor2 => 2.2,
+            GateKind::Xnor2 => 2.2,
+        }
+    }
+
+    /// Relative leakage power (normalized to NAND2 = 1).
+    pub fn leakage(self) -> f32 {
+        match self {
+            GateKind::Input | GateKind::Const0 | GateKind::Const1 => 0.0,
+            GateKind::Not => 0.5,
+            GateKind::Buf => 0.9,
+            GateKind::Nand2 => 1.0,
+            GateKind::Nor2 => 1.0,
+            GateKind::And2 => 1.4,
+            GateKind::Or2 => 1.4,
+            GateKind::Xor2 => 2.5,
+            GateKind::Xnor2 => 2.5,
+        }
+    }
+
+    pub fn is_source(self) -> bool {
+        matches!(self, GateKind::Input | GateKind::Const0 | GateKind::Const1)
+    }
+
+    pub fn is_unary(self) -> bool {
+        matches!(self, GateKind::Not | GateKind::Buf)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub a: SignalId,
+    pub b: SignalId,
+}
+
+/// A combinational netlist with named primary inputs and outputs.
+///
+/// Invariant: for every gate `g` at index `i`, `g.a < i && g.b < i` (unless
+/// `g` is a source). This makes the gate vector a valid topological order.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub name: String,
+    gates: Vec<Gate>,
+    inputs: Vec<SignalId>,
+    outputs: Vec<SignalId>,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), gates: Vec::new(), inputs: Vec::new(), outputs: Vec::new() }
+    }
+
+    fn push(&mut self, kind: GateKind, a: SignalId, b: SignalId) -> SignalId {
+        let id = self.gates.len() as SignalId;
+        if !kind.is_source() {
+            assert!(a < id, "fanin a={a} must precede gate {id}");
+            assert!(kind.is_unary() || b < id, "fanin b={b} must precede gate {id}");
+        }
+        self.gates.push(Gate { kind, a, b });
+        id
+    }
+
+    // --- construction API --------------------------------------------------
+
+    pub fn input(&mut self) -> SignalId {
+        let id = self.push(GateKind::Input, 0, 0);
+        self.inputs.push(id);
+        id
+    }
+
+    pub fn const0(&mut self) -> SignalId {
+        self.push(GateKind::Const0, 0, 0)
+    }
+
+    pub fn const1(&mut self) -> SignalId {
+        self.push(GateKind::Const1, 0, 0)
+    }
+
+    pub fn not(&mut self, a: SignalId) -> SignalId {
+        self.push(GateKind::Not, a, a)
+    }
+
+    pub fn buf(&mut self, a: SignalId) -> SignalId {
+        self.push(GateKind::Buf, a, a)
+    }
+
+    pub fn and2(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.push(GateKind::And2, a, b)
+    }
+
+    pub fn or2(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.push(GateKind::Or2, a, b)
+    }
+
+    pub fn nand2(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.push(GateKind::Nand2, a, b)
+    }
+
+    pub fn nor2(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.push(GateKind::Nor2, a, b)
+    }
+
+    pub fn xor2(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.push(GateKind::Xor2, a, b)
+    }
+
+    pub fn xnor2(&mut self, a: SignalId, b: SignalId) -> SignalId {
+        self.push(GateKind::Xnor2, a, b)
+    }
+
+    /// Mark an existing signal as a primary output (LSB-first convention for
+    /// buses).
+    pub fn mark_output(&mut self, id: SignalId) {
+        assert!((id as usize) < self.gates.len());
+        self.outputs.push(id);
+    }
+
+    // --- accessors ----------------------------------------------------------
+
+    pub fn gates(&self) -> &[Gate] {
+        &self.gates
+    }
+
+    pub fn num_gates(&self) -> usize {
+        self.gates.len()
+    }
+
+    /// Count of logic gates (excluding sources) — the "cell count" a
+    /// synthesis report would show.
+    pub fn num_cells(&self) -> usize {
+        self.gates.iter().filter(|g| !g.kind.is_source()).count()
+    }
+
+    pub fn inputs(&self) -> &[SignalId] {
+        &self.inputs
+    }
+
+    pub fn outputs(&self) -> &[SignalId] {
+        &self.outputs
+    }
+
+    // --- evaluation ----------------------------------------------------------
+
+    /// Evaluate combinationally. `input_values[i]` corresponds to
+    /// `inputs()[i]`; `values` is scratch of length `num_gates()`.
+    /// Output values land in `values[outputs()[j]]`.
+    pub fn eval_into(&self, input_values: &[bool], values: &mut [u8]) {
+        assert_eq!(input_values.len(), self.inputs.len());
+        assert_eq!(values.len(), self.gates.len());
+        let mut next_input = 0;
+        for (i, g) in self.gates.iter().enumerate() {
+            let v = match g.kind {
+                GateKind::Input => {
+                    let v = input_values[next_input] as u8;
+                    next_input += 1;
+                    v
+                }
+                GateKind::Const0 => 0,
+                GateKind::Const1 => 1,
+                GateKind::Not => 1 - values[g.a as usize],
+                GateKind::Buf => values[g.a as usize],
+                GateKind::And2 => values[g.a as usize] & values[g.b as usize],
+                GateKind::Or2 => values[g.a as usize] | values[g.b as usize],
+                GateKind::Nand2 => 1 - (values[g.a as usize] & values[g.b as usize]),
+                GateKind::Nor2 => 1 - (values[g.a as usize] | values[g.b as usize]),
+                GateKind::Xor2 => values[g.a as usize] ^ values[g.b as usize],
+                GateKind::Xnor2 => 1 - (values[g.a as usize] ^ values[g.b as usize]),
+            };
+            values[i] = v;
+        }
+    }
+
+    /// Convenience: evaluate and return output bits (LSB-first).
+    pub fn eval(&self, input_values: &[bool]) -> Vec<bool> {
+        let mut values = vec![0u8; self.gates.len()];
+        self.eval_into(input_values, &mut values);
+        self.outputs.iter().map(|&o| values[o as usize] != 0).collect()
+    }
+
+    /// Evaluate with integer-packed input/output buses (helper for tests and
+    /// oracles). `in_widths` gives the bit width of each logical input bus in
+    /// the order the inputs were created (LSB first within a bus).
+    pub fn eval_bus(&self, operands: &[(u64, usize)]) -> u64 {
+        let mut bits = Vec::with_capacity(self.inputs.len());
+        for &(val, width) in operands {
+            for k in 0..width {
+                bits.push((val >> k) & 1 == 1);
+            }
+        }
+        let out = self.eval(&bits);
+        let mut acc = 0u64;
+        for (k, &b) in out.iter().enumerate() {
+            if b {
+                acc |= 1 << k;
+            }
+        }
+        acc
+    }
+
+    /// Structural sanity check (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, g) in self.gates.iter().enumerate() {
+            if !g.kind.is_source() {
+                if g.a as usize >= i {
+                    return Err(format!("gate {i}: fanin a={} not topological", g.a));
+                }
+                if !g.kind.is_unary() && g.b as usize >= i {
+                    return Err(format!("gate {i}: fanin b={} not topological", g.b));
+                }
+            }
+        }
+        for &o in &self.outputs {
+            if o as usize >= self.gates.len() {
+                return Err(format!("output {o} out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A small helper representing a bus (vector of signals, LSB first).
+#[derive(Clone, Debug)]
+pub struct Bus(pub Vec<SignalId>);
+
+impl Bus {
+    /// Create `width` fresh primary inputs.
+    pub fn inputs(n: &mut Netlist, width: usize) -> Bus {
+        Bus((0..width).map(|_| n.input()).collect())
+    }
+
+    pub fn width(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn bit(&self, i: usize) -> SignalId {
+        self.0[i]
+    }
+
+    /// Mark every bit as a primary output.
+    pub fn mark_outputs(&self, n: &mut Netlist) {
+        for &b in &self.0 {
+            n.mark_output(b);
+        }
+    }
+}
+
+/// Decode an LSB-first bool slice as a two's-complement integer.
+pub fn bits_to_i64(bits: &[bool]) -> i64 {
+    let mut v: i64 = 0;
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            v |= 1 << i;
+        }
+    }
+    // Sign-extend.
+    if bits.len() < 64 && bits[bits.len() - 1] {
+        v -= 1 << bits.len();
+    }
+    v
+}
+
+/// Encode an integer into `width` LSB-first bits (two's complement).
+pub fn i64_to_bits(v: i64, width: usize) -> Vec<bool> {
+    (0..width).map(|i| (v >> i) & 1 == 1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_truth_tables() {
+        let mut n = Netlist::new("truth");
+        let a = n.input();
+        let b = n.input();
+        let and = n.and2(a, b);
+        let or = n.or2(a, b);
+        let nand = n.nand2(a, b);
+        let nor = n.nor2(a, b);
+        let xor = n.xor2(a, b);
+        let xnor = n.xnor2(a, b);
+        let not = n.not(a);
+        let buf = n.buf(b);
+        for &s in &[and, or, nand, nor, xor, xnor, not, buf] {
+            n.mark_output(s);
+        }
+        let truth = |va: bool, vb: bool| n.eval(&[va, vb]);
+        for va in [false, true] {
+            for vb in [false, true] {
+                let out = truth(va, vb);
+                assert_eq!(out[0], va && vb);
+                assert_eq!(out[1], va || vb);
+                assert_eq!(out[2], !(va && vb));
+                assert_eq!(out[3], !(va || vb));
+                assert_eq!(out[4], va ^ vb);
+                assert_eq!(out[5], !(va ^ vb));
+                assert_eq!(out[6], !va);
+                assert_eq!(out[7], vb);
+            }
+        }
+    }
+
+    #[test]
+    fn constants() {
+        let mut n = Netlist::new("const");
+        let c0 = n.const0();
+        let c1 = n.const1();
+        let x = n.xor2(c0, c1);
+        n.mark_output(x);
+        assert_eq!(n.eval(&[]), vec![true]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must precede")]
+    fn forward_reference_panics() {
+        let mut n = Netlist::new("bad");
+        let a = n.input();
+        // Manually forge a forward reference through the public API is
+        // impossible; emulate by referencing a not-yet-created id.
+        n.and2(a, 99);
+    }
+
+    #[test]
+    fn validate_ok_and_bus_roundtrip() {
+        let mut n = Netlist::new("bus");
+        let a = Bus::inputs(&mut n, 4);
+        let b = Bus::inputs(&mut n, 4);
+        // Bitwise AND bus.
+        let mut outs = Vec::new();
+        for i in 0..4 {
+            outs.push(n.and2(a.bit(i), b.bit(i)));
+        }
+        for &o in &outs {
+            n.mark_output(o);
+        }
+        n.validate().unwrap();
+        assert_eq!(n.eval_bus(&[(0b1100, 4), (0b1010, 4)]), 0b1000);
+    }
+
+    #[test]
+    fn bits_int_roundtrip() {
+        for v in [-128i64, -1, 0, 1, 77, 127] {
+            assert_eq!(bits_to_i64(&i64_to_bits(v, 8)), v);
+        }
+        for v in [-16256i64, -1, 0, 16384] {
+            assert_eq!(bits_to_i64(&i64_to_bits(v, 16)), v);
+        }
+    }
+
+    #[test]
+    fn cell_count_excludes_sources() {
+        let mut n = Netlist::new("cells");
+        let a = n.input();
+        let b = n.input();
+        let c = n.and2(a, b);
+        n.mark_output(c);
+        assert_eq!(n.num_gates(), 3);
+        assert_eq!(n.num_cells(), 1);
+    }
+}

@@ -1,0 +1,22 @@
+//! Gate-level timing substrate: netlist IR, circuit generators, static
+//! timing, and dynamic voltage-overscaling error simulation.
+//!
+//! Together these replace the paper's commercial toolchain (Synopsys DC +
+//! Cadence Liberate libraries + ModelSim SDF simulation, §V.A) with a
+//! self-contained model that reproduces the phenomenology the framework
+//! consumes: timing errors that appear when the supply voltage is scaled
+//! below nominal at fixed clock, grow with the overscaling depth, hit the
+//! MSB-side product bits hardest, and are ≈ zero-mean with voltage-
+//! dependent variance (Table 2 / Fig 9).
+
+pub mod circuits;
+pub mod gate;
+pub mod sta;
+pub mod voltage;
+pub mod vos;
+
+pub use circuits::{baugh_wooley_8x8, pe_datapath, PeDatapath};
+pub use gate::{Bus, Gate, GateKind, Netlist, SignalId};
+pub use sta::{clock_period, static_timing, ChipInstance, StaReport};
+pub use voltage::{Technology, VoltageLadder, VoltageLevel};
+pub use vos::{StepStats, VosSimulator};

@@ -1,0 +1,260 @@
+//! Static timing analysis over gate netlists.
+//!
+//! Replaces the paper's Synopsys DC timing reports: per-gate delays are the
+//! library base delays (see [`GateKind::base_delay`]) times a frozen
+//! per-gate process-variation factor, scaled to the operating voltage with
+//! the alpha-power law. Arrival times propagate in one topological pass.
+
+use super::gate::{GateKind, Netlist};
+use super::voltage::Technology;
+use crate::util::rng::Xoshiro256pp;
+
+/// A "chip instance": per-gate process-variation factors frozen at
+/// fabrication time. The same instance is reused across voltages and aging
+/// scenarios so comparisons isolate the voltage effect.
+#[derive(Clone, Debug)]
+pub struct ChipInstance {
+    variation: Vec<f32>,
+}
+
+impl ChipInstance {
+    /// Sample per-gate variation factors ~ N(1, σ) clamped to [0.8, 1.25].
+    pub fn sample(netlist: &Netlist, tech: &Technology, rng: &mut Xoshiro256pp) -> Self {
+        let variation = netlist
+            .gates()
+            .iter()
+            .map(|g| {
+                if g.kind.is_source() {
+                    1.0
+                } else {
+                    rng.gaussian(1.0, tech.process_sigma).clamp(0.8, 1.25) as f32
+                }
+            })
+            .collect();
+        Self { variation }
+    }
+
+    /// An idealized chip with no process variation (useful for tests).
+    pub fn ideal(netlist: &Netlist) -> Self {
+        Self { variation: vec![1.0; netlist.num_gates()] }
+    }
+
+    /// Per-gate delays at operating voltage `v` (normalized delay units).
+    pub fn delays_at(&self, netlist: &Netlist, tech: &Technology, v: f64) -> Vec<f32> {
+        let scale = tech.delay_scale(v) as f32;
+        self.scaled_delays(netlist, scale)
+    }
+
+    /// Per-gate delays at voltage `v` with an aged threshold (paper §V.C).
+    pub fn delays_at_aged(
+        &self,
+        netlist: &Netlist,
+        tech: &Technology,
+        v: f64,
+        delta_vth: f64,
+    ) -> Vec<f32> {
+        let scale = tech.delay_scale_aged(v, delta_vth) as f32;
+        self.scaled_delays(netlist, scale)
+    }
+
+    fn scaled_delays(&self, netlist: &Netlist, scale: f32) -> Vec<f32> {
+        netlist
+            .gates()
+            .iter()
+            .zip(&self.variation)
+            .map(|(g, &var)| g.kind.base_delay() * var * scale)
+            .collect()
+    }
+}
+
+/// Result of a static timing pass.
+#[derive(Clone, Debug)]
+pub struct StaReport {
+    /// Worst-case arrival time per signal.
+    pub arrival: Vec<f32>,
+    /// Worst arrival over primary outputs = critical-path delay.
+    pub critical_path: f32,
+    /// Output index realizing the critical path.
+    pub critical_output: usize,
+}
+
+/// Compute worst-case arrival times: `t(g) = d(g) + max(t(fanins))`.
+pub fn static_timing(netlist: &Netlist, delays: &[f32]) -> StaReport {
+    assert_eq!(delays.len(), netlist.num_gates());
+    let gates = netlist.gates();
+    let mut arrival = vec![0f32; gates.len()];
+    for (i, g) in gates.iter().enumerate() {
+        arrival[i] = match g.kind {
+            GateKind::Input | GateKind::Const0 | GateKind::Const1 => 0.0,
+            k if k.is_unary() => arrival[g.a as usize] + delays[i],
+            _ => arrival[g.a as usize].max(arrival[g.b as usize]) + delays[i],
+        };
+    }
+    let (critical_output, critical_path) = netlist
+        .outputs()
+        .iter()
+        .enumerate()
+        .map(|(j, &o)| (j, arrival[o as usize]))
+        .fold((0, f32::NEG_INFINITY), |acc, x| if x.1 > acc.1 { x } else { acc });
+    StaReport { arrival, critical_path, critical_output }
+}
+
+/// The clock period of the (X-)TPU at nominal voltage.
+///
+/// Commercial silicon is *speed-binned*: the shipping clock tracks measured
+/// dynamic timing, not the (hugely pessimistic) static worst case — random
+/// multiplier stimuli activate the full static critical path with
+/// vanishing probability, so an STA-derived clock would never produce the
+/// overscaling errors the paper measures at 0.7/0.6 V. We therefore
+/// calibrate: run a fixed PRBS at nominal voltage, take the largest dynamic
+/// output arrival, add the guard band. Nominal operation stays error-free
+/// by construction (the guard covers stimulus beyond the calibration set —
+/// validated by the `nominal_model_is_exact` tests at 10^6 vectors), and
+/// VOS then misses timing exactly the way the paper's Fig 1c/Table 2 show.
+pub fn clock_period(netlist: &Netlist, chip: &ChipInstance, tech: &Technology) -> f32 {
+    use crate::timing::vos::VosSimulator;
+    use crate::util::rng::Xoshiro256pp;
+    let delays = chip.delays_at(netlist, tech, tech.v_nominal);
+    let mut sim = VosSimulator::new(netlist, delays, f32::INFINITY);
+    let mut rng = Xoshiro256pp::seeded(0xC10C);
+    let n_inputs = netlist.inputs().len();
+    let mut max_arrival = 0f32;
+    let mut bits = vec![false; n_inputs];
+    for _ in 0..4096 {
+        for b in bits.iter_mut() {
+            *b = rng.chance(0.5);
+        }
+        sim.step(&bits);
+        if sim.last_max_arrival() > max_arrival {
+            max_arrival = sim.last_max_arrival();
+        }
+    }
+    max_arrival * (1.0 + tech.clock_guard as f32)
+}
+
+/// Static-STA clock (worst-case critical path + guard) — kept for
+/// comparison and for the aging study's margin accounting.
+pub fn clock_period_static(netlist: &Netlist, chip: &ChipInstance, tech: &Technology) -> f32 {
+    let delays = chip.delays_at(netlist, tech, tech.v_nominal);
+    let report = static_timing(netlist, &delays);
+    report.critical_path * (1.0 + tech.clock_guard as f32)
+}
+
+/// Per-output slack at a given voltage (positive = meets timing).
+pub fn output_slacks(netlist: &Netlist, delays: &[f32], clock: f32) -> Vec<f32> {
+    let report = static_timing(netlist, delays);
+    netlist.outputs().iter().map(|&o| clock - report.arrival[o as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::circuits::baugh_wooley_8x8;
+    use crate::timing::gate::Netlist;
+
+    fn chain_netlist(len: usize) -> Netlist {
+        let mut n = Netlist::new("chain");
+        let mut sig = n.input();
+        for _ in 0..len {
+            let other = n.input();
+            sig = n.nand2(sig, other);
+        }
+        n.mark_output(sig);
+        n
+    }
+
+    #[test]
+    fn chain_arrival_is_sum_of_delays() {
+        let n = chain_netlist(10);
+        let chip = ChipInstance::ideal(&n);
+        let tech = Technology::default();
+        let delays = chip.delays_at(&n, &tech, tech.v_nominal);
+        let report = static_timing(&n, &delays);
+        // 10 NAND2 gates at base delay 1.0 each.
+        assert!((report.critical_path - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn voltage_scaling_stretches_arrivals() {
+        let n = chain_netlist(5);
+        let chip = ChipInstance::ideal(&n);
+        let tech = Technology::default();
+        let nom = static_timing(&n, &chip.delays_at(&n, &tech, 0.8)).critical_path;
+        let low = static_timing(&n, &chip.delays_at(&n, &tech, 0.5)).critical_path;
+        assert!((low / nom - tech.delay_scale(0.5) as f32).abs() < 1e-4);
+    }
+
+    #[test]
+    fn multiplier_msb_paths_longest() {
+        let n = baugh_wooley_8x8("bw_sta");
+        let chip = ChipInstance::ideal(&n);
+        let tech = Technology::default();
+        let delays = chip.delays_at(&n, &tech, tech.v_nominal);
+        let report = static_timing(&n, &delays);
+        let outs = netlist_output_arrivals(&n, &report);
+        // Product MSB region should arrive later than the LSBs (carry
+        // propagation), which is why VOS errors are large-magnitude.
+        assert!(outs[0] < outs[12], "lsb={} msb12={}", outs[0], outs[12]);
+        assert!(report.critical_output >= 8, "critical bit {}", report.critical_output);
+    }
+
+    fn netlist_output_arrivals(n: &Netlist, r: &StaReport) -> Vec<f32> {
+        n.outputs().iter().map(|&o| r.arrival[o as usize]).collect()
+    }
+
+    #[test]
+    fn binned_clock_below_static_but_dynamically_safe() {
+        let n = baugh_wooley_8x8("bw_clk");
+        let tech = Technology::default();
+        let mut rng = crate::util::rng::Xoshiro256pp::seeded(101);
+        let chip = ChipInstance::sample(&n, &tech, &mut rng);
+        let binned = clock_period(&n, &chip, &tech);
+        let static_clk = clock_period_static(&n, &chip, &tech);
+        // Speed binning must be meaningfully tighter than static STA…
+        assert!(binned < static_clk, "binned {binned} vs static {static_clk}");
+        assert!(binned > 0.3 * static_clk, "binned clock implausibly small");
+        // …while nominal operation stays dynamically error-free.
+        let delays = chip.delays_at(&n, &tech, tech.v_nominal);
+        let mut sim = crate::timing::vos::VosSimulator::new(&n, delays, binned);
+        let mut rng = crate::util::rng::Xoshiro256pp::seeded(777);
+        sim.step(&crate::timing::gate::i64_to_bits(0, 16));
+        for _ in 0..20_000 {
+            let a = rng.range_i64(-128, 127);
+            let w = rng.range_i64(-128, 127);
+            let mut bits = crate::timing::gate::i64_to_bits(a, 8);
+            bits.extend(crate::timing::gate::i64_to_bits(w, 8));
+            let st = sim.step(&bits);
+            assert_eq!(st.late_outputs, 0, "nominal voltage must be error-free");
+        }
+    }
+
+    #[test]
+    fn process_variation_bounded_and_reproducible() {
+        let n = baugh_wooley_8x8("bw_var");
+        let tech = Technology::default();
+        let mut r1 = crate::util::rng::Xoshiro256pp::seeded(7);
+        let mut r2 = crate::util::rng::Xoshiro256pp::seeded(7);
+        let c1 = ChipInstance::sample(&n, &tech, &mut r1);
+        let c2 = ChipInstance::sample(&n, &tech, &mut r2);
+        let d1 = c1.delays_at(&n, &tech, 0.6);
+        let d2 = c2.delays_at(&n, &tech, 0.6);
+        assert_eq!(d1, d2);
+        for (g, &d) in n.gates().iter().zip(&d1) {
+            let base = g.kind.base_delay() * tech.delay_scale(0.6) as f32;
+            if base > 0.0 {
+                assert!(d >= base * 0.8 - 1e-5 && d <= base * 1.25 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn aged_critical_path_longer() {
+        let n = baugh_wooley_8x8("bw_aged");
+        let tech = Technology::default();
+        let chip = ChipInstance::ideal(&n);
+        let fresh = static_timing(&n, &chip.delays_at(&n, &tech, 0.8)).critical_path;
+        let aged =
+            static_timing(&n, &chip.delays_at_aged(&n, &tech, 0.8, 0.08)).critical_path;
+        assert!(aged > fresh);
+    }
+}

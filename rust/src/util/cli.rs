@@ -1,0 +1,259 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subset the `xtpu` binary needs: subcommands, `--flag`,
+//! `--key value` / `--key=value` options, positional arguments, typed
+//! accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option '--{0}'")]
+    UnknownOption(String),
+    #[error("option '--{0}' requires a value")]
+    MissingValue(String),
+    #[error("invalid value for '--{key}': {value} ({reason})")]
+    InvalidValue { key: String, value: String, reason: String },
+    #[error("unexpected positional argument '{0}'")]
+    UnexpectedPositional(String),
+    #[error("missing required option '--{0}'")]
+    MissingRequired(String),
+}
+
+/// Declarative option spec used for parsing and `--help` output.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` for boolean flags (no value).
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+    pub required: bool,
+}
+
+impl OptSpec {
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, is_flag: true, default: None, required: false }
+    }
+
+    pub fn opt(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        Self { name, help, is_flag: false, default: Some(default), required: false }
+    }
+
+    pub fn required(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, is_flag: false, default: None, required: true }
+    }
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand name) against `specs`.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for s in specs {
+            if s.is_flag {
+                args.flags.insert(s.name.to_string(), false);
+            } else if let Some(d) = s.default {
+                args.values.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if spec.is_flag {
+                    args.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or(CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for s in specs {
+            if s.required && !args.values.contains_key(s.name) {
+                return Err(CliError::MissingRequired(s.name.to_string()));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(String::as_str).unwrap_or("")
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    fn typed<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.values.get(name).ok_or_else(|| CliError::MissingRequired(name.into()))?;
+        raw.parse::<T>().map_err(|e| CliError::InvalidValue {
+            key: name.into(),
+            value: raw.clone(),
+            reason: e.to_string(),
+        })
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.typed(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.typed(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.typed(name)
+    }
+
+    /// Comma-separated f64 list, e.g. `--voltages 0.5,0.6,0.7,0.8`.
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>, CliError> {
+        let raw = self.str(name);
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse::<f64>().map_err(|e| CliError::InvalidValue {
+                    key: name.into(),
+                    value: raw.into(),
+                    reason: e.to_string(),
+                })
+            })
+            .collect()
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(program: &str, command: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUsage: {program} {command} [OPTIONS]\n\nOptions:\n");
+    for spec in specs {
+        let lhs = if spec.is_flag {
+            format!("--{}", spec.name)
+        } else if let Some(d) = spec.default {
+            format!("--{} <value: {d}>", spec.name)
+        } else {
+            format!("--{} <value, required>", spec.name)
+        };
+        s.push_str(&format!("  {lhs:<36} {}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec::opt("voltage", "0.8", "operating voltage"),
+            OptSpec::opt("samples", "1000", "sample count"),
+            OptSpec::flag("verbose", "print more"),
+            OptSpec::required("model", "model path"),
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::parse(&sv(&["--model", "m.json"]), &specs()).unwrap();
+        assert_eq!(a.str("voltage"), "0.8");
+        assert_eq!(a.usize("samples").unwrap(), 1000);
+        assert!(!a.flag("verbose"));
+        let a = Args::parse(
+            &sv(&["--model=m.json", "--voltage", "0.5", "--verbose", "--samples=42"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.f64("voltage").unwrap(), 0.5);
+        assert_eq!(a.usize("samples").unwrap(), 42);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.str("model"), "m.json");
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--voltage", "0.5"]), &specs()),
+            Err(CliError::MissingRequired(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--model", "m", "--bogus"]), &specs()),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--model"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_typed_value() {
+        let a = Args::parse(&sv(&["--model", "m", "--samples", "abc"]), &specs()).unwrap();
+        assert!(matches!(a.usize("samples"), Err(CliError::InvalidValue { .. })));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::parse(&sv(&["--model", "m", "pos1", "pos2"]), &specs()).unwrap();
+        assert_eq!(a.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn f64_list_parsing() {
+        let mut s = specs();
+        s.push(OptSpec::opt("voltages", "0.5,0.6,0.7,0.8", "levels"));
+        let a = Args::parse(&sv(&["--model", "m"]), &s).unwrap();
+        assert_eq!(a.f64_list("voltages").unwrap(), vec![0.5, 0.6, 0.7, 0.8]);
+        let a = Args::parse(&sv(&["--model", "m", "--voltages", "0.55, 0.65"]), &s).unwrap();
+        assert_eq!(a.f64_list("voltages").unwrap(), vec![0.55, 0.65]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("xtpu", "characterize", "Extract error models.", &specs());
+        assert!(u.contains("--voltage"));
+        assert!(u.contains("required"));
+    }
+}

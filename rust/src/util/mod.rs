@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-tree because the environment is
+//! offline (no rand / serde / clap / rayon / proptest). See DESIGN.md §3.
+
+pub mod checks;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,448 @@
+//! Descriptive statistics used across the framework.
+//!
+//! The error-model extraction (paper §IV.B) needs running moments, Bessel-
+//! corrected variance (paper eq. 24), histograms for the error-distribution
+//! figures (Fig 9a), quantiles, and a lightweight normality check used to
+//! validate the paper's "errors are ≈ normally distributed" assumption.
+
+/// Online running moments (Welford). Numerically stable single pass.
+#[derive(Clone, Debug, Default)]
+pub struct RunningMoments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    m3: f64,
+    m4: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningMoments {
+    pub fn new() -> Self {
+        Self { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n1 = self.n as f64;
+        self.n += 1;
+        let n = self.n as f64;
+        let delta = x - self.mean;
+        let delta_n = delta / n;
+        let delta_n2 = delta_n * delta_n;
+        let term1 = delta * delta_n * n1;
+        self.mean += delta_n;
+        self.m4 += term1 * delta_n2 * (n * n - 3.0 * n + 3.0)
+            + 6.0 * delta_n2 * self.m2
+            - 4.0 * delta_n * self.m3;
+        self.m3 += term1 * delta_n * (n - 2.0) - 3.0 * delta_n * self.m2;
+        self.m2 += term1;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn extend<I: IntoIterator<Item = f64>>(&mut self, it: I) {
+        for x in it {
+            self.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Bessel-corrected sample variance (paper eq. 24 uses n−1 because the
+    /// 10^6 random vectors are a sample of the input space).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n as f64 - 1.0)
+        }
+    }
+
+    /// Population variance (divide by n).
+    pub fn variance_population(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Sample skewness g1.
+    pub fn skewness(&self) -> f64 {
+        if self.n < 2 || self.m2 == 0.0 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        (n.sqrt() * self.m3) / self.m2.powf(1.5)
+    }
+
+    /// Excess kurtosis g2 (normal → 0).
+    pub fn kurtosis_excess(&self) -> f64 {
+        if self.n < 2 || self.m2 == 0.0 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        n * self.m4 / (self.m2 * self.m2) - 3.0
+    }
+
+    /// Merge another accumulator (parallel reduction; Chan et al.).
+    pub fn merge(&mut self, other: &RunningMoments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * nb / n;
+        let m2 = self.m2 + other.m2 + delta * delta * na * nb / n;
+        let m3 = self.m3
+            + other.m3
+            + delta.powi(3) * na * nb * (na - nb) / (n * n)
+            + 3.0 * delta * (na * other.m2 - nb * self.m2) / n;
+        let m4 = self.m4
+            + other.m4
+            + delta.powi(4) * na * nb * (na * na - na * nb + nb * nb) / (n * n * n)
+            + 6.0 * delta * delta * (na * na * other.m2 + nb * nb * self.m2) / (n * n)
+            + 4.0 * delta * (na * other.m3 - nb * self.m3) / n;
+        self.n += other.n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.m3 = m3;
+        self.m4 = m4;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-range histogram (for Fig 9a error-distribution plots).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            let idx = idx.min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Normalized density of bin `i`.
+    pub fn density(&self, i: usize) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.bins[i] as f64 / (self.count as f64 * w)
+    }
+
+    /// Render an ASCII sparkline of the histogram (for bench reports).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.bins.iter().copied().max().unwrap_or(0).max(1);
+        self.bins
+            .iter()
+            .map(|&b| GLYPHS[(b as f64 / max as f64 * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+/// Sample quantile (linear interpolation). Sorts a copy.
+pub fn quantile(data: &[f64], q: f64) -> f64 {
+    assert!(!data.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn mean(data: &[f64]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    data.iter().sum::<f64>() / data.len() as f64
+}
+
+/// Bessel-corrected sample variance (eq. 24 with n−1).
+pub fn variance(data: &[f64]) -> f64 {
+    if data.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(data);
+    data.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (data.len() as f64 - 1.0)
+}
+
+pub fn std_dev(data: &[f64]) -> f64 {
+    variance(data).sqrt()
+}
+
+/// Pearson correlation coefficient — used to validate the paper's claim
+/// that multiplier-only VOS keeps PE errors uncorrelated (cov(e_i,e_j)≈0).
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.len() < 2 {
+        return 0.0;
+    }
+    let (ma, mb) = (mean(a), mean(b));
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..a.len() {
+        let (xa, xb) = (a[i] - ma, b[i] - mb);
+        num += xa * xb;
+        da += xa * xa;
+        db += xb * xb;
+    }
+    if da == 0.0 || db == 0.0 {
+        0.0
+    } else {
+        num / (da * db).sqrt()
+    }
+}
+
+/// Jarque–Bera normality statistic: JB = n/6·(S² + K²/4).
+/// Under H0 (normal) JB ~ χ²(2); JB below ~5.99 ≈ cannot reject at 5 %.
+/// For the huge simulation samples we report the statistic itself and use a
+/// loose skew/kurtosis gate instead of a strict p-value.
+pub fn jarque_bera(m: &RunningMoments) -> f64 {
+    let n = m.count() as f64;
+    let s = m.skewness();
+    let k = m.kurtosis_excess();
+    n / 6.0 * (s * s + k * k / 4.0)
+}
+
+/// Loose "approximately normal" check used in error-model extraction: the
+/// paper only needs symmetry (|skew| small) and non-pathological tails.
+pub fn roughly_normal(m: &RunningMoments) -> bool {
+    m.count() >= 100 && m.skewness().abs() < 1.0 && m.kurtosis_excess().abs() < 10.0
+}
+
+/// Standard normal PDF (for overlaying fits on histograms).
+pub fn normal_pdf(x: f64, mean: f64, std_dev: f64) -> f64 {
+    if std_dev <= 0.0 {
+        return 0.0;
+    }
+    let z = (x - mean) / std_dev;
+    (-0.5 * z * z).exp() / (std_dev * (2.0 * std::f64::consts::PI).sqrt())
+}
+
+/// Linear regression y = a + b·x over paired samples; returns (a, b, r²).
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let (mx, my) = (mean(x), mean(y));
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for i in 0..x.len() {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxx += dx * dx;
+        sxy += dx * dy;
+        syy += dy * dy;
+    }
+    let b = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let a = my - b * mx;
+    let r2 = if sxx == 0.0 || syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn welford_matches_direct() {
+        let data = [1.0, 2.0, 4.0, 8.0, 16.0, -3.5];
+        let mut m = RunningMoments::new();
+        m.extend(data.iter().copied());
+        assert!((m.mean() - mean(&data)).abs() < 1e-12);
+        assert!((m.variance() - variance(&data)).abs() < 1e-10);
+        assert_eq!(m.count(), 6);
+        assert_eq!(m.min(), -3.5);
+        assert_eq!(m.max(), 16.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        let data: Vec<f64> = (0..1000).map(|_| rng.gaussian(3.0, 2.0)).collect();
+        let mut whole = RunningMoments::new();
+        whole.extend(data.iter().copied());
+        let mut a = RunningMoments::new();
+        let mut b = RunningMoments::new();
+        a.extend(data[..400].iter().copied());
+        b.extend(data[400..].iter().copied());
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-7);
+        assert!((a.skewness() - whole.skewness()).abs() < 1e-6);
+        assert!((a.kurtosis_excess() - whole.kurtosis_excess()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gaussian_sample_is_roughly_normal() {
+        let mut rng = Xoshiro256pp::seeded(2);
+        let mut m = RunningMoments::new();
+        for _ in 0..50_000 {
+            m.push(rng.next_gaussian());
+        }
+        assert!(roughly_normal(&m));
+        assert!(m.skewness().abs() < 0.05);
+        assert!(m.kurtosis_excess().abs() < 0.1);
+    }
+
+    #[test]
+    fn uniform_sample_has_negative_kurtosis() {
+        let mut rng = Xoshiro256pp::seeded(3);
+        let mut m = RunningMoments::new();
+        for _ in 0..50_000 {
+            m.push(rng.next_f64());
+        }
+        // Uniform excess kurtosis = -1.2.
+        assert!((m.kurtosis_excess() + 1.2).abs() < 0.1);
+    }
+
+    #[test]
+    fn histogram_counts_and_flows() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(11.0);
+        assert_eq!(h.count(), 12);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+        assert!(h.bins().iter().all(|&b| b == 1));
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-12);
+        assert!((h.density(0) - 1.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_endpoints_and_median() {
+        let data = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&data, 0.0), 1.0);
+        assert_eq!(quantile(&data, 1.0), 5.0);
+        assert_eq!(quantile(&data, 0.5), 3.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_none() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [2.0, -2.0, 2.0, -2.0];
+        assert!(pearson(&x, &z).abs() < 0.5);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 2.5 * v).collect();
+        let (a, b, r2) = linear_fit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.5).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jarque_bera_small_for_normal() {
+        let mut rng = Xoshiro256pp::seeded(4);
+        let mut m = RunningMoments::new();
+        for _ in 0..20_000 {
+            m.push(rng.next_gaussian());
+        }
+        assert!(jarque_bera(&m) < 20.0, "jb={}", jarque_bera(&m));
+    }
+
+    #[test]
+    fn normal_pdf_peak() {
+        assert!((normal_pdf(0.0, 0.0, 1.0) - 0.39894228).abs() < 1e-6);
+        assert!(normal_pdf(0.0, 0.0, -1.0) == 0.0);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let mut h = Histogram::new(-4.0, 4.0, 16);
+        let mut rng = Xoshiro256pp::seeded(5);
+        for _ in 0..10_000 {
+            h.push(rng.next_gaussian());
+        }
+        let s = h.sparkline();
+        assert_eq!(s.chars().count(), 16);
+    }
+}

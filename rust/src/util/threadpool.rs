@@ -1,0 +1,168 @@
+//! Scoped data-parallel helpers built on `std::thread` (no rayon offline).
+//!
+//! The characterization pass simulates millions of input vectors through the
+//! gate-level timing model; [`parallel_chunks`] and [`parallel_map_reduce`]
+//! spread that across cores with plain scoped threads — no queues, no
+//! allocation in the hot loop.
+
+/// Number of worker threads to use (respects `XTPU_THREADS`).
+pub fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("XTPU_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Split `0..n` into at most `workers` contiguous ranges of near-equal size.
+pub fn split_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let base = n / workers;
+    let rem = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for i in 0..workers {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(range, worker_index)` over a partition of `0..n` in parallel and
+/// collect the per-worker results in order.
+pub fn parallel_chunks<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(std::ops::Range<usize>, usize) -> R + Sync,
+{
+    let ranges = split_ranges(n, worker_count());
+    if ranges.len() <= 1 {
+        return ranges.into_iter().enumerate().map(|(i, r)| f(r, i)).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let f = &f;
+                scope.spawn(move || f(r, i))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Map `0..n` in parallel and fold worker results with `reduce`.
+pub fn parallel_map_reduce<R, F, G>(n: usize, init: R, map: F, reduce: G) -> R
+where
+    R: Send,
+    F: Fn(std::ops::Range<usize>, usize) -> R + Sync,
+    G: Fn(R, R) -> R,
+{
+    parallel_chunks(n, map).into_iter().fold(init, reduce)
+}
+
+/// Fill `out[i] = f(i)` in parallel (disjoint chunk writes).
+pub fn parallel_fill<T, F>(out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let n = out.len();
+    let ranges = split_ranges(n, worker_count());
+    if ranges.len() <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return;
+    }
+    // Split the output into disjoint mutable chunks matching the ranges.
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut offset = 0;
+        for r in ranges {
+            let (chunk, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            let start = offset;
+            offset += r.len();
+            let f = &f;
+            scope.spawn(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = f(start + j);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_everything_disjointly() {
+        for n in [0usize, 1, 7, 16, 1000] {
+            for w in [1usize, 2, 3, 8, 64] {
+                let ranges = split_ranges(n, w);
+                let mut covered = vec![false; n];
+                for r in &ranges {
+                    for i in r.clone() {
+                        assert!(!covered[i], "overlap at {i}");
+                        covered[i] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "n={n} w={w} uncovered");
+                // Balance: sizes differ by at most 1.
+                if !ranges.is_empty() {
+                    let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                    let (min, max) =
+                        (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_reduce_sums_correctly() {
+        let total = parallel_map_reduce(
+            10_000,
+            0u64,
+            |range, _| range.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(total, 10_000u64 * 9_999 / 2);
+    }
+
+    #[test]
+    fn fill_matches_serial() {
+        let mut out = vec![0usize; 777];
+        parallel_fill(&mut out, |i| i * 3 + 1);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn chunks_preserve_worker_order() {
+        let parts = parallel_chunks(100, |r, _| (r.start, r.end));
+        for w in parts.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let parts: Vec<u32> = parallel_chunks(0, |_, _| 0u32);
+        assert!(parts.is_empty());
+        let mut v: Vec<u8> = vec![];
+        parallel_fill(&mut v, |_| 0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Cross-layer integration tests: PJRT runtime ↔ rust quantized inference ↔
+//! systolic simulator ↔ the full pipeline.
+//!
+//! These need `make artifacts` to have run (HLO files under artifacts/);
+//! they skip gracefully when the artifacts are absent so `cargo test` stays
+//! runnable in a fresh checkout.
+
+use xtpu::assign::Solver;
+use xtpu::config::ExperimentConfig;
+use xtpu::coordinator::{systolic_cross_check, Pipeline};
+use xtpu::nn::data::synth_mnist;
+use xtpu::nn::layers::Activation;
+use xtpu::nn::model::fc_mnist;
+use xtpu::nn::quant::QuantizedModel;
+use xtpu::nn::train::{train, TrainConfig};
+use xtpu::runtime::{artifacts_dir, literal_f32, literal_i8, FcExecutor, Runtime};
+use xtpu::util::rng::Xoshiro256pp;
+
+fn artifacts_present() -> bool {
+    artifacts_dir().join("mm16.hlo.txt").exists()
+}
+
+fn smoke_config() -> ExperimentConfig {
+    ExperimentConfig {
+        train_samples: 600,
+        test_samples: 200,
+        epochs: 2,
+        characterize_samples: 40_000,
+        mse_ub_fractions: vec![0.1, 2.0, 10.0],
+        validation_runs: 1,
+        seed: 0xFEED,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pjrt_mm16_matches_integer_reference() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+    rt.load("mm16").unwrap();
+    let mut rng = Xoshiro256pp::seeded(7);
+    let x: Vec<i8> = (0..256).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let w: Vec<i8> = (0..256).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let noise: Vec<f32> = (0..256).map(|_| rng.gaussian(0.0, 100.0) as f32).collect();
+    let out = rt
+        .execute(
+            "mm16",
+            &[
+                literal_i8(&x, &[16, 16]).unwrap(),
+                literal_i8(&w, &[16, 16]).unwrap(),
+                literal_f32(&noise, &[16, 16]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got: Vec<i32> = out[0].to_vec().unwrap();
+    for i in 0..16 {
+        for j in 0..16 {
+            let mut acc = 0i64;
+            for p in 0..16 {
+                acc += (x[i * 16 + p] as i64) * (w[p * 16 + j] as i64);
+            }
+            let e = noise[i * 16 + j] as f64;
+            // jnp.round is round-half-even; only exact .5 values can differ
+            // from rust's rounding, and the test noise avoids them.
+            let expect = acc + e.round_ties_even() as i64;
+            assert_eq!(got[i * 16 + j] as i64, expect, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn pjrt_fc_matches_rust_quantized_inference() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Train a small FC model in rust, quantize, run the same inputs through
+    // (a) the rust quantized forward and (b) the JAX/Pallas HLO artifact via
+    // PJRT — logits must agree to float tolerance.
+    let mut rng = Xoshiro256pp::seeded(21);
+    let mut model = fc_mnist(Activation::Linear, &mut rng);
+    let train_set = synth_mnist(600, 31);
+    train(&mut model, &train_set, &TrainConfig { epochs: 2, ..Default::default() });
+    let test = synth_mnist(64, 32);
+    let calib = test.batch(&(0..32).collect::<Vec<_>>()).0;
+    let q = QuantizedModel::quantize(&model, &calib);
+
+    let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+    let exec = FcExecutor::from_quantized(&q, "linear", 32).unwrap();
+    rt.load(&exec.artifact).unwrap();
+
+    let (x, labels) = test.batch(&(0..32).collect::<Vec<_>>());
+    let mut rng2 = Xoshiro256pp::seeded(1);
+    let rust_logits = q.forward(&x, None, &mut rng2);
+    let mut rng3 = Xoshiro256pp::seeded(2);
+    let pjrt_logits = exec.run(&rt, &x.data, &mut rng3).unwrap();
+    assert_eq!(pjrt_logits.len(), 320);
+
+    let mut agree = 0;
+    let mut max_rel = 0f32;
+    for i in 0..320 {
+        let (a, b) = (rust_logits.data[i], pjrt_logits[i]);
+        let rel = (a - b).abs() / a.abs().max(b.abs()).max(1.0);
+        max_rel = max_rel.max(rel);
+        if rel < 1e-3 {
+            agree += 1;
+        }
+    }
+    // Round-half-even vs round-half-away can flip a rare borderline int8
+    // quantization; demand near-universal agreement and tight max error.
+    assert!(agree >= 315, "only {agree}/320 logits agree (max rel {max_rel})");
+
+    // And the PJRT path must classify as well as the rust path.
+    let mut correct = 0;
+    for r in 0..32 {
+        let row = &pjrt_logits[r * 10..(r + 1) * 10];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == labels[r] as usize {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 20, "PJRT path accuracy {correct}/32");
+}
+
+#[test]
+fn pjrt_fc_noise_injection_matches_prediction() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Inject a large per-neuron noise through the PJRT path and verify the
+    // measured output-MSE increment matches the ES-based prediction within
+    // a factor of 2 (the framework's core quality-estimation claim).
+    let cfg = smoke_config();
+    let pipeline = Pipeline::new(cfg);
+    let sys = pipeline.prepare().unwrap();
+    let report = pipeline.run_budget(&sys, 2.0).unwrap();
+
+    let exec_noise = {
+        let problem = xtpu::assign::AssignmentProblem::build(
+            &sys.es,
+            &sys.fan_in,
+            &sys.registry,
+            &sys.power,
+            report.budget_abs,
+        );
+        problem.noise_spec(&report.assignment, &sys.registry)
+    };
+    let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut exec = FcExecutor::from_quantized(&sys.quantized, "linear", 32).unwrap();
+    rt.load(&exec.artifact).unwrap();
+    let (x, _) = sys.test.batch(&(0..32).collect::<Vec<_>>());
+    let mut rng = Xoshiro256pp::seeded(3);
+    let clean = exec.run(&rt, &x.data, &mut rng).unwrap();
+    exec.set_noise(exec_noise);
+    // Average the measured MSE over several noise draws.
+    let mut mse = 0.0;
+    let runs = 5;
+    for s in 0..runs {
+        let mut rng = Xoshiro256pp::seeded(100 + s);
+        let noisy = exec.run(&rt, &x.data, &mut rng).unwrap();
+        mse += clean
+            .iter()
+            .zip(&noisy)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / clean.len() as f64;
+    }
+    mse /= runs as f64;
+    let predicted = report.assignment.predicted_mse;
+    if predicted > 0.0 {
+        let ratio = mse / predicted;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "PJRT measured MSE {mse:.4e} vs predicted {predicted:.4e} (ratio {ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn pipeline_end_to_end_smoke() {
+    let cfg = smoke_config();
+    let pipeline = Pipeline::new(cfg);
+    let (sys, reports) = pipeline.run().unwrap();
+    assert!(sys.baseline_accuracy > 0.6, "baseline accuracy {}", sys.baseline_accuracy);
+    assert!(sys.baseline_mse > 0.0);
+    // Energy saving must be monotone in the budget; accuracy must not
+    // collapse at tight budgets.
+    for w in reports.windows(2) {
+        assert!(
+            w[1].assignment.energy_saving >= w[0].assignment.energy_saving - 1e-9,
+            "saving not monotone: {:?}",
+            reports.iter().map(|r| r.assignment.energy_saving).collect::<Vec<_>>()
+        );
+    }
+    let tight = &reports[0];
+    assert!(tight.accuracy_drop < 0.05, "tight budget dropped accuracy {}", tight.accuracy_drop);
+    // Predicted MSE respects each budget.
+    for r in &reports {
+        assert!(r.assignment.predicted_mse <= r.budget_abs + 1e-9);
+    }
+}
+
+#[test]
+fn systolic_simulator_agrees_with_error_models() {
+    let cfg = smoke_config();
+    let pipeline = Pipeline::new(cfg);
+    let sys = pipeline.prepare().unwrap();
+    let report = pipeline.run_budget(&sys, 10.0).unwrap();
+    let overscaled =
+        report.assignment.level.iter().take(128).filter(|&&l| l < 3).count();
+    if overscaled == 0 {
+        eprintln!("no overscaled columns at this budget; nothing to check");
+        return;
+    }
+    let (measured, predicted) =
+        systolic_cross_check(&sys, &report.assignment, 1500, 9).unwrap();
+    assert!(measured > 0.0 && predicted > 0.0);
+    let ratio = measured / predicted;
+    assert!(
+        (0.7..1.4).contains(&ratio),
+        "systolic variance {measured:.3e} vs model {predicted:.3e} (ratio {ratio:.2})"
+    );
+}
+
+#[test]
+fn greedy_and_ga_feasible_ilp_optimal_on_real_problem() {
+    let cfg = smoke_config();
+    let pipeline = Pipeline::new(cfg);
+    let sys = pipeline.prepare().unwrap();
+    let budget = 2.0;
+    let ilp = pipeline.run_budget_with(&sys, budget, Solver::Ilp).unwrap();
+    let greedy = pipeline.run_budget_with(&sys, budget, Solver::Greedy).unwrap();
+    let ga = pipeline.run_budget_with(&sys, budget, Solver::Genetic).unwrap();
+    assert!(ilp.assignment.optimal);
+    // Relative tolerance: energies are O(1e7) sums accumulated in different
+    // orders by the two solvers.
+    let tol = ilp.assignment.energy.abs() * 1e-9 + 1e-6;
+    assert!(ilp.assignment.energy <= greedy.assignment.energy + tol);
+    assert!(ilp.assignment.energy <= ga.assignment.energy + tol);
+    for r in [&ilp, &greedy, &ga] {
+        assert!(r.assignment.predicted_mse <= r.budget_abs + 1e-9);
+    }
+}
