@@ -1,29 +1,37 @@
 //! §Perf harness: throughput of every hot path in the stack (DESIGN.md §8
 //! targets). Run before/after optimizations; numbers land in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf and (optionally) a JSON report.
 //!
 //!   L3a gate-level timing sim   target ≥ 1 M vectors/s/core (characterization)
-//!   L3b systolic-array matmul   target ≥ 100 M MAC/s
+//!   L3b batched matmul          target ≥ 100 M MAC/s (exec::Statistical backend;
+//!                               the cycle-level simulator number is reported
+//!                               alongside for the before/after comparison)
 //!   L3c ILP assignment          target < 100 ms for 138×4 (paper: ≤ 54.7 s)
 //!   L3d quantized inference     reported for the serving path
-//!   L3e PJRT artifact exec      reported for the AOT path
+//!   L3e artifact exec           reported for the AOT path
+//!
+//! Set `XTPU_BENCH_JSON=<path>` to additionally write the numbers as JSON
+//! (the exec-refactor before/after record lives in BENCH_exec_refactor.json).
 
 #[path = "common.rs"]
 mod common;
 
 use xtpu::assign::{AssignmentProblem, Solver};
 use xtpu::errormodel::{characterize_voltage, CharacterizeOptions};
+use xtpu::exec::{Backend, Exact, Statistical};
 use xtpu::nn::quant::QuantizedModel;
 use xtpu::runtime::{artifacts_dir, FcExecutor, Runtime};
 use xtpu::simulator::{ErrorInjector, XTpu};
 use xtpu::timing::baugh_wooley_8x8;
 use xtpu::timing::sta::ChipInstance;
 use xtpu::timing::voltage::Technology;
+use xtpu::util::json::Json;
 use xtpu::util::rng::Xoshiro256pp;
 
 fn main() {
     common::header("§Perf — hot-path throughput", "DESIGN.md §8 targets");
     let tech = Technology::default();
+    let mut report: Vec<(&str, Json)> = Vec::new();
 
     // --- L3a: gate-level timing simulation ------------------------------
     let netlist = baugh_wooley_8x8("perf_pe");
@@ -47,25 +55,56 @@ fn main() {
         samples as f64 / dt / 1e6 / cores as f64,
         m.variance
     );
+    report.push(("l3a_mvectors_per_s", Json::Num(samples as f64 / dt / 1e6)));
 
-    // --- L3b: systolic-array matmul --------------------------------------
+    // --- L3b: batched matmul through the exec backends -------------------
     let pipeline = common::bench_pipeline();
     let reg = pipeline.error_models().unwrap();
-    let mut tpu = XTpu::new(128, 128, reg.ladder.clone(), ErrorInjector::Statistical(reg));
     let (mm, kk, nn) = (256usize, 784usize, 128usize);
     let mut rng = Xoshiro256pp::seeded(2);
     let a: Vec<i8> = (0..mm * kk).map(|_| rng.range_i64(-127, 127) as i8).collect();
     let w: Vec<i8> = (0..kk * nn).map(|_| rng.range_i64(-127, 127) as i8).collect();
-    for (label, level) in [("exact cols", 3usize), ("0.5V cols", 0)] {
+    let macs = (mm * kk * nn) as f64;
+    let reps = 10;
+
+    let bench_backend = |label: &str, be: &mut dyn Backend, level: usize| -> f64 {
+        let levels = vec![level; nn];
+        let mut rng = Xoshiro256pp::seeded(3);
+        // Warm-up pass, then timed reps.
+        std::hint::black_box(be.matmul_i8(&a, &w, mm, kk, nn, &levels, &mut rng));
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(be.matmul_i8(&a, &w, mm, kk, nn, &levels, &mut rng));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mmacs = macs * reps as f64 / dt / 1e6;
+        println!("L3b exec matmul   : {mmacs:>8.1} M MAC/s ({label}) [target ≥ 100 M MAC/s]");
+        mmacs
+    };
+    let exact_mmacs = bench_backend("Exact backend", &mut Exact, 3);
+    let mut stat = Statistical::new(reg.clone());
+    let stat_nom_mmacs = bench_backend("Statistical, nominal cols", &mut stat, 3);
+    let stat_vos_mmacs = bench_backend("Statistical, 0.5V cols", &mut stat, 0);
+    report.push(("l3b_exec_exact_mmacs", Json::Num(exact_mmacs)));
+    report.push(("l3b_exec_statistical_nominal_mmacs", Json::Num(stat_nom_mmacs)));
+    report.push(("l3b_exec_statistical_vos_mmacs", Json::Num(stat_vos_mmacs)));
+
+    // Cycle-level simulator for the same workload (the pre-refactor "L3b"):
+    // slower by design — it also books cycles/energy per tile pass.
+    let mut tpu = XTpu::new(128, 128, reg.ladder.clone(), ErrorInjector::Statistical(reg));
+    for (label, level, key) in [
+        ("cycle sim, exact cols", 3usize, "l3b_cycle_sim_exact_mmacs"),
+        ("cycle sim, 0.5V cols", 0, "l3b_cycle_sim_vos_mmacs"),
+    ] {
         tpu.reset_stats();
+        let mut rng = Xoshiro256pp::seeded(4);
         let t0 = std::time::Instant::now();
         let out = tpu.matmul(&a, &w, mm, kk, nn, &vec![level; nn], &mut rng);
         let dt = t0.elapsed().as_secs_f64();
         std::hint::black_box(&out);
-        println!(
-            "L3b systolic mm   : {:>8.1} M MAC/s ({label}) [target ≥ 100 M MAC/s]",
-            tpu.stats.macs as f64 / dt / 1e6
-        );
+        let mmacs = tpu.stats.macs as f64 / dt / 1e6;
+        println!("L3b systolic mm   : {mmacs:>8.1} M MAC/s ({label})");
+        report.push((key, Json::Num(mmacs)));
     }
 
     // --- L3c: ILP assignment ---------------------------------------------
@@ -74,50 +113,67 @@ fn main() {
     let problem =
         AssignmentProblem::build(&sys.es, &sys.fan_in, &sys.registry, &sys.power, budget);
     let t0 = std::time::Instant::now();
-    let a = problem.solve(Solver::Ilp).unwrap();
+    let a_sol = problem.solve(Solver::Ilp).unwrap();
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "L3c ILP assignment: {:>8.2} ms for {}×{} ({} nodes) [target < 100 ms; paper ≤ 54.7 s]",
         dt * 1000.0,
         sys.es.len(),
         sys.registry.ladder.len(),
-        a.nodes_explored
+        a_sol.nodes_explored
     );
+    report.push(("l3c_ilp_ms", Json::Num(dt * 1000.0)));
 
-    // --- L3d: quantized inference (serving path) --------------------------
+    // --- L3d: quantized inference (serving path, exec backend) ------------
     let calib = sys.test.batch(&(0..32).collect::<Vec<_>>()).0;
     let q = QuantizedModel::quantize(&sys.model, &calib);
     let (x, _) = sys.test.batch(&(0..64).collect::<Vec<_>>());
+    let mut backend = pipeline.make_backend(&sys.registry).unwrap();
     let mut rng = Xoshiro256pp::seeded(3);
     let reps = 30;
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
-        std::hint::black_box(q.forward(&x, None, &mut rng));
+        std::hint::black_box(q.forward_with(backend.as_mut(), &x, None, &mut rng));
     }
     let dt = t0.elapsed().as_secs_f64();
+    let infs = (reps * 64) as f64 / dt;
+    // Clean forwards run the shared kernel on every backend, so this is
+    // the serving-path number regardless of the configured engine.
     println!(
-        "L3d quantized fwd : {:>8.1} inferences/s (batch 64, rust int8 path)",
-        (reps * 64) as f64 / dt
+        "L3d quantized fwd : {infs:>8.1} inferences/s (batch 64, shared kernel via {} backend)",
+        backend.name()
     );
+    report.push(("l3d_inferences_per_s", Json::Num(infs)));
 
-    // --- L3e: PJRT artifact ------------------------------------------------
+    // --- L3e: AOT artifact -------------------------------------------------
     if artifacts_dir().join("fc_mnist_linear_b32.hlo.txt").exists() {
         let mut rt = Runtime::new(&artifacts_dir()).unwrap();
-        let exec = FcExecutor::from_quantized(&q, "linear", 32).unwrap();
-        rt.load(&exec.artifact).unwrap();
+        let fc = FcExecutor::from_quantized(&q, "linear", 32).unwrap();
+        rt.load(&fc.artifact).unwrap();
         let (xb, _) = sys.test.batch(&(0..32).collect::<Vec<_>>());
         let mut rng = Xoshiro256pp::seeded(4);
         let reps = 30;
         let t0 = std::time::Instant::now();
         for _ in 0..reps {
-            std::hint::black_box(exec.run(&rt, &xb.data, &mut rng).unwrap());
+            std::hint::black_box(fc.run(&rt, &xb.data, &mut rng).unwrap());
         }
         let dt = t0.elapsed().as_secs_f64();
+        let infs = (reps * 32) as f64 / dt;
         println!(
-            "L3e PJRT artifact : {:>8.1} inferences/s (batch 32, XLA CPU executable)",
-            (reps * 32) as f64 / dt
+            "L3e AOT artifact  : {infs:>8.1} inferences/s (batch 32, {})",
+            rt.platform()
         );
+        report.push(("l3e_inferences_per_s", Json::Num(infs)));
     } else {
-        println!("L3e PJRT artifact : skipped (make artifacts)");
+        println!("L3e AOT artifact  : skipped (make artifacts)");
+        report.push(("l3e_inferences_per_s", Json::Null));
+    }
+
+    if let Ok(path) = std::env::var("XTPU_BENCH_JSON") {
+        let j = Json::obj(report);
+        match xtpu::util::json::write_file(std::path::Path::new(&path), &j) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e:#}"),
+        }
     }
 }

@@ -51,11 +51,11 @@ fn main() -> Result<()> {
         println!("quality {i}: {:>8} → {:.1}% energy saving", l.name, l.energy_saving * 100.0);
     }
 
-    let engine = Engine {
-        quantized: sys.quantized.clone(),
-        levels: levels.clone(),
-        input_dim: 784,
-    };
+    // All quality levels share one exec::Backend (the config-selected
+    // engine); each level's pre-solved NoiseSpec is injected on top of the
+    // same shared kernel the validation pipeline used.
+    let engine = Engine::new(sys.quantized.clone(), levels.clone(), 784)
+        .with_backend(pipeline.make_backend(&sys.registry)?);
     let mut server = Server::spawn(
         engine,
         0,

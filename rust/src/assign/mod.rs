@@ -243,34 +243,13 @@ pub fn encode_neuron_weights(weights: &[i8], level: usize, sel_bits: usize) -> V
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::errormodel::ErrorModel;
     use crate::power::{PePowerModel, RegionActivity};
     use crate::timing::voltage::{Technology, VoltageLadder};
     use crate::util::checks::property;
 
     fn fake_registry() -> ErrorModelRegistry {
-        let ladder = VoltageLadder::paper_default();
-        let vars = [3.0e6, 1.4e6, 2.0e5, 0.0]; // Table-2-like ordering
-        let models = ladder
-            .levels()
-            .iter()
-            .zip(vars)
-            .map(|(l, v)| ErrorModel {
-                volts: l.volts,
-                mean: 0.0,
-                variance: v,
-                skewness: 0.0,
-                kurtosis_excess: 0.0,
-                error_rate: if v > 0.0 { 0.01 } else { 0.0 },
-                samples: 1_000_000,
-            })
-            .collect::<Vec<_>>();
-        // Assemble via JSON to reuse the public constructor.
-        let j = Json::obj(vec![
-            ("voltages", Json::arr_f64(&[0.5, 0.6, 0.7, 0.8])),
-            ("models", Json::Arr(models.iter().map(|m| m.to_json()).collect())),
-        ]);
-        ErrorModelRegistry::from_json(&j, Technology::default()).unwrap()
+        // Table-2-like variance ordering.
+        ErrorModelRegistry::synthetic(&VoltageLadder::paper_default(), &[3.0e6, 1.4e6, 2.0e5, 0.0])
     }
 
     fn fake_power() -> PePowerModel {

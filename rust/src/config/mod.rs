@@ -28,6 +28,11 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     /// Validation repetitions per budget (noise is stochastic).
     pub validation_runs: usize,
+    /// Execution backend for validation/serving inference: "exact" |
+    /// "statistical" | "pjrt" (see [`crate::exec`]). Selects the
+    /// level-driven matmul/artifact engine; per-neuron noise specs from a
+    /// voltage assignment are injected identically on every backend.
+    pub backend: String,
 }
 
 impl Default for ExperimentConfig {
@@ -45,6 +50,7 @@ impl Default for ExperimentConfig {
             seed: 0xA11CE,
             artifacts_dir: "artifacts".into(),
             validation_runs: 3,
+            backend: "statistical".into(),
         }
     }
 }
@@ -87,13 +93,18 @@ impl ExperimentConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
             ("validation_runs", Json::Num(self.validation_runs as f64)),
+            ("backend", Json::Str(self.backend.clone())),
         ])
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
         let d = Self::default();
         Ok(Self {
-            model: j.opt("model").map(|v| v.as_str().map(String::from)).transpose()?.unwrap_or(d.model),
+            model: j
+                .opt("model")
+                .map(|v| v.as_str().map(String::from))
+                .transpose()?
+                .unwrap_or(d.model),
             activation: match j.opt("activation") {
                 Some(v) => Activation::from_name(v.as_str()?)?,
                 None => d.activation,
@@ -105,7 +116,11 @@ impl ExperimentConfig {
                 Some(v) => v.as_f64_vec()?,
                 None => d.voltages,
             },
-            characterize_samples: opt_usize(j, "characterize_samples", d.characterize_samples as usize)? as u64,
+            characterize_samples: opt_usize(
+                j,
+                "characterize_samples",
+                d.characterize_samples as usize,
+            )? as u64,
             mse_ub_fractions: match j.opt("mse_ub_fractions") {
                 Some(v) => v.as_f64_vec()?,
                 None => d.mse_ub_fractions,
@@ -121,6 +136,11 @@ impl ExperimentConfig {
                 .transpose()?
                 .unwrap_or(d.artifacts_dir),
             validation_runs: opt_usize(j, "validation_runs", d.validation_runs)?,
+            backend: j
+                .opt("backend")
+                .map(|v| v.as_str().map(String::from))
+                .transpose()?
+                .unwrap_or(d.backend),
         })
     }
 
@@ -150,12 +170,14 @@ mod tests {
         c.model = "lenet5".into();
         c.solver = Solver::Greedy;
         c.mse_ub_fractions = vec![0.5];
+        c.backend = "exact".into();
         let j = c.to_json();
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.model, "lenet5");
         assert_eq!(back.solver, Solver::Greedy);
         assert_eq!(back.mse_ub_fractions, vec![0.5]);
         assert_eq!(back.voltages, c.voltages);
+        assert_eq!(back.backend, "exact");
     }
 
     #[test]

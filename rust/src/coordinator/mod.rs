@@ -23,6 +23,7 @@ use anyhow::{Context, Result};
 use crate::assign::{AssignmentProblem, Solver, VoltageAssignment};
 use crate::config::ExperimentConfig;
 use crate::errormodel::{CharacterizeOptions, ErrorModelRegistry};
+use crate::exec::{self, Backend};
 use crate::nn::data::{synth_cifar, synth_mnist, Dataset};
 use crate::nn::model::{fc_mnist, lenet5, resnet_tiny, Model};
 use crate::nn::quant::QuantizedModel;
@@ -30,14 +31,15 @@ use crate::nn::tensor::Tensor;
 use crate::nn::train::{train, TrainConfig};
 use crate::power::PePowerModel;
 use crate::quality;
+use crate::runtime::Runtime;
 use crate::sensitivity::{statistical_es, EsOptions};
-use crate::simulator::{ErrorInjector, XTpu};
+use crate::timing::baugh_wooley_8x8;
 use crate::timing::circuits::pe_datapath;
 use crate::timing::gate::i64_to_bits;
 use crate::timing::sta::{clock_period, ChipInstance};
 use crate::timing::voltage::{Technology, VoltageLadder};
 use crate::timing::vos::VosSimulator;
-use crate::timing::baugh_wooley_8x8;
+use crate::timing::Netlist;
 use crate::util::rng::Xoshiro256pp;
 
 /// Everything the budget sweep needs, computed once.
@@ -176,6 +178,30 @@ impl Pipeline {
         measure_power_model(self.cfg.seed)
     }
 
+    /// Construct the inference [`Backend`] the experiment config selects
+    /// (`exact` | `statistical` | `pjrt`); validation and serving both run
+    /// through this seam. The cycle/gate-accurate backend is constructed
+    /// explicitly via [`exec::GateLevel`] (it needs a characterized chip
+    /// and is orders of magnitude slower — see [`backend_cross_check`]).
+    pub fn make_backend(
+        &self,
+        registry: &ErrorModelRegistry,
+    ) -> Result<Box<dyn Backend + Send>> {
+        match self.cfg.backend.as_str() {
+            "exact" => Ok(Box::new(exec::Exact)),
+            "statistical" => Ok(Box::new(exec::Statistical::new(registry.clone()))),
+            "pjrt" => {
+                // Root the runtime at the experiment's artifacts dir (the
+                // same one the model/registry caches use), not the global
+                // default, so `--artifacts` is honored.
+                let dir = PathBuf::from(&self.cfg.artifacts_dir);
+                let rt = Runtime::new(&dir)?;
+                Ok(Box::new(exec::Pjrt::new(rt).with_registry(registry.clone())))
+            }
+            other => anyhow::bail!("unknown backend '{other}' (exact|statistical|pjrt)"),
+        }
+    }
+
     /// Run the budget-independent stages.
     pub fn prepare(&self) -> Result<PreparedSystem> {
         let t0 = std::time::Instant::now();
@@ -206,11 +232,13 @@ impl Pipeline {
         let neurons = model.neurons();
         let fan_in: Vec<usize> = neurons.iter().map(|n| n.fan_in).collect();
 
-        // Clean logits + baselines on the full test set.
+        // Clean logits + baselines on the full test set, through the
+        // configured execution backend.
+        let mut backend = self.make_backend(&registry)?;
         let mut rng = Xoshiro256pp::seeded(self.cfg.seed ^ 0x7EA);
         let idx: Vec<usize> = (0..test.len()).collect();
         let (x, labels) = test.batch(&idx);
-        let clean_logits = quantized.forward(&x, None, &mut rng);
+        let clean_logits = quantized.forward_with(backend.as_mut(), &x, None, &mut rng);
         let baseline_accuracy = quality::accuracy(&clean_logits, &labels);
         let baseline_mse = baseline_mse_vs_onehot(&clean_logits, &labels);
 
@@ -248,14 +276,16 @@ impl Pipeline {
         let assignment = problem.solve(solver)?;
         let noise = problem.noise_spec(&assignment, &sys.registry);
 
-        // Validation: noise-injected quantized inference over the test set.
+        // Validation: noise-injected quantized inference over the test set,
+        // on the configured execution backend.
+        let mut backend = self.make_backend(&sys.registry)?;
         let idx: Vec<usize> = (0..sys.test.len()).collect();
         let (x, labels) = sys.test.batch(&idx);
         let mut mse_sum = 0.0;
         let mut acc_sum = 0.0;
         for run in 0..self.cfg.validation_runs.max(1) {
             let mut rng = Xoshiro256pp::seeded(self.cfg.seed ^ 0x9A11 ^ (run as u64) << 8);
-            let noisy = sys.quantized.forward(&x, Some(&noise), &mut rng);
+            let noisy = sys.quantized.forward_with(backend.as_mut(), &x, Some(&noise), &mut rng);
             mse_sum += quality::batch_mse(&sys.clean_logits, &noisy);
             acc_sum += quality::accuracy(&noisy, &labels);
         }
@@ -317,10 +347,11 @@ pub fn measure_power_model(seed: u64) -> PePowerModel {
     PePowerModel::from_simulation(&pe, sim.toggle_counts(), cycles, tech)
 }
 
-/// Cross-validate an assignment on the cycle-level systolic simulator: run
-/// the FC model's first layer as an X-TPU matmul and compare measured
-/// column-error variance with the registry's prediction. Returns
-/// (measured, predicted) summed over overscaled columns.
+/// Cross-validate an assignment on the statistical execution backend: run
+/// the FC model's first layer as a batched matmul with the assignment's
+/// column levels and compare measured column-error variance with the
+/// registry's prediction. Returns (measured, predicted) summed over
+/// overscaled columns.
 pub fn systolic_cross_check(
     sys: &PreparedSystem,
     assignment: &VoltageAssignment,
@@ -347,17 +378,11 @@ pub fn systolic_cross_check(
         }
     }
     let levels: Vec<usize> = assignment.level[..n].to_vec();
-    let ladder = sys.registry.ladder.clone();
-    let mut tpu = XTpu::new(
-        128,
-        128,
-        ladder,
-        ErrorInjector::Statistical(sys.registry.clone()),
-    );
+    let mut backend = exec::Statistical::new(sys.registry.clone());
     let mut rng = Xoshiro256pp::seeded(seed);
     let a: Vec<i8> = (0..samples * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
-    let got = tpu.matmul(&a, &w, samples, k, n, &levels, &mut rng);
-    // Exact reference.
+    let stats =
+        exec::column_error_stats(&mut backend, &a, &w, samples, k, n, &levels, &mut rng);
     let mut measured = 0.0;
     let mut predicted = 0.0;
     let nominal = sys.registry.ladder.len() - 1;
@@ -365,16 +390,49 @@ pub fn systolic_cross_check(
         if lvl == nominal {
             continue;
         }
-        let mut errs = Vec::with_capacity(samples);
-        for s in 0..samples {
-            let mut exact = 0i64;
-            for r in 0..k {
-                exact += (a[s * k + r] as i64) * (w[r * n + c] as i64);
-            }
-            errs.push((got[s * n + c] as i64 - exact) as f64);
-        }
-        measured += crate::util::stats::variance(&errs);
+        measured += stats[c].1;
         predicted += sys.registry.model(lvl).column_variance(k);
     }
     Ok((measured, predicted))
+}
+
+/// Backend cross-validation (extends [`systolic_cross_check`] down to the
+/// gates): run one `m×k×n` matmul through BOTH the [`exec::Statistical`]
+/// fast path and the cycle-level [`exec::GateLevel`] array built from the
+/// same characterized chip, and return the per-column `(mean, variance)`
+/// of the injected error for each. The two must agree within sampling
+/// tolerance — that agreement is what licenses the statistical backend as
+/// a stand-in for gate-level simulation everywhere else.
+#[allow(clippy::too_many_arguments)]
+pub fn backend_cross_check(
+    netlist: &Netlist,
+    chip: &ChipInstance,
+    registry: &ErrorModelRegistry,
+    m: usize,
+    k: usize,
+    n: usize,
+    col_levels: &[usize],
+    seed: u64,
+) -> (Vec<(f64, f64)>, Vec<(f64, f64)>) {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let a: Vec<i8> = (0..m * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let w: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
+
+    let mut stat = exec::Statistical::new(registry.clone());
+    let mut stat_rng = Xoshiro256pp::seeded(seed ^ 0x57A7);
+    let stat_stats =
+        exec::column_error_stats(&mut stat, &a, &w, m, k, n, col_levels, &mut stat_rng);
+
+    let mut gate = exec::GateLevel::new(
+        k,
+        n,
+        netlist.clone(),
+        chip.clone(),
+        registry.ladder.clone(),
+    );
+    let mut gate_rng = Xoshiro256pp::seeded(seed ^ 0x6A7E);
+    let gate_stats =
+        exec::column_error_stats(&mut gate, &a, &w, m, k, n, col_levels, &mut gate_rng);
+
+    (stat_stats, gate_stats)
 }

@@ -291,6 +291,29 @@ impl ErrorModelRegistry {
         Self { models, ladder: ladder.clone() }
     }
 
+    /// Synthetic registry for tests and benches: one zero-mean Gaussian
+    /// model per ladder level with the given variances (use 0.0 for the
+    /// nominal level). Keeps fixture construction in one place instead of
+    /// hand-building the JSON at every test site.
+    pub fn synthetic(ladder: &VoltageLadder, variances: &[f64]) -> Self {
+        assert_eq!(variances.len(), ladder.len(), "one variance per ladder level");
+        let models = ladder
+            .levels()
+            .iter()
+            .zip(variances)
+            .map(|(l, &v)| ErrorModel {
+                volts: l.volts,
+                mean: 0.0,
+                variance: v,
+                skewness: 0.0,
+                kurtosis_excess: 0.0,
+                error_rate: if v > 0.0 { 0.05 } else { 0.0 },
+                samples: 1_000_000,
+            })
+            .collect();
+        Self { models, ladder: ladder.clone() }
+    }
+
     pub fn models(&self) -> &[ErrorModel] {
         &self.models
     }

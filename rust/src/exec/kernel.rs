@@ -1,0 +1,299 @@
+//! The shared tiled int8×int8→i32 MAC kernel every inference backend builds
+//! on (see [`crate::exec`] for the backend layer).
+//!
+//! One kernel, two entry layouts:
+//!
+//! - [`matmul_i8`] — `A[m,k] × W[k,n]` with `W` row-major over `k` (the
+//!   systolic-array weight layout used by [`crate::simulator::XTpu`] and the
+//!   AOT artifacts);
+//! - [`matmul_i8t`] — `A[m,k] × Wᵀ` with `W[n,k]` row-major over output
+//!   units (the [`crate::nn::quant::QuantMac`] layout), so the quantized
+//!   forward pass needs no transpose.
+//!
+//! The `[k,n]` path is tiled over `k` and `n` ([`TILE_K`]/[`TILE_N`]): each
+//! tile broadcasts one activation against a contiguous weight row and
+//! accumulates linearly into the i32 output row, which autovectorizes on the
+//! `n` axis (same structure as the f32 kernel in [`crate::nn::tensor`]).
+//! Accumulation is exact: `|a·w| ≤ 127² = 16129`, so even `k = 2¹⁷`
+//! stays far inside `i32`.
+//!
+//! **Fused error injection** (paper eqs 10–13): under VOS the column output
+//! carries one additive error `e_c ~ N(k·μ_v, k·σ²_v)` composed over the
+//! column's `k` independent per-multiply errors. [`matmul_i8_noisy`] draws
+//! that composed error once per `(sample, column)` from precomputed
+//! per-column parameters inside the tile loop — no per-multiply RNG calls,
+//! which is what makes the statistical backend a fast path rather than a
+//! simulation.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// k-axis tile: activation slice reused across the whole output row block.
+pub const TILE_K: usize = 128;
+/// n-axis tile: output row block sized to stay L1-resident (i32 lane).
+pub const TILE_N: usize = 256;
+
+/// Additive per-column noise parameters, already composed over the column
+/// height (`mean = k·μ_v`, `std = √(k·σ²_v)`). Zero mean and std = silent.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ColumnNoise {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl ColumnNoise {
+    pub const SILENT: ColumnNoise = ColumnNoise { mean: 0.0, std: 0.0 };
+
+    #[inline]
+    pub fn is_silent(&self) -> bool {
+        self.mean == 0.0 && self.std == 0.0
+    }
+}
+
+/// Accumulate one `kr × nc` weight tile into `out`.
+///
+/// `a` is the full `[m, lda]` activation matrix (the tile reads columns
+/// `k0..k0+kr` of each row); `wtile` is the `[kr, nc]` tile row-major;
+/// `out` is the full `[m, ldo]` accumulator matrix (the tile writes columns
+/// `n0..n0+nc`). Exact integer arithmetic; call sites layer error injection
+/// on top ([`add_column_noise`]).
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_tile(
+    a: &[i8],
+    lda: usize,
+    k0: usize,
+    kr: usize,
+    wtile: &[i8],
+    nc: usize,
+    out: &mut [i32],
+    ldo: usize,
+    n0: usize,
+    m: usize,
+) {
+    debug_assert!(wtile.len() >= kr * nc);
+    for s in 0..m {
+        let arow = &a[s * lda + k0..s * lda + k0 + kr];
+        let orow = &mut out[s * ldo + n0..s * ldo + n0 + nc];
+        for (r, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let wrow = &wtile[r * nc..(r + 1) * nc];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += av * wv as i32;
+            }
+        }
+    }
+}
+
+/// Add one composed column-error draw per `(sample, column)` for every
+/// non-silent column — the fused statistical injection step. Draw order is
+/// column-major (all samples of column `c` before column `c+1`) so the
+/// stream is independent of tiling. The add wraps on i32 overflow — the
+/// accumulator register behavior every execution path (cycle simulator,
+/// AOT artifact int32 add) shares.
+pub fn add_column_noise(
+    out: &mut [i32],
+    ldo: usize,
+    m: usize,
+    n0: usize,
+    noise: &[ColumnNoise],
+    rng: &mut Xoshiro256pp,
+) {
+    for (c, p) in noise.iter().enumerate() {
+        if p.is_silent() {
+            continue;
+        }
+        let col = n0 + c;
+        for s in 0..m {
+            let e = rng.gaussian(p.mean, p.std).round() as i32;
+            out[s * ldo + col] = out[s * ldo + col].wrapping_add(e);
+        }
+    }
+}
+
+/// Exact `A[m,k] × W[k,n] → i32[m,n]` (systolic weight layout), tiled over
+/// `k` and `n`. Handles ragged shapes (any `m`, `k`, `n`, including sizes
+/// that are not tile multiples).
+pub fn matmul_i8(a: &[i8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k, "activation size");
+    assert_eq!(w.len(), k * n, "weight size");
+    let mut out = vec![0i32; m * n];
+    let mut wtile = vec![0i8; TILE_K * TILE_N.min(n.max(1))];
+    let mut k0 = 0;
+    while k0 < k {
+        let kr = (k - k0).min(TILE_K);
+        let mut n0 = 0;
+        while n0 < n {
+            let nc = (n - n0).min(TILE_N);
+            // Pack the [kr, nc] tile contiguously so the inner loop streams.
+            for r in 0..kr {
+                let src = &w[(k0 + r) * n + n0..(k0 + r) * n + n0 + nc];
+                wtile[r * nc..(r + 1) * nc].copy_from_slice(src);
+            }
+            accumulate_tile(a, k, k0, kr, &wtile, nc, &mut out, n, n0, m);
+            n0 += nc;
+        }
+        k0 += kr;
+    }
+    out
+}
+
+/// [`matmul_i8`] plus fused per-column error injection: `noise[c]` holds the
+/// composed column parameters for output column `c` (length `n`).
+pub fn matmul_i8_noisy(
+    a: &[i8],
+    w: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    noise: &[ColumnNoise],
+    rng: &mut Xoshiro256pp,
+) -> Vec<i32> {
+    assert_eq!(noise.len(), n, "per-column noise length");
+    let mut out = matmul_i8(a, w, m, k, n);
+    add_column_noise(&mut out, n, m, 0, noise, rng);
+    out
+}
+
+/// Exact `A[m,k] × Wᵀ → i32[m,n]` with `wt[n,k]` row-major over output
+/// units (the `QuantMac` layout): a contiguous dot product per output unit.
+pub fn matmul_i8t(a: &[i8], wt: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k, "activation size");
+    assert_eq!(wt.len(), n * k, "weight size");
+    let mut out = vec![0i32; m * n];
+    for s in 0..m {
+        let arow = &a[s * k..(s + 1) * k];
+        let orow = &mut out[s * n..(s + 1) * n];
+        for (u, o) in orow.iter_mut().enumerate() {
+            let wrow = &wt[u * k..(u + 1) * k];
+            let mut acc = 0i32;
+            for (&x, &wv) in arow.iter().zip(wrow) {
+                acc += x as i32 * wv as i32;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// Reference scalar matmul (systolic `[k,n]` weight layout) — the oracle the
+/// kernel tests bit-match against. Deliberately naive; do not optimize.
+pub fn reference_matmul(a: &[i8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    for s in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for r in 0..k {
+                acc += a[s * k + r] as i64 * w[r * n + j] as i64;
+            }
+            out[s * n + j] = acc as i32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::variance;
+
+    fn random_mats(m: usize, k: usize, n: usize, seed: u64) -> (Vec<i8>, Vec<i8>) {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let a = (0..m * k).map(|_| rng.range_i64(-128, 127) as i8).collect();
+        let w = (0..k * n).map(|_| rng.range_i64(-128, 127) as i8).collect();
+        (a, w)
+    }
+
+    #[test]
+    fn exact_kernel_bit_matches_naive() {
+        // Square, tall, wide, and degenerate shapes.
+        for (i, &(m, k, n)) in
+            [(1, 1, 1), (4, 16, 8), (32, 128, 64), (16, 256, 256), (3, 1, 7)].iter().enumerate()
+        {
+            let (a, w) = random_mats(m, k, n, 100 + i as u64);
+            assert_eq!(matmul_i8(&a, &w, m, k, n), reference_matmul(&a, &w, m, k, n));
+        }
+    }
+
+    #[test]
+    fn exact_kernel_bit_matches_naive_ragged() {
+        // Shapes that are NOT multiples of TILE_K/TILE_N: every tile edge
+        // case (k < TILE_K, k = TILE_K + remainder, n = TILE_N + remainder).
+        for (i, &(m, k, n)) in [
+            (5, 20, 13),
+            (7, TILE_K + 3, TILE_N + 5),
+            (2, TILE_K - 1, TILE_N - 1),
+            (9, 2 * TILE_K + 17, 2 * TILE_N + 29),
+            (1, 784, 138),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let (a, w) = random_mats(m, k, n, 200 + i as u64);
+            assert_eq!(
+                matmul_i8(&a, &w, m, k, n),
+                reference_matmul(&a, &w, m, k, n),
+                "ragged shape {m}×{k}×{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn transposed_kernel_matches_naive() {
+        let (m, k, n) = (11, 37, 23);
+        let (a, w) = random_mats(m, k, n, 7);
+        // Build wt[n,k] from w[k,n].
+        let mut wt = vec![0i8; n * k];
+        for r in 0..k {
+            for c in 0..n {
+                wt[c * k + r] = w[r * n + c];
+            }
+        }
+        assert_eq!(matmul_i8t(&a, &wt, m, k, n), reference_matmul(&a, &w, m, k, n));
+    }
+
+    #[test]
+    fn silent_noise_is_exact() {
+        let (m, k, n) = (8, 64, 24);
+        let (a, w) = random_mats(m, k, n, 9);
+        let noise = vec![ColumnNoise::SILENT; n];
+        let mut rng = Xoshiro256pp::seeded(1);
+        assert_eq!(
+            matmul_i8_noisy(&a, &w, m, k, n, &noise, &mut rng),
+            reference_matmul(&a, &w, m, k, n)
+        );
+    }
+
+    #[test]
+    fn fused_noise_statistics_match_parameters() {
+        let (m, k, n) = (8000, 16, 2);
+        let (a, w) = random_mats(m, k, n, 11);
+        // Column 0 noisy, column 1 silent.
+        let params = ColumnNoise { mean: 3.0, std: 250.0 };
+        let noise = vec![params, ColumnNoise::SILENT];
+        let mut rng = Xoshiro256pp::seeded(13);
+        let got = matmul_i8_noisy(&a, &w, m, k, n, &noise, &mut rng);
+        let exact = reference_matmul(&a, &w, m, k, n);
+        let errs0: Vec<f64> =
+            (0..m).map(|s| (got[s * n] - exact[s * n]) as f64).collect();
+        let mean0 = errs0.iter().sum::<f64>() / m as f64;
+        let var0 = variance(&errs0);
+        assert!((mean0 - params.mean).abs() < 10.0, "mean {mean0}");
+        assert!(
+            (var0 / (params.std * params.std) - 1.0).abs() < 0.1,
+            "var {var0} vs {}",
+            params.std * params.std
+        );
+        for s in 0..m {
+            assert_eq!(got[s * n + 1], exact[s * n + 1], "silent column corrupted");
+        }
+    }
+
+    #[test]
+    fn zero_sized_shapes() {
+        assert!(matmul_i8(&[], &[], 0, 0, 0).is_empty());
+        let a = vec![1i8; 4];
+        assert_eq!(matmul_i8(&a, &[], 4, 1, 0), Vec::<i32>::new());
+    }
+}

@@ -1,0 +1,559 @@
+//! The unified inference execution layer — every way the framework can run
+//! a MAC workload sits behind one [`Backend`] trait, so the layers above
+//! (quantized inference, the Fig-4 coordinator, the serving engine, the
+//! figure benches) stop re-implementing matmul + error injection.
+//!
+//! ```text
+//!  nn::quant  coordinator  server::Engine  benches/examples
+//!        \        |          |        /
+//!             exec::Backend (this module)
+//!        /        |          |        \
+//!   Exact   Statistical   GateLevel   Pjrt
+//!  (kernel) (kernel +     (cycle-level (AOT artifact via
+//!            fused eqs     XTpu grid)   runtime, kernel
+//!            11–13 draws)               fallback)
+//! ```
+//!
+//! All four backends share the tiled int8 kernel in [`kernel`]; they differ
+//! in *where the VOS error comes from*:
+//!
+//! - [`Exact`] — no error (the nominal-voltage TPU).
+//! - [`Statistical`] — the paper's fast path: per-column composed errors
+//!   `N(k·μ_v, k·σ²_v)` drawn from the fitted [`ErrorModelRegistry`]
+//!   and fused into the tile loop (eqs 10–13). This is what lets the
+//!   framework sweep many voltage assignments quickly.
+//! - [`GateLevel`] — wraps the cycle-level [`XTpu`] systolic simulator with
+//!   per-PE Baugh-Wooley gate simulation; the validation oracle for the
+//!   statistical backend (and the only place a per-multiply loop remains).
+//! - [`Pjrt`] — the AOT serving path: executes the JAX/Pallas HLO artifact
+//!   through [`crate::runtime`], sampling the column errors host-side and
+//!   passing them as the artifact's noise operand.
+//!
+//! Two orthogonal error channels flow through the trait, and it matters
+//! which one a caller is on:
+//!
+//! - **Level-driven** (`matmul_i8`): the backend itself turns per-column
+//!   voltage levels into errors — this is where Exact / Statistical /
+//!   GateLevel / Pjrt genuinely differ.
+//! - **Spec-driven** (`execute_layer`): the caller has already composed a
+//!   per-neuron [`NoiseSpec`](crate::nn::quant::NoiseSpec) from a voltage
+//!   assignment; injecting it is backend-independent by design, so every
+//!   current backend shares the default kernel implementation and clean
+//!   forwards are bit-identical across backends (a property the
+//!   integration tests assert).
+//!
+//! Cross-validation helpers ([`column_error_stats`]) measure per-column
+//! error moments of any backend against the exact reference, which is how
+//! the tests pin the statistical and gate-level backends to each other.
+
+pub mod kernel;
+
+use crate::errormodel::ErrorModelRegistry;
+use crate::nn::quant::QuantMac;
+use crate::runtime::{literal_f32, literal_i8, FcExecutor, Runtime};
+use crate::simulator::{ErrorInjector, SimStats, XTpu};
+use crate::timing::sta::ChipInstance;
+use crate::timing::voltage::VoltageLadder;
+use crate::timing::Netlist;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::stats::variance;
+
+use kernel::ColumnNoise;
+
+/// Borrowed per-neuron noise parameters for one MAC layer (integer
+/// accumulator units, already composed over each neuron's fan-in).
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseView<'a> {
+    pub mean: &'a [f64],
+    pub std: &'a [f64],
+}
+
+impl<'a> NoiseView<'a> {
+    pub fn new(mean: &'a [f64], std: &'a [f64]) -> Self {
+        Self { mean, std }
+    }
+}
+
+/// A batched inference execution backend. `matmul_i8` is the systolic-array
+/// contract (per-*column* voltage levels, `w[k,n]` row-major); the
+/// `execute_layer` contract serves quantized-NN layers (per-*neuron* noise,
+/// `QuantMac` weight layout) and defaults to the shared kernel — every
+/// current backend keeps that default (the AOT programs are model-granular,
+/// see [`Pjrt::run_fc`]), but a per-layer accelerator would override it.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Batched `A[m,k] × W[k,n] → i32[m,n]` where `col_levels[j]` is the
+    /// voltage-ladder level of output column `j` (last ladder entry =
+    /// nominal = error-free).
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_i8(
+        &mut self,
+        a: &[i8],
+        w: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        col_levels: &[usize],
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<i32>;
+
+    /// One quantized MAC layer over `batch` pre-quantized rows: raw i32
+    /// accumulators `[batch, mac.out]`, plus one draw per (row, unit) from
+    /// the caller-composed per-neuron noise when present.
+    fn execute_layer(
+        &mut self,
+        mac: &QuantMac,
+        xq: &[i8],
+        batch: usize,
+        noise: Option<NoiseView<'_>>,
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<i32> {
+        execute_layer_kernel(mac, xq, batch, noise, rng)
+    }
+
+    /// Cycle/energy counters, for backends that keep them.
+    fn stats(&self) -> Option<&SimStats> {
+        None
+    }
+}
+
+/// Shared `execute_layer` implementation on the tiled kernel: exact integer
+/// accumulation (no transpose — `matmul_i8t` consumes the `QuantMac` layout
+/// directly) plus fused per-(row, unit) noise draws.
+pub fn execute_layer_kernel(
+    mac: &QuantMac,
+    xq: &[i8],
+    batch: usize,
+    noise: Option<NoiseView<'_>>,
+    rng: &mut Xoshiro256pp,
+) -> Vec<i32> {
+    let mut out = kernel::matmul_i8t(xq, &mac.wq, batch, mac.fan_in, mac.out);
+    if let Some(nv) = noise {
+        debug_assert!(nv.mean.len() >= mac.out && nv.std.len() >= mac.out);
+        for s in 0..batch {
+            let row = &mut out[s * mac.out..(s + 1) * mac.out];
+            for (u, o) in row.iter_mut().enumerate() {
+                let (mean, std) = (nv.mean[u], nv.std[u]);
+                if std > 0.0 || mean != 0.0 {
+                    // Wrapping add: the i32-accumulator register behavior
+                    // every backend shares (see kernel::add_column_noise).
+                    *o = o.wrapping_add(rng.gaussian(mean, std).round() as i32);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Translate per-column ladder levels into composed [`ColumnNoise`]
+/// parameters for a column height of `k` (eqs 11–13). The nominal (last)
+/// level is silent by construction.
+pub fn column_noise_from_levels(
+    registry: &ErrorModelRegistry,
+    col_levels: &[usize],
+    k: usize,
+) -> Vec<ColumnNoise> {
+    let nominal = registry.ladder.len() - 1;
+    col_levels
+        .iter()
+        .map(|&l| {
+            if l == nominal {
+                ColumnNoise::SILENT
+            } else {
+                let m = registry.model(l);
+                ColumnNoise { mean: m.column_mean(k), std: m.column_variance(k).sqrt() }
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Exact
+// ---------------------------------------------------------------------------
+
+/// Error-free execution on the shared kernel (the nominal-voltage TPU).
+/// Ignores `col_levels`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Exact;
+
+impl Backend for Exact {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn matmul_i8(
+        &mut self,
+        a: &[i8],
+        w: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        col_levels: &[usize],
+        _rng: &mut Xoshiro256pp,
+    ) -> Vec<i32> {
+        assert_eq!(col_levels.len(), n, "col_levels length");
+        kernel::matmul_i8(a, w, m, k, n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Statistical
+// ---------------------------------------------------------------------------
+
+/// The statistical fast path: exact kernel + fused per-column composed
+/// error draws from the per-voltage error models.
+#[derive(Clone, Debug)]
+pub struct Statistical {
+    pub registry: ErrorModelRegistry,
+}
+
+impl Statistical {
+    pub fn new(registry: ErrorModelRegistry) -> Self {
+        Self { registry }
+    }
+}
+
+impl Backend for Statistical {
+    fn name(&self) -> &'static str {
+        "statistical"
+    }
+
+    fn matmul_i8(
+        &mut self,
+        a: &[i8],
+        w: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        col_levels: &[usize],
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<i32> {
+        assert_eq!(col_levels.len(), n, "col_levels length");
+        let noise = column_noise_from_levels(&self.registry, col_levels, k);
+        kernel::matmul_i8_noisy(a, w, m, k, n, &noise, rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GateLevel
+// ---------------------------------------------------------------------------
+
+/// Cycle-accurate gate-level backend: the [`XTpu`] systolic grid with a
+/// [`VosSimulator`](crate::timing::vos::VosSimulator) per PE. Slow — the
+/// validation oracle, not a serving path.
+pub struct GateLevel {
+    pub tpu: XTpu,
+}
+
+impl GateLevel {
+    /// Build an `rows × cols` gate-level array from a characterized chip.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        netlist: Netlist,
+        chip: ChipInstance,
+        ladder: VoltageLadder,
+    ) -> Self {
+        let tpu = XTpu::new(
+            rows,
+            cols,
+            ladder.clone(),
+            ErrorInjector::GateLevel { netlist: Box::new(netlist), chip, ladder },
+        );
+        Self { tpu }
+    }
+
+    /// Wrap an existing simulator instance (any injector).
+    pub fn from_tpu(tpu: XTpu) -> Self {
+        Self { tpu }
+    }
+}
+
+impl Backend for GateLevel {
+    fn name(&self) -> &'static str {
+        "gate-level"
+    }
+
+    fn matmul_i8(
+        &mut self,
+        a: &[i8],
+        w: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        col_levels: &[usize],
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<i32> {
+        self.tpu.matmul(a, w, m, k, n, col_levels, rng)
+    }
+
+    fn stats(&self) -> Option<&SimStats> {
+        Some(&self.tpu.stats)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pjrt
+// ---------------------------------------------------------------------------
+
+/// The AOT artifact path: executes through the [`Runtime`], sampling
+/// column errors host-side into the artifact's noise operand — the
+/// division of labor the X-TPU serving stack uses. Construction loads
+/// every artifact present in the runtime's directory; matmul shapes with a
+/// loaded artifact (`mm16`) execute through it, other shapes fall back to
+/// the shared kernel with bit-identical semantics (round-half-even noise).
+/// Whole-model FC inference wraps [`FcExecutor`] via [`Pjrt::run_fc`] —
+/// the AOT programs are model-granular, so `execute_layer` (per-layer)
+/// stays on the shared kernel.
+pub struct Pjrt {
+    pub runtime: Runtime,
+    /// Error models for level-driven injection; `None` = exact columns.
+    pub registry: Option<ErrorModelRegistry>,
+}
+
+impl Pjrt {
+    /// Wrap a runtime, loading every artifact available on disk (missing
+    /// or unknown artifacts are simply not loaded; their shapes fall back
+    /// to the kernel).
+    pub fn new(mut runtime: Runtime) -> Self {
+        if let Ok(names) = runtime.available() {
+            for name in names {
+                runtime.load(&name).ok();
+            }
+        }
+        Self { runtime, registry: None }
+    }
+
+    pub fn with_registry(mut self, registry: ErrorModelRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Build the FC executor bound to this runtime's `fc_mnist_<act>_b<m>`
+    /// artifact (errors if the artifact was never AOT-compiled).
+    pub fn fc_executor(
+        &mut self,
+        q: &crate::nn::quant::QuantizedModel,
+        activation: &str,
+        batch: usize,
+    ) -> anyhow::Result<FcExecutor> {
+        let fc = FcExecutor::from_quantized(q, activation, batch)?;
+        self.runtime.load(&fc.artifact)?;
+        Ok(fc)
+    }
+
+    /// Run one image batch through the wrapped [`FcExecutor`].
+    pub fn run_fc(
+        &self,
+        fc: &FcExecutor,
+        images: &[f32],
+        rng: &mut Xoshiro256pp,
+    ) -> anyhow::Result<Vec<f32>> {
+        fc.run(&self.runtime, images, rng)
+    }
+
+    /// The artifact that executes an `m×k×n` matmul, if one is loaded.
+    fn matmul_artifact(&self, m: usize, k: usize, n: usize) -> Option<&'static str> {
+        if (m, k, n) == (16, 16, 16) && self.runtime.is_loaded("mm16") {
+            Some("mm16")
+        } else {
+            None
+        }
+    }
+}
+
+impl Backend for Pjrt {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn matmul_i8(
+        &mut self,
+        a: &[i8],
+        w: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        col_levels: &[usize],
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<i32> {
+        assert_eq!(col_levels.len(), n, "col_levels length");
+        // Host-side sampling of the composed column errors (column-major,
+        // matching kernel::add_column_noise so backends are comparable).
+        let params = match &self.registry {
+            Some(reg) => column_noise_from_levels(reg, col_levels, k),
+            None => vec![ColumnNoise::SILENT; n],
+        };
+        let mut noise = vec![0f32; m * n];
+        for (c, p) in params.iter().enumerate() {
+            if p.is_silent() {
+                continue;
+            }
+            for s in 0..m {
+                noise[s * n + c] = rng.gaussian(p.mean, p.std) as f32;
+            }
+        }
+        if let Some(name) = self.matmul_artifact(m, k, n) {
+            let inputs = [
+                literal_i8(a, &[m, k]).expect("activation literal"),
+                literal_i8(w, &[k, n]).expect("weight literal"),
+                literal_f32(&noise, &[m, n]).expect("noise literal"),
+            ];
+            // A loaded artifact failing to execute is a broken pipeline,
+            // not a fallback case — surface it instead of degrading.
+            let out = self
+                .runtime
+                .execute(name, &inputs)
+                .expect("loaded artifact failed to execute");
+            return out[0].to_vec::<i32>().expect("artifact output type");
+        }
+        // Kernel fallback: identical semantics — exact matmul plus
+        // round-half-even noise with i32 wraparound, matching the
+        // artifact's jnp.round + int32 add exactly.
+        let mut out = kernel::matmul_i8(a, w, m, k, n);
+        for (o, &e) in out.iter_mut().zip(&noise) {
+            *o = o.wrapping_add((e as f64).round_ties_even() as i32);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-validation
+// ---------------------------------------------------------------------------
+
+/// Per-column error statistics of a backend against the exact integer
+/// reference: runs `A[m,k] × W[k,n]` through `backend` and returns one
+/// `(mean, variance)` of `got − exact` per output column. This is the
+/// instrument the Statistical↔GateLevel cross-validation tests (and
+/// [`crate::coordinator::backend_cross_check`]) are built on.
+#[allow(clippy::too_many_arguments)]
+pub fn column_error_stats(
+    backend: &mut dyn Backend,
+    a: &[i8],
+    w: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    col_levels: &[usize],
+    rng: &mut Xoshiro256pp,
+) -> Vec<(f64, f64)> {
+    let got = backend.matmul_i8(a, w, m, k, n, col_levels, rng);
+    let exact = kernel::reference_matmul(a, w, m, k, n);
+    (0..n)
+        .map(|c| {
+            let errs: Vec<f64> =
+                (0..m).map(|s| (got[s * n + c] as i64 - exact[s * n + c] as i64) as f64).collect();
+            let mean = errs.iter().sum::<f64>() / m.max(1) as f64;
+            (mean, variance(&errs))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::voltage::VoltageLadder;
+
+    fn fake_registry() -> ErrorModelRegistry {
+        ErrorModelRegistry::synthetic(&VoltageLadder::paper_default(), &[3.0e4, 1.0e4, 2.0e3, 0.0])
+    }
+
+    fn random_mats(m: usize, k: usize, n: usize, seed: u64) -> (Vec<i8>, Vec<i8>) {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let a = (0..m * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let w = (0..k * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        (a, w)
+    }
+
+    #[test]
+    fn exact_backend_matches_reference() {
+        let (m, k, n) = (9, 33, 14);
+        let (a, w) = random_mats(m, k, n, 1);
+        let mut rng = Xoshiro256pp::seeded(2);
+        let got = Exact.matmul_i8(&a, &w, m, k, n, &vec![3; n], &mut rng);
+        assert_eq!(got, kernel::reference_matmul(&a, &w, m, k, n));
+    }
+
+    #[test]
+    fn statistical_backend_nominal_columns_exact() {
+        let reg = fake_registry();
+        let mut be = Statistical::new(reg);
+        let (m, k, n) = (50, 16, 4);
+        let (a, w) = random_mats(m, k, n, 3);
+        let mut rng = Xoshiro256pp::seeded(4);
+        let levels = vec![0, 3, 1, 3];
+        let got = be.matmul_i8(&a, &w, m, k, n, &levels, &mut rng);
+        let exact = kernel::reference_matmul(&a, &w, m, k, n);
+        for s in 0..m {
+            assert_eq!(got[s * n + 1], exact[s * n + 1]);
+            assert_eq!(got[s * n + 3], exact[s * n + 3]);
+        }
+        let diff: i64 = (0..m)
+            .map(|s| (got[s * n] as i64 - exact[s * n] as i64).abs())
+            .sum();
+        assert!(diff > 0, "overscaled column must carry error");
+    }
+
+    #[test]
+    fn statistical_column_stats_match_models() {
+        let reg = fake_registry();
+        let mut be = Statistical::new(reg.clone());
+        let (m, k, n) = (6000, 16, 2);
+        let (a, w) = random_mats(m, k, n, 5);
+        let mut rng = Xoshiro256pp::seeded(6);
+        let stats = column_error_stats(&mut be, &a, &w, m, k, n, &[0, 1], &mut rng);
+        for (c, lvl) in [0usize, 1].iter().enumerate() {
+            let predicted = reg.model(*lvl).column_variance(k);
+            let ratio = stats[c].1 / predicted;
+            assert!(
+                (0.85..1.15).contains(&ratio),
+                "col {c}: var {} vs predicted {predicted}",
+                stats[c].1
+            );
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_kernel_fallback_matches_statistics() {
+        let reg = fake_registry();
+        let rt = Runtime::new(std::path::Path::new("/nonexistent-artifacts")).unwrap();
+        let mut be = Pjrt::new(rt).with_registry(reg.clone());
+        let (m, k, n) = (6000, 16, 1);
+        let (a, w) = random_mats(m, k, n, 7);
+        let mut rng = Xoshiro256pp::seeded(8);
+        let stats = column_error_stats(&mut be, &a, &w, m, k, n, &[0], &mut rng);
+        let predicted = reg.model(0).column_variance(k);
+        let ratio = stats[0].1 / predicted;
+        assert!((0.85..1.15).contains(&ratio), "var {} vs {predicted}", stats[0].1);
+    }
+
+    #[test]
+    fn execute_layer_default_matches_quant_mac() {
+        use crate::nn::layers::Activation;
+        let mut rng = Xoshiro256pp::seeded(9);
+        let (fan_in, out, batch) = (37, 11, 5);
+        let wq: Vec<i8> = (0..out * fan_in).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let mac = QuantMac {
+            wq: wq.clone(),
+            fan_in,
+            out,
+            w_scale: 1.0,
+            x_scale: 1.0,
+            bias: vec![0.0; out],
+            act: Activation::Linear,
+        };
+        let xq: Vec<i8> = (0..batch * fan_in).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let acc = Exact.execute_layer(&mac, &xq, batch, None, &mut rng);
+        for s in 0..batch {
+            for u in 0..out {
+                let mut expect = 0i64;
+                for i in 0..fan_in {
+                    expect += xq[s * fan_in + i] as i64 * wq[u * fan_in + i] as i64;
+                }
+                assert_eq!(acc[s * out + u] as i64, expect);
+            }
+        }
+    }
+}

@@ -38,13 +38,24 @@ pub struct MckpSolution {
     pub nodes_explored: u64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MckpError {
-    #[error("infeasible: even the lightest choices exceed the budget by {0}")]
     Infeasible(f64),
-    #[error("malformed instance: {0}")]
     Malformed(String),
 }
+
+impl std::fmt::Display for MckpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MckpError::Infeasible(by) => {
+                write!(f, "infeasible: even the lightest choices exceed the budget by {by}")
+            }
+            MckpError::Malformed(msg) => write!(f, "malformed instance: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MckpError {}
 
 /// One surviving (non-dominated) option after preprocessing.
 #[derive(Clone, Copy, Debug)]
@@ -376,7 +387,8 @@ mod tests {
             .map(|_| (0..opts).map(|_| rng.range_f64(0.0, 5.0)).collect())
             .collect();
         // Budget between the min and max achievable weight.
-        let min_w: f64 = weight.iter().map(|g| g.iter().cloned().fold(f64::INFINITY, f64::min)).sum();
+        let min_w: f64 =
+            weight.iter().map(|g| g.iter().cloned().fold(f64::INFINITY, f64::min)).sum();
         let max_w: f64 =
             weight.iter().map(|g| g.iter().cloned().fold(f64::NEG_INFINITY, f64::max)).sum();
         let budget = rng.range_f64(min_w, max_w);

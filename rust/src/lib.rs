@@ -18,16 +18,29 @@
 //! - [`sensitivity`] — neuron error sensitivity (paper §IV.C).
 //! - [`ilp`] — exact branch-and-bound MCKP/ILP solver + baselines.
 //! - [`assign`] — the voltage-assignment problem (paper eqs 18–22, 29).
-//! - [`simulator`] — cycle-level X-TPU systolic-array simulator.
-//! - [`runtime`] — PJRT client; loads AOT artifacts from `python/compile`.
-//! - [`coordinator`] — the Fig-4 pipeline gluing everything together.
-//! - [`server`] — threaded inference server with runtime quality levels.
+//! - [`exec`] — **the unified inference execution layer**: one
+//!   [`Backend`](exec::Backend) trait (batched int8 matmul + quantized
+//!   layer execution) over a shared tiled kernel with fused statistical
+//!   error injection. Four implementations: [`Exact`](exec::Exact),
+//!   [`Statistical`](exec::Statistical) (the fast path),
+//!   [`GateLevel`](exec::GateLevel) (cycle/gate-accurate oracle),
+//!   [`Pjrt`](exec::Pjrt) (AOT artifacts). Everything above this line
+//!   routes its MACs through here.
+//! - [`simulator`] — cycle-level X-TPU systolic-array grid (cycle/energy
+//!   accounting + the gate-level PE array behind `exec::GateLevel`).
+//! - [`runtime`] — artifact runtime; loads AOT artifacts from
+//!   `python/compile` (PJRT with `--features pjrt`, native otherwise).
+//! - [`coordinator`] — the Fig-4 pipeline gluing everything together;
+//!   selects the execution backend per experiment config.
+//! - [`server`] — threaded inference server with runtime quality levels,
+//!   batching requests onto one shared backend.
 
 pub mod aging;
 pub mod assign;
 pub mod config;
 pub mod coordinator;
 pub mod errormodel;
+pub mod exec;
 pub mod ilp;
 pub mod nn;
 pub mod sensitivity;
@@ -45,6 +58,7 @@ pub mod prelude {
     pub use crate::config::ExperimentConfig;
     pub use crate::coordinator::Pipeline;
     pub use crate::errormodel::{ErrorModel, ErrorModelRegistry};
+    pub use crate::exec::{Backend, Exact, GateLevel, Pjrt, Statistical};
     pub use crate::nn::model::Model;
     pub use crate::timing::voltage::{Technology, VoltageLadder, VoltageLevel};
     pub use crate::util::rng::Xoshiro256pp;

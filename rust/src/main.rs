@@ -20,6 +20,7 @@ use xtpu::assign::{AssignmentProblem, Solver};
 use xtpu::config::ExperimentConfig;
 use xtpu::coordinator::Pipeline;
 use xtpu::errormodel::{CharacterizeOptions, ErrorModelRegistry};
+use xtpu::exec::Backend;
 use xtpu::nn::quant::NoiseSpec;
 use xtpu::server::{BatchPolicy, Engine, QualityLevel, Server};
 use xtpu::simulator::{ErrorInjector, XTpu};
@@ -89,6 +90,11 @@ fn common_specs() -> Vec<OptSpec> {
         OptSpec::opt("activation", "linear", "linear | relu | sigmoid | tanh"),
         OptSpec::opt("seed", "684045", "experiment seed"),
         OptSpec::opt("artifacts", "artifacts", "artifacts directory"),
+        OptSpec::opt(
+            "backend",
+            "statistical",
+            "matmul engine: exact | statistical | pjrt (per-neuron noise specs apply on all)",
+        ),
         OptSpec::flag("help", "show usage"),
     ]
 }
@@ -105,6 +111,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.activation = xtpu::nn::layers::Activation::from_name(args.str("activation"))?;
     cfg.seed = args.u64("seed")?;
     cfg.artifacts_dir = args.str("artifacts").to_string();
+    cfg.backend = args.str("backend").to_string();
     Ok(cfg)
 }
 
@@ -423,7 +430,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("quality {i}: {} (saving {:.1}%)", l.name, l.energy_saving * 100.0);
     }
     let input_dim = sys.model.input.numel();
-    let engine = Engine { quantized: sys.quantized.clone(), levels, input_dim };
+    let backend = pipeline.make_backend(&sys.registry)?;
+    println!("execution backend: {}", backend.name());
+    let engine =
+        Engine::new(sys.quantized.clone(), levels, input_dim).with_backend(backend);
     let server = Server::spawn(
         engine,
         args.usize("port")? as u16,

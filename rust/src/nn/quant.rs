@@ -8,10 +8,17 @@
 //! errors live, so the statistical error models plug in without unit
 //! conversion: a neuron at voltage `v` with fan-in `k` receives additive
 //! noise `N(k·μ_v, k·σ²_v)` on its accumulator (paper eqs 10–13).
+//!
+//! The MAC arithmetic itself lives in [`crate::exec`]: every layer is
+//! lowered to one batched [`Backend::execute_layer`] call (dense layers
+//! directly, convolutions via im2col over all samples × spatial positions),
+//! so quantized inference shares the tiled kernel with the simulator and
+//! the serving engine instead of carrying its own per-unit loops.
 
 use super::layers::Activation;
 use super::model::{DataShape, Layer, Model};
 use super::tensor::Tensor;
+use crate::exec::{Backend, Exact, NoiseView};
 use crate::util::rng::Xoshiro256pp;
 
 /// Per-neuron injected-noise specification, indexed like
@@ -62,17 +69,6 @@ impl QuantMac {
         for (o, &v) in out.iter_mut().zip(x) {
             *o = (v / s).round().clamp(-127.0, 127.0) as i8;
         }
-    }
-
-    /// Integer MAC for one output unit over a quantized input row.
-    #[inline]
-    fn mac(&self, unit: usize, xq: &[i8]) -> i32 {
-        let row = &self.wq[unit * self.fan_in..(unit + 1) * self.fan_in];
-        let mut acc = 0i32;
-        for (&w, &x) in row.iter().zip(xq) {
-            acc += (w as i32) * (x as i32);
-        }
-        acc
     }
 
     /// Dequantize an accumulator value.
@@ -270,11 +266,23 @@ impl QuantizedModel {
         self.neuron_fan_in.len()
     }
 
-    /// Quantized forward pass with optional per-neuron noise injection.
-    /// `noise` must be indexed like [`Model::neurons`]; `rng` is used only
-    /// when noise is present.
+    /// Quantized forward pass with optional per-neuron noise injection on
+    /// the default [`Exact`] kernel backend. `noise` must be indexed like
+    /// [`Model::neurons`]; `rng` is used only when noise is present.
     pub fn forward(
         &self,
+        x: &Tensor,
+        noise: Option<&NoiseSpec>,
+        rng: &mut Xoshiro256pp,
+    ) -> Tensor {
+        self.forward_with(&mut Exact, x, noise, rng)
+    }
+
+    /// Quantized forward pass on an explicit execution [`Backend`] — the
+    /// seam the coordinator and the serving engine select backends through.
+    pub fn forward_with(
+        &self,
+        backend: &mut dyn Backend,
         x: &Tensor,
         noise: Option<&NoiseSpec>,
         rng: &mut Xoshiro256pp,
@@ -285,20 +293,27 @@ impl QuantizedModel {
         }
         let batch = x.shape[0];
         let mut cur = x.clone();
-        let mut neuron_base;
-        for s in 0..1 {
-            let _ = s;
-        }
         // Process layer by layer; track the neuron base index.
-        neuron_base = 0;
+        let mut neuron_base = 0;
         for layer in &self.layers {
-            cur = self.forward_layer(layer, &cur, batch, &mut neuron_base, noise, rng);
+            cur = self.forward_layer(backend, layer, &cur, batch, &mut neuron_base, noise, rng);
         }
         cur
     }
 
+    /// The per-neuron noise slice of one MAC layer, if any of it is live.
+    fn layer_noise<'a>(
+        noise: Option<&'a NoiseSpec>,
+        base: usize,
+        out: usize,
+    ) -> Option<NoiseView<'a>> {
+        noise.map(|ns| NoiseView::new(&ns.mean[base..base + out], &ns.std[base..base + out]))
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn forward_layer(
         &self,
+        backend: &mut dyn Backend,
         layer: &QLayer,
         cur: &Tensor,
         batch: usize,
@@ -308,27 +323,41 @@ impl QuantizedModel {
     ) -> Tensor {
         match layer {
             QLayer::Dense(mac) => {
-                let mut y = Tensor::zeros(&[batch, mac.out]);
-                let mut xq = vec![0i8; mac.fan_in];
+                // Quantize the whole batch, then one backend call.
+                let mut xq = vec![0i8; batch * mac.fan_in];
                 for r in 0..batch {
-                    mac.quantize_input(cur.row(r), &mut xq);
+                    mac.quantize_input(
+                        cur.row(r),
+                        &mut xq[r * mac.fan_in..(r + 1) * mac.fan_in],
+                    );
+                }
+                let nv = Self::layer_noise(noise, *neuron_base, mac.out);
+                let acc = backend.execute_layer(mac, &xq, batch, nv, rng);
+                let mut y = Tensor::zeros(&[batch, mac.out]);
+                for r in 0..batch {
                     let dst = y.row_mut(r);
-                    for u in 0..mac.out {
-                        let mut acc = mac.mac(u, &xq) as f64;
-                        if let Some(ns) = noise {
-                            let gi = *neuron_base + u;
-                            if ns.std[gi] > 0.0 || ns.mean[gi] != 0.0 {
-                                acc += rng.gaussian(ns.mean[gi], ns.std[gi]).round();
-                            }
-                        }
-                        dst[u] = mac.act.apply(mac.dequant(acc, u));
+                    for (u, d) in dst.iter_mut().enumerate() {
+                        *d = mac.act.apply(mac.dequant(acc[r * mac.out + u] as f64, u));
                     }
                 }
                 *neuron_base += mac.out;
                 y
             }
             QLayer::Conv { mac, cin, k, pad, h, w } => {
-                let y = self.conv_forward(mac, *cin, *k, *pad, *h, *w, cur, batch, *neuron_base, noise, rng);
+                let y = self.conv_forward(
+                    backend,
+                    mac,
+                    *cin,
+                    *k,
+                    *pad,
+                    *h,
+                    *w,
+                    cur,
+                    batch,
+                    *neuron_base,
+                    noise,
+                    rng,
+                );
                 *neuron_base += mac.out;
                 y
             }
@@ -359,10 +388,13 @@ impl QuantizedModel {
                 y
             }
             QLayer::Res { conv1, conv2, proj } => {
-                let a = self.forward_layer(conv1, cur, batch, neuron_base, noise, rng);
-                let mut y = self.forward_layer(conv2, &a, batch, neuron_base, noise, rng);
+                let a = self.forward_layer(backend, conv1, cur, batch, neuron_base, noise, rng);
+                let mut y =
+                    self.forward_layer(backend, conv2, &a, batch, neuron_base, noise, rng);
                 let skip = match proj {
-                    Some(p) => self.forward_layer(p, cur, batch, neuron_base, noise, rng),
+                    Some(p) => {
+                        self.forward_layer(backend, p, cur, batch, neuron_base, noise, rng)
+                    }
                     None => cur.clone(),
                 };
                 for (v, &s) in y.data.iter_mut().zip(&skip.data) {
@@ -373,9 +405,16 @@ impl QuantizedModel {
         }
     }
 
+    /// Convolution as batched MAC-layer executions: quantized im2col over
+    /// (sample, output position) rows, driven through
+    /// [`Backend::execute_layer`] in bounded row blocks (noise is per
+    /// output *channel*, one draw per row × channel in global row order —
+    /// blocking does not change the draw stream), then a scatter back into
+    /// channel-major layout.
     #[allow(clippy::too_many_arguments)]
     fn conv_forward(
         &self,
+        backend: &mut dyn Backend,
         mac: &QuantMac,
         cin: usize,
         k: usize,
@@ -391,49 +430,61 @@ impl QuantizedModel {
         let ho = h + 2 * pad + 1 - k;
         let wo = w + 2 * pad + 1 - k;
         let fan_in = cin * k * k;
-        let mut y = Tensor::zeros(&[batch, mac.out * ho * wo]);
-        let mut patch = vec![0i8; fan_in];
+        let total_rows = batch * ho * wo;
+        // Bound the im2col working set (block × fan_in i8 + block × out
+        // i32) instead of materializing every row of the whole batch.
+        const ROW_BLOCK: usize = 4096;
+        let block = ROW_BLOCK.min(total_rows.max(1));
+        let mut patches = vec![0i8; block * fan_in];
         let s_in = mac.x_scale.max(1e-12);
-        for s in 0..batch {
-            let img = cur.row(s);
-            let dst = y.row_mut(s);
-            for oy in 0..ho {
-                for ox in 0..wo {
-                    // Quantized im2col patch.
-                    let mut pi = 0;
-                    for c in 0..cin {
-                        for ky in 0..k {
-                            let iy = oy as isize + ky as isize - pad as isize;
-                            for kx in 0..k {
-                                let ix = ox as isize + kx as isize - pad as isize;
-                                patch[pi] = if iy < 0
-                                    || iy >= h as isize
-                                    || ix < 0
-                                    || ix >= w as isize
-                                {
-                                    0
-                                } else {
-                                    (img[(c * h + iy as usize) * w + ix as usize] / s_in)
-                                        .round()
-                                        .clamp(-127.0, 127.0)
-                                        as i8
-                                };
-                                pi += 1;
-                            }
+        let nv = Self::layer_noise(noise, neuron_base, mac.out);
+        let mut y = Tensor::zeros(&[batch, mac.out * ho * wo]);
+        let mut row0 = 0;
+        while row0 < total_rows {
+            let rows = (total_rows - row0).min(block);
+            for r in 0..rows {
+                let row = row0 + r;
+                let s = row / (ho * wo);
+                let rem = row % (ho * wo);
+                let (oy, ox) = (rem / wo, rem % wo);
+                let img = cur.row(s);
+                let patch = &mut patches[r * fan_in..(r + 1) * fan_in];
+                let mut pi = 0;
+                for c in 0..cin {
+                    for ky in 0..k {
+                        let iy = oy as isize + ky as isize - pad as isize;
+                        for kx in 0..k {
+                            let ix = ox as isize + kx as isize - pad as isize;
+                            patch[pi] = if iy < 0
+                                || iy >= h as isize
+                                || ix < 0
+                                || ix >= w as isize
+                            {
+                                0
+                            } else {
+                                (img[(c * h + iy as usize) * w + ix as usize] / s_in)
+                                    .round()
+                                    .clamp(-127.0, 127.0)
+                                    as i8
+                            };
+                            pi += 1;
                         }
-                    }
-                    for u in 0..mac.out {
-                        let mut acc = mac.mac(u, &patch) as f64;
-                        if let Some(ns) = noise {
-                            let gi = neuron_base + u;
-                            if ns.std[gi] > 0.0 || ns.mean[gi] != 0.0 {
-                                acc += rng.gaussian(ns.mean[gi], ns.std[gi]).round();
-                            }
-                        }
-                        dst[(u * ho + oy) * wo + ox] = mac.act.apply(mac.dequant(acc, u));
                     }
                 }
             }
+            let acc = backend.execute_layer(mac, &patches[..rows * fan_in], rows, nv, rng);
+            for r in 0..rows {
+                let row = row0 + r;
+                let s = row / (ho * wo);
+                let rem = row % (ho * wo);
+                let (oy, ox) = (rem / wo, rem % wo);
+                let dst = y.row_mut(s);
+                for u in 0..mac.out {
+                    dst[(u * ho + oy) * wo + ox] =
+                        mac.act.apply(mac.dequant(acc[r * mac.out + u] as f64, u));
+                }
+            }
+            row0 += rows;
         }
         y
     }

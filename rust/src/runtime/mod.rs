@@ -1,9 +1,21 @@
-//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
-//! and executes them from rust. Python never runs on this path — the HLO
-//! text is parsed and compiled by the XLA CPU plugin in-process.
+//! Artifact runtime: loads the AOT artifacts emitted by
+//! `python/compile/aot.py` and executes them from rust. Python never runs
+//! on this path.
 //!
-//! See /opt/xla-example/README.md for the interchange-format constraints
-//! (HLO text, `return_tuple=True`, interpret-mode Pallas).
+//! This tree executes the known artifact programs (`mm16`,
+//! `fc_mnist_<act>_b<m>`) **natively** through [`crate::exec::kernel`]
+//! with bit-identical semantics to the lowered HLO — int8 matmul
+//! accumulated in i32, `jnp.round` (round-half-even) noise injection, f32
+//! dequantization. The artifact *file* must still exist (`make
+//! artifacts`), preserving the AOT discipline: you can only execute what
+//! was actually compiled. The `pjrt` cargo feature is *reserved* for
+//! builds that link the out-of-tree `xla` PJRT bindings (unavailable
+//! offline); it currently gates no code, and [`Runtime::platform`]
+//! reports the native engine unconditionally.
+//!
+//! Either way, [`FcExecutor`] is the serving face: it binds a rust-trained
+//! quantized model's weights to the generic FC artifact and backs the
+//! [`crate::exec::Pjrt`] backend.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -13,53 +25,195 @@ use anyhow::{Context, Result};
 use crate::nn::quant::{NoiseSpec, QLayer, QuantizedModel};
 use crate::util::rng::Xoshiro256pp;
 
-/// A loaded artifact registry + PJRT client.
+/// Element types the artifacts traffic in (a subset of XLA's).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    S8,
+    S32,
+    F32,
+}
+
+impl ElementType {
+    pub fn byte_width(self) -> usize {
+        match self {
+            ElementType::S8 => 1,
+            ElementType::S32 => 4,
+            ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Scalar types a [`Literal`] can be viewed as.
+pub trait LiteralNative: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+    fn write_le(self, out: &mut Vec<u8>);
+}
+
+impl LiteralNative for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn from_le(bytes: &[u8]) -> Self {
+        bytes[0] as i8
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.push(self as u8);
+    }
+}
+
+impl LiteralNative for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl LiteralNative for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+/// A typed, shaped, densely-packed host buffer — the interchange value
+/// between the coordinator and an executable artifact (mirrors
+/// `xla::Literal` closely enough that call sites are engine-agnostic).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn from_slice<T: LiteralNative>(data: &[T], dims: &[usize]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "literal size mismatch: {} vs dims {dims:?}", data.len());
+        let mut bytes = Vec::with_capacity(n * T::TY.byte_width());
+        for &v in data {
+            v.write_le(&mut bytes);
+        }
+        Ok(Self { ty: T::TY, dims: dims.to_vec(), bytes })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Copy out as a typed vector (errors on element-type mismatch).
+    pub fn to_vec<T: LiteralNative>(&self) -> Result<Vec<T>> {
+        anyhow::ensure!(
+            self.ty == T::TY,
+            "literal type mismatch: stored {:?}, requested {:?}",
+            self.ty,
+            T::TY
+        );
+        let w = self.ty.byte_width();
+        Ok(self.bytes.chunks_exact(w).map(T::from_le).collect())
+    }
+}
+
+/// Build an int8 literal of the given dimensions.
+pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<Literal> {
+    Literal::from_slice(data, dims)
+}
+
+/// Build an f32 literal of the given dimensions.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    Literal::from_slice(data, dims)
+}
+
+/// The artifact programs the native engine understands — exactly the ones
+/// `python/compile/aot.py` emits (see python/compile/model.py for the
+/// source-of-truth semantics).
+#[derive(Clone, Debug)]
+enum Program {
+    /// `mm16`: int8[16,16] × int8[16,16] + round(noise) → i32[16,16].
+    Mm16,
+    /// `fc_mnist_<act>_b<m>`: the 784→128→10 quantized FC forward.
+    Fc { activation: String, batch: usize },
+}
+
+fn parse_artifact_name(name: &str) -> Option<Program> {
+    if name == "mm16" {
+        return Some(Program::Mm16);
+    }
+    let rest = name.strip_prefix("fc_mnist_")?;
+    let (activation, batch) = rest.rsplit_once("_b")?;
+    let batch: usize = batch.parse().ok()?;
+    if !matches!(activation, "linear" | "relu" | "sigmoid" | "tanh") {
+        return None;
+    }
+    Some(Program::Fc { activation: activation.to_string(), batch })
+}
+
+/// A loaded artifact registry + execution engine.
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    programs: HashMap<String, Program>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
+    /// Create a runtime rooted at an artifacts directory.
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, dir: artifacts_dir.to_path_buf(), executables: HashMap::new() })
+        Ok(Self { dir: artifacts_dir.to_path_buf(), programs: HashMap::new() })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        // The `pjrt` cargo feature reserves the XLA-plugin build for
+        // environments that have the out-of-tree bindings; this tree always
+        // executes artifacts through the native interpreter, so report that
+        // honestly regardless of features.
+        "native-exec".to_string()
     }
 
-    /// Compile (and cache) one artifact by name (`<name>.hlo.txt`).
+    /// Load (and cache) one artifact by name (`<name>.hlo.txt`). The HLO
+    /// file must exist on disk — the native engine refuses to conjure
+    /// programs that were never AOT-compiled.
     pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
+        if self.programs.contains_key(name) {
             return Ok(());
         }
         let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).context("compiling artifact")?;
-        self.executables.insert(name.to_string(), exe);
+        anyhow::ensure!(
+            path.exists(),
+            "artifact '{}' not found (run `make artifacts`)",
+            path.display()
+        );
+        let program = parse_artifact_name(name)
+            .with_context(|| format!("artifact '{name}' is not a known program"))?;
+        self.programs.insert(name.to_string(), program);
         Ok(())
     }
 
     pub fn is_loaded(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
+        self.programs.contains_key(name)
     }
 
-    /// Execute a loaded artifact; unwraps the tuple the lowering produces.
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .executables
+    /// Execute a loaded artifact; returns the elements of the tuple the
+    /// lowering produces.
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let program = self
+            .programs
             .get(name)
             .with_context(|| format!("artifact '{name}' not loaded"))?;
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let tuple = result.to_tuple()?;
-        Ok(tuple)
+        match program {
+            Program::Mm16 => execute_mm16(inputs),
+            Program::Fc { activation, batch } => execute_fc(activation, *batch, inputs),
+        }
     }
 
     /// List artifact names present on disk.
@@ -78,33 +232,84 @@ impl Runtime {
     }
 }
 
-/// Build an int8 literal of the given dimensions. The `xla` crate has no
-/// `NativeType` impl for `i8`, so the bytes go through the untyped-data
-/// constructor (two's-complement `i8` bytes are exactly XLA `S8`).
-pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "literal size mismatch");
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S8,
-        dims,
-        bytes,
-    )?)
+/// `jnp.round` rounds half to even; keep that exact behavior so native and
+/// PJRT execution agree bit-for-bit on the noise path.
+#[inline]
+fn round_ties_even_i32(x: f32) -> i32 {
+    (x as f64).round_ties_even() as i32
 }
 
-/// Build an f32 literal of the given dimensions.
-pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "literal size mismatch");
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        dims,
-        bytes,
-    )?)
+fn execute_mm16(inputs: &[Literal]) -> Result<Vec<Literal>> {
+    anyhow::ensure!(inputs.len() == 3, "mm16 takes (x, w, noise), got {}", inputs.len());
+    let x = inputs[0].to_vec::<i8>().context("mm16 x operand")?;
+    let w = inputs[1].to_vec::<i8>().context("mm16 w operand")?;
+    let noise = inputs[2].to_vec::<f32>().context("mm16 noise operand")?;
+    anyhow::ensure!(x.len() == 256 && w.len() == 256 && noise.len() == 256, "mm16 shape");
+    let mut out = crate::exec::kernel::matmul_i8(&x, &w, 16, 16, 16);
+    for (o, &e) in out.iter_mut().zip(&noise) {
+        *o = o.wrapping_add(round_ties_even_i32(e));
+    }
+    let lit = Literal::from_slice(&out, &[16, 16])?;
+    Ok(vec![lit])
+}
+
+fn apply_activation(name: &str, y: f32) -> f32 {
+    match name {
+        "linear" => y,
+        "relu" => y.max(0.0),
+        "sigmoid" => 1.0 / (1.0 + (-y).exp()),
+        "tanh" => y.tanh(),
+        other => panic!("unknown activation {other}"),
+    }
+}
+
+/// The FC artifact program (python/compile/model.py::fc_forward): two
+/// quantized dense layers with per-neuron noise operands.
+fn execute_fc(activation: &str, batch: usize, inputs: &[Literal]) -> Result<Vec<Literal>> {
+    anyhow::ensure!(inputs.len() == 10, "fc artifact takes 10 operands, got {}", inputs.len());
+    let xq = inputs[0].to_vec::<i8>().context("fc x_q")?;
+    let w1 = inputs[1].to_vec::<i8>().context("fc w1_q")?;
+    let b1 = inputs[2].to_vec::<f32>().context("fc b1")?;
+    let s1 = inputs[3].to_vec::<f32>().context("fc s1")?[0];
+    let sx2 = inputs[4].to_vec::<f32>().context("fc sx2")?[0];
+    let w2 = inputs[5].to_vec::<i8>().context("fc w2_q")?;
+    let b2 = inputs[6].to_vec::<f32>().context("fc b2")?;
+    let s2 = inputs[7].to_vec::<f32>().context("fc s2")?[0];
+    let noise1 = inputs[8].to_vec::<f32>().context("fc noise1")?;
+    let noise2 = inputs[9].to_vec::<f32>().context("fc noise2")?;
+    let m = batch;
+    anyhow::ensure!(xq.len() == m * 784, "fc x_q shape");
+    anyhow::ensure!(w1.len() == 784 * 128 && w2.len() == 128 * 10, "fc weight shapes");
+    anyhow::ensure!(noise1.len() == m * 128 && noise2.len() == m * 10, "fc noise shapes");
+
+    // Layer 1: vos_matmul + dequant + activation.
+    let mut acc1 = crate::exec::kernel::matmul_i8(&xq, &w1, m, 784, 128);
+    for (o, &e) in acc1.iter_mut().zip(&noise1) {
+        *o = o.wrapping_add(round_ties_even_i32(e));
+    }
+    // Requantize the hidden activations with jnp.round semantics.
+    let sx2 = sx2.max(1e-12);
+    let mut x2q = vec![0i8; m * 128];
+    for s in 0..m {
+        for u in 0..128 {
+            let h = apply_activation(activation, acc1[s * 128 + u] as f32 * s1 + b1[u]);
+            let q = (h / sx2).clamp(-127.0, 127.0);
+            x2q[s * 128 + u] = (q as f64).round_ties_even() as i8;
+        }
+    }
+
+    // Layer 2.
+    let mut acc2 = crate::exec::kernel::matmul_i8(&x2q, &w2, m, 128, 10);
+    for (o, &e) in acc2.iter_mut().zip(&noise2) {
+        *o = o.wrapping_add(round_ties_even_i32(e));
+    }
+    let mut logits = vec![0f32; m * 10];
+    for s in 0..m {
+        for u in 0..10 {
+            logits[s * 10 + u] = acc2[s * 10 + u] as f32 * s2 + b2[u];
+        }
+    }
+    Ok(vec![literal_f32(&logits, &[m, 10])?])
 }
 
 /// The FC-MNIST executor: binds a rust-trained quantized model's weights to
@@ -112,13 +317,13 @@ pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 pub struct FcExecutor {
     pub artifact: String,
     pub batch: usize,
-    w1: xla::Literal,
-    b1: xla::Literal,
-    s1: xla::Literal,
-    sx2: xla::Literal,
-    w2: xla::Literal,
-    b2: xla::Literal,
-    s2: xla::Literal,
+    w1: Literal,
+    b1: Literal,
+    s1: Literal,
+    sx2: Literal,
+    w2: Literal,
+    b2: Literal,
+    s2: Literal,
     /// Quantization scale for raw input pixels.
     pub x_scale: f32,
     /// Per-neuron noise (mean, std), enumeration order = hidden then output.
@@ -214,7 +419,7 @@ impl FcExecutor {
         ];
         let out = rt.execute(&self.artifact, &inputs)?;
         anyhow::ensure!(out.len() == 1, "expected 1-tuple output");
-        Ok(out[0].to_vec::<f32>()?)
+        out[0].to_vec::<f32>()
     }
 }
 
@@ -224,4 +429,77 @@ pub fn artifacts_dir() -> PathBuf {
         return PathBuf::from(dir);
     }
     PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_i8(&[1, -2, 3, -4], &[2, 2]).unwrap();
+        assert_eq!(l.element_type(), ElementType::S8);
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<i8>().unwrap(), vec![1, -2, 3, -4]);
+        assert!(l.to_vec::<f32>().is_err());
+        let f = literal_f32(&[0.5, -1.25], &[2]).unwrap();
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![0.5, -1.25]);
+        assert!(literal_i8(&[1], &[3]).is_err());
+    }
+
+    #[test]
+    fn artifact_names_parse() {
+        assert!(matches!(parse_artifact_name("mm16"), Some(Program::Mm16)));
+        match parse_artifact_name("fc_mnist_linear_b32") {
+            Some(Program::Fc { activation, batch }) => {
+                assert_eq!(activation, "linear");
+                assert_eq!(batch, 32);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse_artifact_name("fc_mnist_quantum_b32").is_none());
+        assert!(parse_artifact_name("unknown").is_none());
+    }
+
+    #[test]
+    fn native_mm16_matches_reference() {
+        let dir = std::env::temp_dir().join("xtpu_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mm16.hlo.txt"), "HloModule mm16 (native test stub)").unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        rt.load("mm16").unwrap();
+        let mut rng = Xoshiro256pp::seeded(7);
+        let x: Vec<i8> = (0..256).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let w: Vec<i8> = (0..256).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let noise: Vec<f32> = (0..256).map(|_| rng.gaussian(0.0, 100.0) as f32).collect();
+        let out = rt
+            .execute(
+                "mm16",
+                &[
+                    literal_i8(&x, &[16, 16]).unwrap(),
+                    literal_i8(&w, &[16, 16]).unwrap(),
+                    literal_f32(&noise, &[16, 16]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let got: Vec<i32> = out[0].to_vec().unwrap();
+        for i in 0..16 {
+            for j in 0..16 {
+                let mut acc = 0i64;
+                for p in 0..16 {
+                    acc += (x[i * 16 + p] as i64) * (w[p * 16 + j] as i64);
+                }
+                let expect = acc + (noise[i * 16 + j] as f64).round_ties_even() as i64;
+                assert_eq!(got[i * 16 + j] as i64, expect, "({i},{j})");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_requires_artifact_file() {
+        let mut rt = Runtime::new(std::path::Path::new("/nonexistent-artifacts")).unwrap();
+        assert!(rt.load("mm16").is_err());
+        assert!(!rt.is_loaded("mm16"));
+    }
 }

@@ -21,6 +21,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::exec::{Backend, Exact};
 use crate::nn::quant::{NoiseSpec, QuantizedModel};
 use crate::nn::tensor::Tensor;
 use crate::util::json::Json;
@@ -34,11 +35,30 @@ pub struct QualityLevel {
     pub energy_saving: f64,
 }
 
-/// The inference engine shared by all connections.
+/// The inference engine shared by all connections. All quality levels run
+/// through one [`Backend`] (the [`Exact`] kernel unless a different one is
+/// installed with [`Engine::with_backend`]), so batched requests at
+/// different quality levels share the same tiled MAC kernel.
 pub struct Engine {
     pub quantized: QuantizedModel,
     pub levels: Vec<QualityLevel>,
     pub input_dim: usize,
+    backend: Mutex<Box<dyn Backend + Send>>,
+}
+
+impl Engine {
+    pub fn new(quantized: QuantizedModel, levels: Vec<QualityLevel>, input_dim: usize) -> Self {
+        Self { quantized, levels, input_dim, backend: Mutex::new(Box::new(Exact)) }
+    }
+
+    /// Replace the execution backend (e.g. a
+    /// [`Statistical`](crate::exec::Statistical) or
+    /// [`Pjrt`](crate::exec::Pjrt) backend from
+    /// [`Pipeline::make_backend`](crate::coordinator::Pipeline::make_backend)).
+    pub fn with_backend(mut self, backend: Box<dyn Backend + Send>) -> Self {
+        self.backend = Mutex::new(backend);
+        self
+    }
 }
 
 struct Job {
@@ -190,7 +210,8 @@ fn batch_loop(
             let noise_opt = if spec.is_silent() { None } else { Some(spec) };
             let logits = {
                 let mut rng = rng.lock().unwrap();
-                engine.quantized.forward(&x, noise_opt, &mut rng)
+                let mut backend = engine.backend.lock().unwrap();
+                engine.quantized.forward_with(&mut **backend, &x, noise_opt, &mut rng)
             };
             for (r, &i) in idxs.iter().enumerate() {
                 let _ = jobs[i].reply.send((level, logits.row(r).to_vec()));
@@ -324,7 +345,7 @@ mod tests {
             QualityLevel { name: "exact".into(), noise: NoiseSpec::silent(n), energy_saving: 0.0 },
             QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3 },
         ];
-        (Engine { quantized: q, levels, input_dim: 784 }, test)
+        (Engine::new(q, levels, 784), test)
     }
 
     #[test]
@@ -349,6 +370,28 @@ mod tests {
         let (_, logits) = client.infer(test.images.row(0), 99).unwrap();
         assert_eq!(logits.len(), 10);
         assert!(server.stats.requests.load(Ordering::Relaxed) >= n as u64 + 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn engine_serves_through_installed_backend() {
+        use crate::errormodel::ErrorModelRegistry;
+        use crate::timing::voltage::VoltageLadder;
+        let (engine, test) = test_engine();
+        // Install the statistical backend (fitted-variance fake registry):
+        // requests must still round-trip at every quality level.
+        let reg = ErrorModelRegistry::synthetic(
+            &VoltageLadder::paper_default(),
+            &[3.0e4, 1.0e4, 2.0e3, 0.0],
+        );
+        let engine = Engine::new(engine.quantized.clone(), engine.levels.clone(), 784)
+            .with_backend(Box::new(crate::exec::Statistical::new(reg)));
+        let mut server = Server::spawn(engine, 0, BatchPolicy::default()).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        for quality in [0, 1] {
+            let (_, logits) = client.infer(test.images.row(0), quality).unwrap();
+            assert_eq!(logits.len(), 10);
+        }
         server.shutdown();
     }
 

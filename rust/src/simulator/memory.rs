@@ -18,13 +18,27 @@ pub struct WeightMemory {
     words: Vec<u16>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MemoryError {
-    #[error("column {col} has inconsistent voltage-selection bits ({a} vs {b})")]
     InconsistentColumn { col: usize, a: usize, b: usize },
-    #[error("dimension mismatch: expected {expected} words, got {got}")]
     Dimension { expected: usize, got: usize },
 }
+
+impl std::fmt::Display for MemoryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemoryError::InconsistentColumn { col, a, b } => write!(
+                f,
+                "column {col} has inconsistent voltage-selection bits ({a} vs {b})"
+            ),
+            MemoryError::Dimension { expected, got } => {
+                write!(f, "dimension mismatch: expected {expected} words, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MemoryError {}
 
 impl WeightMemory {
     /// Encode a weight matrix `w[k×n]` (row-major) + per-column levels.

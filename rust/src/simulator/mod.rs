@@ -10,16 +10,20 @@
 //! per-multiply, independent, and additive along the column, exactly the
 //! structure eqs 10–13 assume.
 //!
-//! Two error-injection backends:
-//! - [`ErrorInjector::Statistical`]: per-multiply Gaussian draw from the
-//!   fitted [`ErrorModel`] of the column's voltage (fast path).
+//! Two error-injection modes:
+//! - [`ErrorInjector::Statistical`]: composed per-column Gaussian draws
+//!   from the fitted error models, fused into the shared
+//!   [`crate::exec::kernel`] tile (the fast path — the same kernel every
+//!   [`crate::exec::Backend`] uses).
 //! - [`ErrorInjector::GateLevel`]: every PE owns a real
 //!   [`VosSimulator`] over the Baugh-Wooley netlist (slow, used to
-//!   cross-validate the statistical backend — see tests).
+//!   cross-validate the statistical backend — see tests and
+//!   [`crate::exec::GateLevel`], which wraps this array as a backend).
 
 pub mod memory;
 
 use crate::errormodel::{mult_input_bits, ErrorModelRegistry};
+use crate::exec::kernel::{self, ColumnNoise};
 use crate::power::PePowerModel;
 use crate::timing::sta::{clock_period, ChipInstance};
 use crate::timing::voltage::VoltageLadder;
@@ -178,62 +182,60 @@ impl XTpu {
         }
         // --- streaming phase ----------------------------------------------
         // Cycle-level register state: activation pipeline (skewed) and the
-        // psum cascade. We iterate samples and resolve the column cascade
-        // directly; cycle accounting follows the systolic schedule
-        // (m + kr + nc cycles for the pass, paper §III.D).
+        // psum cascade. Cycle accounting follows the systolic schedule
+        // (m + kr + nc cycles for the pass, paper §III.D); the arithmetic
+        // itself goes through the shared exec::kernel tile — the statistical
+        // composition (one N(k_r·μ, k_r·σ²) draw per sample·column, eqs
+        // 11–13) is fused there. Only the gate-level backend still resolves
+        // every multiply, because that *is* its job.
         let nominal = self.ladder.len() - 1;
-        // Resolve the per-column noise mode up front so the hot loop does
-        // not re-match the injector per multiply.
         let is_gate = matches!(self.injector, ErrorInjector::GateLevel { .. });
-        // Statistical backend: the k_r independent per-multiply errors of a
-        // column sum to one N(k_r·μ, k_r·σ²) draw (paper eqs 11–13), so we
-        // inject once per (sample, column) — statistically identical to the
-        // per-multiply draws and ~20× faster on overscaled columns (§Perf).
-        let stat_params: Vec<Option<(f64, f64)>> = (0..nc)
-            .map(|c| {
-                let level = col_levels[n0 + c];
-                if level == nominal {
-                    return None;
+        if !is_gate {
+            kernel::accumulate_tile(a, k, k0, kr, &wtile, nc, out, n, n0, m);
+            let tile_noise: Vec<ColumnNoise> = (0..nc)
+                .map(|c| {
+                    let level = col_levels[n0 + c];
+                    match &self.injector {
+                        ErrorInjector::Statistical(reg) if level != nominal => {
+                            let model = reg.model(level);
+                            ColumnNoise {
+                                mean: model.column_mean(kr),
+                                std: model.column_variance(kr).sqrt(),
+                            }
+                        }
+                        _ => ColumnNoise::SILENT,
+                    }
+                })
+                .collect();
+            kernel::add_column_noise(out, n, m, n0, &tile_noise, rng);
+        } else {
+            for s in 0..m {
+                for c in 0..nc {
+                    let level = col_levels[n0 + c];
+                    let overscaled = level != nominal;
+                    let mut psum = 0i64;
+                    if !overscaled {
+                        // Nominal columns are exact even on the gate array.
+                        for r in 0..kr {
+                            let act = a[s * k + (k0 + r)];
+                            let wgt = wtile[r * nc + c];
+                            psum += (act as i64) * (wgt as i64);
+                        }
+                    } else {
+                        // Gate-level backend: every PE really computes.
+                        for r in 0..kr {
+                            let act = a[s * k + (k0 + r)];
+                            let wgt = wtile[r * nc + c];
+                            let pe = self.gate_sims[r * nc + c]
+                                .as_mut()
+                                .expect("gate PEs prepared");
+                            pe.sim.step(&mult_input_bits(act as i64, wgt as i64));
+                            psum += pe.sim.captured_i64();
+                        }
+                    }
+                    out[s * n + (n0 + c)] =
+                        out[s * n + (n0 + c)].wrapping_add(psum as i32);
                 }
-                match &self.injector {
-                    ErrorInjector::Statistical(reg) => {
-                        let model = reg.model(level);
-                        Some((model.column_mean(kr), model.column_variance(kr).sqrt()))
-                    }
-                    _ => None,
-                }
-            })
-            .collect();
-        for s in 0..m {
-            for c in 0..nc {
-                let level = col_levels[n0 + c];
-                let overscaled = level != nominal;
-                let mut psum = 0i64;
-                if !overscaled || !is_gate {
-                    // Exact integer column reduction…
-                    for r in 0..kr {
-                        let act = a[s * k + (k0 + r)];
-                        let wgt = wtile[r * nc + c];
-                        psum += (act as i64) * (wgt as i64);
-                    }
-                    // …plus the composed column error for overscaled columns.
-                    if let Some((mean, std)) = stat_params[c] {
-                        psum += rng.gaussian(mean, std).round() as i64;
-                    }
-                } else {
-                    // Gate-level backend: every PE really computes.
-                    for r in 0..kr {
-                        let act = a[s * k + (k0 + r)];
-                        let wgt = wtile[r * nc + c];
-                        let pe = self.gate_sims[r * nc + c]
-                            .as_mut()
-                            .expect("gate PEs prepared");
-                        pe.sim.step(&mult_input_bits(act as i64, wgt as i64));
-                        psum += pe.sim.captured_i64();
-                    }
-                }
-                out[s * n + (n0 + c)] =
-                    out[s * n + (n0 + c)].wrapping_add(psum as i32);
             }
         }
         self.stats.macs += (m * kr * nc) as u64;
@@ -344,29 +346,7 @@ mod tests {
     }
 
     fn fake_registry(ladder: &VoltageLadder) -> ErrorModelRegistry {
-        use crate::util::json::Json;
-        let vars = [3.0e4, 1.0e4, 2.0e3, 0.0];
-        let models: Vec<Json> = ladder
-            .levels()
-            .iter()
-            .zip(vars)
-            .map(|(l, v)| {
-                Json::obj(vec![
-                    ("volts", Json::Num(l.volts)),
-                    ("mean", Json::Num(0.0)),
-                    ("variance", Json::Num(v)),
-                    ("skewness", Json::Num(0.0)),
-                    ("kurtosis_excess", Json::Num(0.0)),
-                    ("error_rate", Json::Num(if v > 0.0 { 0.05 } else { 0.0 })),
-                    ("samples", Json::Num(1e6)),
-                ])
-            })
-            .collect();
-        let j = Json::obj(vec![
-            ("voltages", Json::arr_f64(&[0.5, 0.6, 0.7, 0.8])),
-            ("models", Json::Arr(models)),
-        ]);
-        ErrorModelRegistry::from_json(&j, Technology::default()).unwrap()
+        ErrorModelRegistry::synthetic(ladder, &[3.0e4, 1.0e4, 2.0e3, 0.0])
     }
 
     #[test]

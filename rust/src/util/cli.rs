@@ -6,19 +6,34 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option '--{0}'")]
     UnknownOption(String),
-    #[error("option '--{0}' requires a value")]
     MissingValue(String),
-    #[error("invalid value for '--{key}': {value} ({reason})")]
     InvalidValue { key: String, value: String, reason: String },
-    #[error("unexpected positional argument '{0}'")]
     UnexpectedPositional(String),
-    #[error("missing required option '--{0}'")]
     MissingRequired(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(name) => write!(f, "unknown option '--{name}'"),
+            CliError::MissingValue(name) => write!(f, "option '--{name}' requires a value"),
+            CliError::InvalidValue { key, value, reason } => {
+                write!(f, "invalid value for '--{key}': {value} ({reason})")
+            }
+            CliError::UnexpectedPositional(arg) => {
+                write!(f, "unexpected positional argument '{arg}'")
+            }
+            CliError::MissingRequired(name) => {
+                write!(f, "missing required option '--{name}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Declarative option spec used for parsing and `--help` output.
 #[derive(Clone, Debug)]

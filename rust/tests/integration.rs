@@ -7,7 +7,7 @@
 
 use xtpu::assign::Solver;
 use xtpu::config::ExperimentConfig;
-use xtpu::coordinator::{systolic_cross_check, Pipeline};
+use xtpu::coordinator::{backend_cross_check, systolic_cross_check, Pipeline};
 use xtpu::nn::data::synth_mnist;
 use xtpu::nn::layers::Activation;
 use xtpu::nn::model::fc_mnist;
@@ -229,6 +229,97 @@ fn systolic_simulator_agrees_with_error_models() {
         (0.7..1.4).contains(&ratio),
         "systolic variance {measured:.3e} vs model {predicted:.3e} (ratio {ratio:.2})"
     );
+}
+
+#[test]
+fn statistical_and_gate_level_backends_agree_on_16x16() {
+    // The exec-layer cross-validation (extends systolic_cross_check down to
+    // the gates): characterize a chip, then run the SAME 16×16 matmul
+    // through the Statistical fast path and the cycle-level GateLevel
+    // array. Per-column error mean and variance must agree within sampling
+    // tolerance — the agreement that licenses the statistical backend as a
+    // stand-in for gate-level simulation.
+    use xtpu::errormodel::{CharacterizeOptions, ErrorModelRegistry};
+    use xtpu::timing::baugh_wooley_8x8;
+    use xtpu::timing::sta::ChipInstance;
+    use xtpu::timing::voltage::{Technology, VoltageLadder};
+
+    let netlist = baugh_wooley_8x8("bw_xcheck");
+    let tech = Technology::default();
+    let mut rng = Xoshiro256pp::seeded(4242);
+    let chip = ChipInstance::sample(&netlist, &tech, &mut rng);
+    let ladder = VoltageLadder::paper_default();
+    // Sample counts sized for debug-profile `cargo test`: ~120k
+    // characterization vectors + ~300k gate-level matmul steps keep the
+    // per-column variance estimates within a few percent, far inside the
+    // assertion windows below.
+    let opts = CharacterizeOptions { samples: 40_000, seed: 99, ..Default::default() };
+    let reg = ErrorModelRegistry::characterize(&netlist, &chip, &ladder, &opts);
+    assert!(reg.model(0).variance > 0.0, "0.5 V must show errors");
+
+    let (m, k, n) = (1200usize, 16usize, 16usize);
+    let levels = vec![0usize; n]; // 0.5 V everywhere: strongest statistics
+    let (stat, gate) = backend_cross_check(&netlist, &chip, &reg, m, k, n, &levels, 7);
+    assert_eq!(stat.len(), n);
+    assert_eq!(gate.len(), n);
+    let composed_var = reg.model(0).column_variance(k);
+    let composed_std = composed_var.sqrt();
+    let mean_tol = 6.0 * composed_std / (m as f64).sqrt() + 0.05 * composed_std;
+    for c in 0..n {
+        let (sm, sv) = stat[c];
+        let (gm, gv) = gate[c];
+        let ratio = gv / sv.max(1e-12);
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "col {c}: gate var {gv:.3e} vs stat var {sv:.3e} (ratio {ratio:.2})"
+        );
+        assert!(
+            (sm - gm).abs() < mean_tol,
+            "col {c}: stat mean {sm:.2} vs gate mean {gm:.2} (tol {mean_tol:.2})"
+        );
+        // Both must also track the registry's composed k·var(e) prediction.
+        assert!(
+            (0.5..2.0).contains(&(sv / composed_var)),
+            "col {c}: stat var {sv:.3e} vs composed {composed_var:.3e}"
+        );
+        assert!(
+            (0.4..2.5).contains(&(gv / composed_var)),
+            "col {c}: gate var {gv:.3e} vs composed {composed_var:.3e}"
+        );
+    }
+}
+
+#[test]
+fn clean_inference_identical_across_backends() {
+    // With no noise spec, every backend must produce bit-identical logits:
+    // they share one exec::kernel.
+    use xtpu::errormodel::ErrorModelRegistry;
+    use xtpu::exec::{Exact, Statistical};
+    use xtpu::timing::voltage::VoltageLadder;
+
+    let mut rng = Xoshiro256pp::seeded(51);
+    let mut model = fc_mnist(Activation::Relu, &mut rng);
+    let train_set = synth_mnist(300, 52);
+    train(&mut model, &train_set, &TrainConfig { epochs: 1, ..Default::default() });
+    let test = synth_mnist(32, 53);
+    let calib = test.batch(&(0..16).collect::<Vec<_>>()).0;
+    let q = QuantizedModel::quantize(&model, &calib);
+    let (x, _) = test.batch(&(0..8).collect::<Vec<_>>());
+
+    let reg = ErrorModelRegistry::synthetic(
+        &VoltageLadder::paper_default(),
+        &[3.0e4, 1.0e4, 2.0e3, 0.0],
+    );
+
+    let mut rng1 = Xoshiro256pp::seeded(1);
+    let base = q.forward(&x, None, &mut rng1);
+    let mut rng2 = Xoshiro256pp::seeded(1);
+    let via_exact = q.forward_with(&mut Exact, &x, None, &mut rng2);
+    let mut rng3 = Xoshiro256pp::seeded(1);
+    let mut stat = Statistical::new(reg);
+    let via_stat = q.forward_with(&mut stat, &x, None, &mut rng3);
+    assert_eq!(base.data, via_exact.data);
+    assert_eq!(base.data, via_stat.data);
 }
 
 #[test]
