@@ -67,7 +67,7 @@ fn main() {
     let macs = (mm * kk * nn) as f64;
     let reps = 10;
 
-    let bench_backend = |label: &str, be: &mut dyn Backend, level: usize| -> f64 {
+    let bench_backend = |label: &str, be: &dyn Backend, level: usize| -> f64 {
         let levels = vec![level; nn];
         let mut rng = Xoshiro256pp::seeded(3);
         // Warm-up pass, then timed reps.
@@ -78,16 +78,71 @@ fn main() {
         }
         let dt = t0.elapsed().as_secs_f64();
         let mmacs = macs * reps as f64 / dt / 1e6;
-        println!("L3b exec matmul   : {mmacs:>8.1} M MAC/s ({label}) [target ≥ 100 M MAC/s]");
+        println!(
+            "L3b exec matmul   : {mmacs:>8.1} M MAC/s ({label}, 1 thread) \
+             [target ≥ 100 M MAC/s]"
+        );
         mmacs
     };
-    let exact_mmacs = bench_backend("Exact backend", &mut Exact, 3);
-    let mut stat = Statistical::new(reg.clone());
-    let stat_nom_mmacs = bench_backend("Statistical, nominal cols", &mut stat, 3);
-    let stat_vos_mmacs = bench_backend("Statistical, 0.5V cols", &mut stat, 0);
+    // L3b keys are pinned to one thread so they stay comparable with the
+    // single-threaded BENCH_exec_refactor.json baselines; L3f below is the
+    // section that measures thread scaling.
+    let l3b_prior_threads = std::env::var("XTPU_THREADS").ok();
+    std::env::set_var("XTPU_THREADS", "1");
+    let exact_mmacs = bench_backend("Exact backend", &Exact, 3);
+    let stat = Statistical::new(reg.clone());
+    let stat_nom_mmacs = bench_backend("Statistical, nominal cols", &stat, 3);
+    let stat_vos_mmacs = bench_backend("Statistical, 0.5V cols", &stat, 0);
+    match l3b_prior_threads {
+        Some(v) => std::env::set_var("XTPU_THREADS", v),
+        None => std::env::remove_var("XTPU_THREADS"),
+    }
     report.push(("l3b_exec_exact_mmacs", Json::Num(exact_mmacs)));
     report.push(("l3b_exec_statistical_nominal_mmacs", Json::Num(stat_nom_mmacs)));
     report.push(("l3b_exec_statistical_vos_mmacs", Json::Num(stat_vos_mmacs)));
+
+    // --- L3f: parallel exec scaling (threads=1 vs threads=N) --------------
+    // The BENCH_parallel_exec.json record tracks these keys. Same seed at
+    // both thread counts — the outputs must be bit-identical (the parallel
+    // kernel's determinism guarantee), which is asserted, not assumed.
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let run_stat = |seed: u64| -> Vec<i32> {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        stat.matmul_i8(&a, &w, mm, kk, nn, &vec![0usize; nn], &mut rng)
+    };
+    let time_stat = || -> f64 {
+        let mut rng = Xoshiro256pp::seeded(6);
+        let levels = vec![0usize; nn];
+        std::hint::black_box(stat.matmul_i8(&a, &w, mm, kk, nn, &levels, &mut rng));
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(stat.matmul_i8(&a, &w, mm, kk, nn, &levels, &mut rng));
+        }
+        macs * reps as f64 / t0.elapsed().as_secs_f64() / 1e6
+    };
+    let prior_threads = std::env::var("XTPU_THREADS").ok();
+    std::env::set_var("XTPU_THREADS", "1");
+    let t1_mmacs = time_stat();
+    let out_t1 = run_stat(7);
+    std::env::set_var("XTPU_THREADS", hw.to_string());
+    let tn_mmacs = time_stat();
+    let out_tn = run_stat(7);
+    // Restore the caller's setting so the remaining sections run under the
+    // configuration the bench was invoked with.
+    match prior_threads {
+        Some(v) => std::env::set_var("XTPU_THREADS", v),
+        None => std::env::remove_var("XTPU_THREADS"),
+    }
+    assert_eq!(out_t1, out_tn, "parallel kernel must be bit-identical across thread counts");
+    println!(
+        "L3f parallel exec : {t1_mmacs:>8.1} M MAC/s @ 1 thread → {tn_mmacs:>8.1} M MAC/s @ \
+         {hw} threads (×{:.2}, outputs bit-identical)",
+        tn_mmacs / t1_mmacs
+    );
+    report.push(("l3f_threads", Json::Num(hw as f64)));
+    report.push(("l3f_stat_vos_threads1_mmacs", Json::Num(t1_mmacs)));
+    report.push(("l3f_stat_vos_threadsN_mmacs", Json::Num(tn_mmacs)));
+    report.push(("l3f_parallel_speedup", Json::Num(tn_mmacs / t1_mmacs)));
 
     // Cycle-level simulator for the same workload (the pre-refactor "L3b"):
     // slower by design — it also books cycles/energy per tile pass.
@@ -128,12 +183,12 @@ fn main() {
     let calib = sys.test.batch(&(0..32).collect::<Vec<_>>()).0;
     let q = QuantizedModel::quantize(&sys.model, &calib);
     let (x, _) = sys.test.batch(&(0..64).collect::<Vec<_>>());
-    let mut backend = pipeline.make_backend(&sys.registry).unwrap();
+    let backend = pipeline.make_backend(&sys.registry).unwrap();
     let mut rng = Xoshiro256pp::seeded(3);
     let reps = 30;
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
-        std::hint::black_box(q.forward_with(backend.as_mut(), &x, None, &mut rng));
+        std::hint::black_box(q.forward_with(backend.as_ref(), &x, None, &mut rng));
     }
     let dt = t0.elapsed().as_secs_f64();
     let infs = (reps * 64) as f64 / dt;

@@ -51,15 +51,21 @@ fn main() -> Result<()> {
         println!("quality {i}: {:>8} → {:.1}% energy saving", l.name, l.energy_saving * 100.0);
     }
 
-    // All quality levels share one exec::Backend (the config-selected
-    // engine); each level's pre-solved NoiseSpec is injected on top of the
-    // same shared kernel the validation pipeline used.
+    // Share-nothing backend pool (the config-selected engine, one instance
+    // per batch worker): each level's pre-solved NoiseSpec is injected on
+    // top of the same shared kernel the validation pipeline used, and
+    // batches at different quality levels execute concurrently.
+    let workers = 2;
     let engine = Engine::new(sys.quantized.clone(), levels.clone(), 784)
-        .with_backend(pipeline.make_backend(&sys.registry)?);
+        .with_backend_pool(pipeline.make_backend_pool(&sys.registry, workers)?);
     let mut server = Server::spawn(
         engine,
         0,
-        BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_millis(3) },
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_millis(3),
+            workers,
+        },
     )?;
     println!("\nserver on {}\n", server.addr);
 

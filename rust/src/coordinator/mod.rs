@@ -183,10 +183,7 @@ impl Pipeline {
     /// through this seam. The cycle/gate-accurate backend is constructed
     /// explicitly via [`exec::GateLevel`] (it needs a characterized chip
     /// and is orders of magnitude slower — see [`backend_cross_check`]).
-    pub fn make_backend(
-        &self,
-        registry: &ErrorModelRegistry,
-    ) -> Result<Box<dyn Backend + Send>> {
+    pub fn make_backend(&self, registry: &ErrorModelRegistry) -> Result<Box<dyn Backend>> {
         match self.cfg.backend.as_str() {
             "exact" => Ok(Box::new(exec::Exact)),
             "statistical" => Ok(Box::new(exec::Statistical::new(registry.clone()))),
@@ -200,6 +197,17 @@ impl Pipeline {
             }
             other => anyhow::bail!("unknown backend '{other}' (exact|statistical|pjrt)"),
         }
+    }
+
+    /// One backend instance per serving worker — the share-nothing pool
+    /// [`crate::server::Engine::with_backend_pool`] installs so concurrent
+    /// batches never contend even on backends with interior state.
+    pub fn make_backend_pool(
+        &self,
+        registry: &ErrorModelRegistry,
+        workers: usize,
+    ) -> Result<Vec<Box<dyn Backend>>> {
+        (0..workers.max(1)).map(|_| self.make_backend(registry)).collect()
     }
 
     /// Run the budget-independent stages.
@@ -234,11 +242,11 @@ impl Pipeline {
 
         // Clean logits + baselines on the full test set, through the
         // configured execution backend.
-        let mut backend = self.make_backend(&registry)?;
+        let backend = self.make_backend(&registry)?;
         let mut rng = Xoshiro256pp::seeded(self.cfg.seed ^ 0x7EA);
         let idx: Vec<usize> = (0..test.len()).collect();
         let (x, labels) = test.batch(&idx);
-        let clean_logits = quantized.forward_with(backend.as_mut(), &x, None, &mut rng);
+        let clean_logits = quantized.forward_with(backend.as_ref(), &x, None, &mut rng);
         let baseline_accuracy = quality::accuracy(&clean_logits, &labels);
         let baseline_mse = baseline_mse_vs_onehot(&clean_logits, &labels);
 
@@ -278,14 +286,14 @@ impl Pipeline {
 
         // Validation: noise-injected quantized inference over the test set,
         // on the configured execution backend.
-        let mut backend = self.make_backend(&sys.registry)?;
+        let backend = self.make_backend(&sys.registry)?;
         let idx: Vec<usize> = (0..sys.test.len()).collect();
         let (x, labels) = sys.test.batch(&idx);
         let mut mse_sum = 0.0;
         let mut acc_sum = 0.0;
         for run in 0..self.cfg.validation_runs.max(1) {
             let mut rng = Xoshiro256pp::seeded(self.cfg.seed ^ 0x9A11 ^ (run as u64) << 8);
-            let noisy = sys.quantized.forward_with(backend.as_mut(), &x, Some(&noise), &mut rng);
+            let noisy = sys.quantized.forward_with(backend.as_ref(), &x, Some(&noise), &mut rng);
             mse_sum += quality::batch_mse(&sys.clean_logits, &noisy);
             acc_sum += quality::accuracy(&noisy, &labels);
         }
@@ -378,11 +386,11 @@ pub fn systolic_cross_check(
         }
     }
     let levels: Vec<usize> = assignment.level[..n].to_vec();
-    let mut backend = exec::Statistical::new(sys.registry.clone());
+    let backend = exec::Statistical::new(sys.registry.clone());
     let mut rng = Xoshiro256pp::seeded(seed);
     let a: Vec<i8> = (0..samples * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
     let stats =
-        exec::column_error_stats(&mut backend, &a, &w, samples, k, n, &levels, &mut rng);
+        exec::column_error_stats(&backend, &a, &w, samples, k, n, &levels, &mut rng);
     let mut measured = 0.0;
     let mut predicted = 0.0;
     let nominal = sys.registry.ladder.len() - 1;
@@ -418,12 +426,12 @@ pub fn backend_cross_check(
     let a: Vec<i8> = (0..m * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
     let w: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
 
-    let mut stat = exec::Statistical::new(registry.clone());
+    let stat = exec::Statistical::new(registry.clone());
     let mut stat_rng = Xoshiro256pp::seeded(seed ^ 0x57A7);
     let stat_stats =
-        exec::column_error_stats(&mut stat, &a, &w, m, k, n, col_levels, &mut stat_rng);
+        exec::column_error_stats(&stat, &a, &w, m, k, n, col_levels, &mut stat_rng);
 
-    let mut gate = exec::GateLevel::new(
+    let gate = exec::GateLevel::new(
         k,
         n,
         netlist.clone(),
@@ -432,7 +440,7 @@ pub fn backend_cross_check(
     );
     let mut gate_rng = Xoshiro256pp::seeded(seed ^ 0x6A7E);
     let gate_stats =
-        exec::column_error_stats(&mut gate, &a, &w, m, k, n, col_levels, &mut gate_rng);
+        exec::column_error_stats(&gate, &a, &w, m, k, n, col_levels, &mut gate_rng);
 
     (stat_stats, gate_stats)
 }

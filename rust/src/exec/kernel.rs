@@ -24,13 +24,33 @@
 //! per-column parameters inside the tile loop — no per-multiply RNG calls,
 //! which is what makes the statistical backend a fast path rather than a
 //! simulation.
+//!
+//! **Data parallelism & determinism.** Both matmul entry points shard the
+//! sample axis across [`crate::util::threadpool`] workers (disjoint output
+//! row bands, no locks); exact integer accumulation makes the sharding
+//! invisible. Error injection stays bit-reproducible at any `XTPU_THREADS`
+//! because draws never come from a shared sequential stream: the caller's
+//! RNG contributes exactly one `next_u64()` *key* per injection call, and
+//! every column derives its own [`Xoshiro256pp::stream`]`(key, column)`
+//! generator from it. The draw values therefore depend only on
+//! `(key, column, sample-order)` — never on tiling or thread count — which
+//! is what the reproducibility test suite pins down.
 
 use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool;
 
 /// k-axis tile: activation slice reused across the whole output row block.
 pub const TILE_K: usize = 128;
 /// n-axis tile: output row block sized to stay L1-resident (i32 lane).
 pub const TILE_N: usize = 256;
+/// Below this many MACs a matmul runs single-threaded — thread spawn costs
+/// more than the work (the result is identical either way; exact integer
+/// accumulation is shard-order-independent).
+pub(crate) const PAR_MIN_MACS: usize = 1 << 15;
+/// Below this many Gaussian draws the column-noise injection stays
+/// single-threaded (the keyed per-column streams make the values identical
+/// either way).
+const PAR_MIN_DRAWS: usize = 1 << 12;
 
 /// Additive per-column noise parameters, already composed over the column
 /// height (`mean = k·μ_v`, `std = √(k·σ²_v)`). Zero mean and std = silent.
@@ -87,9 +107,11 @@ pub fn accumulate_tile(
 }
 
 /// Add one composed column-error draw per `(sample, column)` for every
-/// non-silent column — the fused statistical injection step. Draw order is
-/// column-major (all samples of column `c` before column `c+1`) so the
-/// stream is independent of tiling. The add wraps on i32 overflow — the
+/// non-silent column — the fused statistical injection step. The caller's
+/// RNG contributes exactly one key draw (none if every column is silent);
+/// each column then draws its `m` samples from its own
+/// [`Xoshiro256pp::stream`]`(key, c)`, so the values are independent of
+/// tiling *and* of `XTPU_THREADS`. The add wraps on i32 overflow — the
 /// accumulator register behavior every execution path (cycle simulator,
 /// AOT artifact int32 add) shares.
 pub fn add_column_noise(
@@ -100,25 +122,90 @@ pub fn add_column_noise(
     noise: &[ColumnNoise],
     rng: &mut Xoshiro256pp,
 ) {
-    for (c, p) in noise.iter().enumerate() {
-        if p.is_silent() {
-            continue;
+    if noise.iter().all(ColumnNoise::is_silent) || m == 0 {
+        return;
+    }
+    add_column_noise_keyed(out, ldo, m, n0, noise, rng.next_u64());
+}
+
+/// [`add_column_noise`] with the stream key already split off the parent
+/// generator. Draw generation (the Gaussian sampling — the expensive part)
+/// fans out across the thread pool per column; the wrapping adds are applied
+/// serially, so the only shared state is the read-only parameter slice.
+pub fn add_column_noise_keyed(
+    out: &mut [i32],
+    ldo: usize,
+    m: usize,
+    n0: usize,
+    noise: &[ColumnNoise],
+    key: u64,
+) {
+    let cols: Vec<usize> = noise
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| !p.is_silent())
+        .map(|(c, _)| c)
+        .collect();
+    if cols.is_empty() || m == 0 {
+        return;
+    }
+    if m * cols.len() < PAR_MIN_DRAWS {
+        // Same streams, same per-column order — bit-identical to the
+        // parallel path, minus the thread spawn cost.
+        for &c in &cols {
+            let p = noise[c];
+            let mut crng = Xoshiro256pp::stream(key, c as u64);
+            let col = n0 + c;
+            for s in 0..m {
+                let e = crng.gaussian(p.mean, p.std).round() as i32;
+                out[s * ldo + col] = out[s * ldo + col].wrapping_add(e);
+            }
         }
+        return;
+    }
+    let draws = threadpool::parallel_chunks(cols.len(), |range, _| {
+        range
+            .map(|i| {
+                let c = cols[i];
+                let p = noise[c];
+                let mut crng = Xoshiro256pp::stream(key, c as u64);
+                let vals: Vec<i32> =
+                    (0..m).map(|_| crng.gaussian(p.mean, p.std).round() as i32).collect();
+                (c, vals)
+            })
+            .collect::<Vec<_>>()
+    });
+    for (c, vals) in draws.into_iter().flatten() {
         let col = n0 + c;
-        for s in 0..m {
-            let e = rng.gaussian(p.mean, p.std).round() as i32;
+        for (s, e) in vals.into_iter().enumerate() {
             out[s * ldo + col] = out[s * ldo + col].wrapping_add(e);
         }
     }
 }
 
 /// Exact `A[m,k] × W[k,n] → i32[m,n]` (systolic weight layout), tiled over
-/// `k` and `n`. Handles ragged shapes (any `m`, `k`, `n`, including sizes
-/// that are not tile multiples).
+/// `k` and `n` and sharded over `m` across the thread pool (each worker
+/// owns a disjoint output row band; integer accumulation makes the result
+/// identical at any `XTPU_THREADS`). Handles ragged shapes (any `m`, `k`,
+/// `n`, including sizes that are not tile multiples).
 pub fn matmul_i8(a: &[i8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
     assert_eq!(a.len(), m * k, "activation size");
     assert_eq!(w.len(), k * n, "weight size");
     let mut out = vec![0i32; m * n];
+    if m * k * n < PAR_MIN_MACS {
+        matmul_i8_into(a, w, m, k, n, &mut out);
+        return out;
+    }
+    threadpool::parallel_rows(&mut out, m, n, 1, |rows, band| {
+        matmul_i8_into(&a[rows.start * k..rows.end * k], w, rows.len(), k, n, band);
+    });
+    out
+}
+
+/// Serial tiled core of [`matmul_i8`]: accumulate into a caller-provided
+/// (zeroed) `[m, n]` output band. Each parallel worker runs this on its own
+/// row band and packs its own weight tiles — no shared mutable state.
+fn matmul_i8_into(a: &[i8], w: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
     let mut wtile = vec![0i8; TILE_K * TILE_N.min(n.max(1))];
     let mut k0 = 0;
     while k0 < k {
@@ -131,12 +218,11 @@ pub fn matmul_i8(a: &[i8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
                 let src = &w[(k0 + r) * n + n0..(k0 + r) * n + n0 + nc];
                 wtile[r * nc..(r + 1) * nc].copy_from_slice(src);
             }
-            accumulate_tile(a, k, k0, kr, &wtile, nc, &mut out, n, n0, m);
+            accumulate_tile(a, k, k0, kr, &wtile, nc, out, n, n0, m);
             n0 += nc;
         }
         k0 += kr;
     }
-    out
 }
 
 /// [`matmul_i8`] plus fused per-column error injection: `noise[c]` holds the
@@ -157,11 +243,24 @@ pub fn matmul_i8_noisy(
 }
 
 /// Exact `A[m,k] × Wᵀ → i32[m,n]` with `wt[n,k]` row-major over output
-/// units (the `QuantMac` layout): a contiguous dot product per output unit.
+/// units (the `QuantMac` layout): a contiguous dot product per output unit,
+/// sharded over `m` like [`matmul_i8`].
 pub fn matmul_i8t(a: &[i8], wt: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
     assert_eq!(a.len(), m * k, "activation size");
     assert_eq!(wt.len(), n * k, "weight size");
     let mut out = vec![0i32; m * n];
+    if m * k * n < PAR_MIN_MACS {
+        matmul_i8t_into(a, wt, m, k, n, &mut out);
+        return out;
+    }
+    threadpool::parallel_rows(&mut out, m, n, 1, |rows, band| {
+        matmul_i8t_into(&a[rows.start * k..rows.end * k], wt, rows.len(), k, n, band);
+    });
+    out
+}
+
+/// Serial core of [`matmul_i8t`] over a caller-provided `[m, n]` band.
+pub(crate) fn matmul_i8t_into(a: &[i8], wt: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
     for s in 0..m {
         let arow = &a[s * k..(s + 1) * k];
         let orow = &mut out[s * n..(s + 1) * n];
@@ -174,7 +273,6 @@ pub fn matmul_i8t(a: &[i8], wt: &[i8], m: usize, k: usize, n: usize) -> Vec<i32>
             *o = acc;
         }
     }
-    out
 }
 
 /// Reference scalar matmul (systolic `[k,n]` weight layout) — the oracle the

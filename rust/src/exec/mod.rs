@@ -45,6 +45,18 @@
 //! Cross-validation helpers ([`column_error_stats`]) measure per-column
 //! error moments of any backend against the exact reference, which is how
 //! the tests pin the statistical and gate-level backends to each other.
+//!
+//! **Concurrency contract.** `Backend` is `Send + Sync` and every method
+//! takes `&self`: a backend holds only immutable configuration (error
+//! models, loaded artifacts), while all per-call state (RNG, accumulators)
+//! lives in the call itself. That is what lets [`crate::server::Engine`]
+//! run batches on several worker threads at once with no global backend
+//! lock, and lets one backend instance be shared freely. The one stateful
+//! exception, [`GateLevel`], serializes internally on a mutex — it is the
+//! validation oracle, not a serving path. Work *inside* a call is sharded
+//! across [`crate::util::threadpool`] (`XTPU_THREADS`) with deterministic
+//! per-shard RNG streams, so outputs are bit-identical at any thread count
+//! (see [`kernel`] and the reproducibility test suite).
 
 pub mod kernel;
 
@@ -57,6 +69,9 @@ use crate::timing::voltage::VoltageLadder;
 use crate::timing::Netlist;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::stats::variance;
+use crate::util::threadpool;
+
+use std::sync::Mutex;
 
 use kernel::ColumnNoise;
 
@@ -80,7 +95,11 @@ impl<'a> NoiseView<'a> {
 /// `QuantMac` weight layout) and defaults to the shared kernel — every
 /// current backend keeps that default (the AOT programs are model-granular,
 /// see [`Pjrt::run_fc`]), but a per-layer accelerator would override it.
-pub trait Backend {
+///
+/// Methods take `&self` and implementors are `Send + Sync`: per-call state
+/// travels in the call (see the module docs' concurrency contract), so one
+/// instance can serve many threads at once.
+pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Batched `A[m,k] × W[k,n] → i32[m,n]` where `col_levels[j]` is the
@@ -88,7 +107,7 @@ pub trait Backend {
     /// nominal = error-free).
     #[allow(clippy::too_many_arguments)]
     fn matmul_i8(
-        &mut self,
+        &self,
         a: &[i8],
         w: &[i8],
         m: usize,
@@ -102,7 +121,7 @@ pub trait Backend {
     /// accumulators `[batch, mac.out]`, plus one draw per (row, unit) from
     /// the caller-composed per-neuron noise when present.
     fn execute_layer(
-        &mut self,
+        &self,
         mac: &QuantMac,
         xq: &[i8],
         batch: usize,
@@ -113,14 +132,24 @@ pub trait Backend {
     }
 
     /// Cycle/energy counters, for backends that keep them.
-    fn stats(&self) -> Option<&SimStats> {
+    fn stats(&self) -> Option<SimStats> {
         None
     }
 }
 
+/// Fixed row-chunk size for the per-shard noise streams of
+/// [`execute_layer_kernel`]: rows `[c·64, (c+1)·64)` always draw from
+/// stream `c`, so the draw values depend only on the row index — never on
+/// how rows were distributed over workers.
+pub const LAYER_ROW_CHUNK: usize = 64;
+
 /// Shared `execute_layer` implementation on the tiled kernel: exact integer
 /// accumulation (no transpose — `matmul_i8t` consumes the `QuantMac` layout
-/// directly) plus fused per-(row, unit) noise draws.
+/// directly) fused with per-(row, unit) noise draws, sharded over rows
+/// across the thread pool. When any noise is live the parent RNG yields one
+/// stream key; each fixed [`LAYER_ROW_CHUNK`]-row chunk derives its own
+/// generator from it, making the output bit-identical at any
+/// `XTPU_THREADS`.
 pub fn execute_layer_kernel(
     mac: &QuantMac,
     xq: &[i8],
@@ -128,20 +157,51 @@ pub fn execute_layer_kernel(
     noise: Option<NoiseView<'_>>,
     rng: &mut Xoshiro256pp,
 ) -> Vec<i32> {
-    let mut out = kernel::matmul_i8t(xq, &mac.wq, batch, mac.fan_in, mac.out);
-    if let Some(nv) = noise {
+    let live = noise.filter(|nv| {
         debug_assert!(nv.mean.len() >= mac.out && nv.std.len() >= mac.out);
-        for s in 0..batch {
-            let row = &mut out[s * mac.out..(s + 1) * mac.out];
-            for (u, o) in row.iter_mut().enumerate() {
-                let (mean, std) = (nv.mean[u], nv.std[u]);
-                if std > 0.0 || mean != 0.0 {
-                    // Wrapping add: the i32-accumulator register behavior
-                    // every backend shares (see kernel::add_column_noise).
-                    *o = o.wrapping_add(rng.gaussian(mean, std).round() as i32);
+        nv.mean[..mac.out].iter().any(|&v| v != 0.0)
+            || nv.std[..mac.out].iter().any(|&v| v != 0.0)
+    });
+    let key = live.map(|_| rng.next_u64());
+    let mut out = vec![0i32; batch * mac.out];
+    let fill = |rows: std::ops::Range<usize>, band: &mut [i32]| {
+        kernel::matmul_i8t_into(
+            &xq[rows.start * mac.fan_in..rows.end * mac.fan_in],
+            &mac.wq,
+            rows.len(),
+            mac.fan_in,
+            mac.out,
+            band,
+        );
+        let (Some(nv), Some(key)) = (live, key) else {
+            return;
+        };
+        // `rows.start` is a LAYER_ROW_CHUNK multiple (aligned split), so
+        // chunk boundaries — and with them the stream assignment — are
+        // identical for every worker layout.
+        let mut r0 = rows.start;
+        while r0 < rows.end {
+            let r1 = (r0 + LAYER_ROW_CHUNK).min(rows.end);
+            let mut srng = Xoshiro256pp::stream(key, (r0 / LAYER_ROW_CHUNK) as u64);
+            for s in r0..r1 {
+                let row = &mut band[(s - rows.start) * mac.out..(s - rows.start + 1) * mac.out];
+                for (u, o) in row.iter_mut().enumerate() {
+                    let (mean, std) = (nv.mean[u], nv.std[u]);
+                    if std > 0.0 || mean != 0.0 {
+                        // Wrapping add: the i32-accumulator register behavior
+                        // every backend shares (see kernel::add_column_noise).
+                        *o = o.wrapping_add(srng.gaussian(mean, std).round() as i32);
+                    }
                 }
             }
+            r0 = r1;
         }
+    };
+    if batch * mac.fan_in * mac.out < kernel::PAR_MIN_MACS {
+        // Same chunked streams, run inline — bit-identical, no spawn cost.
+        fill(0..batch, &mut out);
+    } else {
+        threadpool::parallel_rows(&mut out, batch, mac.out, LAYER_ROW_CHUNK, fill);
     }
     out
 }
@@ -183,7 +243,7 @@ impl Backend for Exact {
     }
 
     fn matmul_i8(
-        &mut self,
+        &self,
         a: &[i8],
         w: &[i8],
         m: usize,
@@ -220,7 +280,7 @@ impl Backend for Statistical {
     }
 
     fn matmul_i8(
-        &mut self,
+        &self,
         a: &[i8],
         w: &[i8],
         m: usize,
@@ -241,9 +301,11 @@ impl Backend for Statistical {
 
 /// Cycle-accurate gate-level backend: the [`XTpu`] systolic grid with a
 /// [`VosSimulator`](crate::timing::vos::VosSimulator) per PE. Slow — the
-/// validation oracle, not a serving path.
+/// validation oracle, not a serving path. The grid is inherently stateful
+/// (per-PE simulators, cycle/energy counters), so this is the one backend
+/// that serializes concurrent callers on an interior mutex.
 pub struct GateLevel {
-    pub tpu: XTpu,
+    pub tpu: Mutex<XTpu>,
 }
 
 impl GateLevel {
@@ -261,12 +323,12 @@ impl GateLevel {
             ladder.clone(),
             ErrorInjector::GateLevel { netlist: Box::new(netlist), chip, ladder },
         );
-        Self { tpu }
+        Self { tpu: Mutex::new(tpu) }
     }
 
     /// Wrap an existing simulator instance (any injector).
     pub fn from_tpu(tpu: XTpu) -> Self {
-        Self { tpu }
+        Self { tpu: Mutex::new(tpu) }
     }
 }
 
@@ -276,7 +338,7 @@ impl Backend for GateLevel {
     }
 
     fn matmul_i8(
-        &mut self,
+        &self,
         a: &[i8],
         w: &[i8],
         m: usize,
@@ -285,11 +347,11 @@ impl Backend for GateLevel {
         col_levels: &[usize],
         rng: &mut Xoshiro256pp,
     ) -> Vec<i32> {
-        self.tpu.matmul(a, w, m, k, n, col_levels, rng)
+        self.tpu.lock().unwrap().matmul(a, w, m, k, n, col_levels, rng)
     }
 
-    fn stats(&self) -> Option<&SimStats> {
-        Some(&self.tpu.stats)
+    fn stats(&self) -> Option<SimStats> {
+        Some(self.tpu.lock().unwrap().stats)
     }
 }
 
@@ -369,7 +431,7 @@ impl Backend for Pjrt {
     }
 
     fn matmul_i8(
-        &mut self,
+        &self,
         a: &[i8],
         w: &[i8],
         m: usize,
@@ -379,8 +441,10 @@ impl Backend for Pjrt {
         rng: &mut Xoshiro256pp,
     ) -> Vec<i32> {
         assert_eq!(col_levels.len(), n, "col_levels length");
-        // Host-side sampling of the composed column errors (column-major,
-        // matching kernel::add_column_noise so backends are comparable).
+        // Host-side sampling of the composed column errors, column-major
+        // from the caller's stream. Note: kernel::add_column_noise now uses
+        // keyed per-column streams, so Pjrt and Statistical agree in
+        // distribution (moments), not bit-for-bit under a shared seed.
         let params = match &self.registry {
             Some(reg) => column_noise_from_levels(reg, col_levels, k),
             None => vec![ColumnNoise::SILENT; n],
@@ -430,7 +494,7 @@ impl Backend for Pjrt {
 /// [`crate::coordinator::backend_cross_check`]) are built on.
 #[allow(clippy::too_many_arguments)]
 pub fn column_error_stats(
-    backend: &mut dyn Backend,
+    backend: &dyn Backend,
     a: &[i8],
     w: &[i8],
     m: usize,
@@ -449,6 +513,17 @@ pub fn column_error_stats(
             (mean, variance(&errs))
         })
         .collect()
+}
+
+// Compile-time guarantee: every backend is shareable across threads (the
+// contract `server::Engine`'s worker pool and the parallel kernel rely on).
+#[allow(dead_code)]
+fn _backends_are_send_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Exact>();
+    assert_send_sync::<Statistical>();
+    assert_send_sync::<GateLevel>();
+    assert_send_sync::<Pjrt>();
 }
 
 #[cfg(test)]
@@ -479,7 +554,7 @@ mod tests {
     #[test]
     fn statistical_backend_nominal_columns_exact() {
         let reg = fake_registry();
-        let mut be = Statistical::new(reg);
+        let be = Statistical::new(reg);
         let (m, k, n) = (50, 16, 4);
         let (a, w) = random_mats(m, k, n, 3);
         let mut rng = Xoshiro256pp::seeded(4);
@@ -499,11 +574,11 @@ mod tests {
     #[test]
     fn statistical_column_stats_match_models() {
         let reg = fake_registry();
-        let mut be = Statistical::new(reg.clone());
+        let be = Statistical::new(reg.clone());
         let (m, k, n) = (6000, 16, 2);
         let (a, w) = random_mats(m, k, n, 5);
         let mut rng = Xoshiro256pp::seeded(6);
-        let stats = column_error_stats(&mut be, &a, &w, m, k, n, &[0, 1], &mut rng);
+        let stats = column_error_stats(&be, &a, &w, m, k, n, &[0, 1], &mut rng);
         for (c, lvl) in [0usize, 1].iter().enumerate() {
             let predicted = reg.model(*lvl).column_variance(k);
             let ratio = stats[c].1 / predicted;
@@ -519,11 +594,11 @@ mod tests {
     fn pjrt_backend_kernel_fallback_matches_statistics() {
         let reg = fake_registry();
         let rt = Runtime::new(std::path::Path::new("/nonexistent-artifacts")).unwrap();
-        let mut be = Pjrt::new(rt).with_registry(reg.clone());
+        let be = Pjrt::new(rt).with_registry(reg.clone());
         let (m, k, n) = (6000, 16, 1);
         let (a, w) = random_mats(m, k, n, 7);
         let mut rng = Xoshiro256pp::seeded(8);
-        let stats = column_error_stats(&mut be, &a, &w, m, k, n, &[0], &mut rng);
+        let stats = column_error_stats(&be, &a, &w, m, k, n, &[0], &mut rng);
         let predicted = reg.model(0).column_variance(k);
         let ratio = stats[0].1 / predicted;
         assert!((0.85..1.15).contains(&ratio), "var {} vs {predicted}", stats[0].1);

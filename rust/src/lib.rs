@@ -21,7 +21,9 @@
 //! - [`exec`] — **the unified inference execution layer**: one
 //!   [`Backend`](exec::Backend) trait (batched int8 matmul + quantized
 //!   layer execution) over a shared tiled kernel with fused statistical
-//!   error injection. Four implementations: [`Exact`](exec::Exact),
+//!   error injection, sharded across `XTPU_THREADS` with deterministic
+//!   per-shard RNG streams (bit-identical output at any thread count).
+//!   Four implementations: [`Exact`](exec::Exact),
 //!   [`Statistical`](exec::Statistical) (the fast path),
 //!   [`GateLevel`](exec::GateLevel) (cycle/gate-accurate oracle),
 //!   [`Pjrt`](exec::Pjrt) (AOT artifacts). Everything above this line
@@ -32,8 +34,9 @@
 //!   `python/compile` (PJRT with `--features pjrt`, native otherwise).
 //! - [`coordinator`] — the Fig-4 pipeline gluing everything together;
 //!   selects the execution backend per experiment config.
-//! - [`server`] — threaded inference server with runtime quality levels,
-//!   batching requests onto one shared backend.
+//! - [`server`] — threaded inference server with runtime quality levels:
+//!   dynamic batching onto a pool of per-worker backends, so concurrent
+//!   batches execute with no global lock.
 
 pub mod aging;
 pub mod assign;

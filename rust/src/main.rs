@@ -393,6 +393,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             OptSpec::opt("port", "7433", "TCP port (0 = ephemeral)"),
             OptSpec::opt("mse-ubs", "0.0,0.5,2.0,10.0", "quality levels (budget fractions)"),
             OptSpec::opt("max-batch", "16", "dynamic batch size"),
+            OptSpec::opt("workers", "0", "batch worker threads (0 = auto)"),
         ],
     )?
     else {
@@ -430,15 +431,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("quality {i}: {} (saving {:.1}%)", l.name, l.energy_saving * 100.0);
     }
     let input_dim = sys.model.input.numel();
-    let backend = pipeline.make_backend(&sys.registry)?;
-    println!("execution backend: {}", backend.name());
+    let policy = BatchPolicy {
+        max_batch: args.usize("max-batch")?,
+        workers: args.usize("workers")?,
+        ..Default::default()
+    };
+    // Share-nothing pool: one backend instance per batch worker, so
+    // concurrent batches at different quality levels never contend.
+    let workers = policy.resolved_workers();
+    let pool = pipeline.make_backend_pool(&sys.registry, workers)?;
+    println!("execution backend: {} × {workers} workers", pool[0].name());
     let engine =
-        Engine::new(sys.quantized.clone(), levels, input_dim).with_backend(backend);
-    let server = Server::spawn(
-        engine,
-        args.usize("port")? as u16,
-        BatchPolicy { max_batch: args.usize("max-batch")?, ..Default::default() },
-    )?;
+        Engine::new(sys.quantized.clone(), levels, input_dim).with_backend_pool(pool);
+    let server = Server::spawn(engine, args.usize("port")? as u16, policy)?;
     println!("serving on {}", server.addr);
     println!("protocol: {{\"pixels\": [f32 × {input_dim}], \"quality\": idx}} per line");
     loop {

@@ -275,14 +275,16 @@ impl QuantizedModel {
         noise: Option<&NoiseSpec>,
         rng: &mut Xoshiro256pp,
     ) -> Tensor {
-        self.forward_with(&mut Exact, x, noise, rng)
+        self.forward_with(&Exact, x, noise, rng)
     }
 
     /// Quantized forward pass on an explicit execution [`Backend`] — the
     /// seam the coordinator and the serving engine select backends through.
+    /// Backends are `Sync` and taken by `&self`, so concurrent forward
+    /// passes (e.g. the serving engine's batch workers) can share one.
     pub fn forward_with(
         &self,
-        backend: &mut dyn Backend,
+        backend: &dyn Backend,
         x: &Tensor,
         noise: Option<&NoiseSpec>,
         rng: &mut Xoshiro256pp,
@@ -313,7 +315,7 @@ impl QuantizedModel {
     #[allow(clippy::too_many_arguments)]
     fn forward_layer(
         &self,
-        backend: &mut dyn Backend,
+        backend: &dyn Backend,
         layer: &QLayer,
         cur: &Tensor,
         batch: usize,
@@ -408,13 +410,13 @@ impl QuantizedModel {
     /// Convolution as batched MAC-layer executions: quantized im2col over
     /// (sample, output position) rows, driven through
     /// [`Backend::execute_layer`] in bounded row blocks (noise is per
-    /// output *channel*, one draw per row × channel in global row order —
-    /// blocking does not change the draw stream), then a scatter back into
-    /// channel-major layout.
+    /// output *channel*, one draw per row × channel; the block size is a
+    /// fixed constant, so the per-block keyed draw streams are independent
+    /// of `XTPU_THREADS`), then a scatter back into channel-major layout.
     #[allow(clippy::too_many_arguments)]
     fn conv_forward(
         &self,
-        backend: &mut dyn Backend,
+        backend: &dyn Backend,
         mac: &QuantMac,
         cin: usize,
         k: usize,

@@ -11,6 +11,24 @@
 //! Requests are funneled through a dynamic batcher (size- or deadline-
 //! triggered) so concurrent clients share quantized forward passes, like a
 //! production serving stack would.
+//!
+//! ## Threading model
+//!
+//! Three thread populations cooperate, with **no global lock on the
+//! inference hot path**:
+//!
+//! - one acceptor + one detached handler thread per connection (I/O only);
+//! - [`BatchPolicy::workers`] *batch workers*, each owning its own
+//!   [`Backend`] instance (from the [`Engine`]'s per-worker pool) and its
+//!   own RNG. Workers contend only on the job queue while *collecting* a
+//!   batch; execution runs unlocked, so batches at different quality
+//!   levels proceed concurrently ([`ServerStats::peak_concurrent_batches`]
+//!   observes the overlap).
+//!
+//! Within one batch, the shared exec kernel additionally shards the matmul
+//! across `XTPU_THREADS` with deterministic per-shard RNG streams — a fixed
+//! seed produces bit-identical noisy outputs at any thread count (see
+//! [`crate::exec::kernel`]).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -26,6 +44,7 @@ use crate::nn::quant::{NoiseSpec, QuantizedModel};
 use crate::nn::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool;
 
 /// A quality level: pre-solved assignment → noise spec + energy saving.
 #[derive(Clone, Debug)]
@@ -35,29 +54,49 @@ pub struct QualityLevel {
     pub energy_saving: f64,
 }
 
-/// The inference engine shared by all connections. All quality levels run
-/// through one [`Backend`] (the [`Exact`] kernel unless a different one is
-/// installed with [`Engine::with_backend`]), so batched requests at
-/// different quality levels share the same tiled MAC kernel.
+/// The inference engine shared by all connections: the quantized model,
+/// the pre-solved quality levels, and a pool of per-worker [`Backend`]
+/// instances. Backends are `Send + Sync` with `&self` execution, so the
+/// pool needs no locks — each batch worker just holds its own handle.
 pub struct Engine {
     pub quantized: QuantizedModel,
     pub levels: Vec<QualityLevel>,
     pub input_dim: usize,
-    backend: Mutex<Box<dyn Backend + Send>>,
+    backends: Vec<Arc<dyn Backend>>,
 }
 
 impl Engine {
     pub fn new(quantized: QuantizedModel, levels: Vec<QualityLevel>, input_dim: usize) -> Self {
-        Self { quantized, levels, input_dim, backend: Mutex::new(Box::new(Exact)) }
+        Self { quantized, levels, input_dim, backends: Vec::new() }
     }
 
-    /// Replace the execution backend (e.g. a
-    /// [`Statistical`](crate::exec::Statistical) or
+    /// Install one execution backend instance shared by every batch worker
+    /// (e.g. a [`Statistical`](crate::exec::Statistical) or
     /// [`Pjrt`](crate::exec::Pjrt) backend from
     /// [`Pipeline::make_backend`](crate::coordinator::Pipeline::make_backend)).
-    pub fn with_backend(mut self, backend: Box<dyn Backend + Send>) -> Self {
-        self.backend = Mutex::new(backend);
+    /// Safe for concurrent batches — backends execute through `&self`; a
+    /// [`GateLevel`](crate::exec::GateLevel) backend serializes internally.
+    pub fn with_backend(mut self, backend: Box<dyn Backend>) -> Self {
+        self.backends = vec![Arc::from(backend)];
         self
+    }
+
+    /// Install a share-nothing pool: worker `i` executes on
+    /// `backends[i % len]` (see
+    /// [`Pipeline::make_backend_pool`](crate::coordinator::Pipeline::make_backend_pool)).
+    pub fn with_backend_pool(mut self, backends: Vec<Box<dyn Backend>>) -> Self {
+        self.backends = backends.into_iter().map(Arc::from).collect();
+        self
+    }
+
+    /// The backend batch worker `worker` executes on ([`Exact`] when none
+    /// was installed).
+    fn backend_for(&self, worker: usize) -> Arc<dyn Backend> {
+        if self.backends.is_empty() {
+            Arc::new(Exact)
+        } else {
+            self.backends[worker % self.backends.len()].clone()
+        }
     }
 }
 
@@ -72,6 +111,12 @@ struct Job {
 pub struct ServerStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
+    /// Batches currently executing across all workers.
+    pub inflight_batches: AtomicU64,
+    /// High-water mark of `inflight_batches` — ≥ 2 demonstrates that the
+    /// engine really executed batches concurrently (the property the old
+    /// global backend mutex made impossible).
+    pub peak_concurrent_batches: AtomicU64,
 }
 
 pub struct Server {
@@ -79,7 +124,7 @@ pub struct Server {
     pub stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
-    batch_handle: Option<std::thread::JoinHandle<()>>,
+    batch_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 /// Batching parameters.
@@ -87,11 +132,28 @@ pub struct Server {
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Batch worker threads executing batches concurrently. 0 = auto
+    /// (`min(worker_count(), 4)` — serving workers multiply with the
+    /// kernel's own `XTPU_THREADS` sharding, so keep this modest).
+    pub workers: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 16, max_wait: Duration::from_millis(5) }
+        Self { max_batch: 16, max_wait: Duration::from_millis(5), workers: 0 }
+    }
+}
+
+impl BatchPolicy {
+    /// The number of batch worker threads [`Server::spawn`] will start for
+    /// this policy (resolves the `workers == 0` auto default). Size backend
+    /// pools with this so every worker gets its own instance.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            threadpool::worker_count().clamp(1, 4)
+        } else {
+            self.workers
+        }
     }
 }
 
@@ -107,13 +169,25 @@ impl Server {
         let (tx, rx) = channel::<Job>();
         let engine = Arc::new(engine);
 
-        // Batcher thread.
-        let batch_handle = {
-            let shutdown = shutdown.clone();
-            let stats = stats.clone();
-            let engine = engine.clone();
-            std::thread::spawn(move || batch_loop(engine, rx, policy, shutdown, stats))
-        };
+        // Batch workers: each owns a backend handle from the engine's pool
+        // and a private RNG; they share only the job queue (collection) —
+        // execution is lock-free and concurrent.
+        let rx = Arc::new(Mutex::new(rx));
+        let batch_handles: Vec<_> = (0..policy.resolved_workers())
+            .map(|worker| {
+                let shutdown = shutdown.clone();
+                let stats = stats.clone();
+                let engine = engine.clone();
+                let rx = rx.clone();
+                let backend = engine.backend_for(worker);
+                let rng = Xoshiro256pp::seeded(
+                    (0x5E47E ^ 0x1234) ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                std::thread::spawn(move || {
+                    batch_worker(engine, backend, rx, policy, shutdown, stats, rng)
+                })
+            })
+            .collect();
 
         // Acceptor thread: one handler thread per connection. Handlers are
         // detached — they exit when their client disconnects or the process
@@ -146,7 +220,7 @@ impl Server {
             stats,
             shutdown,
             accept_handle: Some(accept_handle),
-            batch_handle: Some(batch_handle),
+            batch_handles,
         })
     }
 
@@ -155,7 +229,7 @@ impl Server {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.batch_handle.take() {
+        for h in self.batch_handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -167,35 +241,51 @@ impl Drop for Server {
     }
 }
 
-fn batch_loop(
+/// Collect one batch under the queue lock: block briefly for the first
+/// job, then drain up to `max_batch` or until the deadline. The lock is
+/// released before execution starts.
+fn collect_batch(rx: &Mutex<Receiver<Job>>, policy: &BatchPolicy) -> Vec<Job> {
+    let rx = rx.lock().unwrap();
+    let first = match rx.recv_timeout(Duration::from_millis(20)) {
+        Ok(j) => j,
+        Err(_) => return Vec::new(),
+    };
+    let mut jobs = vec![first];
+    let deadline = std::time::Instant::now() + policy.max_wait;
+    while jobs.len() < policy.max_batch {
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(j) => jobs.push(j),
+            Err(_) => break,
+        }
+    }
+    jobs
+}
+
+/// One batch worker: collect → execute on this worker's own backend and
+/// RNG → reply. No shared mutable state during execution, so workers run
+/// batches (and thus different quality levels) concurrently.
+fn batch_worker(
     engine: Arc<Engine>,
-    rx: Receiver<Job>,
+    backend: Arc<dyn Backend>,
+    rx: Arc<Mutex<Receiver<Job>>>,
     policy: BatchPolicy,
     shutdown: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
+    mut rng: Xoshiro256pp,
 ) {
-    let rng = Mutex::new(Xoshiro256pp::seeded(0x5E47E ^ 0x1234));
     while !shutdown.load(Ordering::Relaxed) {
-        // Collect a batch: block briefly for the first job, then drain up
-        // to max_batch or until the deadline.
-        let first = match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(j) => j,
-            Err(_) => continue,
-        };
-        let mut jobs = vec![first];
-        let deadline = std::time::Instant::now() + policy.max_wait;
-        while jobs.len() < policy.max_batch {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => jobs.push(j),
-                Err(_) => break,
-            }
+        let jobs = collect_batch(&rx, &policy);
+        if jobs.is_empty() {
+            continue;
         }
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        let inflight = stats.inflight_batches.fetch_add(1, Ordering::SeqCst) + 1;
+        stats.peak_concurrent_batches.fetch_max(inflight, Ordering::SeqCst);
         // Group by quality level (each level has its own noise spec).
         let mut by_level: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
         for (i, j) in jobs.iter().enumerate() {
@@ -208,15 +298,13 @@ fn batch_loop(
             }
             let spec = &engine.levels[level].noise;
             let noise_opt = if spec.is_silent() { None } else { Some(spec) };
-            let logits = {
-                let mut rng = rng.lock().unwrap();
-                let mut backend = engine.backend.lock().unwrap();
-                engine.quantized.forward_with(&mut **backend, &x, noise_opt, &mut rng)
-            };
+            let logits =
+                engine.quantized.forward_with(backend.as_ref(), &x, noise_opt, &mut rng);
             for (r, &i) in idxs.iter().enumerate() {
                 let _ = jobs[i].reply.send((level, logits.row(r).to_vec()));
             }
         }
+        stats.inflight_batches.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -298,6 +386,17 @@ impl Client {
     }
 
     pub fn infer(&mut self, pixels: &[f32], quality: usize) -> Result<(usize, Vec<f32>)> {
+        let (class, logits, _) = self.infer_full(pixels, quality)?;
+        Ok((class, logits))
+    }
+
+    /// Like [`Self::infer`] but also returns the quality level the server
+    /// actually applied (out-of-range requests clamp to the last level).
+    pub fn infer_full(
+        &mut self,
+        pixels: &[f32],
+        quality: usize,
+    ) -> Result<(usize, Vec<f32>, usize)> {
         let req = Json::obj(vec![
             (
                 "pixels",
@@ -315,7 +414,8 @@ impl Client {
         let class = resp.get("class")?.as_usize()?;
         let logits: Vec<f32> =
             resp.get("logits")?.as_f64_vec()?.iter().map(|&v| v as f32).collect();
-        Ok((class, logits))
+        let applied = resp.get("quality")?.as_usize()?;
+        Ok((class, logits, applied))
     }
 }
 
@@ -366,9 +466,11 @@ mod tests {
         // Quality level 1 exists and responds.
         let (_, logits) = client.infer(test.images.row(0), 1).unwrap();
         assert_eq!(logits.len(), 10);
-        // Out-of-range quality clamps rather than erroring.
-        let (_, logits) = client.infer(test.images.row(0), 99).unwrap();
+        // Out-of-range quality clamps rather than erroring, and the reply
+        // reports the level actually applied.
+        let (_, logits, applied) = client.infer_full(test.images.row(0), 99).unwrap();
         assert_eq!(logits.len(), 10);
+        assert_eq!(applied, 1);
         assert!(server.stats.requests.load(Ordering::Relaxed) >= n as u64 + 2);
         server.shutdown();
     }
@@ -401,7 +503,7 @@ mod tests {
         let mut server = Server::spawn(
             engine,
             0,
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20), workers: 1 },
         )
         .unwrap();
         let addr = server.addr;

@@ -14,7 +14,9 @@
 //! - [`ErrorInjector::Statistical`]: composed per-column Gaussian draws
 //!   from the fitted error models, fused into the shared
 //!   [`crate::exec::kernel`] tile (the fast path — the same kernel every
-//!   [`crate::exec::Backend`] uses).
+//!   [`crate::exec::Backend`] uses, including its deterministic per-column
+//!   draw streams, so simulator output is reproducible at any
+//!   `XTPU_THREADS`).
 //! - [`ErrorInjector::GateLevel`]: every PE owns a real
 //!   [`VosSimulator`] over the Baugh-Wooley netlist (slow, used to
 //!   cross-validate the statistical backend — see tests and

@@ -169,6 +169,18 @@ impl Xoshiro256pp {
     pub fn fork(&mut self) -> Self {
         Self::seeded(self.next_u64())
     }
+
+    /// Derive the deterministic generator for shard `chunk` of a parallel
+    /// region keyed by `key`. The same `(key, chunk)` pair always yields the
+    /// same stream, independent of thread count or scheduling — this is the
+    /// contract the parallel exec kernel's bit-reproducibility rests on
+    /// (`key` is typically one [`Self::next_u64`] drawn from the parent, so
+    /// the parent advances identically at any `XTPU_THREADS`).
+    pub fn stream(key: u64, chunk: u64) -> Self {
+        // An odd-multiplier chunk offset keeps distinct chunks on distinct
+        // SplitMix64 inputs; seeded() then diffuses into full 256-bit state.
+        Self::seeded(SplitMix64::new(key ^ chunk.wrapping_mul(0xA076_1D64_78BD_642F)).next_u64())
+    }
 }
 
 #[cfg(test)]
@@ -266,6 +278,27 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
         assert_ne!(v, (0..100).collect::<Vec<u32>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn stream_is_deterministic_per_chunk() {
+        // Same (key, chunk) → same stream; distinct chunks → distinct
+        // streams; chunk order of construction is irrelevant.
+        let key = 0xDEAD_BEEF_u64;
+        let take8 = |mut r: Xoshiro256pp| -> Vec<u64> { (0..8).map(|_| r.next_u64()).collect() };
+        for chunk in [0u64, 1, 2, 63, 1 << 40] {
+            let a = take8(Xoshiro256pp::stream(key, chunk));
+            let b = take8(Xoshiro256pp::stream(key, chunk));
+            assert_eq!(a, b);
+        }
+        let mut r0 = Xoshiro256pp::stream(key, 0);
+        let mut r1 = Xoshiro256pp::stream(key, 1);
+        let mut rk = Xoshiro256pp::stream(key ^ 1, 0);
+        let v0: Vec<u64> = (0..8).map(|_| r0.next_u64()).collect();
+        let v1: Vec<u64> = (0..8).map(|_| r1.next_u64()).collect();
+        let vk: Vec<u64> = (0..8).map(|_| rk.next_u64()).collect();
+        assert_ne!(v0, v1);
+        assert_ne!(v0, vk);
     }
 
     #[test]

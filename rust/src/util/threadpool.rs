@@ -35,6 +35,49 @@ pub fn split_ranges(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
     out
 }
 
+/// [`split_ranges`] with every boundary (except the final end) snapped to a
+/// multiple of `align`. The parallel exec kernel shards on fixed-size RNG
+/// chunks; aligned worker ranges guarantee each chunk is processed whole by
+/// exactly one worker, so the draw streams are thread-count-independent.
+pub fn split_ranges_aligned(n: usize, workers: usize, align: usize) -> Vec<std::ops::Range<usize>> {
+    let align = align.max(1);
+    if align == 1 {
+        return split_ranges(n, workers);
+    }
+    let blocks = n.div_ceil(align);
+    split_ranges(blocks, workers)
+        .into_iter()
+        .map(|r| (r.start * align)..(r.end * align).min(n))
+        .collect()
+}
+
+/// Split a `[rows, row_len]` row-major matrix into contiguous row bands
+/// (boundaries aligned to `align` rows) and run `f(row_range, band)` on each
+/// band in parallel. Disjoint mutable bands — no locks, no copies.
+pub fn parallel_rows<T, F>(out: &mut [T], rows: usize, row_len: usize, align: usize, f: F)
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_len);
+    let ranges = split_ranges_aligned(rows, worker_count(), align);
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(r, out);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        for r in ranges {
+            let (band, tail) = rest.split_at_mut(r.len() * row_len);
+            rest = tail;
+            let f = &f;
+            scope.spawn(move || f(r, band));
+        }
+    });
+}
+
 /// Run `f(range, worker_index)` over a partition of `0..n` in parallel and
 /// collect the per-worker results in order.
 pub fn parallel_chunks<R, F>(n: usize, f: F) -> Vec<R>
@@ -156,6 +199,44 @@ mod tests {
         for w in parts.windows(2) {
             assert_eq!(w[0].1, w[1].0);
         }
+    }
+
+    #[test]
+    fn aligned_split_covers_everything_on_chunk_boundaries() {
+        for n in [0usize, 1, 63, 64, 65, 1000] {
+            for w in [1usize, 2, 3, 8] {
+                for align in [1usize, 16, 64] {
+                    let ranges = split_ranges_aligned(n, w, align);
+                    let mut next = 0;
+                    for r in &ranges {
+                        assert_eq!(r.start, next, "n={n} w={w} align={align}");
+                        assert_eq!(r.start % align, 0, "unaligned start");
+                        assert!(r.end > r.start);
+                        next = r.end;
+                    }
+                    assert_eq!(next, n, "n={n} w={w} align={align} uncovered tail");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_rows_matches_serial() {
+        let (rows, row_len) = (129, 7);
+        let mut out = vec![0u32; rows * row_len];
+        parallel_rows(&mut out, rows, row_len, 16, |range, band| {
+            for (i, r) in range.clone().enumerate() {
+                for c in 0..row_len {
+                    band[i * row_len + c] = (r * row_len + c) as u32;
+                }
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+        // Degenerate shapes.
+        let mut empty: Vec<u32> = vec![];
+        parallel_rows(&mut empty, 0, 5, 8, |_, _| panic!("no rows"));
     }
 
     #[test]

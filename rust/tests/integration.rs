@@ -314,10 +314,10 @@ fn clean_inference_identical_across_backends() {
     let mut rng1 = Xoshiro256pp::seeded(1);
     let base = q.forward(&x, None, &mut rng1);
     let mut rng2 = Xoshiro256pp::seeded(1);
-    let via_exact = q.forward_with(&mut Exact, &x, None, &mut rng2);
+    let via_exact = q.forward_with(&Exact, &x, None, &mut rng2);
     let mut rng3 = Xoshiro256pp::seeded(1);
-    let mut stat = Statistical::new(reg);
-    let via_stat = q.forward_with(&mut stat, &x, None, &mut rng3);
+    let stat = Statistical::new(reg);
+    let via_stat = q.forward_with(&stat, &x, None, &mut rng3);
     assert_eq!(base.data, via_exact.data);
     assert_eq!(base.data, via_stat.data);
 }

@@ -1,0 +1,379 @@
+//! Reproducibility test suite for the parallel exec layer and the
+//! multi-worker serving engine:
+//!
+//! - property-style randomized kernel tests (~100 shapes, ragged/empty/
+//!   1-row, int8 saturation corners) bit-matched against the naive oracle;
+//! - bit-identical `Statistical` backend output across `XTPU_THREADS`
+//!   (the deterministic per-shard RNG stream guarantee);
+//! - per-column error moments still matching the registry predictions;
+//! - a ≥16-client mixed-quality server stress test demonstrating correct
+//!   per-request responses, real batching, and genuinely concurrent batch
+//!   execution (no global backend mutex on the hot path).
+//!
+//! Environment note: every `XTPU_THREADS` mutation lives inside ONE test
+//! function. Other tests in this binary run concurrently with it, which is
+//! safe precisely because of the property under test — kernel output does
+//! not depend on the observed thread count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use xtpu::errormodel::ErrorModelRegistry;
+use xtpu::exec::{self, kernel, Backend, NoiseView, Statistical};
+use xtpu::nn::data::synth_mnist;
+use xtpu::nn::layers::Activation;
+use xtpu::nn::model::fc_mnist;
+use xtpu::nn::quant::{NoiseSpec, QuantMac, QuantizedModel};
+use xtpu::nn::train::{train, TrainConfig};
+use xtpu::server::{BatchPolicy, Client, Engine, QualityLevel, Server};
+use xtpu::timing::voltage::VoltageLadder;
+use xtpu::util::rng::Xoshiro256pp;
+
+fn random_mats(m: usize, k: usize, n: usize, rng: &mut Xoshiro256pp) -> (Vec<i8>, Vec<i8>) {
+    // Full int8 range including −128, with the leading entries pinned to
+    // the saturation corners so every run exercises |a·w| = 128².
+    let mut a: Vec<i8> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i8).collect();
+    let mut w: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-128, 127) as i8).collect();
+    for (j, v) in a.iter_mut().take(4).enumerate() {
+        *v = if j % 2 == 0 { -128 } else { 127 };
+    }
+    for (j, v) in w.iter_mut().take(4).enumerate() {
+        *v = if j % 2 == 0 { 127 } else { -128 };
+    }
+    (a, w)
+}
+
+fn synthetic_registry() -> ErrorModelRegistry {
+    ErrorModelRegistry::synthetic(&VoltageLadder::paper_default(), &[3.0e4, 1.0e4, 2.0e3, 0.0])
+}
+
+#[test]
+fn kernel_property_random_shapes_bit_match_reference() {
+    let mut rng = Xoshiro256pp::seeded(0xF00D);
+    // Pinned edge cases: empty dims, single rows, exact tile multiples and
+    // off-by-one tile remainders — then ~100 random shapes.
+    let mut shapes: Vec<(usize, usize, usize)> = vec![
+        (0, 0, 0),
+        (0, 5, 3),
+        (4, 0, 6),
+        (4, 7, 0),
+        (1, 1, 1),
+        (1, 784, 1),
+        (1, 257, 130),
+        (3, kernel::TILE_K, 64),
+        (2, kernel::TILE_K + 1, 65),
+        (2, kernel::TILE_K - 1, 63),
+        (5, 2 * kernel::TILE_K + 17, 29),
+    ];
+    for _ in 0..100 {
+        shapes.push((rng.index(33), rng.index(300), rng.index(120)));
+    }
+    for (i, &(m, k, n)) in shapes.iter().enumerate() {
+        let (a, w) = random_mats(m, k, n, &mut rng);
+        let expect = kernel::reference_matmul(&a, &w, m, k, n);
+        assert_eq!(
+            kernel::matmul_i8(&a, &w, m, k, n),
+            expect,
+            "shape {i}: {m}×{k}×{n} (systolic layout)"
+        );
+        // The transposed (QuantMac) entry point must agree on the same
+        // problem.
+        let mut wt = vec![0i8; n * k];
+        for r in 0..k {
+            for c in 0..n {
+                wt[c * k + r] = w[r * n + c];
+            }
+        }
+        assert_eq!(
+            kernel::matmul_i8t(&a, &wt, m, k, n),
+            expect,
+            "shape {i}: {m}×{k}×{n} (transposed layout)"
+        );
+    }
+}
+
+#[test]
+fn kernel_saturated_inputs_accumulate_exactly() {
+    // All inputs at the extreme corners: k·128² stays far inside i32, and
+    // the tiled kernel must carry it exactly.
+    let (m, k, n) = (8, 512, 16);
+    let a = vec![-128i8; m * k];
+    let w = vec![-128i8; k * n];
+    let out = kernel::matmul_i8(&a, &w, m, k, n);
+    assert!(out.iter().all(|&v| v == (k as i32) * 128 * 128));
+    let w2 = vec![127i8; k * n];
+    let out2 = kernel::matmul_i8(&a, &w2, m, k, n);
+    assert!(out2.iter().all(|&v| v == (k as i32) * -128 * 127));
+}
+
+#[test]
+fn statistical_backend_bit_identical_across_thread_counts() {
+    let reg = synthetic_registry();
+    let be = Statistical::new(reg);
+    // Sizes above the kernel's parallel threshold so sharding really kicks
+    // in, and batches spanning several LAYER_ROW_CHUNK stream chunks.
+    let (m, k, n) = (192, 96, 24);
+    let mut mrng = Xoshiro256pp::seeded(0xABCD);
+    let (a, w) = random_mats(m, k, n, &mut mrng);
+    let levels: Vec<usize> = (0..n).map(|c| c % 4).collect();
+
+    let (fan_in, out, batch) = (64, 40, 200);
+    let wq: Vec<i8> = (0..out * fan_in).map(|_| mrng.range_i64(-127, 127) as i8).collect();
+    let xq: Vec<i8> = (0..batch * fan_in).map(|_| mrng.range_i64(-127, 127) as i8).collect();
+    let mac = QuantMac {
+        wq,
+        fan_in,
+        out,
+        w_scale: 1.0,
+        x_scale: 1.0,
+        bias: vec![0.0; out],
+        act: Activation::Linear,
+    };
+    // Mixed live/silent units: determinism must hold with draw-skipping.
+    let mean: Vec<f64> = (0..out).map(|u| if u % 3 == 0 { 2.0 } else { 0.0 }).collect();
+    let std: Vec<f64> = (0..out).map(|u| if u % 2 == 0 { 500.0 } else { 0.0 }).collect();
+
+    // Restore (not delete) any pre-set XTPU_THREADS afterwards — the CI
+    // matrix pins it for the whole test run.
+    let prior = std::env::var("XTPU_THREADS").ok();
+    let mut mm_outs = Vec::new();
+    let mut layer_outs = Vec::new();
+    for threads in ["1", "2", "8"] {
+        std::env::set_var("XTPU_THREADS", threads);
+        let mut r1 = Xoshiro256pp::seeded(7);
+        mm_outs.push(be.matmul_i8(&a, &w, m, k, n, &levels, &mut r1));
+        let mut r2 = Xoshiro256pp::seeded(9);
+        layer_outs.push(be.execute_layer(
+            &mac,
+            &xq,
+            batch,
+            Some(NoiseView::new(&mean, &std)),
+            &mut r2,
+        ));
+    }
+    match prior {
+        Some(v) => std::env::set_var("XTPU_THREADS", v),
+        None => std::env::remove_var("XTPU_THREADS"),
+    }
+    assert_eq!(mm_outs[0], mm_outs[1], "matmul differs between 1 and 2 threads");
+    assert_eq!(mm_outs[0], mm_outs[2], "matmul differs between 1 and 8 threads");
+    assert_eq!(layer_outs[0], layer_outs[1], "execute_layer differs between 1 and 2 threads");
+    assert_eq!(layer_outs[0], layer_outs[2], "execute_layer differs between 1 and 8 threads");
+}
+
+#[test]
+fn statistical_column_moments_match_registry_predictions() {
+    // The keyed per-column draw streams must not change the composed
+    // statistics: measured per-column error mean/variance through
+    // column_error_stats still match the registry's eq 11–13 predictions.
+    let reg = synthetic_registry();
+    let be = Statistical::new(reg.clone());
+    let (m, k, n) = (6000, 16, 3);
+    let mut rng = Xoshiro256pp::seeded(0xBEEF);
+    let (a, w) = random_mats(m, k, n, &mut rng);
+    let levels = [0usize, 1, 3]; // two overscaled columns + one nominal
+    let stats = exec::column_error_stats(&be, &a, &w, m, k, n, &levels, &mut rng);
+    let nominal = reg.ladder.len() - 1;
+    for (c, &lvl) in levels.iter().enumerate() {
+        let (mean, var) = stats[c];
+        if lvl == nominal {
+            assert_eq!(mean, 0.0, "nominal column {c} corrupted");
+            assert_eq!(var, 0.0, "nominal column {c} corrupted");
+            continue;
+        }
+        let model = reg.model(lvl);
+        let pred_var = model.column_variance(k);
+        let ratio = var / pred_var;
+        assert!(
+            (0.85..1.15).contains(&ratio),
+            "col {c}: var {var:.3e} vs predicted {pred_var:.3e} (ratio {ratio:.2})"
+        );
+        let mean_tol = 6.0 * pred_var.sqrt() / (m as f64).sqrt();
+        assert!(
+            (mean - model.column_mean(k)).abs() < mean_tol,
+            "col {c}: mean {mean:.2} vs predicted {:.2} (tol {mean_tol:.2})",
+            model.column_mean(k)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server stress test
+// ---------------------------------------------------------------------------
+
+/// A backend that computes exactly (via the shared kernel) but rendezvouses
+/// in `execute_layer`: the first caller blocks until a second caller enters
+/// concurrently (or a generous timeout passes, so a serialized engine fails
+/// the assertion instead of deadlocking). With the old global
+/// `Mutex<Box<dyn Backend>>` engine the peak could never exceed 1.
+#[derive(Clone, Default)]
+struct Rendezvous {
+    shared: Arc<RendezvousState>,
+}
+
+#[derive(Default)]
+struct RendezvousState {
+    inside: Mutex<usize>,
+    cv: Condvar,
+    peak: AtomicU64,
+}
+
+impl Backend for Rendezvous {
+    fn name(&self) -> &'static str {
+        "rendezvous"
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_i8(
+        &self,
+        a: &[i8],
+        w: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        col_levels: &[usize],
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<i32> {
+        exec::Exact.matmul_i8(a, w, m, k, n, col_levels, rng)
+    }
+
+    fn execute_layer(
+        &self,
+        mac: &QuantMac,
+        xq: &[i8],
+        batch: usize,
+        noise: Option<NoiseView<'_>>,
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<i32> {
+        {
+            let mut inside = self.shared.inside.lock().unwrap();
+            *inside += 1;
+            self.shared.peak.fetch_max(*inside as u64, Ordering::SeqCst);
+            self.shared.cv.notify_all();
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            while self.shared.peak.load(Ordering::SeqCst) < 2 {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) =
+                    self.shared.cv.wait_timeout(inside, deadline - now).unwrap();
+                inside = guard;
+            }
+        }
+        let out = exec::execute_layer_kernel(mac, xq, batch, noise, rng);
+        let mut inside = self.shared.inside.lock().unwrap();
+        *inside -= 1;
+        out
+    }
+}
+
+fn stress_engine() -> (Engine, xtpu::nn::data::Dataset) {
+    let mut rng = Xoshiro256pp::seeded(71);
+    let mut model = fc_mnist(Activation::Relu, &mut rng);
+    let train_set = synth_mnist(400, 72);
+    train(&mut model, &train_set, &TrainConfig { epochs: 2, ..Default::default() });
+    let test = synth_mnist(64, 73);
+    let calib = test.batch(&(0..32).collect::<Vec<_>>()).0;
+    let q = QuantizedModel::quantize(&model, &calib);
+    let n = q.num_neurons();
+    let mut noisy = NoiseSpec::silent(n);
+    for s in noisy.std.iter_mut().take(128) {
+        *s = 1500.0;
+    }
+    let levels = vec![
+        QualityLevel { name: "exact".into(), noise: NoiseSpec::silent(n), energy_saving: 0.0 },
+        QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3 },
+    ];
+    (Engine::new(q, levels, 784), test)
+}
+
+#[test]
+fn server_stress_mixed_quality_concurrent_batches() {
+    let (engine, test) = stress_engine();
+    // Exact reference logits per test image: quality-0 responses must match
+    // them (silent noise → deterministic forward, independent of batch
+    // composition and thread count).
+    let expected: Vec<Vec<f32>> = {
+        let idx: Vec<usize> = (0..test.len()).collect();
+        let (x, _) = test.batch(&idx);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let logits = engine.quantized.forward(&x, None, &mut rng);
+        (0..test.len()).map(|r| logits.row(r).to_vec()).collect()
+    };
+
+    let rendezvous = Rendezvous::default();
+    let shared = rendezvous.shared.clone();
+    // Share-nothing pool: four workers, each with its own backend instance
+    // (they share only the rendezvous instrumentation).
+    let engine = engine.with_backend_pool(
+        (0..4).map(|_| Box::new(rendezvous.clone()) as Box<dyn Backend>).collect(),
+    );
+    let mut server = Server::spawn(
+        engine,
+        0,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5), workers: 4 },
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    let n_clients = 16;
+    let per_client = 5;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let expected = expected.clone();
+            let test = test.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for r in 0..per_client {
+                    let idx = (c * per_client + r) % test.len();
+                    // Mixed quality levels, including out-of-range (2 → 1).
+                    let quality = (c + r) % 3;
+                    let (_, logits, applied) =
+                        client.infer_full(test.images.row(idx), quality).unwrap();
+                    assert_eq!(logits.len(), 10, "client {c} req {r}");
+                    assert_eq!(applied, quality.min(1), "client {c} req {r} quality");
+                    if quality == 0 {
+                        for (g, e) in logits.iter().zip(&expected[idx]) {
+                            assert!(
+                                (g - e).abs() <= 1e-4 * e.abs().max(1.0),
+                                "client {c} req {r}: exact-quality logits drifted \
+                                 ({g} vs {e})"
+                            );
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Join with a watchdog so a deadlocked engine fails loudly instead of
+    // hanging the test binary forever.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    for h in handles {
+        while !h.is_finished() {
+            assert!(std::time::Instant::now() < deadline, "server deadlocked under load");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        h.join().unwrap();
+    }
+
+    let requests = server.stats.requests.load(Ordering::Relaxed);
+    let batches = server.stats.batches.load(Ordering::Relaxed);
+    assert_eq!(requests, (n_clients * per_client) as u64);
+    assert!(
+        batches < requests,
+        "dynamic batching never coalesced ({batches} batches for {requests} requests)"
+    );
+    // The engine-level view of the same fact, recorded by the workers.
+    let peak_engine = server.stats.peak_concurrent_batches.load(Ordering::Relaxed);
+    // The backend-level proof: two execute_layer calls overlapped in time.
+    let peak_backend = shared.peak.load(Ordering::SeqCst);
+    assert!(
+        peak_backend >= 2,
+        "batches never executed concurrently (backend peak {peak_backend}, \
+         engine peak {peak_engine})"
+    );
+    server.shutdown();
+}
