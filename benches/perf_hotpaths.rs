@@ -179,6 +179,32 @@ fn main() {
     );
     report.push(("l3c_ilp_ms", Json::Num(dt * 1000.0)));
 
+    // --- L3g: multi-budget plan sweep (sequential vs parallel solve) ------
+    // The offline planner solves every MSE_UB budget into a deployable
+    // VoltagePlan; solve_many fans the MCKPs out across the thread pool.
+    let mut planner = xtpu::plan::Planner::new(common::bench_config());
+    planner.warm().unwrap();
+    let budgets: Vec<f64> = (1..=8).map(|i| i as f64 * 0.5).collect();
+    let t0 = std::time::Instant::now();
+    for &f in &budgets {
+        std::hint::black_box(planner.solve(f).unwrap());
+    }
+    let seq_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    std::hint::black_box(planner.solve_many(&budgets).unwrap());
+    let par_s = t0.elapsed().as_secs_f64();
+    println!(
+        "L3g plan sweep    : {:>8.2} ms sequential → {:>8.2} ms parallel \
+         ({:.2}× on {} budgets)",
+        seq_s * 1000.0,
+        par_s * 1000.0,
+        seq_s / par_s.max(1e-9),
+        budgets.len()
+    );
+    report.push(("l3g_plan_seq_ms", Json::Num(seq_s * 1000.0)));
+    report.push(("l3g_plan_par_ms", Json::Num(par_s * 1000.0)));
+    report.push(("l3g_plan_speedup", Json::Num(seq_s / par_s.max(1e-9))));
+
     // --- L3d: quantized inference (serving path, exec backend) ------------
     let calib = sys.test.batch(&(0..32).collect::<Vec<_>>()).0;
     let q = QuantizedModel::quantize(&sys.model, &calib);

@@ -13,9 +13,10 @@
 //! Run after `make artifacts`: `cargo run --release --example mnist_fc_pipeline`
 
 use anyhow::Result;
-use xtpu::assign::AssignmentProblem;
 use xtpu::config::ExperimentConfig;
 use xtpu::coordinator::{systolic_cross_check, Pipeline};
+use xtpu::nn::quant::NoiseSpec;
+use xtpu::plan::VoltagePlan;
 use xtpu::runtime::{artifacts_dir, FcExecutor, Runtime};
 use xtpu::simulator::WeightMemory;
 use xtpu::util::rng::Xoshiro256pp;
@@ -66,6 +67,21 @@ fn main() -> Result<()> {
     }
     let headline = headline.expect("200 % budget in sweep");
 
+    // --- deployable plan artifact (xtpu plan → xtpu serve --plan) --------
+    // Every solve now yields a serializable VoltagePlan; round-trip the
+    // headline through disk exactly as the serving workflow would.
+    let plan_path =
+        std::path::Path::new("artifacts").join(headline.plan.file_name());
+    headline.plan.save(&plan_path)?;
+    let plan = VoltagePlan::load(&plan_path)?;
+    assert_eq!(plan.level, headline.assignment.level);
+    println!(
+        "\nplan artifact: {} (fingerprint {}, predicted saving {:.1}%)",
+        plan_path.display(),
+        plan.model_fingerprint,
+        plan.energy_saving * 100.0
+    );
+
     // --- augmented weight memory (Fig 7) --------------------------------
     let mac = match &sys.quantized.layers[0] {
         xtpu::nn::quant::QLayer::Dense(m) => m,
@@ -105,14 +121,9 @@ fn main() -> Result<()> {
         let mut rt = Runtime::new(&artifacts_dir())?;
         let mut exec = FcExecutor::from_quantized(&sys.quantized, "linear", 32)?;
         rt.load(&exec.artifact)?;
-        let problem = AssignmentProblem::build(
-            &sys.es,
-            &sys.fan_in,
-            &sys.registry,
-            &sys.power,
-            headline.budget_abs,
-        );
-        exec.set_noise(problem.noise_spec(&headline.assignment, &sys.registry));
+        // The noise spec comes straight from the round-tripped plan — the
+        // same derivation the serving engine uses.
+        exec.set_noise(NoiseSpec::from_plan(&plan, &sys.registry));
         let idx: Vec<usize> = (0..sys.test.len().min(960)).collect();
         let mut correct = 0usize;
         let mut total = 0usize;

@@ -8,11 +8,9 @@
 
 use anyhow::Result;
 use std::time::Instant;
-use xtpu::assign::AssignmentProblem;
 use xtpu::config::ExperimentConfig;
-use xtpu::coordinator::Pipeline;
-use xtpu::nn::quant::NoiseSpec;
-use xtpu::server::{BatchPolicy, Client, Engine, QualityLevel, Server};
+use xtpu::plan::{make_backend_pool, Planner};
+use xtpu::server::{BatchPolicy, Client, Engine, Server};
 
 fn main() -> Result<()> {
     let cfg = ExperimentConfig {
@@ -23,41 +21,29 @@ fn main() -> Result<()> {
         validation_runs: 1,
         ..Default::default()
     };
-    let pipeline = Pipeline::new(cfg);
-    let sys = pipeline.prepare()?;
 
-    // Pre-solve three quality levels: exact, balanced, eco.
-    let mut levels = vec![QualityLevel {
-        name: "exact".into(),
-        noise: NoiseSpec::silent(sys.es.len()),
-        energy_saving: 0.0,
-    }];
-    for (name, f) in [("balanced", 0.5f64), ("eco", 5.0)] {
-        let r = pipeline.run_budget(&sys, f)?;
-        let problem = AssignmentProblem::build(
-            &sys.es,
-            &sys.fan_in,
-            &sys.registry,
-            &sys.power,
-            r.budget_abs,
-        );
-        levels.push(QualityLevel {
-            name: name.into(),
-            noise: problem.noise_spec(&r.assignment, &sys.registry),
-            energy_saving: r.assignment.energy_saving,
-        });
-    }
-    for (i, l) in levels.iter().enumerate() {
-        println!("quality {i}: {:>8} → {:.1}% energy saving", l.name, l.energy_saving * 100.0);
+    // Offline: pre-solve three quality levels — exact, balanced, eco — as
+    // deployable VoltagePlan artifacts (all budgets solved in parallel).
+    // This is exactly what `xtpu plan` writes to disk.
+    let mut planner = Planner::new(cfg);
+    let mut plans = planner.solve_many(&[0.0, 0.5, 5.0])?;
+    plans[1].name = "balanced".into();
+    plans[2].name = "eco".into();
+    for (i, p) in plans.iter().enumerate() {
+        println!("quality {i}: {:>8} → {:.1}% energy saving", p.name, p.energy_saving * 100.0);
     }
 
-    // Share-nothing backend pool (the config-selected engine, one instance
-    // per batch worker): each level's pre-solved NoiseSpec is injected on
-    // top of the same shared kernel the validation pipeline used, and
+    // Online: the engine derives its quality levels from the plans (noise
+    // spec + energy saving from the solved assignment, not hand-rolled),
+    // on a share-nothing backend pool: one instance per batch worker, so
     // batches at different quality levels execute concurrently.
     let workers = 2;
-    let engine = Engine::new(sys.quantized.clone(), levels.clone(), 784)
-        .with_backend_pool(pipeline.make_backend_pool(&sys.registry, workers)?);
+    let registry = planner.registry()?.clone();
+    let quantized = planner.trained()?.quantized.clone();
+    let test = planner.trained()?.test.clone();
+    let pool = make_backend_pool(&planner.cfg, &registry, workers)?;
+    let engine =
+        Engine::from_plans(quantized, &registry, &plans, 784)?.with_backend_pool(pool);
     let mut server = Server::spawn(
         engine,
         0,
@@ -73,7 +59,6 @@ fn main() -> Result<()> {
     let n_clients = 4;
     let per_client = 50;
     let addr = server.addr;
-    let test = sys.test.clone();
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_clients)
         .map(|c| {
@@ -124,6 +109,13 @@ fn main() -> Result<()> {
         server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
         total as f64 / server.stats.batches.load(std::sync::atomic::Ordering::Relaxed) as f64
     );
+    let per_level: Vec<u64> = server
+        .stats
+        .per_level
+        .iter()
+        .map(|c| c.load(std::sync::atomic::Ordering::Relaxed))
+        .collect();
+    println!("requests per quality level (plan utilization): {per_level:?}");
     server.shutdown();
     Ok(())
 }

@@ -127,19 +127,16 @@ impl AssignmentProblem {
     }
 
     /// Noise spec (mean/std per neuron) implied by an assignment — what the
-    /// validation pass injects (eqs 12–13).
+    /// validation pass injects (eqs 12–13). Shares
+    /// [`NoiseSpec::from_levels`] with the plan-serving path, so the spec a
+    /// deployed [`crate::plan::VoltagePlan`] reconstructs is bit-identical
+    /// to the one the offline validation used.
     pub fn noise_spec(
         &self,
         assignment: &VoltageAssignment,
         registry: &ErrorModelRegistry,
     ) -> NoiseSpec {
-        let mut spec = NoiseSpec::silent(self.es.len());
-        for (n, &lvl) in assignment.level.iter().enumerate() {
-            let m = registry.model(lvl);
-            spec.mean[n] = m.column_mean(self.fan_in[n]);
-            spec.std[n] = m.column_variance(self.fan_in[n]).sqrt();
-        }
-        spec
+        NoiseSpec::from_levels(&assignment.level, &self.fan_in, registry)
     }
 }
 

@@ -1,46 +1,52 @@
-//! The X-TPU framework coordinator — the paper's Fig-4 flow, end to end:
+//! The X-TPU framework coordinator — a thin orchestration shell over the
+//! staged [`crate::plan::Planner`], exposing the paper's Fig-4 flow as one
+//! experiment-facing API:
 //!
 //! ```text
 //! user inputs (quality constraint, arch params, NN model)
 //!   → architecture characterization (gate-level VOS simulation)
 //!   → statistical error models per voltage          (errormodel)
 //!   → neuron error sensitivities                    (sensitivity)
-//!   → ILP voltage assignment                        (ilp/assign)
+//!   → ILP voltage assignment                        (ilp/assign/plan)
 //!   → <neuron, voltage> tuples → augmented weights  (assign/memory)
 //!   → validation: noise-injected quantized inference (nn/quant)
 //! ```
 //!
-//! [`Pipeline::prepare`] runs the heavy, budget-independent stages once
-//! (training, characterization, ES); [`Pipeline::run_budget`] then sweeps
-//! quality constraints cheaply — the structure the runtime-adjustable
-//! X-TPU needs, since re-selecting a quality level must not re-characterize
-//! the hardware.
-
-use std::path::PathBuf;
+//! The heavy lifting lives in the planner's stages, each cached (in memory
+//! and — for the trained model, error-model registry, and ES vector — on
+//! disk): [`Pipeline::prepare`] warms every budget-independent stage once;
+//! [`Pipeline::run_budget`] solves + validates one quality constraint; and
+//! [`Pipeline::run`] sweeps all configured budgets with the **solves and
+//! validations fanned out in parallel** on [`crate::util::threadpool`] —
+//! each budget's work is deterministic given the prepared stages, so the
+//! parallel sweep is bit-identical to [`Pipeline::run_sequential`].
+//!
+//! What the coordinator itself still owns is validation (noise-injected
+//! inference vs clean logits) and the cross-checks that tie the fast
+//! statistical path back to the gate level; everything producible offline
+//! as an artifact is a [`crate::plan::VoltagePlan`].
 
 use anyhow::{Context, Result};
 
-use crate::assign::{AssignmentProblem, Solver, VoltageAssignment};
+use crate::assign::{Solver, VoltageAssignment};
 use crate::config::ExperimentConfig;
-use crate::errormodel::{CharacterizeOptions, ErrorModelRegistry};
+use crate::errormodel::ErrorModelRegistry;
 use crate::exec::{self, Backend};
-use crate::nn::data::{synth_cifar, synth_mnist, Dataset};
-use crate::nn::model::{fc_mnist, lenet5, resnet_tiny, Model};
+use crate::nn::data::Dataset;
+use crate::nn::model::Model;
 use crate::nn::quant::QuantizedModel;
 use crate::nn::tensor::Tensor;
-use crate::nn::train::{train, TrainConfig};
+use crate::plan::{Planner, VoltagePlan};
 use crate::power::PePowerModel;
 use crate::quality;
-use crate::runtime::Runtime;
-use crate::sensitivity::{statistical_es, EsOptions};
-use crate::timing::baugh_wooley_8x8;
-use crate::timing::circuits::pe_datapath;
-use crate::timing::gate::i64_to_bits;
-use crate::timing::sta::{clock_period, ChipInstance};
-use crate::timing::voltage::{Technology, VoltageLadder};
-use crate::timing::vos::VosSimulator;
+use crate::timing::sta::ChipInstance;
 use crate::timing::Netlist;
 use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::{parallel_chunks_capped, worker_count};
+
+// The stage implementations live with the planner; re-exported here for
+// the benches/examples that used the coordinator paths.
+pub use crate::plan::{baseline_mse_vs_onehot, measure_power_model};
 
 /// Everything the budget sweep needs, computed once.
 pub struct PreparedSystem {
@@ -57,17 +63,22 @@ pub struct PreparedSystem {
     /// Nominal test MSE vs one-hot targets — the reference the paper's
     /// "MSE increment %" bounds are relative to.
     pub baseline_mse: f64,
+    /// Fingerprint of the trained model (embedded in every plan).
+    pub fingerprint: String,
     pub train_seconds: f64,
     pub characterize_seconds: f64,
     pub es_seconds: f64,
 }
 
-/// Result of one quality-constraint point (one row of Fig 10/13/14).
+/// Result of one quality-constraint point (one row of Fig 10/13/14): the
+/// deployable plan plus its measured validation.
 #[derive(Clone, Debug)]
 pub struct BudgetReport {
     pub mse_ub_fraction: f64,
     pub budget_abs: f64,
     pub assignment: VoltageAssignment,
+    /// The serializable artifact of this solve (what `xtpu plan` writes).
+    pub plan: VoltagePlan,
     /// Measured output-MSE increment (noisy vs clean logits).
     pub validated_mse: f64,
     pub accuracy: f64,
@@ -84,93 +95,19 @@ impl Pipeline {
         Self { cfg }
     }
 
-    fn model_cache_path(&self) -> PathBuf {
-        PathBuf::from(&self.cfg.artifacts_dir).join(format!(
-            "models/{}_{}_s{}_n{}.json",
-            self.cfg.model,
-            self.cfg.activation.name(),
-            self.cfg.seed,
-            self.cfg.train_samples
-        ))
-    }
-
-    fn registry_cache_path(&self) -> PathBuf {
-        PathBuf::from(&self.cfg.artifacts_dir).join(format!(
-            "error_models_s{}_n{}.json",
-            self.cfg.seed, self.cfg.characterize_samples
-        ))
+    /// A fresh staged planner for this experiment config.
+    pub fn planner(&self) -> Planner {
+        Planner::new(self.cfg.clone())
     }
 
     /// Build (or load from cache) the trained float model + datasets.
     pub fn trained_model(&self) -> Result<(Model, Dataset, Dataset)> {
-        let cfg = &self.cfg;
-        let (train_set, test_set) = match cfg.model.as_str() {
-            "resnet_tiny" => (
-                synth_cifar(cfg.train_samples, cfg.seed ^ 0x11),
-                synth_cifar(cfg.test_samples, cfg.seed ^ 0x22),
-            ),
-            _ => (
-                synth_mnist(cfg.train_samples, cfg.seed ^ 0x11),
-                synth_mnist(cfg.test_samples, cfg.seed ^ 0x22),
-            ),
-        };
-        let cache = self.model_cache_path();
-        if cache.exists() {
-            if let Ok(m) = Model::load(&cache) {
-                return Ok((m, train_set, test_set));
-            }
-        }
-        let mut rng = Xoshiro256pp::seeded(cfg.seed);
-        let mut model = match cfg.model.as_str() {
-            "fc_mnist" => fc_mnist(cfg.activation, &mut rng),
-            "lenet5" => lenet5(&mut rng),
-            "resnet_tiny" => resnet_tiny(&mut rng),
-            other => anyhow::bail!("unknown model '{other}'"),
-        };
-        let tc = TrainConfig {
-            epochs: cfg.epochs,
-            batch_size: 32,
-            // FC nets train paper-style: MSE vs one-hot, so "MSE_UB as % of
-            // nominal MSE" operates on the [0,1] output scale the paper
-            // assumes; CNNs keep softmax cross-entropy.
-            lr: if cfg.model == "fc_mnist" { 0.05 } else { 0.02 },
-            momentum: 0.9,
-            seed: cfg.seed,
-            loss: if cfg.model == "fc_mnist" {
-                crate::nn::train::Loss::Mse
-            } else {
-                crate::nn::train::Loss::SoftmaxCrossEntropy
-            },
-            log_every: 0,
-        };
-        train(&mut model, &train_set, &tc);
-        model.save(&cache).context("caching trained model")?;
-        Ok((model, train_set, test_set))
+        crate::plan::train_model(&self.cfg)
     }
 
     /// Characterize the PE multiplier (or load the cached registry).
     pub fn error_models(&self) -> Result<ErrorModelRegistry> {
-        let tech = Technology::default();
-        let ladder = VoltageLadder::new(&self.cfg.voltages, tech);
-        let cache = self.registry_cache_path();
-        if cache.exists() {
-            if let Ok(reg) = ErrorModelRegistry::load(&cache, tech) {
-                if reg.ladder.len() == ladder.len() {
-                    return Ok(reg);
-                }
-            }
-        }
-        let netlist = baugh_wooley_8x8("pe_multiplier");
-        let mut rng = Xoshiro256pp::seeded(self.cfg.seed ^ 0xC41);
-        let chip = ChipInstance::sample(&netlist, &tech, &mut rng);
-        let opts = CharacterizeOptions {
-            samples: self.cfg.characterize_samples,
-            seed: self.cfg.seed ^ 0xE44,
-            ..Default::default()
-        };
-        let reg = ErrorModelRegistry::characterize(&netlist, &chip, &ladder, &opts);
-        reg.save(&cache).ok();
-        Ok(reg)
+        crate::plan::characterize_registry(&self.cfg)
     }
 
     /// Measure the PE power model from gate-level switching activity.
@@ -184,19 +121,7 @@ impl Pipeline {
     /// explicitly via [`exec::GateLevel`] (it needs a characterized chip
     /// and is orders of magnitude slower — see [`backend_cross_check`]).
     pub fn make_backend(&self, registry: &ErrorModelRegistry) -> Result<Box<dyn Backend>> {
-        match self.cfg.backend.as_str() {
-            "exact" => Ok(Box::new(exec::Exact)),
-            "statistical" => Ok(Box::new(exec::Statistical::new(registry.clone()))),
-            "pjrt" => {
-                // Root the runtime at the experiment's artifacts dir (the
-                // same one the model/registry caches use), not the global
-                // default, so `--artifacts` is honored.
-                let dir = PathBuf::from(&self.cfg.artifacts_dir);
-                let rt = Runtime::new(&dir)?;
-                Ok(Box::new(exec::Pjrt::new(rt).with_registry(registry.clone())))
-            }
-            other => anyhow::bail!("unknown backend '{other}' (exact|statistical|pjrt)"),
-        }
+        crate::plan::make_backend(&self.cfg, registry)
     }
 
     /// One backend instance per serving worker — the share-nothing pool
@@ -207,63 +132,30 @@ impl Pipeline {
         registry: &ErrorModelRegistry,
         workers: usize,
     ) -> Result<Vec<Box<dyn Backend>>> {
-        (0..workers.max(1)).map(|_| self.make_backend(registry)).collect()
+        crate::plan::make_backend_pool(&self.cfg, registry, workers)
     }
 
-    /// Run the budget-independent stages.
+    /// Run the budget-independent stages (planner stages 1–5).
     pub fn prepare(&self) -> Result<PreparedSystem> {
-        let t0 = std::time::Instant::now();
-        let (model, _train_set, test) = self.trained_model()?;
-        let train_seconds = t0.elapsed().as_secs_f64();
-
-        let t0 = std::time::Instant::now();
-        let registry = self.error_models()?;
-        let power = self.power_model();
-        let characterize_seconds = t0.elapsed().as_secs_f64();
-
-        // Quantize with a calibration slice of the test distribution.
-        let calib_n = test.len().min(64);
-        let calib = test.batch(&(0..calib_n).collect::<Vec<_>>()).0;
-        let quantized = QuantizedModel::quantize(&model, &calib);
-
-        // ES per neuron (statistical injection, probe batch from test set).
-        let t0 = std::time::Instant::now();
-        let probe_n = test.len().min(16);
-        let probe = test.batch(&(0..probe_n).collect::<Vec<_>>()).0;
-        let es = statistical_es(
-            &quantized,
-            &probe,
-            &EsOptions { trials: 2, ..Default::default() },
-        );
-        let es_seconds = t0.elapsed().as_secs_f64();
-
-        let neurons = model.neurons();
-        let fan_in: Vec<usize> = neurons.iter().map(|n| n.fan_in).collect();
-
-        // Clean logits + baselines on the full test set, through the
-        // configured execution backend.
-        let backend = self.make_backend(&registry)?;
-        let mut rng = Xoshiro256pp::seeded(self.cfg.seed ^ 0x7EA);
-        let idx: Vec<usize> = (0..test.len()).collect();
-        let (x, labels) = test.batch(&idx);
-        let clean_logits = quantized.forward_with(backend.as_ref(), &x, None, &mut rng);
-        let baseline_accuracy = quality::accuracy(&clean_logits, &labels);
-        let baseline_mse = baseline_mse_vs_onehot(&clean_logits, &labels);
-
+        let mut planner = self.planner();
+        planner.warm()?;
+        let (trained, registry, characterize_seconds, power, es, baseline) =
+            planner.into_stages();
         Ok(PreparedSystem {
-            model,
-            quantized,
-            test,
+            model: trained.model,
+            quantized: trained.quantized,
+            test: trained.test,
             registry,
             power,
-            es,
-            fan_in,
-            clean_logits,
-            baseline_accuracy,
-            baseline_mse,
-            train_seconds,
+            es: es.es,
+            fan_in: es.fan_in,
+            clean_logits: baseline.clean_logits,
+            baseline_accuracy: baseline.accuracy,
+            baseline_mse: baseline.mse,
+            fingerprint: trained.fingerprint,
+            train_seconds: trained.seconds,
             characterize_seconds,
-            es_seconds,
+            es_seconds: es.seconds,
         })
     }
 
@@ -278,11 +170,21 @@ impl Pipeline {
         fraction: f64,
         solver: Solver,
     ) -> Result<BudgetReport> {
-        let budget_abs = fraction * sys.baseline_mse;
-        let problem =
-            AssignmentProblem::build(&sys.es, &sys.fan_in, &sys.registry, &sys.power, budget_abs);
-        let assignment = problem.solve(solver)?;
-        let noise = problem.noise_spec(&assignment, &sys.registry);
+        // Shared with Planner::solve_many — one plan-assembly path, so the
+        // plan in this report is identical to what `xtpu plan` emits.
+        let (assignment, plan) = crate::plan::solve_one(
+            &self.cfg,
+            &sys.fingerprint,
+            &sys.es,
+            &sys.fan_in,
+            &sys.registry,
+            &sys.power,
+            sys.baseline_mse,
+            fraction,
+            solver,
+        )?;
+        let budget_abs = plan.budget_abs;
+        let noise = plan.noise_spec(&sys.registry);
 
         // Validation: noise-injected quantized inference over the test set,
         // on the configured execution backend.
@@ -308,11 +210,40 @@ impl Pipeline {
             accuracy_drop: sys.baseline_accuracy - accuracy,
             violated: validated_mse > budget_abs * 1.05 + 1e-12,
             assignment,
+            plan,
         })
     }
 
-    /// The full sweep (Fig 10/13/14 rows).
+    /// The full sweep (Fig 10/13/14 rows), with the per-budget solve +
+    /// validation fanned out across the thread pool. Every budget seeds its
+    /// own RNGs and owns its backend, so the reports are **bit-identical**
+    /// to [`Pipeline::run_sequential`] regardless of worker count or
+    /// completion order.
     pub fn run(&self) -> Result<(PreparedSystem, Vec<BudgetReport>)> {
+        let sys = self.prepare()?;
+        let fractions = self.cfg.mse_ub_fractions.clone();
+        // Each budget's validation matmuls already shard across
+        // `XTPU_THREADS`, so cap the outer fan-out (like
+        // `BatchPolicy::workers` does for serving) instead of multiplying
+        // the two thread populations to N×N.
+        let outer = worker_count().clamp(1, 4);
+        let parts = parallel_chunks_capped(fractions.len(), outer, |range, _| {
+            range
+                .map(|i| self.run_budget(&sys, fractions[i]))
+                .collect::<Vec<Result<BudgetReport>>>()
+        });
+        let reports = parts
+            .into_iter()
+            .flatten()
+            .collect::<Result<Vec<_>>>()
+            .context("budget sweep")?;
+        Ok((sys, reports))
+    }
+
+    /// The pre-refactor sweep shape: one budget after another on the
+    /// calling thread. Kept as the reference the parallel [`Pipeline::run`]
+    /// is tested against.
+    pub fn run_sequential(&self) -> Result<(PreparedSystem, Vec<BudgetReport>)> {
         let sys = self.prepare()?;
         let mut reports = Vec::new();
         for &f in &self.cfg.mse_ub_fractions {
@@ -320,39 +251,6 @@ impl Pipeline {
         }
         Ok((sys, reports))
     }
-}
-
-/// Paper-style nominal MSE: quantized clean logits vs one-hot targets on
-/// the test set (the "nominal value of the NN model … acquired using the
-/// test dataset" that MSE_UB percentages are relative to).
-pub fn baseline_mse_vs_onehot(logits: &Tensor, labels: &[u8]) -> f64 {
-    let classes = logits.shape[1];
-    let mut onehot = vec![0f32; logits.data.len()];
-    for (r, &l) in labels.iter().enumerate() {
-        onehot[r * classes + l as usize] = 1.0;
-    }
-    quality::mse(&onehot, &logits.data)
-}
-
-/// Measure the PE power model by running the gate-level PE datapath on a
-/// random stimulus and attributing switching energy per region (Fig 1b).
-pub fn measure_power_model(seed: u64) -> PePowerModel {
-    let pe = pe_datapath(24);
-    let tech = Technology::default();
-    let chip = ChipInstance::ideal(&pe.netlist);
-    let clock = clock_period(&pe.netlist, &chip, &tech);
-    let mut sim =
-        VosSimulator::new(&pe.netlist, chip.delays_at(&pe.netlist, &tech, tech.v_nominal), clock);
-    let mut rng = Xoshiro256pp::seeded(seed ^ 0xA0);
-    let cycles = 3000u64;
-    for _ in 0..cycles {
-        let a = rng.range_i64(-128, 127);
-        let w = rng.range_i64(-128, 127);
-        let p = rng.range_i64(-(1 << 20), 1 << 20);
-        let packed: i64 = (a & 0xFF) | ((w & 0xFF) << 8) | ((p & 0xFF_FFFF) << 16);
-        sim.step(&i64_to_bits(packed, 40));
-    }
-    PePowerModel::from_simulation(&pe, sim.toggle_counts(), cycles, tech)
 }
 
 /// Cross-validate an assignment on the statistical execution backend: run

@@ -32,8 +32,15 @@
 //!   accounting + the gate-level PE array behind `exec::GateLevel`).
 //! - [`runtime`] — artifact runtime; loads AOT artifacts from
 //!   `python/compile` (PJRT with `--features pjrt`, native otherwise).
-//! - [`coordinator`] — the Fig-4 pipeline gluing everything together;
-//!   selects the execution backend per experiment config.
+//! - [`plan`] — **the deployable-artifact layer**: a serializable
+//!   [`VoltagePlan`](plan::VoltagePlan) (per-neuron voltage levels + ES +
+//!   ladder + provenance) produced once offline by the staged
+//!   [`Planner`](plan::Planner) (cacheable stages, parallel multi-budget
+//!   solve) and consumed at scale by the server (`xtpu plan` →
+//!   `xtpu serve --plan`).
+//! - [`coordinator`] — thin orchestration shell over [`plan::Planner`]:
+//!   the Fig-4 pipeline API (`prepare`/`run_budget`/`run`) for experiments
+//!   and benches.
 //! - [`server`] — threaded inference server with runtime quality levels:
 //!   dynamic batching onto a pool of per-worker backends, so concurrent
 //!   batches execute with no global lock.
@@ -46,6 +53,7 @@ pub mod errormodel;
 pub mod exec;
 pub mod ilp;
 pub mod nn;
+pub mod plan;
 pub mod sensitivity;
 pub mod simulator;
 pub mod power;
@@ -63,6 +71,7 @@ pub mod prelude {
     pub use crate::errormodel::{ErrorModel, ErrorModelRegistry};
     pub use crate::exec::{Backend, Exact, GateLevel, Pjrt, Statistical};
     pub use crate::nn::model::Model;
+    pub use crate::plan::{Planner, VoltagePlan};
     pub use crate::timing::voltage::{Technology, VoltageLadder, VoltageLevel};
     pub use crate::util::rng::Xoshiro256pp;
 }

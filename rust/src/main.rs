@@ -7,22 +7,25 @@
 //! xtpu train          train + cache an evaluation model
 //! xtpu sensitivity    compute per-neuron error sensitivities
 //! xtpu assign         solve the ILP voltage assignment for one budget
+//! xtpu plan           solve all budgets offline → VoltagePlan JSON files
 //! xtpu pipeline       full sweep: train → characterize → ES → ILP → validate
 //! xtpu aging          BTI aging study (Fig 15)
 //! xtpu simulate       run a matmul on the cycle-level X-TPU simulator
 //! xtpu serve          start the quality-adjustable inference server
+//!                     (`--plan file.json` serves pre-solved plans with
+//!                     zero solve latency at startup)
 //! xtpu info           list artifacts + PJRT platform
 //! ```
 
 use anyhow::Result;
 use xtpu::aging::{BtiModel, Device};
-use xtpu::assign::{AssignmentProblem, Solver};
+use xtpu::assign::Solver;
 use xtpu::config::ExperimentConfig;
 use xtpu::coordinator::Pipeline;
 use xtpu::errormodel::{CharacterizeOptions, ErrorModelRegistry};
 use xtpu::exec::Backend;
-use xtpu::nn::quant::NoiseSpec;
-use xtpu::server::{BatchPolicy, Engine, QualityLevel, Server};
+use xtpu::plan::{Planner, VoltagePlan};
+use xtpu::server::{BatchPolicy, Client, Engine, Server};
 use xtpu::simulator::{ErrorInjector, XTpu};
 use xtpu::timing::sta::ChipInstance;
 use xtpu::timing::voltage::{Technology, VoltageLadder};
@@ -53,6 +56,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "sensitivity" => cmd_sensitivity(rest),
         "assign" => cmd_assign(rest),
+        "plan" => cmd_plan(rest),
         "pipeline" => cmd_pipeline(rest),
         "aging" => cmd_aging(rest),
         "simulate" => cmd_simulate(rest),
@@ -74,10 +78,11 @@ fn print_help() {
            train         train + cache an evaluation model\n\
            sensitivity   per-neuron error sensitivities\n\
            assign        solve the voltage assignment for one MSE budget\n\
+           plan          solve all budgets offline into VoltagePlan files\n\
            pipeline      full framework sweep (train→characterize→ES→ILP→validate)\n\
            aging         BTI aging study (Fig 15)\n\
            simulate      matmul on the cycle-level X-TPU simulator\n\
-           serve         quality-adjustable inference server\n\
+           serve         quality-adjustable inference server (--plan = pre-solved)\n\
            info          list artifacts + PJRT platform\n\n\
          Run `xtpu <command> --help` for options."
     );
@@ -254,6 +259,75 @@ fn cmd_assign(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Shrink a config to the tiny smoke preset (CI-friendly sizes) while
+/// keeping any model/seed/backend overrides from the CLI.
+fn apply_smoke(cfg: &mut ExperimentConfig) {
+    let s = ExperimentConfig::smoke();
+    cfg.train_samples = s.train_samples;
+    cfg.test_samples = s.test_samples;
+    cfg.epochs = s.epochs;
+    cfg.characterize_samples = s.characterize_samples;
+    cfg.validation_runs = s.validation_runs;
+}
+
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "plan",
+        "Solve MSE budgets offline into deployable VoltagePlan JSON files.",
+        vec![
+            OptSpec::opt("mse-ubs", "0.0,0.5,2.0,10.0", "budget fractions of nominal MSE"),
+            OptSpec::opt("solver", "ilp", "ilp | greedy | genetic"),
+            OptSpec::opt("out", "plans", "output directory for plan files"),
+            OptSpec::flag("smoke", "tiny synthetic config (CI smoke run)"),
+        ],
+    )?
+    else {
+        return Ok(());
+    };
+    let mut cfg = build_config(&args)?;
+    if args.flag("smoke") {
+        apply_smoke(&mut cfg);
+    }
+    cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
+    cfg.solver = Solver::from_name(args.str("solver"))?;
+    let t0 = std::time::Instant::now();
+    let mut planner = Planner::new(cfg);
+    let out = std::path::PathBuf::from(args.str("out"));
+    let emitted = planner.emit_plans(&out)?;
+    let es_seconds = planner.es_stage()?.seconds;
+    let trained = planner.trained()?;
+    println!(
+        "model={} fingerprint={} ({} neurons; train {:.1}s · ES {:.1}s)",
+        trained.model.name,
+        trained.fingerprint,
+        trained.quantized.num_neurons(),
+        trained.seconds,
+        es_seconds
+    );
+    println!(
+        "{:>9} {:>12} {:>9} {:>8}  {}",
+        "MSE_UB%", "pred MSE", "saving%", "optimal", "file"
+    );
+    for (plan, path) in &emitted {
+        println!(
+            "{:>9.1} {:>12.4} {:>9.2} {:>8}  {}",
+            plan.mse_ub_fraction * 100.0,
+            plan.predicted_mse,
+            plan.energy_saving * 100.0,
+            plan.optimal,
+            path.display()
+        );
+    }
+    println!(
+        "\n{} plan(s) solved in parallel + written in {:.1}s — serve them with \
+         `xtpu serve --plan <file>[,<file>…]` (zero solve latency at startup)",
+        emitted.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 fn cmd_pipeline(argv: &[String]) -> Result<()> {
     let Some(args) = parse_or_help(
         argv,
@@ -267,7 +341,9 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
     let mut cfg = build_config(&args)?;
     cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
     let pipeline = Pipeline::new(cfg);
-    let sys = pipeline.prepare()?;
+    // The budget sweep fans out across the thread pool (bit-identical to
+    // the sequential sweep — each budget seeds its own RNGs).
+    let (sys, reports) = pipeline.run()?;
     println!(
         "model={} acc={:.3} nominal-MSE={:.4} (train {:.1}s, characterize {:.1}s, ES {:.1}s)",
         sys.model.name,
@@ -281,11 +357,10 @@ fn cmd_pipeline(argv: &[String]) -> Result<()> {
         "{:>9} {:>10} {:>10} {:>9} {:>9} {:>9}",
         "MSE_UB%", "pred MSE", "meas MSE", "acc", "acc drop", "saving%"
     );
-    for &f in &pipeline.cfg.mse_ub_fractions.clone() {
-        let r = pipeline.run_budget(&sys, f)?;
+    for r in &reports {
         println!(
             "{:>9.1} {:>10.4} {:>10.4} {:>9.4} {:>9.4} {:>9.2}",
-            f * 100.0,
+            r.mse_ub_fraction * 100.0,
             r.assignment.predicted_mse,
             r.validated_mse,
             r.accuracy,
@@ -391,46 +466,84 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "Quality-adjustable inference server (newline-JSON over TCP).",
         vec![
             OptSpec::opt("port", "7433", "TCP port (0 = ephemeral)"),
-            OptSpec::opt("mse-ubs", "0.0,0.5,2.0,10.0", "quality levels (budget fractions)"),
+            OptSpec::opt(
+                "mse-ubs",
+                "0.0,0.5,2.0,10.0",
+                "quality levels to solve at startup (ignored with --plan)",
+            ),
             OptSpec::opt("max-batch", "16", "dynamic batch size"),
             OptSpec::opt("workers", "0", "batch worker threads (0 = auto)"),
+            OptSpec::opt(
+                "plan",
+                "",
+                "pre-solved VoltagePlan file(s) from `xtpu plan`; repeat or \
+                 comma-separate. Uses the plans' embedded config; no solving at startup",
+            ),
+            OptSpec::flag("smoke", "serve one self-issued request per level, then exit"),
         ],
     )?
     else {
         return Ok(());
     };
-    let mut cfg = build_config(&args)?;
-    cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
-    let pipeline = Pipeline::new(cfg);
-    let sys = pipeline.prepare()?;
-    let mut levels = Vec::new();
-    for &f in &pipeline.cfg.mse_ub_fractions {
-        if f == 0.0 {
-            levels.push(QualityLevel {
-                name: "exact".into(),
-                noise: NoiseSpec::silent(sys.es.len()),
-                energy_saving: 0.0,
-            });
-            continue;
+    // Quality levels are always plan-derived; the only question is whether
+    // the plans come from files (`xtpu plan`, zero solve latency) or are
+    // solved now from the experiment config.
+    let plan_files = args.str_multi("plan");
+    let (cfg, loaded) = if plan_files.is_empty() {
+        let mut cfg = build_config(&args)?;
+        cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
+        (cfg, None)
+    } else {
+        let plans: Vec<VoltagePlan> = plan_files
+            .iter()
+            .map(|p| VoltagePlan::load(std::path::Path::new(p)))
+            .collect::<Result<_>>()?;
+        // Compatibility across plans is enforced by Engine::from_plans;
+        // here we only need a config to rebuild the model/registry from.
+        // Serving-side knobs the user passed explicitly override the
+        // plan-embedded config (planning-side fields always come from the
+        // plan — changing those would break the fingerprint).
+        let mut cfg = plans[0].config.clone();
+        if let Some(dir) = args.explicit("artifacts") {
+            cfg.artifacts_dir = dir.to_string();
         }
-        let r = pipeline.run_budget(&sys, f)?;
-        let problem = AssignmentProblem::build(
-            &sys.es,
-            &sys.fan_in,
-            &sys.registry,
-            &sys.power,
-            r.budget_abs,
-        );
-        levels.push(QualityLevel {
-            name: format!("mse_ub_{:.0}%", f * 100.0),
-            noise: problem.noise_spec(&r.assignment, &sys.registry),
-            energy_saving: r.assignment.energy_saving,
-        });
-    }
-    for (i, l) in levels.iter().enumerate() {
+        if let Some(be) = args.explicit("backend") {
+            cfg.backend = be.to_string();
+        }
+        (cfg, Some(plans))
+    };
+    let mut planner = Planner::new(cfg);
+    let t0 = std::time::Instant::now();
+    let plans = match loaded {
+        Some(plans) => {
+            // Pre-solved path: only the (cached) model + registry are
+            // needed — no ES estimation, no MCKP solve.
+            let fingerprint = planner.trained()?.fingerprint.clone();
+            anyhow::ensure!(
+                plans[0].model_fingerprint == fingerprint,
+                "plan '{}' was solved for model fingerprint {} but the \
+                 artifacts here rebuild {} — re-run `xtpu plan` (or point \
+                 --artifacts at the directory the plans were solved from)",
+                plans[0].name,
+                plans[0].model_fingerprint,
+                fingerprint
+            );
+            plans
+        }
+        None => {
+            let fractions = planner.cfg.mse_ub_fractions.clone();
+            planner.solve_many(&fractions)?
+        }
+    };
+    let registry = planner.registry()?.clone();
+    let trained = planner.trained()?;
+    let quantized = trained.quantized.clone();
+    let input_dim = trained.model.input.numel();
+    let engine = Engine::from_plans(quantized, &registry, &plans, input_dim)?;
+    for (i, l) in engine.levels.iter().enumerate() {
         println!("quality {i}: {} (saving {:.1}%)", l.name, l.energy_saving * 100.0);
     }
-    let input_dim = sys.model.input.numel();
+    println!("levels ready in {:.2}s", t0.elapsed().as_secs_f64());
     let policy = BatchPolicy {
         max_batch: args.usize("max-batch")?,
         workers: args.usize("workers")?,
@@ -439,13 +552,28 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     // Share-nothing pool: one backend instance per batch worker, so
     // concurrent batches at different quality levels never contend.
     let workers = policy.resolved_workers();
-    let pool = pipeline.make_backend_pool(&sys.registry, workers)?;
+    let pool = xtpu::plan::make_backend_pool(&planner.cfg, &registry, workers)?;
     println!("execution backend: {} × {workers} workers", pool[0].name());
-    let engine =
-        Engine::new(sys.quantized.clone(), levels, input_dim).with_backend_pool(pool);
-    let server = Server::spawn(engine, args.usize("port")? as u16, policy)?;
+    let n_levels = engine.levels.len();
+    let engine = engine.with_backend_pool(pool);
+    let mut server = Server::spawn(engine, args.usize("port")? as u16, policy)?;
     println!("serving on {}", server.addr);
     println!("protocol: {{\"pixels\": [f32 × {input_dim}], \"quality\": idx}} per line");
+    if args.flag("smoke") {
+        // CI self-test: one request per quality level, then the stats
+        // snapshot, then a clean shutdown.
+        let mut client = Client::connect(server.addr)?;
+        let zeros = vec![0f32; input_dim];
+        for q in 0..n_levels {
+            let (class, logits, applied) = client.infer_full(&zeros, q)?;
+            anyhow::ensure!(applied == q, "level {q} applied as {applied}");
+            println!("smoke: quality {q} → class {class} ({} logits)", logits.len());
+        }
+        println!("smoke: stats {}", client.stats()?);
+        server.shutdown();
+        println!("smoke OK");
+        return Ok(());
+    }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

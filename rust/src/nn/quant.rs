@@ -37,6 +37,34 @@ impl NoiseSpec {
     pub fn is_silent(&self) -> bool {
         self.std.iter().all(|&s| s == 0.0) && self.mean.iter().all(|&m| m == 0.0)
     }
+
+    /// The noise spec implied by a per-neuron voltage-level assignment
+    /// (paper eqs 12–13): neuron `n` at level `l` with fan-in `k` receives
+    /// `N(k·μ_l, k·σ²_l)` on its accumulator.
+    pub fn from_levels(
+        levels: &[usize],
+        fan_in: &[usize],
+        registry: &crate::errormodel::ErrorModelRegistry,
+    ) -> Self {
+        assert_eq!(levels.len(), fan_in.len(), "one fan-in per neuron");
+        let mut spec = Self::silent(levels.len());
+        for (n, (&lvl, &k)) in levels.iter().zip(fan_in).enumerate() {
+            let m = registry.model(lvl);
+            spec.mean[n] = m.column_mean(k);
+            spec.std[n] = m.column_variance(k).sqrt();
+        }
+        spec
+    }
+
+    /// Reconstruct the noise spec a deployable
+    /// [`VoltagePlan`](crate::plan::VoltagePlan) encodes, under the given
+    /// registry — the online half of the offline-solve / online-serve split.
+    pub fn from_plan(
+        plan: &crate::plan::VoltagePlan,
+        registry: &crate::errormodel::ErrorModelRegistry,
+    ) -> Self {
+        Self::from_levels(&plan.level, &plan.fan_in, registry)
+    }
 }
 
 /// A quantized MAC layer: weights int8, `w[u]·x ≈ Σ wq·xq · (sw·sx)`.

@@ -1,0 +1,452 @@
+//! The deployable voltage-plan artifact and the staged offline planner.
+//!
+//! The paper's contribution is an *offline* algorithm (Fig 4): statistical
+//! error modeling + ILP fix per-neuron voltages **before** deployment, and
+//! the X-TPU then serves millions of requests from the pre-solved
+//! assignment (the voltage-selection bits live next to the weights, Fig 7).
+//! This module makes that split explicit:
+//!
+//! - [`VoltagePlan`] — the serializable artifact one offline solve
+//!   produces: per-neuron voltage-level indices, the ES vector and voltage
+//!   ladder they were solved against, predicted MSE / energy saving, and
+//!   provenance (model fingerprint + config hash + the full experiment
+//!   config) so a serving process can verify it is deploying the plan
+//!   against the network it was solved for. `to_json`/`from_json`
+//!   round-trip bit-exactly via [`crate::util::json`].
+//! - [`Planner`] — the staged offline solver: trained model → error-model
+//!   registry → ES estimate → per-budget solve, each stage cached (in
+//!   memory and, where the artifact is expensive, on disk), with
+//!   [`Planner::solve_many`] solving all MSE_UB budgets in parallel on
+//!   [`crate::util::threadpool`].
+//!
+//! The online side consumes plans without re-running any of it:
+//! [`crate::server::Engine::from_plans`] derives its quality levels from
+//! plan files (`xtpu plan` → `xtpu serve --plan`), and
+//! [`crate::nn::quant::NoiseSpec::from_plan`] reconstructs the validated
+//! noise spec from a plan + registry.
+
+mod planner;
+
+pub use planner::{
+    baseline_mse_vs_onehot, characterize_registry, make_backend, make_backend_pool,
+    measure_power_model, train_model, BaselineStage, EsStage, Planner, TrainedStage,
+};
+pub(crate) use planner::solve_one;
+
+use anyhow::{Context, Result};
+
+use crate::assign::{Solver, VoltageAssignment};
+use crate::config::ExperimentConfig;
+use crate::errormodel::ErrorModelRegistry;
+use crate::nn::model::Model;
+use crate::nn::quant::{NoiseSpec, QuantizedModel};
+use crate::util::json::Json;
+
+/// One pre-solved, deployable <neuron → voltage level> policy: everything a
+/// serving process needs to apply (and audit) a quality level, and nothing
+/// that requires re-running the offline pipeline.
+#[derive(Clone, Debug)]
+pub struct VoltagePlan {
+    /// Human-readable level name (`exact`, `mse_ub_200pct`, …).
+    pub name: String,
+    /// The MSE_UB this plan was solved for, as a fraction of nominal MSE.
+    pub mse_ub_fraction: f64,
+    /// Absolute MSE-increment budget (fraction × baseline MSE).
+    pub budget_abs: f64,
+    /// Nominal test MSE the fraction is relative to.
+    pub baseline_mse: f64,
+    /// Voltage-ladder level index per neuron (the Fig-7 selection bits).
+    pub level: Vec<usize>,
+    /// Fan-in (PE column height) per neuron — needed to recompose the
+    /// column noise `N(k·μ_v, k·σ²_v)` from a registry.
+    pub fan_in: Vec<usize>,
+    /// Error sensitivity per neuron the solve used (audit trail).
+    pub es: Vec<f64>,
+    /// The voltage ladder (volts per level index, ascending, last=nominal).
+    pub volts: Vec<f64>,
+    /// Σ ES²·k·var(e)_v of the chosen assignment.
+    pub predicted_mse: f64,
+    /// Total energy of the assignment (normalized units).
+    pub energy: f64,
+    /// Fractional energy saving vs all-nominal.
+    pub energy_saving: f64,
+    /// Whether the solver proved optimality.
+    pub optimal: bool,
+    /// Solver that produced the assignment (`ilp` | `greedy` | `genetic`).
+    pub solver: String,
+    /// FNV-1a hash of the trained model's serialized form.
+    pub model_fingerprint: String,
+    /// Hash of the planning-relevant config fields (see [`config_hash`]).
+    pub config_hash: String,
+    /// The full experiment config, embedded so `xtpu serve --plan` can
+    /// rebuild the (cached) model + registry without extra inputs.
+    pub config: ExperimentConfig,
+}
+
+impl VoltagePlan {
+    /// Assemble a plan from a solved assignment and its provenance.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_assignment(
+        cfg: &ExperimentConfig,
+        model_fingerprint: &str,
+        es: &[f64],
+        fan_in: &[usize],
+        registry: &ErrorModelRegistry,
+        fraction: f64,
+        baseline_mse: f64,
+        assignment: &VoltageAssignment,
+        solver: Solver,
+    ) -> Self {
+        Self {
+            name: budget_name(fraction),
+            mse_ub_fraction: fraction,
+            budget_abs: fraction * baseline_mse,
+            baseline_mse,
+            level: assignment.level.clone(),
+            fan_in: fan_in.to_vec(),
+            es: es.to_vec(),
+            volts: registry.ladder.levels().iter().map(|l| l.volts).collect(),
+            predicted_mse: assignment.predicted_mse,
+            energy: assignment.energy,
+            energy_saving: assignment.energy_saving,
+            optimal: assignment.optimal,
+            solver: solver_name(solver).to_string(),
+            model_fingerprint: model_fingerprint.to_string(),
+            config_hash: config_hash(cfg),
+            config: cfg.clone(),
+        }
+    }
+
+    /// Number of neurons this plan covers.
+    pub fn neurons(&self) -> usize {
+        self.level.len()
+    }
+
+    /// The noise spec this plan implies under `registry` (eqs 12–13) —
+    /// exactly what the validation pass injected when the plan was solved.
+    pub fn noise_spec(&self, registry: &ErrorModelRegistry) -> NoiseSpec {
+        NoiseSpec::from_plan(self, registry)
+    }
+
+    /// Check this plan can be deployed on `quantized` under `registry`:
+    /// neuron enumeration, ladder, and (when a fingerprint is supplied)
+    /// model identity must all match.
+    pub fn validate_against(
+        &self,
+        quantized: &QuantizedModel,
+        registry: &ErrorModelRegistry,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.level.len() == quantized.num_neurons(),
+            "plan '{}' covers {} neurons but model '{}' has {}",
+            self.name,
+            self.level.len(),
+            quantized.name,
+            quantized.num_neurons()
+        );
+        anyhow::ensure!(
+            self.fan_in == quantized.neuron_fan_in,
+            "plan '{}' fan-in vector disagrees with model '{}'",
+            self.name,
+            quantized.name
+        );
+        let ladder: Vec<f64> = registry.ladder.levels().iter().map(|l| l.volts).collect();
+        anyhow::ensure!(
+            self.volts.len() == ladder.len()
+                && self.volts.iter().zip(&ladder).all(|(a, b)| (a - b).abs() < 1e-9),
+            "plan '{}' voltage ladder {:?} does not match registry ladder {:?}",
+            self.name,
+            self.volts,
+            ladder
+        );
+        for (&l, _) in self.level.iter().zip(&self.fan_in) {
+            anyhow::ensure!(
+                l < ladder.len(),
+                "plan '{}' assigns level {} on a {}-level ladder",
+                self.name,
+                l,
+                ladder.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Check that two plans were produced by the same offline run (same
+    /// model + same planning config) and can share one engine.
+    pub fn check_compatible(&self, other: &VoltagePlan) -> Result<()> {
+        anyhow::ensure!(
+            self.model_fingerprint == other.model_fingerprint,
+            "plans '{}' and '{}' were solved for different models ({} vs {})",
+            self.name,
+            other.name,
+            self.model_fingerprint,
+            other.model_fingerprint
+        );
+        anyhow::ensure!(
+            self.config_hash == other.config_hash,
+            "plans '{}' and '{}' carry different planning configs ({} vs {})",
+            self.name,
+            other.name,
+            self.config_hash,
+            other.config_hash
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mse_ub_fraction", Json::Num(self.mse_ub_fraction)),
+            ("budget_abs", Json::Num(self.budget_abs)),
+            ("baseline_mse", Json::Num(self.baseline_mse)),
+            (
+                "level",
+                Json::Arr(self.level.iter().map(|&l| Json::Num(l as f64)).collect()),
+            ),
+            (
+                "fan_in",
+                Json::Arr(self.fan_in.iter().map(|&k| Json::Num(k as f64)).collect()),
+            ),
+            ("es", Json::arr_f64(&self.es)),
+            ("volts", Json::arr_f64(&self.volts)),
+            ("predicted_mse", Json::Num(self.predicted_mse)),
+            ("energy", Json::Num(self.energy)),
+            ("energy_saving", Json::Num(self.energy_saving)),
+            ("optimal", Json::Bool(self.optimal)),
+            ("solver", Json::Str(self.solver.clone())),
+            ("model_fingerprint", Json::Str(self.model_fingerprint.clone())),
+            ("config_hash", Json::Str(self.config_hash.clone())),
+            ("config", self.config.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let level: Vec<usize> = j
+            .get("level")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<std::result::Result<_, _>>()?;
+        let fan_in: Vec<usize> = j
+            .get("fan_in")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<std::result::Result<_, _>>()?;
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            mse_ub_fraction: j.get("mse_ub_fraction")?.as_f64()?,
+            budget_abs: j.get("budget_abs")?.as_f64()?,
+            baseline_mse: j.get("baseline_mse")?.as_f64()?,
+            level,
+            fan_in,
+            es: j.get("es")?.as_f64_vec()?,
+            volts: j.get("volts")?.as_f64_vec()?,
+            predicted_mse: j.get("predicted_mse")?.as_f64()?,
+            energy: j.get("energy")?.as_f64()?,
+            energy_saving: j.get("energy_saving")?.as_f64()?,
+            optimal: j.get("optimal")?.as_bool()?,
+            solver: j.get("solver")?.as_str()?.to_string(),
+            model_fingerprint: j.get("model_fingerprint")?.as_str()?.to_string(),
+            config_hash: j.get("config_hash")?.as_str()?.to_string(),
+            config: ExperimentConfig::from_json(j.get("config")?)?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        crate::util::json::write_file(path, &self.to_json())
+            .with_context(|| format!("writing plan '{}'", self.name))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&crate::util::json::read_file(path)?)
+            .with_context(|| format!("loading plan {}", path.display()))
+    }
+
+    /// Canonical file name for this plan inside a plan directory.
+    pub fn file_name(&self) -> String {
+        format!("plan_{}.json", self.name)
+    }
+}
+
+/// Canonical level name for an MSE_UB fraction: `exact` for 0, otherwise
+/// `mse_ub_<pct>pct` with `.`/`-` made filename-safe.
+pub fn budget_name(fraction: f64) -> String {
+    if fraction == 0.0 {
+        "exact".to_string()
+    } else {
+        let pct = format!("{}", fraction * 100.0).replace('.', "_").replace('-', "m");
+        format!("mse_ub_{pct}pct")
+    }
+}
+
+fn solver_name(s: Solver) -> &'static str {
+    match s {
+        Solver::Ilp => "ilp",
+        Solver::Greedy => "greedy",
+        Solver::Genetic => "genetic",
+    }
+}
+
+/// FNV-1a 64-bit hash — stable, dependency-free content fingerprinting for
+/// artifacts (not cryptographic; this is an integrity/identity check, not a
+/// security boundary).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint a trained model: FNV-1a over its canonical JSON form
+/// (deterministic key order + shortest-round-trip floats, so the same
+/// weights always hash the same).
+pub fn model_fingerprint(model: &Model) -> String {
+    format!("{:016x}", fnv1a64(model.to_json().to_string().as_bytes()))
+}
+
+/// Hash of the *planning-relevant* config fields: the ones that change what
+/// an offline solve produces (model identity, data sizes, ladder,
+/// characterization depth, seed). Serving-side knobs (backend, artifacts
+/// dir, validation runs, budget list) deliberately do not participate, so
+/// plans solved for different budgets by the same run stay compatible.
+pub fn config_hash(cfg: &ExperimentConfig) -> String {
+    let j = Json::obj(vec![
+        ("model", Json::Str(cfg.model.clone())),
+        ("activation", Json::Str(cfg.activation.name().into())),
+        ("train_samples", Json::Num(cfg.train_samples as f64)),
+        ("test_samples", Json::Num(cfg.test_samples as f64)),
+        ("epochs", Json::Num(cfg.epochs as f64)),
+        ("voltages", Json::arr_f64(&cfg.voltages)),
+        ("characterize_samples", Json::Num(cfg.characterize_samples as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+    ]);
+    format!("{:016x}", fnv1a64(j.to_string().as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::voltage::VoltageLadder;
+    use crate::util::checks::property;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn fake_plan(rng: &mut Xoshiro256pp, neurons: usize) -> VoltagePlan {
+        let ladder = VoltageLadder::paper_default();
+        let reg = ErrorModelRegistry::synthetic(&ladder, &[3.0e6, 1.4e6, 2.0e5, 0.0]);
+        let cfg = ExperimentConfig::smoke();
+        let level: Vec<usize> = (0..neurons).map(|_| rng.index(4)).collect();
+        let fan_in: Vec<usize> = (0..neurons).map(|_| 1 + rng.index(1024)).collect();
+        let es: Vec<f64> = (0..neurons).map(|_| rng.gaussian(0.0, 1.0).abs()).collect();
+        let assignment = VoltageAssignment {
+            volts: level.iter().map(|&l| reg.ladder.level(l).volts).collect(),
+            predicted_mse: rng.gaussian(10.0, 3.0).abs(),
+            energy: rng.gaussian(1e6, 1e5).abs(),
+            energy_saving: rng.gaussian(0.3, 0.1),
+            optimal: true,
+            nodes_explored: 0,
+            solve_seconds: 0.0,
+            level,
+        };
+        VoltagePlan::from_assignment(
+            &cfg,
+            "deadbeefdeadbeef",
+            &es,
+            &fan_in,
+            &reg,
+            2.0,
+            0.042,
+            &assignment,
+            Solver::Ilp,
+        )
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        property("VoltagePlan JSON round-trips bit-exactly", 32, |rng, _| {
+            let neurons = 1 + rng.index(64);
+            let plan = fake_plan(rng, neurons);
+            let back = VoltagePlan::from_json(&plan.to_json()).unwrap();
+            assert_eq!(plan.level, back.level, "indices");
+            assert_eq!(plan.fan_in, back.fan_in);
+            assert_eq!(plan.volts, back.volts, "ladder");
+            assert_eq!(plan.es, back.es);
+            assert_eq!(plan.name, back.name, "metadata");
+            assert_eq!(plan.mse_ub_fraction, back.mse_ub_fraction);
+            assert_eq!(plan.budget_abs, back.budget_abs);
+            assert_eq!(plan.baseline_mse, back.baseline_mse);
+            assert_eq!(plan.predicted_mse, back.predicted_mse);
+            assert_eq!(plan.energy, back.energy);
+            assert_eq!(plan.energy_saving, back.energy_saving);
+            assert_eq!(plan.optimal, back.optimal);
+            assert_eq!(plan.solver, back.solver);
+            assert_eq!(plan.model_fingerprint, back.model_fingerprint);
+            assert_eq!(plan.config_hash, back.config_hash);
+            assert_eq!(plan.config.model, back.config.model);
+            assert_eq!(plan.config.seed, back.config.seed);
+            // And a second hop through text is byte-identical.
+            assert_eq!(plan.to_json().to_string(), back.to_json().to_string());
+        });
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("xtpu_plan_test_{}", std::process::id()));
+        let mut rng = Xoshiro256pp::seeded(7);
+        let plan = fake_plan(&mut rng, 12);
+        let path = dir.join(plan.file_name());
+        plan.save(&path).unwrap();
+        let back = VoltagePlan::load(&path).unwrap();
+        assert_eq!(plan.level, back.level);
+        assert_eq!(plan.es, back.es);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_names_are_filename_safe() {
+        assert_eq!(budget_name(0.0), "exact");
+        assert_eq!(budget_name(2.0), "mse_ub_200pct");
+        assert_eq!(budget_name(0.005), "mse_ub_0_5pct");
+        for f in [0.001, 0.01, 0.1, 0.5, 1.0, 2.0, 10.0] {
+            let n = budget_name(f);
+            assert!(n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'), "{n}");
+        }
+    }
+
+    #[test]
+    fn config_hash_tracks_planning_fields_only() {
+        let a = ExperimentConfig::default();
+        let mut b = a.clone();
+        b.mse_ub_fractions = vec![0.5]; // serving-side: must not change hash
+        b.validation_runs = 9;
+        b.artifacts_dir = "elsewhere".into();
+        b.backend = "exact".into();
+        assert_eq!(config_hash(&a), config_hash(&b));
+        let mut c = a.clone();
+        c.seed ^= 1; // planning-side: must change hash
+        assert_ne!(config_hash(&a), config_hash(&c));
+        let mut d = a.clone();
+        d.voltages = vec![0.55, 0.8];
+        assert_ne!(config_hash(&a), config_hash(&d));
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Pinned reference values: artifacts hashed on one machine must
+        // verify on another.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn incompatible_plans_are_rejected() {
+        let mut rng = Xoshiro256pp::seeded(9);
+        let a = fake_plan(&mut rng, 8);
+        let mut b = a.clone();
+        b.model_fingerprint = "0000000000000000".into();
+        assert!(a.check_compatible(&a).is_ok());
+        assert!(a.check_compatible(&b).is_err());
+    }
+}

@@ -1,0 +1,574 @@
+//! The staged offline planner: Fig 4 decomposed into cacheable stages.
+//!
+//! ```text
+//! stage 1  trained model        (disk-cached model JSON + quantization)
+//! stage 2  error-model registry (disk-cached characterization)
+//! stage 3  power model          (gate-level switching measurement)
+//! stage 4  ES estimate          (disk-cached, fingerprint-guarded)
+//! stage 5  baseline             (clean logits + nominal accuracy/MSE)
+//! stage 6  per-budget solve     (MCKP; all budgets solved in parallel)
+//! ```
+//!
+//! Stages 1–5 are budget-independent and computed at most once per
+//! [`Planner`]; [`Planner::solve_many`] then fans the per-budget MCKP
+//! solves out across [`crate::util::threadpool`] — each solve is pure
+//! (deterministic given the stage artifacts), so the parallel sweep is
+//! bit-identical to a sequential one.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::{model_fingerprint, VoltagePlan};
+use crate::assign::{AssignmentProblem, Solver, VoltageAssignment};
+use crate::config::ExperimentConfig;
+use crate::errormodel::{CharacterizeOptions, ErrorModelRegistry};
+use crate::exec::{self, Backend};
+use crate::nn::data::{synth_cifar, synth_mnist, Dataset};
+use crate::nn::model::{fc_mnist, lenet5, resnet_tiny, Model};
+use crate::nn::quant::QuantizedModel;
+use crate::nn::tensor::Tensor;
+use crate::nn::train::{train, TrainConfig};
+use crate::power::PePowerModel;
+use crate::quality;
+use crate::runtime::Runtime;
+use crate::sensitivity::{statistical_es, EsOptions};
+use crate::timing::baugh_wooley_8x8;
+use crate::timing::circuits::pe_datapath;
+use crate::timing::gate::i64_to_bits;
+use crate::timing::sta::{clock_period, ChipInstance};
+use crate::timing::voltage::{Technology, VoltageLadder};
+use crate::timing::vos::VosSimulator;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::parallel_chunks;
+
+/// ES-probe settings shared by the planner and its disk cache key.
+const ES_TRIALS: usize = 2;
+
+/// Stage-1 artifacts: the trained float model, its int8 quantization, and
+/// the evaluation set — plus the fingerprint every downstream plan embeds.
+pub struct TrainedStage {
+    pub model: Model,
+    pub quantized: QuantizedModel,
+    pub test: Dataset,
+    pub fingerprint: String,
+    pub seconds: f64,
+}
+
+/// Stage-4 artifact: per-neuron error sensitivities and fan-ins.
+pub struct EsStage {
+    pub es: Vec<f64>,
+    pub fan_in: Vec<usize>,
+    pub seconds: f64,
+}
+
+/// Stage-5 artifact: clean logits + nominal baselines on the test set.
+pub struct BaselineStage {
+    pub clean_logits: Tensor,
+    pub accuracy: f64,
+    /// Nominal test MSE vs one-hot targets — the reference the paper's
+    /// "MSE increment %" budgets are relative to.
+    pub mse: f64,
+}
+
+/// The staged offline planner. Construct once per experiment config; every
+/// stage accessor computes lazily and caches in memory (and on disk where
+/// the artifact is expensive), so repeated solves never repeat work.
+pub struct Planner {
+    pub cfg: ExperimentConfig,
+    trained: Option<TrainedStage>,
+    registry: Option<ErrorModelRegistry>,
+    characterize_seconds: f64,
+    power: Option<PePowerModel>,
+    es: Option<EsStage>,
+    baseline: Option<BaselineStage>,
+}
+
+impl Planner {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        Self {
+            cfg,
+            trained: None,
+            registry: None,
+            characterize_seconds: 0.0,
+            power: None,
+            es: None,
+            baseline: None,
+        }
+    }
+
+    // --- stage accessors -------------------------------------------------
+
+    /// Stage 1: trained model + quantization (disk-cached model JSON).
+    pub fn trained(&mut self) -> Result<&TrainedStage> {
+        if self.trained.is_none() {
+            let t0 = std::time::Instant::now();
+            let (model, _train_set, test) = train_model(&self.cfg)?;
+            let calib_n = test.len().min(64);
+            let calib = test.batch(&(0..calib_n).collect::<Vec<_>>()).0;
+            let quantized = QuantizedModel::quantize(&model, &calib);
+            let fingerprint = model_fingerprint(&model);
+            self.trained = Some(TrainedStage {
+                model,
+                quantized,
+                test,
+                fingerprint,
+                seconds: t0.elapsed().as_secs_f64(),
+            });
+        }
+        Ok(self.trained.as_ref().unwrap())
+    }
+
+    /// Stage 2: per-voltage statistical error models (disk-cached).
+    pub fn registry(&mut self) -> Result<&ErrorModelRegistry> {
+        if self.registry.is_none() {
+            let t0 = std::time::Instant::now();
+            self.registry = Some(characterize_registry(&self.cfg)?);
+            self.characterize_seconds = t0.elapsed().as_secs_f64();
+        }
+        Ok(self.registry.as_ref().unwrap())
+    }
+
+    /// Stage 3: the PE power model (gate-level switching measurement).
+    pub fn power(&mut self) -> &PePowerModel {
+        if self.power.is_none() {
+            let t0 = std::time::Instant::now();
+            self.power = Some(measure_power_model(self.cfg.seed));
+            self.characterize_seconds += t0.elapsed().as_secs_f64();
+        }
+        self.power.as_ref().unwrap()
+    }
+
+    /// Stage 4: per-neuron error sensitivities, disk-cached keyed on the
+    /// model fingerprint (a retrained model invalidates the cache).
+    pub fn es_stage(&mut self) -> Result<&EsStage> {
+        if self.es.is_none() {
+            self.trained()?;
+            let trained = self.trained.as_ref().unwrap();
+            let fan_in: Vec<usize> =
+                trained.model.neurons().iter().map(|n| n.fan_in).collect();
+            let probe_n = trained.test.len().min(16);
+            let cache = self.es_cache_path(probe_n);
+            let t0 = std::time::Instant::now();
+            let es = match load_es_cache(&cache, &trained.fingerprint, fan_in.len()) {
+                Some(es) => es,
+                None => {
+                    let probe = trained.test.batch(&(0..probe_n).collect::<Vec<_>>()).0;
+                    let es = statistical_es(
+                        &trained.quantized,
+                        &probe,
+                        &EsOptions { trials: ES_TRIALS, ..Default::default() },
+                    );
+                    save_es_cache(&cache, &trained.fingerprint, &es);
+                    es
+                }
+            };
+            self.es = Some(EsStage { es, fan_in, seconds: t0.elapsed().as_secs_f64() });
+        }
+        Ok(self.es.as_ref().unwrap())
+    }
+
+    /// Stage 5: clean logits + nominal accuracy/MSE through the configured
+    /// execution backend.
+    pub fn baseline(&mut self) -> Result<&BaselineStage> {
+        if self.baseline.is_none() {
+            self.trained()?;
+            self.registry()?;
+            let trained = self.trained.as_ref().unwrap();
+            let registry = self.registry.as_ref().unwrap();
+            let backend = make_backend(&self.cfg, registry)?;
+            let mut rng = Xoshiro256pp::seeded(self.cfg.seed ^ 0x7EA);
+            let idx: Vec<usize> = (0..trained.test.len()).collect();
+            let (x, labels) = trained.test.batch(&idx);
+            let clean_logits =
+                trained.quantized.forward_with(backend.as_ref(), &x, None, &mut rng);
+            let accuracy = quality::accuracy(&clean_logits, &labels);
+            let mse = baseline_mse_vs_onehot(&clean_logits, &labels);
+            self.baseline = Some(BaselineStage { clean_logits, accuracy, mse });
+        }
+        Ok(self.baseline.as_ref().unwrap())
+    }
+
+    /// Compute every budget-independent stage.
+    pub fn warm(&mut self) -> Result<()> {
+        self.trained()?;
+        self.registry()?;
+        self.power();
+        self.es_stage()?;
+        self.baseline()?;
+        Ok(())
+    }
+
+    fn es_cache_path(&self, probe_n: usize) -> PathBuf {
+        PathBuf::from(&self.cfg.artifacts_dir).join(format!(
+            "es_{}_{}_s{}_n{}_p{}_t{}.json",
+            self.cfg.model,
+            self.cfg.activation.name(),
+            self.cfg.seed,
+            self.cfg.train_samples,
+            probe_n,
+            ES_TRIALS
+        ))
+    }
+
+    // --- solving ---------------------------------------------------------
+
+    /// Solve one MSE_UB budget (fraction of nominal MSE) into a deployable
+    /// plan, using the config's solver.
+    pub fn solve(&mut self, fraction: f64) -> Result<VoltagePlan> {
+        self.solve_with(fraction, self.cfg.solver)
+    }
+
+    pub fn solve_with(&mut self, fraction: f64, solver: Solver) -> Result<VoltagePlan> {
+        self.warm()?;
+        let es = self.es.as_ref().unwrap();
+        solve_one(
+            &self.cfg,
+            &self.trained.as_ref().unwrap().fingerprint,
+            &es.es,
+            &es.fan_in,
+            self.registry.as_ref().unwrap(),
+            self.power.as_ref().unwrap(),
+            self.baseline.as_ref().unwrap().mse,
+            fraction,
+            solver,
+        )
+        .map(|(_, plan)| plan)
+    }
+
+    /// Solve many budgets **in parallel** (one MCKP per worker). Each solve
+    /// is deterministic given the shared stage artifacts, so the result is
+    /// identical to solving the budgets one by one, in order.
+    pub fn solve_many(&mut self, fractions: &[f64]) -> Result<Vec<VoltagePlan>> {
+        self.solve_many_with(fractions, self.cfg.solver)
+    }
+
+    pub fn solve_many_with(
+        &mut self,
+        fractions: &[f64],
+        solver: Solver,
+    ) -> Result<Vec<VoltagePlan>> {
+        self.warm()?;
+        let cfg = &self.cfg;
+        let fingerprint = &self.trained.as_ref().unwrap().fingerprint;
+        let es = self.es.as_ref().unwrap();
+        let registry = self.registry.as_ref().unwrap();
+        let power = self.power.as_ref().unwrap();
+        let baseline_mse = self.baseline.as_ref().unwrap().mse;
+        let parts = parallel_chunks(fractions.len(), |range, _| {
+            range
+                .map(|i| {
+                    solve_one(
+                        cfg,
+                        fingerprint,
+                        &es.es,
+                        &es.fan_in,
+                        registry,
+                        power,
+                        baseline_mse,
+                        fractions[i],
+                        solver,
+                    )
+                    .map(|(_, plan)| plan)
+                })
+                .collect::<Vec<Result<VoltagePlan>>>()
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Solve every budget in the config and write one plan file per budget
+    /// into `dir`. Returns the plans and their paths.
+    pub fn emit_plans(&mut self, dir: &std::path::Path) -> Result<Vec<(VoltagePlan, PathBuf)>> {
+        let fractions = self.cfg.mse_ub_fractions.clone();
+        let plans = self.solve_many(&fractions)?;
+        let mut out = Vec::with_capacity(plans.len());
+        for plan in plans {
+            let path = dir.join(plan.file_name());
+            plan.save(&path)?;
+            out.push((plan, path));
+        }
+        Ok(out)
+    }
+
+    // --- decomposed accessors for the coordinator shell ------------------
+
+    /// Tear the planner down into its stage artifacts:
+    /// `(trained, registry, characterize_seconds, power, es, baseline)`.
+    /// Call [`Planner::warm`] first; panics on an unwarmed planner.
+    pub fn into_stages(
+        self,
+    ) -> (TrainedStage, ErrorModelRegistry, f64, PePowerModel, EsStage, BaselineStage) {
+        (
+            self.trained.expect("planner not warmed"),
+            self.registry.expect("planner not warmed"),
+            self.characterize_seconds,
+            self.power.expect("planner not warmed"),
+            self.es.expect("planner not warmed"),
+            self.baseline.expect("planner not warmed"),
+        )
+    }
+}
+
+/// One budget → one solved assignment + its deployable plan. The single
+/// place plan assembly happens: both the planner's sweep and the
+/// coordinator's `run_budget` go through here, so `xtpu plan` artifacts
+/// can never diverge from the plans embedded in a `BudgetReport`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn solve_one(
+    cfg: &ExperimentConfig,
+    fingerprint: &str,
+    es: &[f64],
+    fan_in: &[usize],
+    registry: &ErrorModelRegistry,
+    power: &PePowerModel,
+    baseline_mse: f64,
+    fraction: f64,
+    solver: Solver,
+) -> Result<(VoltageAssignment, VoltagePlan)> {
+    let budget_abs = fraction * baseline_mse;
+    let problem = AssignmentProblem::build(es, fan_in, registry, power, budget_abs);
+    let assignment = problem.solve(solver)?;
+    let plan = VoltagePlan::from_assignment(
+        cfg,
+        fingerprint,
+        es,
+        fan_in,
+        registry,
+        fraction,
+        baseline_mse,
+        &assignment,
+        solver,
+    );
+    Ok((assignment, plan))
+}
+
+/// One backend instance per serving worker — the share-nothing pool
+/// [`crate::server::Engine::with_backend_pool`] installs so concurrent
+/// batches never contend even on backends with interior state.
+pub fn make_backend_pool(
+    cfg: &ExperimentConfig,
+    registry: &ErrorModelRegistry,
+    workers: usize,
+) -> Result<Vec<Box<dyn Backend>>> {
+    (0..workers.max(1)).map(|_| make_backend(cfg, registry)).collect()
+}
+
+// --- stage implementations (shared with the coordinator shell) -----------
+
+/// Build (or load from cache) the trained float model + datasets.
+pub fn train_model(cfg: &ExperimentConfig) -> Result<(Model, Dataset, Dataset)> {
+    let (train_set, test_set) = match cfg.model.as_str() {
+        "resnet_tiny" => (
+            synth_cifar(cfg.train_samples, cfg.seed ^ 0x11),
+            synth_cifar(cfg.test_samples, cfg.seed ^ 0x22),
+        ),
+        _ => (
+            synth_mnist(cfg.train_samples, cfg.seed ^ 0x11),
+            synth_mnist(cfg.test_samples, cfg.seed ^ 0x22),
+        ),
+    };
+    let cache = model_cache_path(cfg);
+    if cache.exists() {
+        if let Ok(m) = Model::load(&cache) {
+            return Ok((m, train_set, test_set));
+        }
+    }
+    let mut rng = Xoshiro256pp::seeded(cfg.seed);
+    let mut model = match cfg.model.as_str() {
+        "fc_mnist" => fc_mnist(cfg.activation, &mut rng),
+        "lenet5" => lenet5(&mut rng),
+        "resnet_tiny" => resnet_tiny(&mut rng),
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    let tc = TrainConfig {
+        epochs: cfg.epochs,
+        batch_size: 32,
+        // FC nets train paper-style: MSE vs one-hot, so "MSE_UB as % of
+        // nominal MSE" operates on the [0,1] output scale the paper
+        // assumes; CNNs keep softmax cross-entropy.
+        lr: if cfg.model == "fc_mnist" { 0.05 } else { 0.02 },
+        momentum: 0.9,
+        seed: cfg.seed,
+        loss: if cfg.model == "fc_mnist" {
+            crate::nn::train::Loss::Mse
+        } else {
+            crate::nn::train::Loss::SoftmaxCrossEntropy
+        },
+        log_every: 0,
+    };
+    train(&mut model, &train_set, &tc);
+    model.save(&cache).context("caching trained model")?;
+    Ok((model, train_set, test_set))
+}
+
+fn model_cache_path(cfg: &ExperimentConfig) -> PathBuf {
+    PathBuf::from(&cfg.artifacts_dir).join(format!(
+        "models/{}_{}_s{}_n{}.json",
+        cfg.model,
+        cfg.activation.name(),
+        cfg.seed,
+        cfg.train_samples
+    ))
+}
+
+/// Characterize the PE multiplier (or load the cached registry).
+pub fn characterize_registry(cfg: &ExperimentConfig) -> Result<ErrorModelRegistry> {
+    let tech = Technology::default();
+    let ladder = VoltageLadder::new(&cfg.voltages, tech);
+    let cache = PathBuf::from(&cfg.artifacts_dir)
+        .join(format!("error_models_s{}_n{}.json", cfg.seed, cfg.characterize_samples));
+    if cache.exists() {
+        if let Ok(reg) = ErrorModelRegistry::load(&cache, tech) {
+            if reg.ladder.len() == ladder.len() {
+                return Ok(reg);
+            }
+        }
+    }
+    let netlist = baugh_wooley_8x8("pe_multiplier");
+    let mut rng = Xoshiro256pp::seeded(cfg.seed ^ 0xC41);
+    let chip = ChipInstance::sample(&netlist, &tech, &mut rng);
+    let opts = CharacterizeOptions {
+        samples: cfg.characterize_samples,
+        seed: cfg.seed ^ 0xE44,
+        ..Default::default()
+    };
+    let reg = ErrorModelRegistry::characterize(&netlist, &chip, &ladder, &opts);
+    reg.save(&cache).ok();
+    Ok(reg)
+}
+
+/// Construct the inference [`Backend`] the experiment config selects
+/// (`exact` | `statistical` | `pjrt`); validation and serving both run
+/// through this seam. The cycle/gate-accurate backend is constructed
+/// explicitly via [`exec::GateLevel`] (it needs a characterized chip and is
+/// orders of magnitude slower).
+pub fn make_backend(
+    cfg: &ExperimentConfig,
+    registry: &ErrorModelRegistry,
+) -> Result<Box<dyn Backend>> {
+    match cfg.backend.as_str() {
+        "exact" => Ok(Box::new(exec::Exact)),
+        "statistical" => Ok(Box::new(exec::Statistical::new(registry.clone()))),
+        "pjrt" => {
+            // Root the runtime at the experiment's artifacts dir (the same
+            // one the model/registry caches use), not the global default,
+            // so `--artifacts` is honored.
+            let dir = PathBuf::from(&cfg.artifacts_dir);
+            let rt = Runtime::new(&dir)?;
+            Ok(Box::new(exec::Pjrt::new(rt).with_registry(registry.clone())))
+        }
+        other => anyhow::bail!("unknown backend '{other}' (exact|statistical|pjrt)"),
+    }
+}
+
+/// Measure the PE power model by running the gate-level PE datapath on a
+/// random stimulus and attributing switching energy per region (Fig 1b).
+pub fn measure_power_model(seed: u64) -> PePowerModel {
+    let pe = pe_datapath(24);
+    let tech = Technology::default();
+    let chip = ChipInstance::ideal(&pe.netlist);
+    let clock = clock_period(&pe.netlist, &chip, &tech);
+    let mut sim =
+        VosSimulator::new(&pe.netlist, chip.delays_at(&pe.netlist, &tech, tech.v_nominal), clock);
+    let mut rng = Xoshiro256pp::seeded(seed ^ 0xA0);
+    let cycles = 3000u64;
+    for _ in 0..cycles {
+        let a = rng.range_i64(-128, 127);
+        let w = rng.range_i64(-128, 127);
+        let p = rng.range_i64(-(1 << 20), 1 << 20);
+        let packed: i64 = (a & 0xFF) | ((w & 0xFF) << 8) | ((p & 0xFF_FFFF) << 16);
+        sim.step(&i64_to_bits(packed, 40));
+    }
+    PePowerModel::from_simulation(&pe, sim.toggle_counts(), cycles, tech)
+}
+
+/// Paper-style nominal MSE: quantized clean logits vs one-hot targets on
+/// the test set (the "nominal value of the NN model … acquired using the
+/// test dataset" that MSE_UB percentages are relative to).
+pub fn baseline_mse_vs_onehot(logits: &Tensor, labels: &[u8]) -> f64 {
+    let classes = logits.shape[1];
+    let mut onehot = vec![0f32; logits.data.len()];
+    for (r, &l) in labels.iter().enumerate() {
+        onehot[r * classes + l as usize] = 1.0;
+    }
+    quality::mse(&onehot, &logits.data)
+}
+
+// --- ES disk cache --------------------------------------------------------
+
+fn load_es_cache(path: &std::path::Path, fingerprint: &str, neurons: usize) -> Option<Vec<f64>> {
+    if !path.exists() {
+        return None;
+    }
+    let j = crate::util::json::read_file(path).ok()?;
+    if j.get("fingerprint").ok()?.as_str().ok()? != fingerprint {
+        return None;
+    }
+    let es = j.get("es").ok()?.as_f64_vec().ok()?;
+    (es.len() == neurons).then_some(es)
+}
+
+fn save_es_cache(path: &std::path::Path, fingerprint: &str, es: &[f64]) {
+    let j = Json::obj(vec![
+        ("fingerprint", Json::Str(fingerprint.to_string())),
+        ("es", Json::arr_f64(es)),
+    ]);
+    crate::util::json::write_file(path, &j).ok();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            seed: 0x51AB,
+            mse_ub_fractions: vec![0.0, 0.5, 2.0],
+            ..ExperimentConfig::smoke()
+        }
+    }
+
+    #[test]
+    fn stages_compute_once_and_solves_are_consistent() {
+        let mut planner = Planner::new(smoke_cfg());
+        planner.warm().unwrap();
+        let baseline_mse = planner.baseline().unwrap().mse;
+        assert!(baseline_mse > 0.0);
+        let neurons = planner.trained().unwrap().quantized.num_neurons();
+        assert_eq!(planner.es_stage().unwrap().es.len(), neurons);
+
+        // A single solve and the parallel sweep must agree bit-exactly.
+        let single = planner.solve(2.0).unwrap();
+        let many = planner.solve_many(&[0.0, 0.5, 2.0]).unwrap();
+        assert_eq!(many.len(), 3);
+        assert_eq!(many[2].level, single.level);
+        assert_eq!(many[2].predicted_mse, single.predicted_mse);
+        assert_eq!(many[2].energy_saving, single.energy_saving);
+        // Zero budget = all nominal = the "exact" level.
+        assert_eq!(many[0].name, "exact");
+        assert!(many[0].level.iter().all(|&l| l == many[0].volts.len() - 1));
+        assert_eq!(many[0].energy_saving, 0.0);
+        // Budgets are monotone in saving.
+        assert!(many[1].energy_saving <= many[2].energy_saving + 1e-12);
+        // Provenance is consistent across the sweep.
+        assert_eq!(many[0].model_fingerprint, many[2].model_fingerprint);
+        assert_eq!(many[0].config_hash, many[2].config_hash);
+        many[0].check_compatible(&many[2]).unwrap();
+        let registry = planner.registry().unwrap().clone();
+        many[2]
+            .validate_against(&planner.trained().unwrap().quantized, &registry)
+            .unwrap();
+    }
+
+    #[test]
+    fn es_cache_is_fingerprint_guarded() {
+        let dir = std::env::temp_dir().join(format!("xtpu_es_cache_{}", std::process::id()));
+        let path = dir.join("es.json");
+        save_es_cache(&path, "fp_a", &[1.0, 2.0, 3.0]);
+        assert_eq!(load_es_cache(&path, "fp_a", 3), Some(vec![1.0, 2.0, 3.0]));
+        assert_eq!(load_es_cache(&path, "fp_b", 3), None, "stale fingerprint");
+        assert_eq!(load_es_cache(&path, "fp_a", 4), None, "wrong neuron count");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -39,9 +39,11 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::errormodel::ErrorModelRegistry;
 use crate::exec::{Backend, Exact};
 use crate::nn::quant::{NoiseSpec, QuantizedModel};
 use crate::nn::tensor::Tensor;
+use crate::plan::VoltagePlan;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::threadpool;
@@ -66,8 +68,49 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(quantized: QuantizedModel, levels: Vec<QualityLevel>, input_dim: usize) -> Self {
-        Self { quantized, levels, input_dim, backends: Vec::new() }
+    /// Build an engine from pre-solved quality levels. Errors on an empty
+    /// level list — the request path clamps `quality` to the last level, so
+    /// a level-less engine could never answer anything.
+    pub fn new(
+        quantized: QuantizedModel,
+        levels: Vec<QualityLevel>,
+        input_dim: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            !levels.is_empty(),
+            "engine needs at least one quality level (got none)"
+        );
+        Ok(Self { quantized, levels, input_dim, backends: Vec::new() })
+    }
+
+    /// Build an engine whose quality levels come from deployable
+    /// [`VoltagePlan`] artifacts (`xtpu plan` → `xtpu serve --plan`): the
+    /// noise spec and energy saving of every level are derived from the
+    /// solved assignment, not hand-rolled. Validates that every plan fits
+    /// the model + registry and that all plans came from the same offline
+    /// run, then serves with **zero solve latency**.
+    pub fn from_plans(
+        quantized: QuantizedModel,
+        registry: &ErrorModelRegistry,
+        plans: &[VoltagePlan],
+        input_dim: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(!plans.is_empty(), "engine needs at least one plan (got none)");
+        for p in plans {
+            p.validate_against(&quantized, registry)?;
+        }
+        for p in &plans[1..] {
+            plans[0].check_compatible(p)?;
+        }
+        let levels = plans
+            .iter()
+            .map(|p| QualityLevel {
+                name: p.name.clone(),
+                noise: p.noise_spec(registry),
+                energy_saving: p.energy_saving,
+            })
+            .collect();
+        Self::new(quantized, levels, input_dim)
     }
 
     /// Install one execution backend instance shared by every batch worker
@@ -106,7 +149,8 @@ struct Job {
     reply: Sender<(usize, Vec<f32>)>,
 }
 
-/// Server statistics (exposed for tests/benches).
+/// Server statistics (exposed for tests/benches, and to clients via a
+/// `{"stats": true}` request line).
 #[derive(Default)]
 pub struct ServerStats {
     pub requests: AtomicU64,
@@ -117,6 +161,39 @@ pub struct ServerStats {
     /// engine really executed batches concurrently (the property the old
     /// global backend mutex made impossible).
     pub peak_concurrent_batches: AtomicU64,
+    /// Requests served per quality level (index = clamped level), so
+    /// operators can see which deployed plans are actually exercised.
+    pub per_level: Vec<AtomicU64>,
+}
+
+impl ServerStats {
+    pub fn new(levels: usize) -> Self {
+        Self {
+            per_level: (0..levels).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
+
+    /// Snapshot as JSON — what the server returns for a stats request.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            (
+                "peak_concurrent_batches",
+                Json::Num(self.peak_concurrent_batches.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "per_level",
+                Json::Arr(
+                    self.per_level
+                        .iter()
+                        .map(|c| Json::Num(c.load(Ordering::Relaxed) as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 pub struct Server {
@@ -165,7 +242,7 @@ impl Server {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(ServerStats::default());
+        let stats = Arc::new(ServerStats::new(engine.levels.len()));
         let (tx, rx) = channel::<Job>();
         let engine = Arc::new(engine);
 
@@ -287,11 +364,17 @@ fn batch_worker(
         let inflight = stats.inflight_batches.fetch_add(1, Ordering::SeqCst) + 1;
         stats.peak_concurrent_batches.fetch_max(inflight, Ordering::SeqCst);
         // Group by quality level (each level has its own noise spec).
+        // `Engine::new` guarantees at least one level; `saturating_sub`
+        // keeps the clamp total even so.
+        let max_level = engine.levels.len().saturating_sub(1);
         let mut by_level: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
         for (i, j) in jobs.iter().enumerate() {
-            by_level.entry(j.quality.min(engine.levels.len() - 1)).or_default().push(i);
+            by_level.entry(j.quality.min(max_level)).or_default().push(i);
         }
         for (level, idxs) in by_level {
+            if let Some(counter) = stats.per_level.get(level) {
+                counter.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+            }
             let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
             for (r, &i) in idxs.iter().enumerate() {
                 x.row_mut(r).copy_from_slice(&jobs[i].pixels);
@@ -311,7 +394,7 @@ fn batch_worker(
 fn handle_connection(
     stream: TcpStream,
     tx: Sender<Job>,
-    _stats: Arc<ServerStats>,
+    stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
@@ -340,6 +423,16 @@ fn handle_connection(
             continue;
         }
         let req = Json::parse(&line)?;
+        // `{"stats": true}` — operator introspection, answered inline
+        // without touching the job queue. Strictly `true`: any other value
+        // (or a stray key on an inference request) falls through.
+        if matches!(req.opt("stats").map(|v| v.as_bool()), Some(Ok(true))) {
+            let resp = Json::obj(vec![("stats", stats.to_json())]);
+            writer.write_all(resp.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            continue;
+        }
         let pixels: Vec<f32> = req
             .get("pixels")?
             .as_f64_vec()?
@@ -417,6 +510,16 @@ impl Client {
         let applied = resp.get("quality")?.as_usize()?;
         Ok((class, logits, applied))
     }
+
+    /// Fetch the server's stats snapshot (`{"stats": true}` request).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.stream.write_all(b"{\"stats\": true}\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Ok(Json::parse(&line)?.get("stats")?.clone())
+    }
 }
 
 #[cfg(test)]
@@ -445,7 +548,14 @@ mod tests {
             QualityLevel { name: "exact".into(), noise: NoiseSpec::silent(n), energy_saving: 0.0 },
             QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3 },
         ];
-        (Engine::new(q, levels, 784), test)
+        (Engine::new(q, levels, 784).unwrap(), test)
+    }
+
+    #[test]
+    fn empty_quality_levels_rejected() {
+        let (engine, _) = test_engine();
+        let err = Engine::new(engine.quantized.clone(), Vec::new(), 784).unwrap_err();
+        assert!(err.to_string().contains("quality level"), "{err}");
     }
 
     #[test]
@@ -472,6 +582,18 @@ mod tests {
         assert_eq!(logits.len(), 10);
         assert_eq!(applied, 1);
         assert!(server.stats.requests.load(Ordering::Relaxed) >= n as u64 + 2);
+        // Per-level counters: n requests at level 0; level 1 saw the
+        // explicit + the clamped request.
+        assert_eq!(server.stats.per_level.len(), 2);
+        assert_eq!(server.stats.per_level[0].load(Ordering::Relaxed), n as u64);
+        assert_eq!(server.stats.per_level[1].load(Ordering::Relaxed), 2);
+        // And the same numbers are visible to clients via the stats request.
+        let j = client.stats().unwrap();
+        assert_eq!(j.get("requests").unwrap().as_u64().unwrap(), n as u64 + 2);
+        let per_level = j.get("per_level").unwrap().as_arr().unwrap();
+        assert_eq!(per_level.len(), 2);
+        assert_eq!(per_level[0].as_u64().unwrap(), n as u64);
+        assert_eq!(per_level[1].as_u64().unwrap(), 2);
         server.shutdown();
     }
 
@@ -487,6 +609,7 @@ mod tests {
             &[3.0e4, 1.0e4, 2.0e3, 0.0],
         );
         let engine = Engine::new(engine.quantized.clone(), engine.levels.clone(), 784)
+            .unwrap()
             .with_backend(Box::new(crate::exec::Statistical::new(reg)));
         let mut server = Server::spawn(engine, 0, BatchPolicy::default()).unwrap();
         let mut client = Client::connect(server.addr).unwrap();
@@ -495,6 +618,63 @@ mod tests {
             assert_eq!(logits.len(), 10);
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn engine_from_plans_derives_levels() {
+        use crate::config::ExperimentConfig;
+        use crate::errormodel::ErrorModelRegistry;
+        use crate::timing::voltage::VoltageLadder;
+        let (engine, _) = test_engine();
+        let q = engine.quantized.clone();
+        let reg = ErrorModelRegistry::synthetic(
+            &VoltageLadder::paper_default(),
+            &[3.0e4, 1.0e4, 2.0e3, 0.0],
+        );
+        let n = q.num_neurons();
+        let cfg = ExperimentConfig::smoke();
+        let mk = |name: &str, level: Vec<usize>, saving: f64| VoltagePlan {
+            name: name.into(),
+            mse_ub_fraction: 1.0,
+            budget_abs: 0.1,
+            baseline_mse: 0.1,
+            fan_in: q.neuron_fan_in.clone(),
+            es: vec![1.0; n],
+            volts: reg.ladder.levels().iter().map(|l| l.volts).collect(),
+            predicted_mse: 0.0,
+            energy: 1.0,
+            energy_saving: saving,
+            optimal: true,
+            solver: "ilp".into(),
+            model_fingerprint: "fp".into(),
+            config_hash: crate::plan::config_hash(&cfg),
+            config: cfg.clone(),
+            level,
+        };
+        let nominal = mk("exact", vec![3; n], 0.0);
+        let eco = mk("eco", vec![0; n], 0.35);
+        let e = Engine::from_plans(q.clone(), &reg, &[nominal.clone(), eco.clone()], 784)
+            .unwrap();
+        assert_eq!(e.levels.len(), 2);
+        assert!(e.levels[0].noise.is_silent(), "nominal plan → silent spec");
+        assert!(!e.levels[1].noise.is_silent());
+        assert_eq!(e.levels[1].energy_saving, 0.35);
+        // Expected composition: std = sqrt(k · var(0.5V)).
+        for (u, &k) in q.neuron_fan_in.iter().enumerate() {
+            crate::util::checks::assert_close(
+                e.levels[1].noise.std[u],
+                (k as f64 * 3.0e4).sqrt(),
+                1e-12,
+            );
+        }
+        // Guards: empty list, wrong neuron count, mismatched provenance.
+        assert!(Engine::from_plans(q.clone(), &reg, &[], 784).is_err());
+        let mut short = eco.clone();
+        short.level.pop();
+        assert!(Engine::from_plans(q.clone(), &reg, &[short], 784).is_err());
+        let mut other = eco.clone();
+        other.model_fingerprint = "other".into();
+        assert!(Engine::from_plans(q, &reg, &[nominal, other], 784).is_err());
     }
 
     #[test]

@@ -64,6 +64,10 @@ impl OptSpec {
 #[derive(Debug, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
+    /// Every explicitly-passed occurrence of an option, in order (defaults
+    /// are not recorded here) — the backing store for repeatable options
+    /// like `xtpu serve --plan a.json --plan b.json`.
+    multi: BTreeMap<String, Vec<String>>,
     flags: BTreeMap<String, bool>,
     pub positionals: Vec<String>,
 }
@@ -102,6 +106,7 @@ impl Args {
                             argv.get(i).cloned().ok_or(CliError::MissingValue(key.clone()))?
                         }
                     };
+                    args.multi.entry(key.clone()).or_default().push(val.clone());
                     args.values.insert(key, val);
                 }
             } else {
@@ -127,6 +132,29 @@ impl Args {
 
     pub fn opt_str(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
+    }
+
+    /// The last *explicitly passed* value of an option (raw, no comma
+    /// splitting); `None` when only the default applies. Lets a command
+    /// distinguish "user said `--artifacts x`" from "spec default".
+    pub fn explicit(&self, name: &str) -> Option<&str> {
+        self.multi.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// Every explicitly-passed value of a repeatable option, with each
+    /// occurrence additionally split on commas and empties dropped:
+    /// `--plan a.json --plan b.json,c.json` → `[a.json, b.json, c.json]`.
+    /// Defaults never appear here — an untouched option yields `[]`.
+    pub fn str_multi(&self, name: &str) -> Vec<String> {
+        self.multi
+            .get(name)
+            .into_iter()
+            .flatten()
+            .flat_map(|v| v.split(','))
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
     }
 
     fn typed<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
@@ -247,6 +275,26 @@ mod tests {
     fn invalid_typed_value() {
         let a = Args::parse(&sv(&["--model", "m", "--samples", "abc"]), &specs()).unwrap();
         assert!(matches!(a.usize("samples"), Err(CliError::InvalidValue { .. })));
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = Args::parse(
+            &sv(&["--model", "a.json", "--model", "b.json,c.json", "--model="]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.str_multi("model"), vec!["a.json", "b.json", "c.json"]);
+        // Last occurrence wins for the scalar view.
+        assert_eq!(a.str("model"), "");
+        // Defaults never leak into the multi view.
+        assert!(a.str_multi("voltage").is_empty());
+        assert!(a.str_multi("nonexistent").is_empty());
+        // `explicit` distinguishes user-passed values from spec defaults.
+        assert_eq!(a.explicit("model"), Some(""));
+        assert_eq!(a.explicit("voltage"), None);
+        let b = Args::parse(&sv(&["--model", "m", "--voltage", "0.6"]), &specs()).unwrap();
+        assert_eq!(b.explicit("voltage"), Some("0.6"));
     }
 
     #[test]

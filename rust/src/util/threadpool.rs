@@ -85,7 +85,20 @@ where
     R: Send,
     F: Fn(std::ops::Range<usize>, usize) -> R + Sync,
 {
-    let ranges = split_ranges(n, worker_count());
+    parallel_chunks_capped(n, worker_count(), f)
+}
+
+/// [`parallel_chunks`] with an explicit worker cap. Use this for *outer*
+/// fan-outs whose items themselves parallelize on the pool (e.g. the
+/// budget sweep, whose validation matmuls shard across `XTPU_THREADS`):
+/// capping the outer width keeps the multiplied thread count bounded
+/// instead of oversubscribing cores `N×N`.
+pub fn parallel_chunks_capped<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(std::ops::Range<usize>, usize) -> R + Sync,
+{
+    let ranges = split_ranges(n, workers.max(1));
     if ranges.len() <= 1 {
         return ranges.into_iter().enumerate().map(|(i, r)| f(r, i)).collect();
     }
@@ -198,6 +211,15 @@ mod tests {
         let parts = parallel_chunks(100, |r, _| (r.start, r.end));
         for w in parts.windows(2) {
             assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn capped_chunks_respect_the_cap() {
+        for cap in [1usize, 2, 3] {
+            let parts = parallel_chunks_capped(10, cap, |r, _| r.len());
+            assert_eq!(parts.len(), cap.min(10));
+            assert_eq!(parts.iter().sum::<usize>(), 10);
         }
     }
 

@@ -1,0 +1,196 @@
+//! Plan-subsystem integration tests: the offline→online artifact contract.
+//!
+//! - A `VoltagePlan` written to disk and loaded back must drive
+//!   [`Engine::from_plans`] to **bit-identical inference** vs an engine
+//!   built from the in-memory assignment (the `xtpu plan` → `xtpu serve
+//!   --plan` round trip).
+//! - The parallel multi-budget sweep ([`Pipeline::run`]) must produce
+//!   reports identical to the sequential reference
+//!   ([`Pipeline::run_sequential`]) under a fixed seed.
+//! - The assignment solvers must agree: greedy/GA solutions are feasible
+//!   and never beat the exact branch-and-bound optimum (property test over
+//!   random MCKP instances).
+
+use xtpu::config::ExperimentConfig;
+use xtpu::coordinator::Pipeline;
+use xtpu::exec::Statistical;
+use xtpu::ilp::{solve_genetic, solve_greedy, solve_mckp, GaConfig, MckpInstance};
+use xtpu::nn::quant::NoiseSpec;
+use xtpu::plan::VoltagePlan;
+use xtpu::server::{BatchPolicy, Client, Engine, QualityLevel, Server};
+use xtpu::util::checks::property;
+use xtpu::util::rng::Xoshiro256pp;
+
+fn smoke_config() -> ExperimentConfig {
+    ExperimentConfig {
+        train_samples: 600,
+        test_samples: 200,
+        epochs: 2,
+        characterize_samples: 40_000,
+        mse_ub_fractions: vec![0.1, 2.0, 10.0],
+        validation_runs: 1,
+        seed: 0x9A7B,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn plan_files_serve_identically_to_in_memory_assignments() {
+    let pipeline = Pipeline::new(smoke_config());
+    let sys = pipeline.prepare().unwrap();
+
+    // Solve two budgets, persist the plans, and load them back from disk.
+    let reports: Vec<_> = [0.5, 5.0]
+        .iter()
+        .map(|&f| pipeline.run_budget(&sys, f).unwrap())
+        .collect();
+    let dir = std::env::temp_dir().join(format!("xtpu_plan_rt_{}", std::process::id()));
+    let loaded: Vec<VoltagePlan> = reports
+        .iter()
+        .map(|r| {
+            let path = dir.join(r.plan.file_name());
+            r.plan.save(&path).unwrap();
+            VoltagePlan::load(&path).unwrap()
+        })
+        .collect();
+
+    // Engine A: from the round-tripped plan files.
+    let engine_plans =
+        Engine::from_plans(sys.quantized.clone(), &sys.registry, &loaded, 784).unwrap();
+    // Engine B: quality levels hand-assembled from the in-memory
+    // assignments (the pre-plan construction path).
+    let levels: Vec<QualityLevel> = reports
+        .iter()
+        .map(|r| QualityLevel {
+            name: r.plan.name.clone(),
+            noise: NoiseSpec::from_levels(&r.assignment.level, &sys.fan_in, &sys.registry),
+            energy_saving: r.assignment.energy_saving,
+        })
+        .collect();
+    let engine_mem = Engine::new(sys.quantized.clone(), levels, 784).unwrap();
+
+    // The derived noise specs must match bit-exactly…
+    for (a, b) in engine_plans.levels.iter().zip(&engine_mem.levels) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.energy_saving, b.energy_saving);
+        assert_eq!(a.noise.mean, b.noise.mean);
+        assert_eq!(a.noise.std, b.noise.std);
+    }
+    // …and so must actual noisy inference through the shared kernel.
+    let backend = Statistical::new(sys.registry.clone());
+    let (x, _) = sys.test.batch(&(0..16).collect::<Vec<_>>());
+    for level in 0..engine_plans.levels.len() {
+        let mut rng_a = Xoshiro256pp::seeded(0xD15C ^ level as u64);
+        let mut rng_b = Xoshiro256pp::seeded(0xD15C ^ level as u64);
+        let ya = engine_plans.quantized.forward_with(
+            &backend,
+            &x,
+            Some(&engine_plans.levels[level].noise),
+            &mut rng_a,
+        );
+        let yb = engine_mem.quantized.forward_with(
+            &backend,
+            &x,
+            Some(&engine_mem.levels[level].noise),
+            &mut rng_b,
+        );
+        assert_eq!(ya.data, yb.data, "level {level} logits diverge");
+    }
+
+    // And the plan-built engine really serves: full TCP round trip.
+    let engine = Engine::from_plans(sys.quantized.clone(), &sys.registry, &loaded, 784)
+        .unwrap()
+        .with_backend(Box::new(Statistical::new(sys.registry.clone())));
+    let mut server = Server::spawn(engine, 0, BatchPolicy::default()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    for q in 0..loaded.len() {
+        let (_, logits, applied) = client.infer_full(sys.test.images.row(0), q).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert_eq!(applied, q);
+    }
+    let stats = client.stats().unwrap();
+    let per_level = stats.get("per_level").unwrap().as_arr().unwrap();
+    assert_eq!(per_level.len(), loaded.len());
+    for c in per_level {
+        assert_eq!(c.as_u64().unwrap(), 1, "each level served exactly once");
+    }
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn parallel_sweep_matches_sequential_reference() {
+    let pipeline = Pipeline::new(smoke_config());
+    let (_, par) = pipeline.run().unwrap();
+    let (_, seq) = pipeline.run_sequential().unwrap();
+    assert_eq!(par.len(), seq.len());
+    for (a, b) in par.iter().zip(&seq) {
+        assert_eq!(a.mse_ub_fraction, b.mse_ub_fraction);
+        assert_eq!(a.budget_abs, b.budget_abs);
+        assert_eq!(a.assignment.level, b.assignment.level, "assignments diverge");
+        assert_eq!(a.assignment.energy_saving, b.assignment.energy_saving);
+        assert_eq!(a.assignment.predicted_mse, b.assignment.predicted_mse);
+        assert_eq!(a.validated_mse, b.validated_mse, "validation diverges");
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.plan.to_json().to_string(), b.plan.to_json().to_string());
+    }
+}
+
+/// Random MCKP instance with a guaranteed-feasible zero-weight option per
+/// group (the "nominal voltage" structure of the real problem).
+fn random_instance(rng: &mut Xoshiro256pp) -> MckpInstance {
+    let groups = 1 + rng.index(6);
+    let mut cost = Vec::with_capacity(groups);
+    let mut weight = Vec::with_capacity(groups);
+    let mut max_weight_sum = 0.0;
+    for _ in 0..groups {
+        let options = 2 + rng.index(4);
+        let mut c: Vec<f64> = (0..options).map(|_| rng.range_f64(0.1, 100.0)).collect();
+        let mut w: Vec<f64> = (0..options).map(|_| rng.range_f64(0.1, 50.0)).collect();
+        // Option `options-1` mimics nominal: zero weight, highest cost.
+        w[options - 1] = 0.0;
+        c[options - 1] = 100.0 + rng.range_f64(0.0, 50.0);
+        max_weight_sum += w.iter().cloned().fold(0.0, f64::max);
+        cost.push(c);
+        weight.push(w);
+    }
+    MckpInstance { cost, weight, budget: rng.range_f64(0.0, max_weight_sum * 1.2) }
+}
+
+#[test]
+fn solvers_agree_on_random_instances() {
+    property("greedy/GA feasible and never beat the exact optimum", 60, |rng, case| {
+        let inst = random_instance(rng);
+        let exact = solve_mckp(&inst).unwrap();
+        let greedy = solve_greedy(&inst).unwrap();
+        let ga = solve_genetic(
+            &inst,
+            &GaConfig { generations: 60, seed: 0xBEEF ^ case as u64, ..Default::default() },
+        )
+        .unwrap();
+        assert!(exact.optimal, "branch-and-bound must prove optimality");
+        let tol = 1e-9 * (1.0 + exact.total_cost.abs());
+        for (name, sol) in [("exact", &exact), ("greedy", &greedy), ("ga", &ga)] {
+            // Structural sanity: one in-range choice per group.
+            assert_eq!(sol.choice.len(), inst.cost.len(), "{name}");
+            for (g, &c) in sol.choice.iter().enumerate() {
+                assert!(c < inst.cost[g].len(), "{name}: choice out of range");
+            }
+            // Feasibility: the budget constraint holds.
+            let w: f64 =
+                sol.choice.iter().enumerate().map(|(g, &c)| inst.weight[g][c]).sum();
+            assert!(
+                w <= inst.budget + 1e-9,
+                "{name}: infeasible ({w} > {})",
+                inst.budget
+            );
+            // Optimality: nothing beats the exact solver.
+            assert!(
+                sol.total_cost >= exact.total_cost - tol,
+                "{name} cost {} beat exact optimum {}",
+                sol.total_cost,
+                exact.total_cost
+            );
+        }
+    });
+}

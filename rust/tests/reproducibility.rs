@@ -286,7 +286,7 @@ fn stress_engine() -> (Engine, xtpu::nn::data::Dataset) {
         QualityLevel { name: "exact".into(), noise: NoiseSpec::silent(n), energy_saving: 0.0 },
         QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3 },
     ];
-    (Engine::new(q, levels, 784), test)
+    (Engine::new(q, levels, 784).unwrap(), test)
 }
 
 #[test]
