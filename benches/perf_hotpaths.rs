@@ -205,6 +205,62 @@ fn main() {
     report.push(("l3g_plan_par_ms", Json::Num(par_s * 1000.0)));
     report.push(("l3g_plan_speedup", Json::Num(seq_s / par_s.max(1e-9))));
 
+    // --- L3h: fleet routing ablation (virtual-time, no inference) ---------
+    // Same trace, three routing policies: throughput of the routing +
+    // wear-accounting hot loop (requests simulated per second of wall
+    // time) and the min-lifetime gain the aging-aware policy buys.
+    {
+        use std::sync::Arc;
+        use xtpu::fleet::{policy_from_name, FleetConfig, Router, Trace};
+        use xtpu::server::Engine;
+        let fleet_plans = planner.solve_many(&[0.0, 10.0]).unwrap();
+        let registry2 = planner.registry().unwrap().clone();
+        let quantized = planner.trained().unwrap().quantized.clone();
+        let engine =
+            Arc::new(Engine::from_plans(quantized, &registry2, &fleet_plans, 784).unwrap());
+        let fleet_cfg = FleetConfig {
+            devices: 8,
+            wear_accel: 4.0e5,
+            initial_age_years: vec![0.02, 0.012, 0.006, 0.0],
+            initial_age_duty: 1.0,
+            ..FleetConfig::default()
+        };
+        let trace = Trace::poisson(3_000.0, 2.5, &[1.0, 1.0], 0xF1EE7);
+        let n_req = trace.request_count() as f64;
+        let mut rr_min_life = 0.0f64;
+        for (name, key_rate, key_life) in [
+            ("rr", "l3h_route_rr_kreq_per_s", "l3h_rr_min_life_y"),
+            ("ll", "l3h_route_ll_kreq_per_s", "l3h_ll_min_life_y"),
+            ("wl", "l3h_route_wl_kreq_per_s", "l3h_wl_min_life_y"),
+        ] {
+            // Same alias table (and thus same wear-level parameters) as
+            // the `xtpu fleet --policy` flag.
+            let policy = policy_from_name(name).unwrap();
+            let mut fleet =
+                Router::new(engine.clone(), &fleet_plans, policy, fleet_cfg.clone()).unwrap();
+            let t0 = std::time::Instant::now();
+            let t = fleet.run(&trace);
+            let dt = t0.elapsed().as_secs_f64();
+            let krps = n_req / dt / 1e3;
+            println!(
+                "L3h fleet routing : {krps:>8.1} k req/s simulated ({name}, {} devices) \
+                 min life {:.4} y · p99 {:.2} ms",
+                fleet_cfg.devices, t.min_lifetime_years, t.latency_p99_ms
+            );
+            report.push((key_rate, Json::Num(krps)));
+            report.push((key_life, Json::Num(t.min_lifetime_years)));
+            if name == "rr" {
+                rr_min_life = t.min_lifetime_years;
+            }
+            if name == "wl" && rr_min_life > 0.0 {
+                report.push((
+                    "l3h_wl_min_life_gain",
+                    Json::Num(t.min_lifetime_years / rr_min_life - 1.0),
+                ));
+            }
+        }
+    }
+
     // --- L3d: quantized inference (serving path, exec backend) ------------
     let calib = sys.test.batch(&(0..32).collect::<Vec<_>>()).0;
     let q = QuantizedModel::quantize(&sys.model, &calib);

@@ -1,0 +1,120 @@
+//! Fleet demo: the paper's lifetime claim (§V.C) as an *operational*
+//! scheduling win.
+//!
+//! Solves two deployable plans (all-nominal `exact` + an aggressive-VOS
+//! `eco`), spins up a heterogeneous six-device fleet (deployed in waves,
+//! so the oldest device has already burned most of its BTI guard band),
+//! and replays the identical Poisson trace under round-robin,
+//! least-loaded, and aging-aware wear-leveled routing. Served quality is
+//! identical by construction — only *which device* absorbs which voltage
+//! mix changes — yet the minimum projected device lifetime moves
+//! substantially, because the wear-leveler parks the near-stress-free
+//! 0.5 V traffic on worn silicon and water-fills the nominal-voltage
+//! stress across the devices with guard band to spare.
+//!
+//! Run: `cargo run --release --example fleet_wear_leveling`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use xtpu::config::ExperimentConfig;
+use xtpu::fleet::{
+    plan_stress_intensity, FleetConfig, LeastLoaded, RoundRobin, Router, RoutePolicy, Trace,
+    WearLeveling,
+};
+use xtpu::plan::{make_backend_pool, Planner};
+use xtpu::server::Engine;
+
+fn main() -> Result<()> {
+    let cfg = ExperimentConfig {
+        train_samples: 1500,
+        test_samples: 400,
+        epochs: 3,
+        characterize_samples: 100_000,
+        validation_runs: 1,
+        ..Default::default()
+    };
+
+    // Offline: two plans — what `xtpu plan --mse-ubs 0.0,10.0` would emit.
+    let mut planner = Planner::new(cfg);
+    let mut plans = planner.solve_many(&[0.0, 10.0])?;
+    plans[1].name = "eco".into();
+    let registry = planner.registry()?.clone();
+    let quantized = planner.trained()?.quantized.clone();
+    let fleet_cfg = FleetConfig {
+        devices: 6,
+        wear_accel: 1.5e6,
+        // Deployed in waves: prior always-nominal service per device.
+        initial_age_years: vec![0.02, 0.014, 0.009, 0.005, 0.002, 0.0],
+        initial_age_duty: 1.0,
+        ..FleetConfig::default()
+    };
+    for (i, p) in plans.iter().enumerate() {
+        println!(
+            "plan {i}: {:>6} — saving {:>5.1}% · aging intensity {:.3e} (x/year per busy-s)",
+            p.name,
+            p.energy_saving * 100.0,
+            plan_stress_intensity(&fleet_cfg.bti, &fleet_cfg.tech, p)
+        );
+    }
+
+    // One pooled engine, one slot per device (share-nothing execution).
+    let pool = make_backend_pool(&planner.cfg, &registry, fleet_cfg.devices)?;
+    let engine = Arc::new(
+        Engine::from_plans(quantized, &registry, &plans, 784)?.with_backend_pool(pool),
+    );
+
+    // The identical trace for every policy: 3 s of Poisson traffic at
+    // 600 req/s, 50/50 exact/eco.
+    let trace = Trace::poisson(600.0, 3.0, &[1.0, 1.0], 0xF1EE7);
+    println!("\ntrace: {} requests, fleet of {}\n", trace.request_count(), fleet_cfg.devices);
+
+    let policies: Vec<Box<dyn RoutePolicy>> = vec![
+        Box::<RoundRobin>::default(),
+        Box::<LeastLoaded>::default(),
+        Box::new(WearLeveling::new(0.05, 32)),
+    ];
+    let mut baseline_min = None;
+    println!(
+        "{:<14} {:>9} {:>9} {:>10} {:>12} {:>12}",
+        "policy", "p50 ms", "p99 ms", "saving %", "min life y", "mean life y"
+    );
+    for policy in policies {
+        let mut fleet = Router::new(engine.clone(), &plans, policy, fleet_cfg.clone())?;
+        let t = fleet.run(&trace);
+        println!(
+            "{:<14} {:>9.2} {:>9.2} {:>10.1} {:>12.4} {:>12.4}",
+            t.policy,
+            t.latency_p50_ms,
+            t.latency_p99_ms,
+            t.energy_saving_vs_nominal * 100.0,
+            t.min_lifetime_years,
+            t.mean_lifetime_years
+        );
+        if t.policy == "round_robin" {
+            baseline_min = Some(t.min_lifetime_years);
+        } else if t.policy == "wear_leveling" {
+            let base = baseline_min.expect("round robin ran first");
+            println!(
+                "\nwear leveling extends minimum projected device lifetime by {:.0}% \
+                 over round robin at identical served quality\n(paper §V.C reports ≈ +12% \
+                 for a *uniform* voltage mix on one device; steering the mix per device \
+                 is strictly stronger)",
+                (t.min_lifetime_years / base - 1.0) * 100.0
+            );
+            for d in &t.devices {
+                println!(
+                    "  device {}: {:>5} reqs ({:>4} exact / {:>4} eco) · margin {:>5.1}% · \
+                     life {:>8.3} y",
+                    d.id,
+                    d.requests,
+                    d.per_class[0],
+                    d.per_class[1],
+                    d.delay_margin * 100.0,
+                    d.projected_lifetime_years
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -63,6 +63,32 @@ impl BtiModel {
         years.powf(self.time_exp) * e_ox.powf(self.field_exp) * duty.powf(self.duty_exp)
     }
 
+    /// PMOS aging "velocity" at supply `v_dd`, in `ΔVth^{1/α}` units per
+    /// year of full-duty stress. Because eq. 1 is `ΔVth = A·E^γ·t^α`, the
+    /// transform `x = ΔVth^{1/α}` grows *linearly* in stress time
+    /// (`dx = rate·dt`), which is what makes interval-wise accrual across a
+    /// changing voltage schedule well-defined — the substrate of
+    /// [`StressAccount`]. Supplies at or below Vth exert no BTI stress.
+    pub fn stress_rate(&self, tech: &Technology, v_dd: f64) -> f64 {
+        if v_dd <= tech.v_th {
+            return 0.0;
+        }
+        let e_ox = (v_dd - tech.v_th) / self.t_inv_nm;
+        (self.a_pmos * e_ox.powf(self.field_exp)).powf(1.0 / self.time_exp)
+    }
+
+    /// The largest PMOS ΔVth (V) the clock guard band can absorb when the
+    /// critical path is evaluated at supply `v_eval`: beyond it the aged
+    /// delay stretch exceeds `1 + clock_guard` and the circuit starts
+    /// failing at nominal conditions. Closed-form inverse of the
+    /// alpha-power delay condition [`BtiModel::lifetime_years`] bisects.
+    pub fn critical_delta_vth(&self, tech: &Technology, v_eval: f64) -> f64 {
+        let budget = 1.0 + tech.clock_guard;
+        // (v − (vth+Δ))^α = v / (budget · alpha_power(v))  ⇒  solve for Δ.
+        let rhs = (v_eval / (budget * tech.alpha_power(v_eval))).powf(1.0 / tech.alpha);
+        (v_eval - tech.v_th) - rhs
+    }
+
     /// Absolute threshold shift ΔVth (V) after `years` at supply `v_dd`
     /// with activity duty factor `duty` ∈ (0, 1].
     pub fn delta_vth(
@@ -200,6 +226,178 @@ impl AgedScenario {
     }
 }
 
+/// Seconds in one Julian year — the unit bridge between a fleet
+/// simulation's virtual clock and the BTI model's year-denominated eq. 1.
+pub const SECONDS_PER_YEAR: f64 = 365.25 * 24.0 * 3600.0;
+
+/// Projected lifetimes are capped here so telemetry stays JSON-friendly
+/// (`util::json` serializes non-finite numbers as `null`); ten thousand
+/// years is "effectively unlimited" for any deployment question.
+pub const LIFETIME_CAP_YEARS: f64 = 1.0e4;
+
+/// Incremental BTI stress ledger for one live device: the online
+/// counterpart of [`BtiModel`]'s closed-form ΔVth(t).
+///
+/// A fleet device hops between supply voltages as the router hands it work
+/// under different [`VoltagePlan`](crate::plan::VoltagePlan)s, so its
+/// stress history is a *schedule*, not a single `(v_dd, t)` pair. Eq. 1 is
+/// `ΔVth = A·E_OX^γ·t^α`, which in the transformed variable
+/// `x = ΔVth^{1/α}` accumulates linearly: `dx = rate(v)·dt` with
+/// `rate = (A·E_OX^γ)^{1/α}` (see [`BtiModel::stress_rate`]). The account
+/// therefore just integrates `x` interval by interval — order-independent,
+/// and exactly reproducing the closed form for a constant schedule.
+///
+/// Alongside `x` it keeps the per-level duty histogram (stressed seconds
+/// per ladder voltage) that fleet telemetry reports and the wear-leveling
+/// router ranks devices by.
+#[derive(Clone, Debug)]
+pub struct StressAccount {
+    bti: BtiModel,
+    tech: Technology,
+    /// Accumulated `ΔVth^{1/α}` (PMOS, worst case).
+    x: f64,
+    /// The voltage ladder the duty histogram is bucketed over (ascending).
+    volts: Vec<f64>,
+    /// Stressed seconds accrued per ladder level.
+    duty_seconds: Vec<f64>,
+}
+
+impl StressAccount {
+    /// Fresh device over the given voltage ladder (ascending volts; the
+    /// same `plan.volts` vector every deployable plan carries).
+    pub fn new(bti: BtiModel, tech: Technology, volts: &[f64]) -> Self {
+        assert!(!volts.is_empty(), "stress account needs a voltage ladder");
+        Self {
+            bti,
+            tech,
+            x: 0.0,
+            volts: volts.to_vec(),
+            duty_seconds: vec![0.0; volts.len()],
+        }
+    }
+
+    /// Pre-age the account with `years` of prior service at `v_dd` with the
+    /// given activity duty factor — how heterogeneous fleets (devices
+    /// deployed at different times) enter the simulator.
+    pub fn pre_age(&mut self, v_dd: f64, years: f64, duty: f64) {
+        assert!(years >= 0.0 && (0.0..=1.0).contains(&duty));
+        // duty^β folded into the linear variable: (duty^β)^{1/α} per year.
+        let duty_x = duty.powf(self.bti.duty_exp / self.bti.time_exp);
+        self.x += self.bti.stress_rate(&self.tech, v_dd) * duty_x * years;
+        let level = self.nearest_level(v_dd);
+        self.duty_seconds[level] += years * duty * SECONDS_PER_YEAR;
+    }
+
+    /// Accrue `duty_seconds` of full-activity stress at supply `v_dd` and
+    /// return the projected ΔVth (V) after the update. This is the hot-path
+    /// entry the fleet simulator calls per served request slice.
+    pub fn accrue(&mut self, v_dd: f64, duty_seconds: f64) -> f64 {
+        assert!(duty_seconds >= 0.0, "negative stress interval");
+        let years = duty_seconds / SECONDS_PER_YEAR;
+        self.x += self.bti.stress_rate(&self.tech, v_dd) * years;
+        let level = self.nearest_level(v_dd);
+        self.duty_seconds[level] += duty_seconds;
+        self.delta_vth()
+    }
+
+    /// Batched fast path for simulators: advance the ledger by a
+    /// *precomputed* x-increment `dx` (the caller's per-traffic-class
+    /// `Σ shares[l]·stress_rate(volts[l])·years`, computed once, e.g. via
+    /// [`crate::fleet::plan_stress_intensity`]) and distribute
+    /// `stressed_seconds` over the duty histogram by `shares`. Equivalent
+    /// to one [`Self::accrue`] per level but with no `powf` in the hot
+    /// loop.
+    pub fn accrue_weighted(&mut self, dx: f64, shares: &[f64], stressed_seconds: f64) {
+        assert_eq!(shares.len(), self.duty_seconds.len(), "one share per ladder level");
+        assert!(dx >= 0.0 && stressed_seconds >= 0.0);
+        self.x += dx;
+        for (d, &s) in self.duty_seconds.iter_mut().zip(shares) {
+            *d += s * stressed_seconds;
+        }
+    }
+
+    fn nearest_level(&self, v_dd: f64) -> usize {
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for (i, &v) in self.volts.iter().enumerate() {
+            let d = (v - v_dd).abs();
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Current projected PMOS threshold shift (V).
+    pub fn delta_vth(&self) -> f64 {
+        if self.x <= 0.0 {
+            0.0
+        } else {
+            self.x.powf(self.bti.time_exp)
+        }
+    }
+
+    /// Aged / fresh delay stretch of the nominal-voltage critical path
+    /// under the accumulated drift (eq. 3 with the aged Vth).
+    pub fn delay_degradation(&self) -> f64 {
+        let dvth = self.delta_vth();
+        if self.tech.v_nominal - (self.tech.v_th + dvth) <= 1e-6 {
+            return f64::INFINITY;
+        }
+        self.tech.delay_scale_aged(self.tech.v_nominal, dvth)
+    }
+
+    /// Remaining fraction of the clock guard band: 1.0 = fresh, 0.0 = the
+    /// aged critical path has consumed the entire guard band.
+    pub fn delay_margin(&self) -> f64 {
+        let crit = self.bti.critical_delta_vth(&self.tech, self.tech.v_nominal);
+        (1.0 - self.delta_vth() / crit).max(0.0)
+    }
+
+    /// Stressed seconds accrued per ladder level (the duty histogram).
+    pub fn duty_seconds(&self) -> &[f64] {
+        &self.duty_seconds
+    }
+
+    /// Total stressed seconds across all levels.
+    pub fn total_duty_seconds(&self) -> f64 {
+        self.duty_seconds.iter().sum()
+    }
+
+    /// Remaining guard-band headroom in the linear-stress coordinate:
+    /// `ΔVth_crit^{1/α} − x`. Negative once the device is past end of
+    /// life. This is what an aging-aware router ranks devices by — it is
+    /// exactly the budget of future `rate·dt` stress the device can still
+    /// absorb, so "give the harsh traffic to the device with the most
+    /// headroom" is water-filling on this coordinate.
+    pub fn headroom_x(&self) -> f64 {
+        let crit = self.bti.critical_delta_vth(&self.tech, self.tech.v_nominal);
+        crit.powf(1.0 / self.bti.time_exp) - self.x
+    }
+
+    /// Years until the guard band is gone if the device keeps aging at the
+    /// average rate it exhibited over `observed_years` of (wall-clock)
+    /// operation — the extrapolation fleet telemetry reports. Capped at
+    /// [`LIFETIME_CAP_YEARS`]; 0.0 once the guard band is already consumed.
+    pub fn projected_lifetime_years(&self, accrued_x: f64, observed_years: f64) -> f64 {
+        let headroom = self.headroom_x();
+        if headroom <= 0.0 {
+            return 0.0;
+        }
+        if accrued_x <= 0.0 || observed_years <= 0.0 {
+            return LIFETIME_CAP_YEARS;
+        }
+        (headroom / (accrued_x / observed_years)).min(LIFETIME_CAP_YEARS)
+    }
+
+    /// The raw linear-stress coordinate (`ΔVth^{1/α}`) — what routing
+    /// policies compare and [`Self::projected_lifetime_years`] extrapolates.
+    pub fn x(&self) -> f64 {
+        self.x
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +484,148 @@ mod tests {
         let tech = Technology::default();
         let imp = bti.lifetime_improvement(&tech, &[0.8], &[1.0]);
         assert_close(imp, 0.0, 1e-9);
+    }
+
+    #[test]
+    fn low_voltage_anchors_match_paper() {
+        // Paper Fig 15a at 0.5 V after 10 years: ≈ 0.21 % (PMOS) / 0.2 %
+        // (NMOS). The 0.8 V points calibrate the pre-factors, so these are
+        // genuine predictions of the γ = 4.3 field exponent.
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let p = bti.delta_vth_percent(Device::Pmos, &tech, 0.5, 10.0);
+        let n = bti.delta_vth_percent(Device::Nmos, &tech, 0.5, 10.0);
+        assert_close(p, 0.21, 0.02);
+        assert!((0.1..0.3).contains(&n), "NMOS 0.5 V shift {n}% vs paper 0.2%");
+    }
+
+    #[test]
+    fn lifetime_monotone_in_vdd_and_duty() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        // Lower supply → less oxide field → longer life (possibly capped
+        // at the bisection's "effectively infinite" horizon).
+        let l8 = bti.lifetime_years(&tech, 0.8, 1.0);
+        let l7 = bti.lifetime_years(&tech, 0.7, 1.0);
+        let l6 = bti.lifetime_years(&tech, 0.6, 1.0);
+        assert!(l8.is_finite() && l8 > 0.0);
+        assert!(l7 > l8, "0.7 V must outlive 0.8 V ({l7} vs {l8})");
+        assert!(l6 > l7 || l6.is_infinite());
+        // Lower duty → less stress → longer life at the same supply.
+        let half = bti.lifetime_years(&tech, 0.8, 0.5);
+        let tenth = bti.lifetime_years(&tech, 0.8, 0.1);
+        assert!(half > l8);
+        assert!(tenth > half);
+    }
+
+    #[test]
+    fn critical_delta_vth_inverts_the_lifetime_condition() {
+        // The closed-form guard-band ΔVth and the bisection in
+        // lifetime_years must describe the same failure point: aging for
+        // exactly `lifetime_years` must produce ΔVth ≈ critical ΔVth.
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let life = bti.lifetime_years(&tech, 0.8, 1.0);
+        let dvth_at_eol = bti.delta_vth(Device::Pmos, &tech, 0.8, life, 1.0);
+        let crit = bti.critical_delta_vth(&tech, 0.8);
+        assert_close(dvth_at_eol / crit, 1.0, 1e-6);
+    }
+
+    #[test]
+    fn stress_account_matches_closed_form_constant_schedule() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let mut acct = StressAccount::new(bti, tech, &[0.5, 0.6, 0.7, 0.8]);
+        // Ten years at nominal, accrued in twelve uneven slices, must land
+        // exactly on the closed-form ΔVth(10 y, 0.8 V).
+        let total = 10.0 * SECONDS_PER_YEAR;
+        let mut left = total;
+        for i in 0..12 {
+            let dt = if i == 11 { left } else { left * 0.3 };
+            acct.accrue(0.8, dt);
+            left -= dt;
+        }
+        let closed = bti.delta_vth(Device::Pmos, &tech, 0.8, 10.0, 1.0);
+        assert_close(acct.delta_vth() / closed, 1.0, 1e-9);
+        assert_close(acct.total_duty_seconds() / total, 1.0, 1e-12);
+        assert_close(acct.duty_seconds()[3] / total, 1.0, 1e-12);
+    }
+
+    #[test]
+    fn stress_account_mixed_voltages_age_less_than_nominal() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let volts = [0.5, 0.6, 0.7, 0.8];
+        let secs = 5.0 * SECONDS_PER_YEAR;
+        let mut nominal = StressAccount::new(bti, tech, &volts);
+        nominal.accrue(0.8, secs);
+        let mut mixed = StressAccount::new(bti, tech, &volts);
+        for &v in &volts {
+            mixed.accrue(v, secs / 4.0);
+        }
+        assert!(mixed.delta_vth() < nominal.delta_vth());
+        assert!(mixed.delay_margin() > nominal.delay_margin());
+        assert!(mixed.delay_degradation() < nominal.delay_degradation());
+        // Sub-threshold supplies exert no stress at all.
+        let mut cold = StressAccount::new(bti, tech, &volts);
+        cold.accrue(0.3, secs);
+        assert_eq!(cold.delta_vth(), 0.0);
+        assert_close(cold.delay_margin(), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn accrue_weighted_matches_per_level_accrue() {
+        // The fleet's powf-free fast path must agree with the reference
+        // per-level accrual: same ΔVth, same duty histogram.
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let volts = [0.5, 0.6, 0.7, 0.8];
+        let shares = [0.3, 0.1, 0.2, 0.4];
+        let stressed = 2.5e6;
+        let mut slow = StressAccount::new(bti, tech, &volts);
+        for (&v, &s) in volts.iter().zip(&shares) {
+            slow.accrue(v, stressed * s);
+        }
+        let dx: f64 = volts
+            .iter()
+            .zip(&shares)
+            .map(|(&v, &s)| s * bti.stress_rate(&tech, v) * (stressed / SECONDS_PER_YEAR))
+            .sum();
+        let mut fast = StressAccount::new(bti, tech, &volts);
+        fast.accrue_weighted(dx, &shares, stressed);
+        assert_close(fast.delta_vth(), slow.delta_vth(), 1e-12);
+        assert_close(fast.x(), slow.x(), 1e-12);
+        for (f, s) in fast.duty_seconds().iter().zip(slow.duty_seconds()) {
+            assert_close(*f, *s, 1e-12);
+        }
+        assert_close(fast.total_duty_seconds(), stressed, 1e-12);
+    }
+
+    #[test]
+    fn stress_account_lifetime_projection() {
+        let bti = BtiModel::default();
+        let tech = Technology::default();
+        let volts = [0.5, 0.6, 0.7, 0.8];
+        // A fresh device observed aging at the full nominal rate projects
+        // the same lifetime the closed-form bisection computes.
+        let mut acct = StressAccount::new(bti, tech, &volts);
+        let obs_years = 0.01;
+        let x0 = acct.x();
+        acct.accrue(0.8, obs_years * SECONDS_PER_YEAR);
+        let life = acct.projected_lifetime_years(acct.x() - x0, obs_years);
+        let closed = bti.lifetime_years(&tech, 0.8, 1.0);
+        // Remaining + already-served ≈ total closed-form lifetime.
+        assert_close((life + obs_years) / closed, 1.0, 1e-3);
+        // Pre-aged device, same observed rate → strictly shorter remainder.
+        let mut old = StressAccount::new(bti, tech, &volts);
+        old.pre_age(0.8, 0.01, 1.0);
+        let x1 = old.x();
+        old.accrue(0.8, obs_years * SECONDS_PER_YEAR);
+        let old_life = old.projected_lifetime_years(old.x() - x1, obs_years);
+        assert!(old_life < life);
+        // No observed stress → capped ("effectively unlimited") projection.
+        let idle = StressAccount::new(bti, tech, &volts);
+        assert_eq!(idle.projected_lifetime_years(0.0, obs_years), LIFETIME_CAP_YEARS);
     }
 
     #[test]

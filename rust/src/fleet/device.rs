@@ -1,0 +1,170 @@
+//! One simulated accelerator in the fleet: a serving engine handle plus a
+//! live BTI stress ledger.
+//!
+//! A [`Device`] is the unit the router dispatches over. It wraps the shared
+//! [`Engine`] (device `i` executes on backend-pool slot `i`, so a fleet on
+//! a pooled engine is share-nothing across devices), carries the
+//! virtual-time queue state (`busy_until`), and accrues aging through an
+//! [`StressAccount`]: every served request stresses the device's PMOS
+//! transistors at the *voltage mix of the plan it served* — the per-neuron
+//! voltage assignment, fan-in-weighted, exactly the share-weighted reading
+//! of paper §V.C.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::aging::{BtiModel, StressAccount, SECONDS_PER_YEAR};
+use crate::plan::VoltagePlan;
+use crate::server::Engine;
+use crate::timing::voltage::Technology;
+
+/// Fan-in-weighted share of PE columns per ladder level for one plan: how
+/// much of a second of serving under this plan is spent stressing each
+/// voltage. (A neuron with fan-in `k` is a column of `k` PEs, so it weighs
+/// `k` times a single-PE neuron — same weighting the energy model uses.)
+pub fn plan_level_shares(plan: &VoltagePlan) -> Vec<f64> {
+    let mut weight = vec![0.0; plan.volts.len()];
+    let mut total = 0.0;
+    for (&l, &k) in plan.level.iter().zip(&plan.fan_in) {
+        weight[l] += k as f64;
+        total += k as f64;
+    }
+    if total > 0.0 {
+        for w in &mut weight {
+            *w /= total;
+        }
+    }
+    weight
+}
+
+/// Aging intensity of serving one busy second under a plan: the x-space
+/// stress rate (ΔVth^{1/α} per year, see [`BtiModel::stress_rate`])
+/// averaged over the plan's voltage shares. The wear-leveling router sorts
+/// quality classes by this — aggressive-VOS plans (mostly low voltage)
+/// have intensities orders of magnitude below the all-nominal plan.
+pub fn plan_stress_intensity(bti: &BtiModel, tech: &Technology, plan: &VoltagePlan) -> f64 {
+    plan_level_shares(plan)
+        .iter()
+        .zip(&plan.volts)
+        .map(|(&share, &v)| share * bti.stress_rate(tech, v))
+        .sum()
+}
+
+/// One fleet device: engine handle, queue state, wear ledger, counters.
+pub struct Device {
+    pub id: usize,
+    engine: Arc<Engine>,
+    stress: StressAccount,
+    /// Stress coordinate at simulation start — the baseline the observed
+    /// aging rate (and thus the lifetime extrapolation) is measured from.
+    x_start: f64,
+    /// Virtual time at which the device finishes its current backlog.
+    busy_until: f64,
+    /// Per-quality-class voltage shares (ladder-level histogram weights).
+    level_shares: Vec<Vec<f64>>,
+    /// Per-quality-class aging intensity (x per year of serving, see
+    /// [`plan_stress_intensity`]) — precomputed so the per-request wear
+    /// accounting is pure multiply-add, no `powf` on the hot path.
+    class_x_rate: Vec<f64>,
+    pub requests: u64,
+    pub per_class: Vec<u64>,
+    pub energy_units: f64,
+}
+
+impl Device {
+    /// Build a device serving the given plans through `engine`. All plans
+    /// must share one ladder (guaranteed upstream by
+    /// [`Engine::from_plans`]'s compatibility checks).
+    pub fn new(
+        id: usize,
+        engine: Arc<Engine>,
+        plans: &[VoltagePlan],
+        bti: BtiModel,
+        tech: Technology,
+    ) -> Result<Self> {
+        anyhow::ensure!(!plans.is_empty(), "device {id} needs at least one plan");
+        anyhow::ensure!(
+            plans.len() == engine.levels.len(),
+            "device {id}: {} plans but engine has {} levels",
+            plans.len(),
+            engine.levels.len()
+        );
+        let volts = plans[0].volts.clone();
+        let level_shares = plans.iter().map(plan_level_shares).collect();
+        let class_x_rate =
+            plans.iter().map(|p| plan_stress_intensity(&bti, &tech, p)).collect();
+        Ok(Self {
+            id,
+            engine,
+            stress: StressAccount::new(bti, tech, &volts),
+            x_start: 0.0,
+            busy_until: 0.0,
+            level_shares,
+            class_x_rate,
+            requests: 0,
+            per_class: vec![0; plans.len()],
+            energy_units: 0.0,
+        })
+    }
+
+    /// Pre-age the device with `years` of prior always-on service at
+    /// `v_dd` and the given duty factor, then re-baseline the observed-rate
+    /// window so the projection only extrapolates *future* traffic.
+    pub fn pre_age(&mut self, v_dd: f64, years: f64, duty: f64) {
+        self.stress.pre_age(v_dd, years, duty);
+        self.x_start = self.stress.x();
+    }
+
+    /// Serve one request of quality `class` arriving at `arrival`:
+    /// advance the queue, accrue wear (`service_seconds` of busy time ×
+    /// `wear_accel` deployed seconds per virtual busy second, split across
+    /// the plan's voltage shares), and book energy. Returns the completion
+    /// time in virtual seconds.
+    pub fn serve(
+        &mut self,
+        arrival: f64,
+        class: usize,
+        service_seconds: f64,
+        wear_accel: f64,
+    ) -> f64 {
+        let start = self.busy_until.max(arrival);
+        self.busy_until = start + service_seconds;
+        self.requests += 1;
+        let class = class.min(self.per_class.len() - 1);
+        self.per_class[class] += 1;
+        self.energy_units += self.engine.energy_estimate(class);
+        let stressed = service_seconds * wear_accel;
+        let dx = self.class_x_rate[class] * (stressed / SECONDS_PER_YEAR);
+        self.stress.accrue_weighted(dx, &self.level_shares[class], stressed);
+        self.busy_until
+    }
+
+    /// Seconds of queued work ahead of a request arriving `now`.
+    pub fn backlog_seconds(&self, now: f64) -> f64 {
+        (self.busy_until - now).max(0.0)
+    }
+
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
+    }
+
+    /// Remaining stress headroom (see [`StressAccount::headroom_x`]).
+    pub fn headroom_x(&self) -> f64 {
+        self.stress.headroom_x()
+    }
+
+    /// The wear ledger (telemetry reads duty histogram / ΔVth / margin).
+    pub fn stress(&self) -> &StressAccount {
+        &self.stress
+    }
+
+    /// Stress accrued since the simulation-start baseline.
+    pub fn accrued_x(&self) -> f64 {
+        self.stress.x() - self.x_start
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}

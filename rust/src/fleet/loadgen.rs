@@ -1,0 +1,216 @@
+//! Trace-driven load generation for the fleet simulator.
+//!
+//! Two client models, both deterministic from a seed:
+//!
+//! - **Open loop** ([`Trace::poisson`]): requests arrive on a Poisson
+//!   process at a fixed rate regardless of fleet state — the datacenter
+//!   front-door model, and the one that exposes queueing behavior.
+//! - **Closed loop** ([`Trace::closed`]): a fixed population of clients,
+//!   each issuing its next request only after the previous one completed
+//!   plus a think time — the benchmark-harness model, self-throttling by
+//!   construction.
+//!
+//! Every request carries a quality class drawn from a configurable mix, so
+//! one trace exercises several deployed [`VoltagePlan`]s at once. The
+//! class sequence depends only on the seed and the mix — never on routing
+//! or completion order — which is what lets the integration tests compare
+//! policies "at identical served quality" on the same trace.
+//!
+//! [`VoltagePlan`]: crate::plan::VoltagePlan
+
+use anyhow::Result;
+
+use crate::util::rng::Xoshiro256pp;
+
+/// One open-loop request: arrival instant (virtual seconds) + quality
+/// class (index into the fleet's plan list).
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub arrival: f64,
+    pub class: usize,
+}
+
+/// A load trace the fleet simulator can replay.
+#[derive(Clone, Debug)]
+pub enum Trace {
+    /// Pre-materialized open-loop arrivals, sorted by arrival time.
+    Open(Vec<Request>),
+    /// Closed-loop population; arrivals are generated during simulation
+    /// (issue → wait for completion → think → issue again). The class
+    /// sequence of each client is fixed by `seed`, independent of timing.
+    Closed { clients: usize, per_client: usize, think_seconds: f64, mix: Vec<f64>, seed: u64 },
+}
+
+impl Trace {
+    /// Open-loop Poisson arrivals: `rps` requests/second for `seconds`,
+    /// classes drawn i.i.d. from `mix` (weights over quality classes,
+    /// normalized internally).
+    pub fn poisson(rps: f64, seconds: f64, mix: &[f64], seed: u64) -> Trace {
+        assert!(rps > 0.0 && seconds > 0.0);
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let mut t = 0.0;
+        let mut reqs = Vec::new();
+        loop {
+            // Exponential inter-arrival: −ln(1−U)/λ with U ∈ [0, 1).
+            t += -(1.0 - rng.next_f64()).ln() / rps;
+            if t >= seconds {
+                break;
+            }
+            reqs.push(Request { arrival: t, class: pick_class(&mut rng, mix) });
+        }
+        Trace::Open(reqs)
+    }
+
+    /// Closed-loop population of `clients`, `per_client` requests each,
+    /// with a fixed think time between completion and next issue.
+    pub fn closed(
+        clients: usize,
+        per_client: usize,
+        think_seconds: f64,
+        mix: &[f64],
+        seed: u64,
+    ) -> Trace {
+        assert!(clients > 0 && per_client > 0 && think_seconds >= 0.0);
+        Trace::Closed { clients, per_client, think_seconds, mix: mix.to_vec(), seed }
+    }
+
+    /// Total number of requests this trace will issue.
+    pub fn request_count(&self) -> usize {
+        match self {
+            Trace::Open(reqs) => reqs.len(),
+            Trace::Closed { clients, per_client, .. } => clients * per_client,
+        }
+    }
+
+    /// Parse a CLI trace spec:
+    /// `poisson:rps=<f>,secs=<f>` or `closed:clients=<n>,reqs=<n>,think=<f>`.
+    /// The quality `mix` and `seed` come from their own CLI options so the
+    /// spec stays short. Unknown keys are rejected, not defaulted — a typo
+    /// like `rsp=600` must not silently simulate the default rate.
+    pub fn parse(spec: &str, mix: &[f64], seed: u64) -> Result<Trace> {
+        let (kind, body) = spec.split_once(':').unwrap_or((spec, ""));
+        let allowed: &[&str] = match kind {
+            "poisson" => &["rps", "secs"],
+            "closed" => &["clients", "reqs", "think"],
+            other => anyhow::bail!("unknown trace kind '{other}' (poisson:…|closed:…)"),
+        };
+        let mut kv = std::collections::BTreeMap::new();
+        for part in body.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("trace spec entry '{part}' is not key=value"))?;
+            let k = k.trim();
+            anyhow::ensure!(
+                allowed.contains(&k),
+                "unknown {kind} trace key '{k}' (allowed: {allowed:?})"
+            );
+            let v: f64 = v
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trace spec '{k}={v}': {e}"))?;
+            kv.insert(k.to_string(), v);
+        }
+        let get = |key: &str, default: f64| kv.get(key).copied().unwrap_or(default);
+        match kind {
+            "poisson" => {
+                let rps = get("rps", 200.0);
+                let secs = get("secs", 2.0);
+                anyhow::ensure!(rps > 0.0 && secs > 0.0, "poisson trace needs rps>0, secs>0");
+                Ok(Trace::poisson(rps, secs, mix, seed))
+            }
+            "closed" => {
+                let clients = get("clients", 8.0) as usize;
+                let reqs = get("reqs", 50.0) as usize;
+                let think = get("think", 0.002);
+                anyhow::ensure!(clients > 0 && reqs > 0, "closed trace needs clients>0, reqs>0");
+                anyhow::ensure!(think >= 0.0, "closed trace needs think>=0");
+                Ok(Trace::closed(clients, reqs, think, mix, seed))
+            }
+            _ => unreachable!("kind validated above"),
+        }
+    }
+}
+
+/// Draw a class index from (unnormalized) weights. All-zero or empty
+/// weights collapse to class 0.
+pub fn pick_class(rng: &mut Xoshiro256pp, mix: &[f64]) -> usize {
+    let total: f64 = mix.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut u = rng.next_f64() * total;
+    for (i, &w) in mix.iter().enumerate() {
+        if w.is_finite() && w > 0.0 {
+            u -= w;
+            if u < 0.0 {
+                return i;
+            }
+        }
+    }
+    mix.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_sorted_seeded_and_rate_plausible() {
+        let mix = [0.5, 0.3, 0.2];
+        let a = Trace::poisson(500.0, 4.0, &mix, 42);
+        let b = Trace::poisson(500.0, 4.0, &mix, 42);
+        let c = Trace::poisson(500.0, 4.0, &mix, 43);
+        let (Trace::Open(ra), Trace::Open(rb), Trace::Open(rc)) = (&a, &b, &c) else {
+            panic!("poisson must be an open trace");
+        };
+        assert_eq!(ra.len(), rb.len(), "same seed, same trace");
+        assert_ne!(ra.len(), 0);
+        assert!(ra.windows(2).all(|w| w[0].arrival <= w[1].arrival), "sorted arrivals");
+        assert!(ra.iter().all(|r| r.arrival < 4.0 && r.class < 3));
+        // λ·T = 2000 expected; Poisson std ≈ 45 — 5σ band.
+        assert!((ra.len() as i64 - 2000).abs() < 250, "got {} arrivals", ra.len());
+        assert_ne!(
+            ra.iter().map(|r| r.class).collect::<Vec<_>>(),
+            rc.iter().take(ra.len()).map(|r| r.class).collect::<Vec<_>>(),
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn class_mix_respected() {
+        let mut rng = Xoshiro256pp::seeded(7);
+        let mix = [0.7, 0.0, 0.3];
+        let mut counts = [0usize; 3];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[pick_class(&mut rng, &mix)] += 1;
+        }
+        assert_eq!(counts[1], 0, "zero-weight class never drawn");
+        let p0 = counts[0] as f64 / n as f64;
+        assert!((p0 - 0.7).abs() < 0.02, "class-0 share {p0}");
+        // Degenerate mixes collapse to class 0.
+        assert_eq!(pick_class(&mut rng, &[]), 0);
+        assert_eq!(pick_class(&mut rng, &[0.0, 0.0]), 0);
+    }
+
+    #[test]
+    fn trace_spec_parsing() {
+        let mix = [1.0, 1.0];
+        let t = Trace::parse("poisson:rps=100,secs=1", &mix, 1).unwrap();
+        assert!(matches!(&t, Trace::Open(r) if !r.is_empty()));
+        let t = Trace::parse("closed:clients=4,reqs=10,think=0.001", &mix, 1).unwrap();
+        assert_eq!(t.request_count(), 40);
+        assert!(matches!(t, Trace::Closed { clients: 4, per_client: 10, .. }));
+        // Defaults apply when keys are omitted.
+        assert!(Trace::parse("poisson", &mix, 1).is_ok());
+        // Malformed specs are rejected with context.
+        assert!(Trace::parse("burst:rps=1", &mix, 1).is_err());
+        assert!(Trace::parse("poisson:rps", &mix, 1).is_err());
+        assert!(Trace::parse("poisson:rps=fast", &mix, 1).is_err());
+        assert!(Trace::parse("poisson:rps=0", &mix, 1).is_err());
+        // Typos must not silently fall back to defaults.
+        let err = Trace::parse("poisson:rsp=600", &mix, 1).unwrap_err().to_string();
+        assert!(err.contains("rsp") && err.contains("rps"), "{err}");
+        assert!(Trace::parse("closed:rps=600", &mix, 1).is_err());
+    }
+}

@@ -1,0 +1,545 @@
+//! Aging-aware multi-device fleet simulator: wear-leveled routing over a
+//! pool of X-TPUs serving deployable [`VoltagePlan`]s.
+//!
+//! The paper's headline is double: quality-budgeted VOS saves energy
+//! **and** extends lifetime, because lower V_DD exerts quadratically less
+//! BTI oxide stress (§III.A eqs 1–2, §V.C Fig 15). A single simulated
+//! device can demonstrate the first claim; the second only becomes an
+//! *operational* lever at fleet scale, where a scheduler chooses **which**
+//! device absorbs which voltage mix. This module builds that layer:
+//!
+//! - [`Device`] — one accelerator: a handle on the serving
+//!   [`Engine`](crate::server::Engine) (device `i` executes on
+//!   backend-pool slot `i`), a virtual-time queue, and a live
+//!   [`StressAccount`](crate::aging::StressAccount) fed by the
+//!   fan-in-weighted voltage shares of every plan it serves.
+//! - [`Router`]/[`RoutePolicy`] — pluggable dispatch:
+//!   [`RoundRobin`], [`LeastLoaded`], and the aging-aware
+//!   [`WearLeveling`] policy.
+//! - [`Trace`] — open-loop Poisson and closed-loop client populations
+//!   with a configurable quality mix.
+//! - [`FleetTelemetry`] — the JSON report: per-device requests / energy /
+//!   duty histogram / projected lifetime, fleet latency percentiles, and
+//!   aggregate energy saving vs all-nominal.
+//!
+//! ## The wear-leveling policy, and its relation to paper §V.C
+//!
+//! Section V.C evaluates a PE whose operating voltage is distributed over
+//! the ladder instead of pinned at nominal and reads a ≈ 12 % lifetime
+//! improvement off the aged-delay axis of Fig 15b. The fleet router turns
+//! that passive observation into a control loop. In the transformed
+//! stress coordinate `x = ΔVth^{1/α}`, eq. 1 becomes *linear* in time
+//! (`dx = rate(V_DD)·dt`, [`BtiModel::stress_rate`]), so each device owns
+//! a scalar wear level and a scalar headroom `x_crit − x` where `x_crit`
+//! is the guard-band limit ([`BtiModel::critical_delta_vth`]). Because
+//! `rate` scales like `E_OX^{γ/α}` (γ ≈ 4.3, α ≈ 0.2), the all-nominal
+//! plan ages silicon ~10 orders of magnitude faster than an
+//! aggressive-VOS plan — traffic classes are wildly unequal stressors.
+//! Wear leveling exploits exactly that asymmetry: steer the
+//! low-quality/low-voltage traffic (near-zero stress) to the most-worn
+//! devices and the nominal-voltage traffic to the devices with the most
+//! headroom, re-ranking every `rebalance_every` picks (the granularity at
+//! which a deployment would re-flash which device holds the
+//! aggressive-VOS voltage-selection bits, Fig 7). This water-fills
+//! headroom across the fleet and maximizes the *minimum* projected device
+//! lifetime — the fleet-scale version of the paper's §V.C claim, which
+//! `rust/tests/fleet.rs` verifies against round-robin on identical
+//! traces.
+//!
+//! Wear accrual runs on an accelerated clock (`wear_accel` deployed
+//! seconds per virtual busy second) so a seconds-long trace can stand in
+//! for months of deployment; energy/latency accounting stays in virtual
+//! time.
+//!
+//! [`VoltagePlan`]: crate::plan::VoltagePlan
+//! [`BtiModel::stress_rate`]: crate::aging::BtiModel::stress_rate
+//! [`BtiModel::critical_delta_vth`]: crate::aging::BtiModel::critical_delta_vth
+
+mod device;
+mod loadgen;
+mod router;
+mod telemetry;
+
+pub use device::{plan_level_shares, plan_stress_intensity, Device};
+pub use loadgen::{pick_class, Request, Trace};
+pub use router::{policy_from_name, LeastLoaded, RoundRobin, RoutePolicy, WearLeveling};
+pub use telemetry::{DeviceTelemetry, FleetTelemetry, JOULES_PER_ENERGY_UNIT};
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::aging::{BtiModel, SECONDS_PER_YEAR};
+use crate::nn::data::Dataset;
+use crate::nn::tensor::Tensor;
+use crate::plan::VoltagePlan;
+use crate::server::Engine;
+use crate::timing::voltage::Technology;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::stats::{argmax_f32, quantile};
+
+/// Fleet-wide simulation parameters.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Number of devices in the fleet.
+    pub devices: usize,
+    /// Virtual service time per request (VOS does not change the clock —
+    /// the X-TPU keeps its nominal frequency — so service time is
+    /// level-independent).
+    pub service_seconds: f64,
+    /// Deployed (wear-clock) seconds represented by one virtual busy
+    /// second. The default compresses ~11.6 deployed days into each busy
+    /// second so short traces produce observable BTI drift.
+    pub wear_accel: f64,
+    /// Prior service years per device (cycled when shorter than the
+    /// fleet), modelling a heterogeneous fleet deployed in waves.
+    pub initial_age_years: Vec<f64>,
+    /// Activity duty factor of that prior service.
+    pub initial_age_duty: f64,
+    pub bti: BtiModel,
+    pub tech: Technology,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            devices: 4,
+            service_seconds: 1.0e-3,
+            wear_accel: 1.0e6,
+            initial_age_years: Vec::new(),
+            initial_age_duty: 0.3,
+            bti: BtiModel::default(),
+            tech: Technology::default(),
+        }
+    }
+}
+
+/// The fleet simulator: devices + routing policy + virtual clock.
+///
+/// `run` replays a [`Trace`] through the router in virtual time (fast,
+/// deterministic — used by routing ablations); `run_with_inference`
+/// additionally executes every routed request through its device's
+/// backend-pool slot and reports accuracy.
+pub struct Router {
+    cfg: FleetConfig,
+    devices: Vec<Device>,
+    policy: Box<dyn RoutePolicy>,
+    /// Per-quality-class aging intensity (x-rate per busy second of
+    /// serving that class), shared by all devices.
+    class_intensity: Vec<f64>,
+}
+
+/// Outcome of the virtual-time replay, before inference/telemetry.
+struct SimOutcome {
+    latencies_ms: Vec<f64>,
+    per_class: Vec<u64>,
+    /// Per device: the `(class, global request index)` list it served.
+    assigned: Vec<Vec<(usize, usize)>>,
+    /// First arrival → last completion (the span telemetry reports).
+    duration_seconds: f64,
+}
+
+impl Router {
+    /// Build a fleet of `cfg.devices` identical devices serving `plans`
+    /// through `engine` under the given routing policy.
+    pub fn new(
+        engine: Arc<Engine>,
+        plans: &[VoltagePlan],
+        policy: Box<dyn RoutePolicy>,
+        cfg: FleetConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(cfg.devices > 0, "fleet needs at least one device");
+        anyhow::ensure!(!plans.is_empty(), "fleet needs at least one plan");
+        anyhow::ensure!(
+            cfg.service_seconds > 0.0 && cfg.wear_accel >= 0.0,
+            "fleet needs service_seconds > 0 and wear_accel >= 0"
+        );
+        let class_intensity: Vec<f64> =
+            plans.iter().map(|p| plan_stress_intensity(&cfg.bti, &cfg.tech, p)).collect();
+        let mut devices = Vec::with_capacity(cfg.devices);
+        for id in 0..cfg.devices {
+            let mut d = Device::new(id, engine.clone(), plans, cfg.bti, cfg.tech)?;
+            if !cfg.initial_age_years.is_empty() {
+                let years = cfg.initial_age_years[id % cfg.initial_age_years.len()];
+                d.pre_age(cfg.tech.v_nominal, years, cfg.initial_age_duty);
+            }
+            devices.push(d);
+        }
+        Ok(Self { cfg, devices, policy, class_intensity })
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    fn rel_intensity(&self, class: usize) -> f64 {
+        let max = self.class_intensity.iter().cloned().fold(0.0, f64::max);
+        if max <= 0.0 {
+            return 0.0;
+        }
+        self.class_intensity[class.min(self.class_intensity.len() - 1)] / max
+    }
+
+    fn dispatch(&mut self, arrival: f64, class: usize) -> (usize, f64) {
+        let rel = self.rel_intensity(class);
+        let d = self.policy.pick(arrival, class, rel, &self.devices);
+        let d = d.min(self.devices.len() - 1);
+        let done =
+            self.devices[d].serve(arrival, class, self.cfg.service_seconds, self.cfg.wear_accel);
+        (d, done)
+    }
+
+    fn simulate(&mut self, trace: &Trace) -> SimOutcome {
+        let n_classes = self.class_intensity.len();
+        let mut out = SimOutcome {
+            latencies_ms: Vec::with_capacity(trace.request_count()),
+            per_class: vec![0; n_classes],
+            assigned: vec![Vec::new(); self.devices.len()],
+            duration_seconds: 0.0,
+        };
+        let mut first_arrival = f64::INFINITY;
+        let mut last_done = 0.0f64;
+        let mut record = |this: &mut Self, arrival: f64, class: usize, idx: usize| -> f64 {
+            let class = class.min(n_classes - 1);
+            let (d, done) = this.dispatch(arrival, class);
+            out.latencies_ms.push((done - arrival) * 1000.0);
+            out.per_class[class] += 1;
+            out.assigned[d].push((class, idx));
+            first_arrival = first_arrival.min(arrival);
+            last_done = last_done.max(done);
+            done
+        };
+        match trace {
+            Trace::Open(reqs) => {
+                for (i, r) in reqs.iter().enumerate() {
+                    record(self, r.arrival, r.class, i);
+                }
+            }
+            Trace::Closed { clients, per_client, think_seconds, mix, seed } => {
+                let mut next = vec![0.0f64; *clients];
+                let mut left = vec![*per_client; *clients];
+                let mut rngs: Vec<Xoshiro256pp> = (0..*clients)
+                    .map(|c| Xoshiro256pp::stream(*seed, c as u64))
+                    .collect();
+                let mut idx = 0;
+                loop {
+                    // Next client to issue: earliest wake-up among those
+                    // with requests left (ties → lowest id, deterministic).
+                    let Some(c) = (0..*clients)
+                        .filter(|&c| left[c] > 0)
+                        .min_by(|&a, &b| next[a].total_cmp(&next[b]).then(a.cmp(&b)))
+                    else {
+                        break;
+                    };
+                    let class = pick_class(&mut rngs[c], mix);
+                    let done = record(self, next[c], class, idx);
+                    next[c] = done + think_seconds;
+                    left[c] -= 1;
+                    idx += 1;
+                }
+            }
+        }
+        if first_arrival.is_finite() {
+            out.duration_seconds = (last_done - first_arrival).max(0.0);
+        }
+        out
+    }
+
+    /// Replay the trace in virtual time (routing, queueing, wear, energy —
+    /// no model execution) and report fleet telemetry.
+    pub fn run(&mut self, trace: &Trace) -> FleetTelemetry {
+        let outcome = self.simulate(trace);
+        self.telemetry(&outcome, None)
+    }
+
+    /// Replay the trace *and* execute every request through its device's
+    /// backend-pool slot: request `i` uses row `i % data.len()` of `data`,
+    /// served at its assigned quality level, batched per (device, class).
+    /// Accuracy lands in the telemetry.
+    pub fn run_with_inference(
+        &mut self,
+        trace: &Trace,
+        data: &Dataset,
+        seed: u64,
+    ) -> FleetTelemetry {
+        let outcome = self.simulate(trace);
+        let mut correct = vec![0u64; self.devices.len()];
+        let mut executed = vec![0u64; self.devices.len()];
+        const EXEC_BATCH: usize = 64;
+        for d in &self.devices {
+            let mut rng = Xoshiro256pp::stream(seed ^ 0xF1EE7, d.id as u64);
+            let engine = d.engine();
+            let mut by_class: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+            for &(class, idx) in &outcome.assigned[d.id] {
+                by_class.entry(class).or_default().push(idx);
+            }
+            for (class, idxs) in by_class {
+                for chunk in idxs.chunks(EXEC_BATCH) {
+                    let mut x = Tensor::zeros(&[chunk.len(), engine.input_dim]);
+                    let mut labels = Vec::with_capacity(chunk.len());
+                    for (r, &idx) in chunk.iter().enumerate() {
+                        let row = idx % data.len();
+                        x.row_mut(r).copy_from_slice(data.images.row(row));
+                        labels.push(data.labels[row]);
+                    }
+                    let logits = engine.execute_batch(d.id, &x, class, &mut rng);
+                    for (r, &label) in labels.iter().enumerate() {
+                        executed[d.id] += 1;
+                        if argmax_f32(logits.row(r)) == label as usize {
+                            correct[d.id] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let per_device: Vec<Option<f64>> = correct
+            .iter()
+            .zip(&executed)
+            .map(|(&c, &n)| if n > 0 { Some(c as f64 / n as f64) } else { None })
+            .collect();
+        self.telemetry(&outcome, Some(per_device))
+    }
+
+    fn telemetry(
+        &self,
+        outcome: &SimOutcome,
+        accuracy: Option<Vec<Option<f64>>>,
+    ) -> FleetTelemetry {
+        let observed_years = outcome.duration_seconds * self.cfg.wear_accel / SECONDS_PER_YEAR;
+        let devices: Vec<DeviceTelemetry> = self
+            .devices
+            .iter()
+            .map(|d| DeviceTelemetry {
+                id: d.id,
+                requests: d.requests,
+                per_class: d.per_class.clone(),
+                energy_units: d.energy_units,
+                duty_seconds: d.stress().duty_seconds().to_vec(),
+                delta_vth: d.stress().delta_vth(),
+                delay_margin: d.stress().delay_margin(),
+                projected_lifetime_years: d
+                    .stress()
+                    .projected_lifetime_years(d.accrued_x(), observed_years),
+                accuracy: accuracy.as_ref().and_then(|a| a[d.id]),
+            })
+            .collect();
+        let requests: u64 = devices.iter().map(|d| d.requests).sum();
+        let energy_units: f64 = devices.iter().map(|d| d.energy_units).sum();
+        let nominal_unit = self
+            .devices
+            .first()
+            .map(|d| d.engine().nominal_energy_estimate())
+            .unwrap_or(0.0);
+        let energy_saving_vs_nominal = if nominal_unit > 0.0 && requests > 0 {
+            1.0 - energy_units / (requests as f64 * nominal_unit)
+        } else {
+            0.0
+        };
+        let (p50, p99, mean) = if outcome.latencies_ms.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                quantile(&outcome.latencies_ms, 0.5),
+                quantile(&outcome.latencies_ms, 0.99),
+                crate::util::stats::mean(&outcome.latencies_ms),
+            )
+        };
+        let lifetimes: Vec<f64> =
+            devices.iter().map(|d| d.projected_lifetime_years).collect();
+        let min_life = lifetimes.iter().cloned().fold(f64::INFINITY, f64::min);
+        let (acc_correct, acc_total) = devices.iter().fold((0.0, 0u64), |(c, n), d| {
+            match d.accuracy {
+                Some(a) => (c + a * d.requests as f64, n + d.requests),
+                None => (c, n),
+            }
+        });
+        FleetTelemetry {
+            policy: self.policy.name().to_string(),
+            requests,
+            per_class: outcome.per_class.clone(),
+            duration_seconds: outcome.duration_seconds,
+            throughput_rps: if outcome.duration_seconds > 0.0 {
+                requests as f64 / outcome.duration_seconds
+            } else {
+                0.0
+            },
+            latency_p50_ms: p50,
+            latency_p99_ms: p99,
+            latency_mean_ms: mean,
+            energy_units,
+            energy_saving_vs_nominal,
+            min_lifetime_years: if min_life.is_finite() { min_life } else { 0.0 },
+            mean_lifetime_years: crate::util::stats::mean(&lifetimes),
+            accuracy: if acc_total > 0 { Some(acc_correct / acc_total as f64) } else { None },
+            devices,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::errormodel::ErrorModelRegistry;
+    use crate::nn::layers::Activation;
+    use crate::nn::model::fc_mnist;
+    use crate::nn::quant::QuantizedModel;
+    use crate::timing::voltage::VoltageLadder;
+
+    /// Tiny untrained engine + two plans (all-nominal "exact" and
+    /// all-lowest "eco") — enough structure to exercise routing and wear
+    /// without paying for training.
+    fn fixture() -> (Arc<Engine>, Vec<VoltagePlan>) {
+        let mut rng = Xoshiro256pp::seeded(11);
+        let model = fc_mnist(Activation::Relu, &mut rng);
+        let calib = crate::nn::data::synth_mnist(32, 3).batch(&(0..32).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let reg = ErrorModelRegistry::synthetic(
+            &VoltageLadder::paper_default(),
+            &[3.0e4, 1.0e4, 2.0e3, 0.0],
+        );
+        let n = q.num_neurons();
+        let cfg = ExperimentConfig::smoke();
+        let mk = |name: &str, level: Vec<usize>, energy: f64, saving: f64| VoltagePlan {
+            name: name.into(),
+            mse_ub_fraction: 0.0,
+            budget_abs: 0.0,
+            baseline_mse: 0.1,
+            fan_in: q.neuron_fan_in.clone(),
+            es: vec![1.0; n],
+            volts: reg.ladder.levels().iter().map(|l| l.volts).collect(),
+            predicted_mse: 0.0,
+            energy,
+            energy_saving: saving,
+            optimal: true,
+            solver: "ilp".into(),
+            model_fingerprint: "fp".into(),
+            config_hash: crate::plan::config_hash(&cfg),
+            config: cfg.clone(),
+            level,
+        };
+        let plans = vec![
+            mk("exact", vec![3; n], 100.0, 0.0),
+            mk("eco", vec![0; n], 60.0, 0.4),
+        ];
+        let engine = Engine::from_plans(q, &reg, &plans, 784).unwrap();
+        (Arc::new(engine), plans)
+    }
+
+    fn small_cfg() -> FleetConfig {
+        FleetConfig { devices: 3, ..FleetConfig::default() }
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_evenly() {
+        let (engine, plans) = fixture();
+        let mut fleet =
+            Router::new(engine, &plans, Box::<RoundRobin>::default(), small_cfg()).unwrap();
+        let trace = Trace::poisson(300.0, 1.0, &[1.0, 1.0], 5);
+        let t = fleet.run(&trace);
+        assert_eq!(t.requests as usize, trace.request_count());
+        let counts: Vec<u64> = t.devices.iter().map(|d| d.requests).collect();
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(max - min <= 1, "round robin must spread evenly: {counts:?}");
+        assert_eq!(t.per_class.iter().sum::<u64>(), t.requests);
+        assert!(t.duration_seconds > 0.0 && t.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn least_loaded_tracks_backlog() {
+        let (engine, plans) = fixture();
+        let cfg = FleetConfig { devices: 2, service_seconds: 0.01, ..FleetConfig::default() };
+        let mut fleet =
+            Router::new(engine, &plans, Box::<LeastLoaded>::default(), cfg).unwrap();
+        // Burst of simultaneous arrivals: least-loaded must alternate.
+        let reqs: Vec<Request> =
+            (0..10).map(|_| Request { arrival: 0.0, class: 0 }).collect();
+        let t = fleet.run(&Trace::Open(reqs));
+        assert_eq!(t.devices[0].requests, 5);
+        assert_eq!(t.devices[1].requests, 5);
+        // 5 back-to-back 10 ms services: worst latency 50 ms, median 30 ms.
+        assert!((t.latency_p50_ms - 30.0).abs() < 1.0, "p50 {}", t.latency_p50_ms);
+        assert!(t.latency_p99_ms <= 50.0 + 1e-9);
+    }
+
+    #[test]
+    fn wear_leveling_steers_gentle_traffic_to_worn_device() {
+        let (engine, plans) = fixture();
+        let cfg = FleetConfig {
+            devices: 2,
+            initial_age_years: vec![0.02, 0.0],
+            initial_age_duty: 1.0,
+            ..FleetConfig::default()
+        };
+        let mut fleet =
+            Router::new(engine, &plans, Box::new(WearLeveling::new(1.0, 1)), cfg).unwrap();
+        // Plenty of capacity: 100 rps against 2 devices × 1 ms service.
+        let trace = Trace::poisson(100.0, 2.0, &[1.0, 1.0], 9);
+        let t = fleet.run(&trace);
+        let d_worn = &t.devices[0];
+        let d_fresh = &t.devices[1];
+        // Gentle (eco, class 1) requests land on the worn device; harsh
+        // (exact, class 0) on the fresh one.
+        assert_eq!(d_worn.per_class[0], 0, "worn device must not serve nominal traffic");
+        assert_eq!(d_fresh.per_class[1], 0, "fresh device must not serve eco traffic");
+        assert_eq!(d_worn.per_class[1] + d_fresh.per_class[1], t.per_class[1]);
+        // Duty histograms tell the same story: the worn device's only
+        // nominal-voltage time is its pre-aging; everything it served in
+        // the run sits in the 0.5 V bucket. The fresh device is the mirror.
+        let pre_age_s = 0.02 * crate::aging::SECONDS_PER_YEAR;
+        crate::util::checks::assert_close(d_worn.duty_seconds[3], pre_age_s, 1e-6);
+        assert!(d_worn.duty_seconds[0] > 0.0, "eco traffic must stress the 0.5 V bucket");
+        assert_eq!(d_fresh.duty_seconds[0], 0.0);
+        assert!(d_fresh.duty_seconds[3] > 0.0);
+    }
+
+    #[test]
+    fn closed_loop_self_throttles_and_conserves_requests() {
+        let (engine, plans) = fixture();
+        let mut fleet =
+            Router::new(engine, &plans, Box::<LeastLoaded>::default(), small_cfg()).unwrap();
+        let trace = Trace::closed(4, 25, 0.002, &[1.0, 1.0], 3);
+        let t = fleet.run(&trace);
+        assert_eq!(t.requests, 100);
+        // A closed loop can never queue more than the client population:
+        // worst-case latency is population × service time.
+        assert!(t.latency_p99_ms <= 4.0 * 1.0 + 1e-9, "p99 {}", t.latency_p99_ms);
+    }
+
+    #[test]
+    fn telemetry_json_is_well_formed_and_roundtrips() {
+        let (engine, plans) = fixture();
+        let mut fleet =
+            Router::new(engine, &plans, Box::<RoundRobin>::default(), small_cfg()).unwrap();
+        let data = crate::nn::data::synth_mnist(40, 6);
+        let t = fleet.run_with_inference(&Trace::poisson(150.0, 1.0, &[1.0, 1.0], 5), &data, 1);
+        assert!(t.accuracy.is_some(), "inference run must report accuracy");
+        let j = t.to_json();
+        // Parse back the serialized form (well-formedness) and check the
+        // keys operators and the CI smoke job rely on.
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("policy").unwrap().as_str().unwrap(), "round_robin");
+        assert_eq!(back.get("requests").unwrap().as_u64().unwrap(), t.requests);
+        assert!(back.get("min_lifetime_years").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(back.get("energy_saving_vs_nominal").unwrap().as_f64().is_ok());
+        let devs = back.get("devices").unwrap().as_arr().unwrap();
+        assert_eq!(devs.len(), 3);
+        for d in devs {
+            assert!(d.get("projected_lifetime_years").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(d.get("delay_margin").unwrap().as_f64().unwrap() <= 1.0);
+            assert_eq!(
+                d.get("duty_seconds").unwrap().as_arr().unwrap().len(),
+                4,
+                "one duty bucket per ladder level"
+            );
+        }
+        // And the energy books must be consistent: mixed exact/eco traffic
+        // saves something, but less than the eco plan's own saving.
+        let saving = back.get("energy_saving_vs_nominal").unwrap().as_f64().unwrap();
+        assert!(saving > 0.0 && saving < 0.4, "saving {saving}");
+    }
+}

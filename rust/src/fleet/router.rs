@@ -1,0 +1,184 @@
+//! Pluggable request-routing policies for the fleet.
+//!
+//! All policies are deterministic functions of the trace and the fleet
+//! state, so a seeded simulation is exactly reproducible. Three are built
+//! in:
+//!
+//! - [`RoundRobin`] — the classic baseline: devices take turns.
+//! - [`LeastLoaded`] — route to the device with the shortest backlog.
+//! - [`WearLeveling`] — the aging-aware policy (see module docs of
+//!   [`crate::fleet`]): low-stress traffic is steered toward the most-worn
+//!   devices and high-stress (high-voltage) traffic toward the devices
+//!   with the most remaining guard-band headroom, re-ranking only every
+//!   `rebalance_every` picks (rotating which devices hold the
+//!   aggressive-VOS plans is a re-flash of the voltage-selection bits, not
+//!   a free per-request decision).
+
+use anyhow::Result;
+
+use super::device::Device;
+
+/// A routing policy: given the virtual time, the request's quality class
+/// and its *relative* stress intensity (this class's aging rate divided by
+/// the harshest class's — 1.0 for the all-nominal plan, ≈ 0 for an
+/// aggressive-VOS plan), pick the device to serve it.
+pub trait RoutePolicy: Send {
+    fn name(&self) -> &'static str;
+    fn pick(&mut self, now: f64, class: usize, rel_intensity: f64, devices: &[Device]) -> usize;
+}
+
+/// Devices take strict turns, ignoring load and wear.
+#[derive(Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn pick(&mut self, _now: f64, _class: usize, _rel: f64, devices: &[Device]) -> usize {
+        let d = self.next % devices.len();
+        self.next = self.next.wrapping_add(1);
+        d
+    }
+}
+
+/// Route to the device with the smallest backlog (ties → lowest id).
+#[derive(Default)]
+pub struct LeastLoaded;
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn pick(&mut self, now: f64, _class: usize, _rel: f64, devices: &[Device]) -> usize {
+        argmin_backlog(now, devices)
+    }
+}
+
+fn argmin_backlog(now: f64, devices: &[Device]) -> usize {
+    let mut best = 0;
+    let mut best_b = f64::INFINITY;
+    for d in devices {
+        let b = d.backlog_seconds(now);
+        if b < best_b {
+            best_b = b;
+            best = d.id;
+        }
+    }
+    best
+}
+
+/// Aging-aware wear leveling.
+///
+/// Every `rebalance_every` picks the policy re-ranks devices by remaining
+/// stress headroom (`ΔVth_crit^{1/α} − x`, ascending: most worn first).
+/// Between rebalances the ranking is frozen — the "rotation" granularity:
+/// in hardware, moving a plan between devices re-flashes the Fig-7
+/// voltage-selection bits, so the mapping should not churn per request.
+///
+/// Two-tier steering, exploiting that the aging rate scales like
+/// `E_OX^{γ/α}` (≈ 10 orders of magnitude between the 0.5 V and 0.8 V
+/// plans):
+///
+/// - requests whose relative stress intensity is below
+///   [`Self::GENTLE_THRESHOLD`] (aggressive-VOS traffic, negligible aging)
+///   walk the ranking from the *worn* end — worn devices stay busy while
+///   effectively resting;
+/// - every stress-bearing class walks it from the *fresh* end, greedily
+///   water-filling remaining headroom across the fleet, which is what
+///   maximizes the minimum projected lifetime.
+///
+/// Load is a constraint, not the objective: devices whose backlog exceeds
+/// the current minimum by more than `slack_seconds` are skipped, which
+/// bounds queueing at a small steering cost.
+pub struct WearLeveling {
+    /// Maximum backlog above the fleet minimum a device may have and still
+    /// receive steered traffic.
+    pub slack_seconds: f64,
+    /// Picks between headroom re-rankings (plan-rotation granularity).
+    pub rebalance_every: u64,
+    picks: u64,
+    /// Device ids sorted by headroom ascending (most worn first).
+    ranking: Vec<usize>,
+}
+
+impl WearLeveling {
+    /// Relative intensity below which a class counts as "gentle" (its
+    /// aging contribution is noise) and is parked on worn devices. The
+    /// 0.5 V-heavy plans sit ~10 orders of magnitude below this; any plan
+    /// with a meaningful nominal-voltage share sits well above it.
+    pub const GENTLE_THRESHOLD: f64 = 0.05;
+
+    pub fn new(slack_seconds: f64, rebalance_every: u64) -> Self {
+        Self {
+            slack_seconds,
+            rebalance_every: rebalance_every.max(1),
+            picks: 0,
+            ranking: Vec::new(),
+        }
+    }
+
+    fn rerank(&mut self, devices: &[Device]) {
+        let mut ids: Vec<usize> = (0..devices.len()).collect();
+        // Total order: headroom, then id — deterministic and NaN-free.
+        ids.sort_by(|&a, &b| {
+            devices[a]
+                .headroom_x()
+                .total_cmp(&devices[b].headroom_x())
+                .then(a.cmp(&b))
+        });
+        self.ranking = ids;
+    }
+}
+
+impl Default for WearLeveling {
+    fn default() -> Self {
+        Self::new(0.05, 64)
+    }
+}
+
+impl RoutePolicy for WearLeveling {
+    fn name(&self) -> &'static str {
+        "wear_leveling"
+    }
+
+    fn pick(&mut self, now: f64, _class: usize, rel: f64, devices: &[Device]) -> usize {
+        if self.picks % self.rebalance_every == 0 || self.ranking.len() != devices.len() {
+            self.rerank(devices);
+        }
+        self.picks += 1;
+        let min_backlog = devices
+            .iter()
+            .map(|d| d.backlog_seconds(now))
+            .fold(f64::INFINITY, f64::min);
+        let limit = min_backlog + self.slack_seconds;
+        let eligible = |id: usize| devices[id].backlog_seconds(now) <= limit;
+        let pick = if rel >= Self::GENTLE_THRESHOLD {
+            // Stress-bearing traffic → most headroom (fresh end).
+            self.ranking.iter().rev().find(|&&id| eligible(id))
+        } else {
+            // Gentle traffic → most worn device that isn't overloaded.
+            self.ranking.iter().find(|&&id| eligible(id))
+        };
+        // The argmin-backlog device is always eligible, so `pick` is Some;
+        // the fallback only guards an empty fleet upstream bugs would hit.
+        pick.copied().unwrap_or(0)
+    }
+}
+
+/// Construct a policy by CLI name: `round-robin` | `least-loaded` |
+/// `wear-level` (underscores accepted).
+pub fn policy_from_name(name: &str) -> Result<Box<dyn RoutePolicy>> {
+    match name.replace('_', "-").as_str() {
+        "round-robin" | "rr" => Ok(Box::<RoundRobin>::default()),
+        "least-loaded" | "ll" => Ok(Box::<LeastLoaded>::default()),
+        "wear-level" | "wear-leveling" | "wl" => Ok(Box::<WearLeveling>::default()),
+        other => anyhow::bail!(
+            "unknown routing policy '{other}' (round-robin|least-loaded|wear-level)"
+        ),
+    }
+}

@@ -44,6 +44,13 @@
 //! - [`server`] — threaded inference server with runtime quality levels:
 //!   dynamic batching onto a pool of per-worker backends, so concurrent
 //!   batches execute with no global lock.
+//! - [`fleet`] — **the aging-aware fleet layer**: a virtual-time
+//!   multi-device simulator where every [`Device`](fleet::Device) serves
+//!   deployable plans through a [`server::Engine`] and accrues live BTI
+//!   wear ([`aging::StressAccount`]); a [`Router`](fleet::Router) with
+//!   pluggable policies (round-robin, least-loaded, wear-leveling) plus
+//!   trace-driven load generation and JSON telemetry reproduce the
+//!   paper's lifetime claim at fleet scale (`xtpu fleet`).
 
 pub mod aging;
 pub mod assign;
@@ -51,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod errormodel;
 pub mod exec;
+pub mod fleet;
 pub mod ilp;
 pub mod nn;
 pub mod plan;
@@ -70,6 +78,7 @@ pub mod prelude {
     pub use crate::coordinator::Pipeline;
     pub use crate::errormodel::{ErrorModel, ErrorModelRegistry};
     pub use crate::exec::{Backend, Exact, GateLevel, Pjrt, Statistical};
+    pub use crate::fleet::{FleetConfig, FleetTelemetry, RoutePolicy, Router, Trace};
     pub use crate::nn::model::Model;
     pub use crate::plan::{Planner, VoltagePlan};
     pub use crate::timing::voltage::{Technology, VoltageLadder, VoltageLevel};

@@ -14,12 +14,16 @@
 //! xtpu serve          start the quality-adjustable inference server
 //!                     (`--plan file.json` serves pre-solved plans with
 //!                     zero solve latency at startup)
+//! xtpu fleet          aging-aware multi-device fleet simulation: spin N
+//!                     devices from plan files, replay a trace through a
+//!                     routing policy, emit a JSON telemetry report
 //! xtpu info           list artifacts + PJRT platform
 //! ```
 
 use anyhow::Result;
 use xtpu::aging::{BtiModel, Device};
 use xtpu::assign::Solver;
+use xtpu::fleet::{policy_from_name, FleetConfig, Router, Trace, WearLeveling};
 use xtpu::config::ExperimentConfig;
 use xtpu::coordinator::Pipeline;
 use xtpu::errormodel::{CharacterizeOptions, ErrorModelRegistry};
@@ -61,6 +65,7 @@ fn run(argv: &[String]) -> Result<()> {
         "aging" => cmd_aging(rest),
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
+        "fleet" => cmd_fleet(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -83,6 +88,7 @@ fn print_help() {
            aging         BTI aging study (Fig 15)\n\
            simulate      matmul on the cycle-level X-TPU simulator\n\
            serve         quality-adjustable inference server (--plan = pre-solved)\n\
+           fleet         aging-aware multi-device fleet simulation (--plan = pre-solved)\n\
            info          list artifacts + PJRT platform\n\n\
          Run `xtpu <command> --help` for options."
     );
@@ -459,6 +465,61 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the plans a serving-side command deploys: from `--plan` files
+/// when given (fingerprint-checked against the rebuilt model — zero solve
+/// latency), otherwise solved now from the experiment config's `--mse-ubs`
+/// budgets. Shared by `xtpu serve` and `xtpu fleet`, so a plan artifact
+/// behaves identically whether one engine or a whole fleet consumes it.
+fn resolve_plans(args: &Args) -> Result<(Planner, Vec<VoltagePlan>)> {
+    let plan_files = args.str_multi("plan");
+    let (cfg, loaded) = if plan_files.is_empty() {
+        let mut cfg = build_config(args)?;
+        cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
+        (cfg, None)
+    } else {
+        let plans: Vec<VoltagePlan> = plan_files
+            .iter()
+            .map(|p| VoltagePlan::load(std::path::Path::new(p)))
+            .collect::<Result<_>>()?;
+        // Compatibility across plans is enforced by Engine::from_plans;
+        // here we only need a config to rebuild the model/registry from.
+        // Serving-side knobs the user passed explicitly override the
+        // plan-embedded config (planning-side fields always come from the
+        // plan — changing those would break the fingerprint).
+        let mut cfg = plans[0].config.clone();
+        if let Some(dir) = args.explicit("artifacts") {
+            cfg.artifacts_dir = dir.to_string();
+        }
+        if let Some(be) = args.explicit("backend") {
+            cfg.backend = be.to_string();
+        }
+        (cfg, Some(plans))
+    };
+    let mut planner = Planner::new(cfg);
+    let plans = match loaded {
+        Some(plans) => {
+            // Pre-solved path: only the (cached) model + registry are
+            // needed — no ES estimation, no MCKP solve.
+            let fingerprint = planner.trained()?.fingerprint.clone();
+            anyhow::ensure!(
+                plans[0].model_fingerprint == fingerprint,
+                "plan '{}' was solved for model fingerprint {} but the \
+                 artifacts here rebuild {} — re-run `xtpu plan` (or point \
+                 --artifacts at the directory the plans were solved from)",
+                plans[0].name,
+                plans[0].model_fingerprint,
+                fingerprint
+            );
+            plans
+        }
+        None => {
+            let fractions = planner.cfg.mse_ub_fractions.clone();
+            planner.solve_many(&fractions)?
+        }
+    };
+    Ok((planner, plans))
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let Some(args) = parse_or_help(
         argv,
@@ -485,56 +546,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     else {
         return Ok(());
     };
-    // Quality levels are always plan-derived; the only question is whether
-    // the plans come from files (`xtpu plan`, zero solve latency) or are
-    // solved now from the experiment config.
-    let plan_files = args.str_multi("plan");
-    let (cfg, loaded) = if plan_files.is_empty() {
-        let mut cfg = build_config(&args)?;
-        cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
-        (cfg, None)
-    } else {
-        let plans: Vec<VoltagePlan> = plan_files
-            .iter()
-            .map(|p| VoltagePlan::load(std::path::Path::new(p)))
-            .collect::<Result<_>>()?;
-        // Compatibility across plans is enforced by Engine::from_plans;
-        // here we only need a config to rebuild the model/registry from.
-        // Serving-side knobs the user passed explicitly override the
-        // plan-embedded config (planning-side fields always come from the
-        // plan — changing those would break the fingerprint).
-        let mut cfg = plans[0].config.clone();
-        if let Some(dir) = args.explicit("artifacts") {
-            cfg.artifacts_dir = dir.to_string();
-        }
-        if let Some(be) = args.explicit("backend") {
-            cfg.backend = be.to_string();
-        }
-        (cfg, Some(plans))
-    };
-    let mut planner = Planner::new(cfg);
     let t0 = std::time::Instant::now();
-    let plans = match loaded {
-        Some(plans) => {
-            // Pre-solved path: only the (cached) model + registry are
-            // needed — no ES estimation, no MCKP solve.
-            let fingerprint = planner.trained()?.fingerprint.clone();
-            anyhow::ensure!(
-                plans[0].model_fingerprint == fingerprint,
-                "plan '{}' was solved for model fingerprint {} but the \
-                 artifacts here rebuild {} — re-run `xtpu plan` (or point \
-                 --artifacts at the directory the plans were solved from)",
-                plans[0].name,
-                plans[0].model_fingerprint,
-                fingerprint
-            );
-            plans
-        }
-        None => {
-            let fractions = planner.cfg.mse_ub_fractions.clone();
-            planner.solve_many(&fractions)?
-        }
-    };
+    let (mut planner, plans) = resolve_plans(&args)?;
     let registry = planner.registry()?.clone();
     let trained = planner.trained()?;
     let quantized = trained.quantized.clone();
@@ -577,6 +590,144 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_fleet(argv: &[String]) -> Result<()> {
+    let Some(args) = parse_or_help(
+        argv,
+        "fleet",
+        "Aging-aware multi-device fleet simulation over deployed plans.",
+        vec![
+            OptSpec::opt(
+                "plan",
+                "",
+                "pre-solved VoltagePlan file(s) from `xtpu plan`; repeat or comma-separate",
+            ),
+            OptSpec::opt(
+                "mse-ubs",
+                "0.0,2.0",
+                "budgets to solve at startup when no --plan is given",
+            ),
+            OptSpec::opt("devices", "4", "fleet size"),
+            OptSpec::opt(
+                "trace",
+                "poisson:rps=200,secs=2",
+                "poisson:rps=..,secs=.. | closed:clients=..,reqs=..,think=..",
+            ),
+            OptSpec::opt("mix", "", "quality-class weights, e.g. 0.6,0.3,0.1 (default uniform)"),
+            OptSpec::opt("policy", "wear-level", "round-robin | least-loaded | wear-level"),
+            OptSpec::opt("rotate", "64", "wear-level: picks between plan-rotation re-rankings"),
+            OptSpec::opt("slack-ms", "50", "wear-level: backlog slack over the fleet minimum"),
+            OptSpec::opt("service-us", "1000", "virtual service time per request"),
+            OptSpec::opt("wear-accel", "1e6", "deployed seconds of wear per virtual busy second"),
+            OptSpec::opt(
+                "initial-ages",
+                "",
+                "prior service years per device (cycled), e.g. 2.0,1.0,0",
+            ),
+            OptSpec::opt("report", "", "write the JSON telemetry report to this path"),
+            OptSpec::flag("smoke", "self-check the emitted report, then exit"),
+        ],
+    )?
+    else {
+        return Ok(());
+    };
+    let t0 = std::time::Instant::now();
+    let (mut planner, plans) = resolve_plans(&args)?;
+    let registry = planner.registry()?.clone();
+    let trained = planner.trained()?;
+    let quantized = trained.quantized.clone();
+    let input_dim = trained.model.input.numel();
+    let test = trained.test.clone();
+    let devices = args.usize("devices")?;
+    // Share-nothing across the fleet: one backend instance per device, the
+    // same pool a `serve` worker pool would use.
+    let pool = xtpu::plan::make_backend_pool(&planner.cfg, &registry, devices)?;
+    let engine = std::sync::Arc::new(
+        xtpu::server::Engine::from_plans(quantized, &registry, &plans, input_dim)?
+            .with_backend_pool(pool),
+    );
+    let mix = {
+        let m = args.f64_list("mix")?;
+        if m.is_empty() {
+            vec![1.0; plans.len()]
+        } else {
+            anyhow::ensure!(
+                m.len() == plans.len(),
+                "--mix has {} weights but {} plans are deployed",
+                m.len(),
+                plans.len()
+            );
+            m
+        }
+    };
+    let seed = args.u64("seed")?;
+    let trace = Trace::parse(args.str("trace"), &mix, seed ^ 0xF1EE)?;
+    // One alias table (policy_from_name); the CLI only re-parameterizes
+    // the wear-leveler with the --slack-ms/--rotate knobs afterwards.
+    let mut policy = policy_from_name(args.str("policy"))?;
+    if policy.name() == "wear_leveling" {
+        policy = Box::new(WearLeveling::new(
+            args.f64("slack-ms")? / 1000.0,
+            args.u64("rotate")?,
+        ));
+    }
+    let cfg = FleetConfig {
+        devices,
+        service_seconds: args.f64("service-us")? / 1e6,
+        wear_accel: args.f64("wear-accel")?,
+        initial_age_years: args.f64_list("initial-ages")?,
+        ..FleetConfig::default()
+    };
+    let mut fleet = Router::new(engine, &plans, policy, cfg)?;
+    println!(
+        "fleet: {} devices × {} plans ({} requests, policy {}) ready in {:.1}s",
+        devices,
+        plans.len(),
+        trace.request_count(),
+        fleet.policy_name(),
+        t0.elapsed().as_secs_f64()
+    );
+    let t1 = std::time::Instant::now();
+    let report = fleet.run_with_inference(&trace, &test, seed);
+    println!(
+        "simulated + executed in {:.2}s wall\n\n{}",
+        t1.elapsed().as_secs_f64(),
+        report.summary()
+    );
+    let json = report.to_json();
+    if !args.str("report").is_empty() {
+        let path = std::path::PathBuf::from(args.str("report"));
+        xtpu::util::json::write_file(&path, &json)?;
+        println!("wrote {}", path.display());
+    }
+    if args.flag("smoke") {
+        // CI self-check: the emitted report must parse back and carry the
+        // keys operators and dashboards rely on.
+        let back = xtpu::util::json::Json::parse(&json.to_string())?;
+        for key in [
+            "policy",
+            "requests",
+            "min_lifetime_years",
+            "mean_lifetime_years",
+            "energy_saving_vs_nominal",
+            "latency_p99_ms",
+        ] {
+            anyhow::ensure!(back.get(key).is_ok(), "report is missing key '{key}'");
+        }
+        let devs = back.get("devices")?.as_arr()?;
+        anyhow::ensure!(devs.len() == devices, "report covers {} devices", devs.len());
+        for d in devs {
+            anyhow::ensure!(
+                d.get("projected_lifetime_years")?.as_f64()? >= 0.0,
+                "device lifetime key missing or negative"
+            );
+        }
+        let served: u64 = back.get("requests")?.as_u64()?;
+        anyhow::ensure!(served as usize == trace.request_count(), "request conservation");
+        println!("fleet smoke OK");
+    }
+    Ok(())
 }
 
 fn cmd_info(argv: &[String]) -> Result<()> {

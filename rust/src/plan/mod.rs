@@ -433,6 +433,78 @@ mod tests {
     }
 
     #[test]
+    fn budget_name_edge_cases() {
+        // The two ends of the budget axis: 0 % is the reserved "exact"
+        // level; 100 % must not collide with it or produce decimals.
+        assert_eq!(budget_name(0.0), "exact");
+        assert_eq!(budget_name(1.0), "mse_ub_100pct");
+        // Fractions below 1 % stay filename-safe (no '.'), and a negative
+        // fraction (nonsensical but representable) maps '-' to 'm' rather
+        // than producing an invalid file name.
+        assert_eq!(budget_name(0.0001), "mse_ub_0_01pct");
+        assert_eq!(budget_name(-0.5), "mse_ub_m50pct");
+        // Round-trip property: distinct budgets never alias.
+        let budgets = [0.0, 0.0001, 0.005, 0.01, 0.1, 0.5, 1.0, 2.0, 10.0];
+        let names: std::collections::BTreeSet<String> =
+            budgets.iter().map(|&f| budget_name(f)).collect();
+        assert_eq!(names.len(), budgets.len(), "budget names must be unique: {names:?}");
+    }
+
+    #[test]
+    fn check_compatible_reports_what_differs() {
+        let mut rng = Xoshiro256pp::seeded(21);
+        let a = fake_plan(&mut rng, 6);
+        // Fingerprint mismatch: the error must name both plans and both
+        // fingerprints, so an operator can see *which* artifact is stale.
+        let mut b = a.clone();
+        b.name = "other_budget".into();
+        b.model_fingerprint = "feedfacefeedface".into();
+        let err = a.check_compatible(&b).unwrap_err().to_string();
+        assert!(err.contains("different models"), "{err}");
+        assert!(err.contains(&a.name) && err.contains("other_budget"), "{err}");
+        assert!(err.contains("deadbeefdeadbeef") && err.contains("feedfacefeedface"), "{err}");
+        // Config-hash mismatch is the second guard, with the same detail.
+        let mut c = a.clone();
+        c.config_hash = "0123456789abcdef".into();
+        let err = a.check_compatible(&c).unwrap_err().to_string();
+        assert!(err.contains("different planning configs"), "{err}");
+        assert!(err.contains("0123456789abcdef"), "{err}");
+    }
+
+    #[test]
+    fn validate_against_rejects_mismatched_ladder() {
+        use crate::nn::layers::Activation;
+        use crate::nn::model::fc_mnist;
+        use crate::nn::quant::QuantizedModel;
+        let mut rng = Xoshiro256pp::seeded(23);
+        let model = fc_mnist(Activation::Relu, &mut rng);
+        let calib = crate::nn::data::synth_mnist(16, 1).batch(&(0..16).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let ladder = VoltageLadder::paper_default();
+        let reg = ErrorModelRegistry::synthetic(&ladder, &[3.0e6, 1.4e6, 2.0e5, 0.0]);
+        let n = q.num_neurons();
+        let mut plan = fake_plan(&mut rng, n);
+        plan.fan_in = q.neuron_fan_in.clone();
+        plan.validate_against(&q, &reg).unwrap();
+        // A plan solved against a different ladder must be refused, and
+        // the error must show both ladders.
+        let mut wrong = plan.clone();
+        wrong.volts = vec![0.55, 0.65, 0.75, 0.8];
+        let err = wrong.validate_against(&q, &reg).unwrap_err().to_string();
+        assert!(err.contains("voltage ladder"), "{err}");
+        assert!(err.contains("0.55") && err.contains("0.5"), "{err}");
+        // Ladder-length mismatch is the same refusal, not a panic.
+        let mut short = plan.clone();
+        short.volts = vec![0.5, 0.8];
+        assert!(short.validate_against(&q, &reg).is_err());
+        // Level index out of ladder range is caught per neuron.
+        let mut oob = plan.clone();
+        oob.level[0] = 4;
+        let err = oob.validate_against(&q, &reg).unwrap_err().to_string();
+        assert!(err.contains("assigns level 4"), "{err}");
+    }
+
+    #[test]
     fn fnv_is_stable() {
         // Pinned reference values: artifacts hashed on one machine must
         // verify on another.

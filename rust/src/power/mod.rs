@@ -22,6 +22,13 @@ use crate::timing::circuits::PeDatapath;
 use crate::timing::gate::Netlist;
 use crate::timing::voltage::Technology;
 
+/// Ballpark Joules per normalized gate-energy unit: one NAND2 toggle at
+/// nominal voltage is of the order of a femtojoule at a 15-nm-class node.
+/// All in-model claims are relative (% savings) and independent of this
+/// constant; it only anchors absolute-energy telemetry (fleet reports in
+/// Joules next to normalized units).
+pub const JOULES_PER_ENERGY_UNIT: f64 = 1.0e-15;
+
 /// Per-cycle clock/register energy per register bit (normalized units).
 /// Calibrated so the PE decomposition lands near the paper's Fig 1b
 /// (multiplier ≈ 56 %, registers ≈ 30 %, adder ≈ 14 %).

@@ -54,6 +54,10 @@ pub struct QualityLevel {
     pub name: String,
     pub noise: NoiseSpec,
     pub energy_saving: f64,
+    /// Estimated energy of one inference at this level, in the normalized
+    /// gate-energy units of [`crate::power`] (a plan's `energy` field).
+    /// Zero when the level was hand-assembled without an energy model.
+    pub energy: f64,
 }
 
 /// The inference engine shared by all connections: the quantized model,
@@ -108,6 +112,7 @@ impl Engine {
                 name: p.name.clone(),
                 noise: p.noise_spec(registry),
                 energy_saving: p.energy_saving,
+                energy: p.energy,
             })
             .collect();
         Self::new(quantized, levels, input_dim)
@@ -140,6 +145,48 @@ impl Engine {
         } else {
             self.backends[worker % self.backends.len()].clone()
         }
+    }
+
+    /// Clamp a requested quality index to a valid level (`Engine::new`
+    /// guarantees at least one level exists).
+    pub fn clamp_level(&self, quality: usize) -> usize {
+        quality.min(self.levels.len().saturating_sub(1))
+    }
+
+    /// Execute one batch of rows at the given (clamped) quality level on
+    /// worker `worker`'s backend and return the logits. This is the single
+    /// inference entry both the TCP batch workers and the fleet simulator's
+    /// devices go through — one engine, many serving frontends.
+    pub fn execute_batch(
+        &self,
+        worker: usize,
+        x: &Tensor,
+        quality: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Tensor {
+        let level = self.clamp_level(quality);
+        let spec = &self.levels[level].noise;
+        let noise_opt = if spec.is_silent() { None } else { Some(spec) };
+        let backend = self.backend_for(worker);
+        self.quantized.forward_with(backend.as_ref(), x, noise_opt, rng)
+    }
+
+    /// Estimated energy of one request at `quality` (clamped), in the
+    /// normalized gate-energy units of [`crate::power`]. Zero when the
+    /// levels carry no energy model (hand-assembled engines).
+    pub fn energy_estimate(&self, quality: usize) -> f64 {
+        self.levels[self.clamp_level(quality)].energy
+    }
+
+    /// Estimated energy one request would cost at the all-nominal
+    /// assignment — the reference `energy_saving` fractions are relative
+    /// to. Zero when the levels carry no energy model.
+    pub fn nominal_energy_estimate(&self) -> f64 {
+        self.levels
+            .iter()
+            .find(|l| l.energy > 0.0 && l.energy_saving < 1.0)
+            .map(|l| l.energy / (1.0 - l.energy_saving))
+            .unwrap_or(0.0)
     }
 }
 
@@ -256,12 +303,11 @@ impl Server {
                 let stats = stats.clone();
                 let engine = engine.clone();
                 let rx = rx.clone();
-                let backend = engine.backend_for(worker);
                 let rng = Xoshiro256pp::seeded(
                     (0x5E47E ^ 0x1234) ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
                 );
                 std::thread::spawn(move || {
-                    batch_worker(engine, backend, rx, policy, shutdown, stats, rng)
+                    batch_worker(engine, worker, rx, policy, shutdown, stats, rng)
                 })
             })
             .collect();
@@ -347,7 +393,7 @@ fn collect_batch(rx: &Mutex<Receiver<Job>>, policy: &BatchPolicy) -> Vec<Job> {
 /// batches (and thus different quality levels) concurrently.
 fn batch_worker(
     engine: Arc<Engine>,
-    backend: Arc<dyn Backend>,
+    worker: usize,
     rx: Arc<Mutex<Receiver<Job>>>,
     policy: BatchPolicy,
     shutdown: Arc<AtomicBool>,
@@ -364,12 +410,9 @@ fn batch_worker(
         let inflight = stats.inflight_batches.fetch_add(1, Ordering::SeqCst) + 1;
         stats.peak_concurrent_batches.fetch_max(inflight, Ordering::SeqCst);
         // Group by quality level (each level has its own noise spec).
-        // `Engine::new` guarantees at least one level; `saturating_sub`
-        // keeps the clamp total even so.
-        let max_level = engine.levels.len().saturating_sub(1);
         let mut by_level: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
         for (i, j) in jobs.iter().enumerate() {
-            by_level.entry(j.quality.min(max_level)).or_default().push(i);
+            by_level.entry(engine.clamp_level(j.quality)).or_default().push(i);
         }
         for (level, idxs) in by_level {
             if let Some(counter) = stats.per_level.get(level) {
@@ -379,10 +422,7 @@ fn batch_worker(
             for (r, &i) in idxs.iter().enumerate() {
                 x.row_mut(r).copy_from_slice(&jobs[i].pixels);
             }
-            let spec = &engine.levels[level].noise;
-            let noise_opt = if spec.is_silent() { None } else { Some(spec) };
-            let logits =
-                engine.quantized.forward_with(backend.as_ref(), &x, noise_opt, &mut rng);
+            let logits = engine.execute_batch(worker, &x, level, &mut rng);
             for (r, &i) in idxs.iter().enumerate() {
                 let _ = jobs[i].reply.send((level, logits.row(r).to_vec()));
             }
@@ -446,12 +486,9 @@ fn handle_connection(
         let (level, logits) = reply_rx
             .recv_timeout(Duration::from_secs(30))
             .map_err(|_| anyhow::anyhow!("inference timed out"))?;
-        let class = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        // NaN-safe argmax: a NaN logit (however it got there) must neither
+        // panic the handler thread nor win the classification.
+        let class = crate::util::stats::argmax_f32(&logits);
         let resp = Json::obj(vec![
             ("class", Json::Num(class as f64)),
             (
@@ -545,10 +582,27 @@ mod tests {
             *s = 2000.0;
         }
         let levels = vec![
-            QualityLevel { name: "exact".into(), noise: NoiseSpec::silent(n), energy_saving: 0.0 },
-            QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3 },
+            QualityLevel {
+                name: "exact".into(),
+                noise: NoiseSpec::silent(n),
+                energy_saving: 0.0,
+                energy: 10.0,
+            },
+            QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 7.0 },
         ];
         (Engine::new(q, levels, 784).unwrap(), test)
+    }
+
+    #[test]
+    fn energy_estimates_follow_levels() {
+        let (engine, _) = test_engine();
+        assert_eq!(engine.energy_estimate(0), 10.0);
+        assert_eq!(engine.energy_estimate(1), 7.0);
+        // Out-of-range requests clamp, like the serving path does.
+        assert_eq!(engine.energy_estimate(99), 7.0);
+        // Nominal reference reconstructed from any level's saving: the
+        // exact level has saving 0, so nominal == its own energy.
+        crate::util::checks::assert_close(engine.nominal_energy_estimate(), 10.0, 1e-12);
     }
 
     #[test]

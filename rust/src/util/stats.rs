@@ -212,6 +212,19 @@ impl Histogram {
     }
 }
 
+/// NaN-safe argmax over f32 logits: ignores NaN entries entirely (a NaN
+/// logit must never win the classification, and — unlike
+/// `partial_cmp(..).unwrap()` — must never panic the serving thread
+/// either). All-NaN or empty input falls back to index 0.
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Sample quantile (linear interpolation). Sorts a copy.
 pub fn quantile(data: &[f64], q: f64) -> f64 {
     assert!(!data.is_empty());
@@ -323,6 +336,21 @@ pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
 mod tests {
     use super::*;
     use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn argmax_ignores_nan_and_never_panics() {
+        assert_eq!(argmax_f32(&[0.1, 3.0, 2.0]), 1);
+        // A NaN logit must not win (total_cmp alone would rank +NaN above
+        // +inf) and must not panic (partial_cmp().unwrap() did).
+        assert_eq!(argmax_f32(&[f32::NAN, 1.0, 0.5]), 1);
+        assert_eq!(argmax_f32(&[2.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax_f32(&[f32::NEG_INFINITY, f32::NAN]), 0);
+        // Degenerate inputs fall back to 0.
+        assert_eq!(argmax_f32(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_f32(&[]), 0);
+        // -0.0 vs +0.0 is well-defined under total order.
+        assert_eq!(argmax_f32(&[-0.0, 0.0]), 1);
+    }
 
     #[test]
     fn welford_matches_direct() {

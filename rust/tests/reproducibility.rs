@@ -283,8 +283,13 @@ fn stress_engine() -> (Engine, xtpu::nn::data::Dataset) {
         *s = 1500.0;
     }
     let levels = vec![
-        QualityLevel { name: "exact".into(), noise: NoiseSpec::silent(n), energy_saving: 0.0 },
-        QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3 },
+        QualityLevel {
+            name: "exact".into(),
+            noise: NoiseSpec::silent(n),
+            energy_saving: 0.0,
+            energy: 0.0,
+        },
+        QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 0.0 },
     ];
     (Engine::new(q, levels, 784).unwrap(), test)
 }
