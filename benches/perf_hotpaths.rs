@@ -261,6 +261,73 @@ fn main() {
         }
     }
 
+    // --- L3i: adaptive re-planning hot paths -------------------------------
+    // The closed loop's three costs, per BENCH_adaptive_replan.json:
+    //   drifted-ES eval  — deriving a DriftedRegistry + re-pricing every
+    //                      neuron's MSE contribution under it (no solve);
+    //   re-plan latency  — warm-started resolve_plan_from vs a cold MCKP;
+    //   swap latency     — Engine::swap_plans on a live engine.
+    {
+        use xtpu::plan::{resolve_plan_from, ResolveOptions};
+        use xtpu::server::Engine;
+        let registry3 = planner.registry().unwrap().clone();
+        let power = *planner.power();
+        let deployed = planner.solve(1.0).unwrap();
+        let quantized = planner.trained().unwrap().quantized.clone();
+        let delta_vth = 0.01;
+        let reps = 50;
+
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let drifted = registry3.drifted(delta_vth);
+            let vars: Vec<f64> =
+                drifted.registry().models().iter().map(|m| m.variance).collect();
+            std::hint::black_box(deployed.served_mse(&vars));
+        }
+        let drift_eval_us = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+
+        let drifted = registry3.drifted(delta_vth);
+        let opts = ResolveOptions { budget_scale: 0.9, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(
+                resolve_plan_from(&deployed, &registry3, &drifted, &power, &opts).unwrap(),
+            );
+        }
+        let replan_warm_ms = t0.elapsed().as_secs_f64() / reps as f64 * 1e3;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let problem = AssignmentProblem::build(
+                &deployed.es,
+                &deployed.fan_in,
+                drifted.registry(),
+                &power,
+                deployed.budget_abs * 0.9,
+            );
+            std::hint::black_box(problem.solve(Solver::Ilp).unwrap());
+        }
+        let replan_cold_ms = t0.elapsed().as_secs_f64() / reps as f64 * 1e3;
+
+        let plans_pair = vec![planner.solve(0.0).unwrap(), deployed.clone()];
+        let engine =
+            Engine::from_plans(quantized, &registry3, &plans_pair, 784).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(engine.swap_plans(&registry3, &plans_pair).unwrap());
+        }
+        let swap_us = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+
+        println!(
+            "L3i adaptive loop : {drift_eval_us:>8.1} µs drifted-ES eval · \
+             {replan_warm_ms:>6.2} ms warm re-plan ({replan_cold_ms:.2} ms cold) · \
+             {swap_us:>6.1} µs plan swap"
+        );
+        report.push(("l3i_drifted_es_eval_us", Json::Num(drift_eval_us)));
+        report.push(("l3i_replan_warm_ms", Json::Num(replan_warm_ms)));
+        report.push(("l3i_replan_cold_ms", Json::Num(replan_cold_ms)));
+        report.push(("l3i_swap_us", Json::Num(swap_us)));
+    }
+
     // --- L3d: quantized inference (serving path, exec backend) ------------
     let calib = sys.test.batch(&(0..32).collect::<Vec<_>>()).0;
     let q = QuantizedModel::quantize(&sys.model, &calib);

@@ -109,12 +109,7 @@ fn main() -> Result<()> {
         server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
         total as f64 / server.stats.batches.load(std::sync::atomic::Ordering::Relaxed) as f64
     );
-    let per_level: Vec<u64> = server
-        .stats
-        .per_level
-        .iter()
-        .map(|c| c.load(std::sync::atomic::Ordering::Relaxed))
-        .collect();
+    let per_level = server.stats.per_level_counts();
     println!("requests per quality level (plan utilization): {per_level:?}");
     server.shutdown();
     Ok(())

@@ -363,6 +363,189 @@ impl ErrorModelRegistry {
     pub fn load(path: &std::path::Path, tech: Technology) -> anyhow::Result<Self> {
         Self::from_json(&crate::util::json::read_file(path)?, tech)
     }
+
+    /// The largest ΔVth [`Self::drifted`] accepts before clamping: beyond
+    /// it the lowest ladder level loses its gate overdrive entirely and
+    /// the effective-voltage mapping stops being defined. Deployments
+    /// never get close — the clock guard band (and thus
+    /// [`crate::aging::BtiModel::critical_delta_vth`]) is consumed at a
+    /// small fraction of this.
+    pub fn max_drift(&self) -> f64 {
+        let tech = &self.ladder.tech;
+        let v_min = self.ladder.level(0).volts;
+        (v_min - tech.v_th - 1e-3).max(0.0)
+    }
+
+    /// Re-derive this registry for an aged device that has accrued the
+    /// given PMOS threshold drift — **analytically**, with no re-simulation.
+    ///
+    /// Two steps, both consistent with the `timing`/`vos` delay model:
+    ///
+    /// 1. Each ladder level `v` maps to its *effective voltage*
+    ///    `v_eff = `[`Technology::effective_voltage`]`(v, ΔVth)`: the
+    ///    fresh-device supply with the same alpha-power delay stretch the
+    ///    aged device exhibits at `v`.
+    /// 2. Each level's error moments are re-read off the fresh
+    ///    characterization curve at `v_eff`: log-variance (and log-error-
+    ///    rate) interpolate piecewise-linearly across the characterized
+    ///    positive-variance levels (error magnitudes span decades, so the
+    ///    log-domain is the faithful interpolant), anchored at the
+    ///    *error-onset voltage* ([`Technology::error_onset_voltage`]) above
+    ///    which the shipped clock still meets timing and the model is
+    ///    exactly zero. The nominal level therefore stays exact until the
+    ///    drift consumes the clock guard band — the same end-of-guard-band
+    ///    condition [`crate::aging::BtiModel::critical_delta_vth`] encodes.
+    ///
+    /// Exact at `ΔVth = 0` (returns a bit-identical clone) and monotone:
+    /// more drift never lowers any level's variance. Validity: the mapping
+    /// assumes aging is expressible as a pure threshold shift (BTI, eq. 1)
+    /// and requires positive overdrive on every level; drifts beyond
+    /// [`Self::max_drift`] are clamped (by then every level is far past
+    /// end of life anyway).
+    pub fn drifted(&self, delta_vth: f64) -> DriftedRegistry {
+        assert!(delta_vth >= 0.0, "negative threshold drift");
+        let delta = delta_vth.min(self.max_drift());
+        if delta == 0.0 {
+            return DriftedRegistry {
+                delta_vth: 0.0,
+                v_eff: self.ladder.levels().iter().map(|l| l.volts).collect(),
+                registry: self.clone(),
+            };
+        }
+        let tech = self.ladder.tech;
+        let interp = DriftInterpolator::new(self);
+        let v_eff: Vec<f64> = self
+            .ladder
+            .levels()
+            .iter()
+            .map(|l| tech.effective_voltage(l.volts, delta))
+            .collect();
+        let models: Vec<ErrorModel> = self
+            .models
+            .iter()
+            .zip(&v_eff)
+            .map(|(base, &ve)| interp.model_at(base, ve))
+            .collect();
+        DriftedRegistry {
+            delta_vth: delta,
+            v_eff,
+            registry: Self { models, ladder: self.ladder.clone() },
+        }
+    }
+}
+
+/// An [`ErrorModelRegistry`] re-derived for an aged device (see
+/// [`ErrorModelRegistry::drifted`]): same ladder, same consumers
+/// ([`crate::nn::quant::NoiseSpec::from_plan`], the MCKP constraint, the
+/// serving engine), but every level's moments reflect the accrued ΔVth.
+/// Carries its drift provenance so re-solved plans stay auditable.
+#[derive(Clone, Debug)]
+pub struct DriftedRegistry {
+    /// The (clamped) PMOS threshold drift this registry was derived for.
+    pub delta_vth: f64,
+    /// Effective voltage per ladder level under that drift.
+    pub v_eff: Vec<f64>,
+    registry: ErrorModelRegistry,
+}
+
+impl DriftedRegistry {
+    /// The re-derived registry — drop-in wherever a fresh
+    /// [`ErrorModelRegistry`] is consumed.
+    pub fn registry(&self) -> &ErrorModelRegistry {
+        &self.registry
+    }
+
+    /// Per-level column variances for a column of height `k` under drift.
+    pub fn column_variances(&self, k: usize) -> Vec<f64> {
+        self.registry.column_variances(k)
+    }
+}
+
+/// Log-domain interpolator over a registry's characterized error moments,
+/// anchored at the error-onset voltage (see
+/// [`ErrorModelRegistry::drifted`]).
+struct DriftInterpolator {
+    /// `(volts, ln variance, ln error_rate)` knots for the levels with
+    /// positive variance, ascending in volts.
+    knots: Vec<(f64, f64, f64)>,
+    v_onset: f64,
+}
+
+/// Error variance is modeled to decay by this factor between the highest
+/// characterized erroneous level and the error-onset voltage — the tail of
+/// the onset cliff the coarse ladder cannot resolve. Tiny by construction:
+/// levels whose effective voltage sits in this stretch contribute
+/// negligible (but monotone, nonzero) error.
+const ONSET_DECAY: f64 = 1e-9;
+
+impl DriftInterpolator {
+    fn new(reg: &ErrorModelRegistry) -> Self {
+        let knots = reg
+            .models
+            .iter()
+            .filter(|m| m.variance > 0.0)
+            .map(|m| (m.volts, m.variance.ln(), m.error_rate.max(1e-300).ln()))
+            .collect();
+        Self { knots, v_onset: reg.ladder.tech.error_onset_voltage() }
+    }
+
+    /// Piecewise log-linear read of the variance/error-rate curves at `v`.
+    /// Returns `(variance, error_rate)`; `(0, 0)` at or above onset.
+    fn moments_at(&self, v: f64) -> (f64, f64) {
+        if v >= self.v_onset || self.knots.is_empty() {
+            return (0.0, 0.0);
+        }
+        let k = &self.knots;
+        let seg = |a: &(f64, f64, f64), b: &(f64, f64, f64)| -> (f64, f64) {
+            let t = (v - a.0) / (b.0 - a.0);
+            ((a.1 + t * (b.1 - a.1)).exp(), (a.2 + t * (b.2 - a.2)).exp())
+        };
+        let last = k.len() - 1;
+        if v >= k[last].0 {
+            // Between the highest erroneous level and the onset: decay the
+            // last knot's moments toward `ONSET_DECAY` of themselves at
+            // the onset voltage (log-linear, hence monotone).
+            let t = (v - k[last].0) / (self.v_onset - k[last].0).max(1e-12);
+            let decay = ONSET_DECAY.powf(t.clamp(0.0, 1.0));
+            return (k[last].1.exp() * decay, k[last].2.exp() * decay);
+        }
+        if v <= k[0].0 {
+            // Below the lowest characterized level: extrapolate the lowest
+            // segment's slope (constant when only one knot exists).
+            if k.len() >= 2 {
+                return seg(&k[0], &k[1]);
+            }
+            return (k[0].1.exp(), k[0].2.exp());
+        }
+        for w in k.windows(2) {
+            if v <= w[1].0 {
+                return seg(&w[0], &w[1]);
+            }
+        }
+        (k[last].1.exp(), k[last].2.exp())
+    }
+
+    /// Re-read one level's model at its effective voltage. The mean scales
+    /// with the variance (errors keep their shape as the onset deepens);
+    /// higher moments are carried over unchanged — they are shape
+    /// descriptors the downstream Gaussian composition does not consume.
+    fn model_at(&self, base: &ErrorModel, v_eff: f64) -> ErrorModel {
+        let (variance, error_rate) = self.moments_at(v_eff);
+        let mean = if base.variance > 0.0 {
+            base.mean * (variance / base.variance).sqrt()
+        } else {
+            0.0
+        };
+        ErrorModel {
+            volts: base.volts,
+            mean,
+            variance,
+            skewness: base.skewness,
+            kurtosis_excess: base.kurtosis_excess,
+            error_rate: error_rate.min(1.0),
+            samples: base.samples,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -476,6 +659,98 @@ mod tests {
         assert_eq!(vars.len(), 4);
         assert!(vars[0] > vars[2], "0.5 V column variance must exceed 0.7 V");
         assert_eq!(vars[3], 0.0, "nominal level contributes no error");
+    }
+
+    #[test]
+    fn drifted_registry_exact_at_zero_and_monotone_in_drift() {
+        let ladder = VoltageLadder::paper_default();
+        let reg = ErrorModelRegistry::synthetic(&ladder, &[3.0e6, 1.4e6, 2.0e5, 0.0]);
+        // ΔVth = 0 must reproduce the fresh registry bit-for-bit.
+        let d0 = reg.drifted(0.0);
+        assert_eq!(d0.delta_vth, 0.0);
+        for (a, b) in d0.registry().models().iter().zip(reg.models()) {
+            assert_eq!(a.variance, b.variance);
+            assert_eq!(a.mean, b.mean);
+            assert_eq!(a.error_rate, b.error_rate);
+        }
+        assert_eq!(d0.v_eff, vec![0.5, 0.6, 0.7, 0.8]);
+        // Every level's variance is monotone nondecreasing in ΔVth, and
+        // strictly increasing for the already-erroneous levels.
+        let drifts = [0.0, 0.002, 0.005, 0.01, 0.02];
+        let mut last: Vec<f64> = reg.models().iter().map(|m| m.variance).collect();
+        for &dv in &drifts[1..] {
+            let d = reg.drifted(dv);
+            let vars: Vec<f64> =
+                d.registry().models().iter().map(|m| m.variance).collect();
+            for (l, (&v_new, &v_old)) in vars.iter().zip(&last).enumerate() {
+                assert!(
+                    v_new >= v_old,
+                    "level {l} variance fell {v_old} → {v_new} at ΔVth {dv}"
+                );
+                if v_old > 0.0 {
+                    assert!(v_new > v_old, "erroneous level {l} must strictly worsen");
+                }
+            }
+            last = vars;
+        }
+    }
+
+    #[test]
+    fn drifted_nominal_stays_exact_inside_the_guard_band() {
+        // The nominal level only goes noisy once the drift consumes the
+        // clock guard band — exactly critical_delta_vth (aging duality).
+        let ladder = VoltageLadder::paper_default();
+        let reg = ErrorModelRegistry::synthetic(&ladder, &[3.0e6, 1.4e6, 2.0e5, 0.0]);
+        let bti = crate::aging::BtiModel::default();
+        let crit = bti.critical_delta_vth(&ladder.tech, ladder.tech.v_nominal);
+        let inside = reg.drifted(crit * 0.8);
+        assert_eq!(inside.registry().model(3).variance, 0.0, "guard band intact");
+        assert_eq!(inside.registry().model(3).error_rate, 0.0);
+        // …while the overscaled levels already degraded.
+        assert!(inside.registry().model(0).variance > reg.model(0).variance);
+        let past = reg.drifted(crit * 1.5);
+        assert!(
+            past.registry().model(3).variance > 0.0,
+            "past the guard band the nominal level must err"
+        );
+        // Drifted column variances feed eq. 29 exactly like fresh ones.
+        let vars = inside.column_variances(128);
+        assert_eq!(vars.len(), 4);
+        assert!(vars[0] > 128.0 * 3.0e6);
+    }
+
+    #[test]
+    fn drifted_clamps_at_validity_limit() {
+        let ladder = VoltageLadder::paper_default();
+        let reg = ErrorModelRegistry::synthetic(&ladder, &[3.0e6, 1.4e6, 2.0e5, 0.0]);
+        let max = reg.max_drift();
+        assert!(max > 0.0 && max < 0.5 - ladder.tech.v_th);
+        // A (physically unreachable) drift past the limit clamps instead
+        // of panicking, and records the clamp in its provenance.
+        let d = reg.drifted(1.0);
+        assert_eq!(d.delta_vth, max);
+        assert!(d.registry().model(0).variance >= reg.model(0).variance);
+    }
+
+    #[test]
+    fn drifted_characterized_registry_tracks_gate_level_ordering() {
+        // On a real characterized registry (not the synthetic fixture) a
+        // drifted 0.6 V level must land between the fresh 0.6 V and fresh
+        // 0.5 V variances: the effective voltage walks down the
+        // characterized curve, it does not invent a new scale.
+        let (n, chip, _tech) = setup();
+        let ladder = VoltageLadder::paper_default();
+        let reg = ErrorModelRegistry::characterize(&n, &chip, &ladder, &quick_opts(30_000));
+        let d = reg.drifted(0.015);
+        let fresh5 = reg.model(0).variance;
+        let fresh6 = reg.model(1).variance;
+        let aged6 = d.registry().model(1).variance;
+        assert!(
+            aged6 > fresh6 && aged6 < fresh5,
+            "aged 0.6 V variance {aged6:.3e} must sit between fresh 0.6 V \
+             {fresh6:.3e} and fresh 0.5 V {fresh5:.3e}"
+        );
+        assert!(d.v_eff[1] < 0.6 && d.v_eff[1] > 0.5);
     }
 
     #[test]

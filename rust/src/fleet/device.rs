@@ -1,5 +1,7 @@
 //! One simulated accelerator in the fleet: a serving engine handle plus a
-//! live BTI stress ledger.
+//! live BTI stress ledger and — since the adaptive loop — its *own* copy
+//! of the deployed plans, which drift-triggered re-planning advances
+//! independently of its fleet-mates.
 //!
 //! A [`Device`] is the unit the router dispatches over. It wraps the shared
 //! [`Engine`] (device `i` executes on backend-pool slot `i`, so a fleet on
@@ -8,14 +10,21 @@
 //! [`StressAccount`]: every served request stresses the device's PMOS
 //! transistors at the *voltage mix of the plan it served* — the per-neuron
 //! voltage assignment, fan-in-weighted, exactly the share-weighted reading
-//! of paper §V.C.
+//! of paper §V.C. When a [`ReplanPolicy`](crate::fleet::ReplanPolicy)
+//! fires, [`Device::replan`] re-solves every deployed plan against the
+//! device's accrued ΔVth ([`resolve_plan_from`]) and hot-swaps its local
+//! plan state: shares, stress rates, and energy books all advance to the
+//! new generation.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::aging::{BtiModel, StressAccount, SECONDS_PER_YEAR};
-use crate::plan::VoltagePlan;
+use crate::errormodel::ErrorModelRegistry;
+use crate::nn::quant::NoiseSpec;
+use crate::plan::{resolve_plan_from, ReplanOutcome, ResolveOptions, VoltagePlan};
+use crate::power::PePowerModel;
 use crate::server::Engine;
 use crate::timing::voltage::Technology;
 
@@ -51,11 +60,44 @@ pub fn plan_stress_intensity(bti: &BtiModel, tech: &Technology, plan: &VoltagePl
         .sum()
 }
 
-/// One fleet device: engine handle, queue state, wear ledger, counters.
+/// One re-plan's worth of bookkeeping, bubbled up into
+/// [`FleetTelemetry`](crate::fleet::FleetTelemetry).
+#[derive(Clone, Debug)]
+pub struct ReplanEvent {
+    pub device: usize,
+    /// Virtual time of the triggering request.
+    pub virtual_seconds: f64,
+    /// Deployed (wear-clock) years the device had accrued at the trigger.
+    pub deployed_years: f64,
+    /// The device's plan generation *after* this re-plan.
+    pub generation: u64,
+    /// Accrued ΔVth the re-solve saw.
+    pub delta_vth: f64,
+    /// Delay margin at the trigger (guard-band fraction remaining).
+    pub delay_margin: f64,
+    /// Neurons kept / re-solved, summed over the device's plans.
+    pub frozen: usize,
+    pub resolved: usize,
+    /// `false` when any plan hit quality end-of-life (pinned all-nominal).
+    pub feasible: bool,
+    /// Wall-clock cost of the incremental re-solve (all plans).
+    pub solve_ms: f64,
+    /// Wall-clock cost of swapping the device's serving state (shares,
+    /// stress rates, energy books) to the new generation.
+    pub swap_ms: f64,
+}
+
+/// One fleet device: engine handle, queue state, wear ledger, its deployed
+/// plans, counters.
 pub struct Device {
     pub id: usize,
     engine: Arc<Engine>,
     stress: StressAccount,
+    bti: BtiModel,
+    tech: Technology,
+    /// This device's deployed plans (one per quality class) — diverges
+    /// from the fleet's boot-time plans once re-planning fires.
+    plans: Vec<VoltagePlan>,
     /// Stress coordinate at simulation start — the baseline the observed
     /// aging rate (and thus the lifetime extrapolation) is measured from.
     x_start: f64,
@@ -67,6 +109,17 @@ pub struct Device {
     /// [`plan_stress_intensity`]) — precomputed so the per-request wear
     /// accounting is pure multiply-add, no `powf` on the hot path.
     class_x_rate: Vec<f64>,
+    /// Per-quality-class energy per request (the deployed plan's energy).
+    class_energy: Vec<f64>,
+    /// Delay margin when the current plan generation was installed — what
+    /// the threshold re-plan policy measures decay against.
+    margin_at_plan: f64,
+    /// Stressed seconds when the current generation was installed — what
+    /// the periodic re-plan policy measures elapsed wear against.
+    duty_at_plan: f64,
+    /// Local plan generation: 0 at boot, +1 per re-plan. The
+    /// generation-aware wear-leveling router re-ranks when it moves.
+    generation: u64,
     pub requests: u64,
     pub per_class: Vec<u64>,
     pub energy_units: f64,
@@ -85,23 +138,33 @@ impl Device {
     ) -> Result<Self> {
         anyhow::ensure!(!plans.is_empty(), "device {id} needs at least one plan");
         anyhow::ensure!(
-            plans.len() == engine.levels.len(),
+            plans.len() == engine.num_levels(),
             "device {id}: {} plans but engine has {} levels",
             plans.len(),
-            engine.levels.len()
+            engine.num_levels()
         );
         let volts = plans[0].volts.clone();
         let level_shares = plans.iter().map(plan_level_shares).collect();
         let class_x_rate =
             plans.iter().map(|p| plan_stress_intensity(&bti, &tech, p)).collect();
+        let class_energy = plans.iter().map(|p| p.energy).collect();
+        let stress = StressAccount::new(bti, tech, &volts);
+        let margin_at_plan = stress.delay_margin();
         Ok(Self {
             id,
             engine,
-            stress: StressAccount::new(bti, tech, &volts),
+            stress,
+            bti,
+            tech,
+            plans: plans.to_vec(),
             x_start: 0.0,
             busy_until: 0.0,
             level_shares,
             class_x_rate,
+            class_energy,
+            margin_at_plan,
+            duty_at_plan: 0.0,
+            generation: 0,
             requests: 0,
             per_class: vec![0; plans.len()],
             energy_units: 0.0,
@@ -110,10 +173,14 @@ impl Device {
 
     /// Pre-age the device with `years` of prior always-on service at
     /// `v_dd` and the given duty factor, then re-baseline the observed-rate
-    /// window so the projection only extrapolates *future* traffic.
+    /// window so the projection only extrapolates *future* traffic. The
+    /// re-plan baselines move too: the policy reacts to margin lost *in
+    /// service*, not to the age the device arrived with.
     pub fn pre_age(&mut self, v_dd: f64, years: f64, duty: f64) {
         self.stress.pre_age(v_dd, years, duty);
         self.x_start = self.stress.x();
+        self.margin_at_plan = self.stress.delay_margin();
+        self.duty_at_plan = self.stress.total_duty_seconds();
     }
 
     /// Serve one request of quality `class` arriving at `arrival`:
@@ -133,11 +200,99 @@ impl Device {
         self.requests += 1;
         let class = class.min(self.per_class.len() - 1);
         self.per_class[class] += 1;
-        self.energy_units += self.engine.energy_estimate(class);
+        self.energy_units += self.class_energy[class];
         let stressed = service_seconds * wear_accel;
         let dx = self.class_x_rate[class] * (stressed / SECONDS_PER_YEAR);
         self.stress.accrue_weighted(dx, &self.level_shares[class], stressed);
         self.busy_until
+    }
+
+    /// Whether the given policy wants a re-plan *now* (margin decayed past
+    /// the guard band, or the periodic wear interval elapsed).
+    pub fn wants_replan(&self, policy: &super::ReplanPolicy) -> bool {
+        match *policy {
+            super::ReplanPolicy::Never => false,
+            super::ReplanPolicy::Threshold { guard_band } => {
+                self.margin_at_plan - self.stress.delay_margin() >= guard_band
+            }
+            super::ReplanPolicy::Periodic { deployed_years } => {
+                (self.stress.total_duty_seconds() - self.duty_at_plan) / SECONDS_PER_YEAR
+                    >= deployed_years
+            }
+        }
+    }
+
+    /// Re-solve every deployed plan against this device's accrued drift
+    /// (warm-started from the current generation, see
+    /// [`resolve_plan_from`]) and swap the device's serving state to the
+    /// result. Returns the telemetry event.
+    pub fn replan(
+        &mut self,
+        base: &ErrorModelRegistry,
+        power: &PePowerModel,
+        opts: &ResolveOptions,
+        now: f64,
+    ) -> Result<ReplanEvent> {
+        let delta_vth = self.stress.delta_vth();
+        let margin = self.stress.delay_margin();
+        let t0 = std::time::Instant::now();
+        let drifted = base.drifted(delta_vth);
+        let outcomes: Vec<ReplanOutcome> = self
+            .plans
+            .iter()
+            .map(|p| resolve_plan_from(p, base, &drifted, power, opts))
+            .collect::<Result<_>>()?;
+        let solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t1 = std::time::Instant::now();
+        self.plans = outcomes.iter().map(|o| o.plan.clone()).collect();
+        self.level_shares = self.plans.iter().map(plan_level_shares).collect();
+        self.class_x_rate = self
+            .plans
+            .iter()
+            .map(|p| plan_stress_intensity(&self.bti, &self.tech, p))
+            .collect();
+        self.class_energy = self.plans.iter().map(|p| p.energy).collect();
+        self.generation += 1;
+        self.margin_at_plan = margin;
+        self.duty_at_plan = self.stress.total_duty_seconds();
+        let swap_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        Ok(ReplanEvent {
+            device: self.id,
+            virtual_seconds: now,
+            deployed_years: self.stress.total_duty_seconds() / SECONDS_PER_YEAR,
+            generation: self.generation,
+            delta_vth,
+            delay_margin: margin,
+            frozen: outcomes.iter().map(|o| o.frozen).sum(),
+            resolved: outcomes.iter().map(|o| o.resolved).sum(),
+            feasible: outcomes.iter().all(|o| o.feasible),
+            solve_ms,
+            swap_ms,
+        })
+    }
+
+    /// Per-class noise specs under this device's *current* drift: the
+    /// deployed levels of each plan, priced by `base.drifted(ΔVth)` — what
+    /// an aged device actually injects when it serves. Used by the fleet's
+    /// inference replay.
+    pub fn class_specs(&self, base: &ErrorModelRegistry) -> Vec<NoiseSpec> {
+        let drifted = base.drifted(self.stress.delta_vth());
+        self.plans
+            .iter()
+            .map(|p| NoiseSpec::from_plan(p, drifted.registry()))
+            .collect()
+    }
+
+    /// Per-class `(predicted served MSE, budget_abs)` under the given
+    /// per-level drifted variances — the quality-vs-age observable
+    /// ([`VoltagePlan::served_mse`] per deployed plan).
+    pub fn class_mse(&self, vars: &[f64]) -> Vec<(f64, f64)> {
+        self.plans
+            .iter()
+            .map(|p| (p.served_mse(vars), p.budget_abs))
+            .collect()
     }
 
     /// Seconds of queued work ahead of a request arriving `now`.
@@ -162,6 +317,16 @@ impl Device {
     /// Stress accrued since the simulation-start baseline.
     pub fn accrued_x(&self) -> f64 {
         self.stress.x() - self.x_start
+    }
+
+    /// This device's current plans (advanced by [`Self::replan`]).
+    pub fn plans(&self) -> &[VoltagePlan] {
+        &self.plans
+    }
+
+    /// Local plan generation (0 at boot, +1 per re-plan).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn engine(&self) -> &Arc<Engine> {

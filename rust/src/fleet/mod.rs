@@ -18,9 +18,19 @@
 //!   [`WearLeveling`] policy.
 //! - [`Trace`] — open-loop Poisson and closed-loop client populations
 //!   with a configurable quality mix.
+//! - [`ReplanPolicy`] / [`AdaptiveContext`] — the closed loop: each
+//!   device watches its
+//!   [`StressAccount::delay_margin`](crate::aging::StressAccount::delay_margin)
+//!   and, policy permitting, re-solves its deployed plans against its
+//!   accrued ΔVth through
+//!   [`resolve_plan_from`](crate::plan::resolve_plan_from) on a
+//!   drift-aware registry
+//!   ([`ErrorModelRegistry::drifted`](crate::errormodel::ErrorModelRegistry::drifted)).
 //! - [`FleetTelemetry`] — the JSON report: per-device requests / energy /
-//!   duty histogram / projected lifetime, fleet latency percentiles, and
-//!   aggregate energy saving vs all-nominal.
+//!   duty histogram / projected lifetime / plan generation, fleet latency
+//!   percentiles, aggregate energy saving vs all-nominal, and — for
+//!   adaptive runs — re-plan events, quality-vs-age curves, and the worst
+//!   served-MSE-to-budget ratio.
 //!
 //! ## The wear-leveling policy, and its relation to paper §V.C
 //!
@@ -60,23 +70,107 @@ mod loadgen;
 mod router;
 mod telemetry;
 
-pub use device::{plan_level_shares, plan_stress_intensity, Device};
+pub use device::{plan_level_shares, plan_stress_intensity, Device, ReplanEvent};
 pub use loadgen::{pick_class, Request, Trace};
 pub use router::{policy_from_name, LeastLoaded, RoundRobin, RoutePolicy, WearLeveling};
-pub use telemetry::{DeviceTelemetry, FleetTelemetry, JOULES_PER_ENERGY_UNIT};
+pub use telemetry::{DeviceTelemetry, FleetTelemetry, QualitySample, JOULES_PER_ENERGY_UNIT};
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::aging::{BtiModel, SECONDS_PER_YEAR};
+use crate::errormodel::ErrorModelRegistry;
 use crate::nn::data::Dataset;
 use crate::nn::tensor::Tensor;
-use crate::plan::VoltagePlan;
+use crate::plan::{ResolveOptions, VoltagePlan};
+use crate::power::PePowerModel;
 use crate::server::Engine;
 use crate::timing::voltage::Technology;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::stats::{argmax_f32, quantile};
+
+/// When (if ever) a device re-solves its deployed plans against its own
+/// accrued drift. The trigger watches [`StressAccount::delay_margin`] —
+/// the remaining fraction of the clock guard band — because that is the
+/// physical quantity BTI wear consumes.
+///
+/// [`StressAccount::delay_margin`]: crate::aging::StressAccount::delay_margin
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReplanPolicy {
+    /// Serve the characterization-time plans forever (the paper's static
+    /// deployment — and the baseline the closed-loop tests beat).
+    Never,
+    /// Re-plan when the delay margin has decayed `guard_band` (a fraction
+    /// of the full guard band) below its value at the last re-plan.
+    Threshold { guard_band: f64 },
+    /// Re-plan every `deployed_years` of accrued wear-clock stress.
+    Periodic { deployed_years: f64 },
+}
+
+impl ReplanPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplanPolicy::Never => "never",
+            ReplanPolicy::Threshold { .. } => "threshold",
+            ReplanPolicy::Periodic { .. } => "periodic",
+        }
+    }
+
+    /// Construct from the CLI's `--replan` name plus its parameter flags.
+    pub fn from_name(name: &str, guard_band: f64, every_years: f64) -> Result<Self> {
+        match name {
+            "never" => Ok(ReplanPolicy::Never),
+            "threshold" => {
+                anyhow::ensure!(
+                    guard_band > 0.0 && guard_band <= 1.0,
+                    "--guard-band must be in (0, 1], got {guard_band}"
+                );
+                Ok(ReplanPolicy::Threshold { guard_band })
+            }
+            "periodic" => {
+                anyhow::ensure!(
+                    every_years > 0.0,
+                    "--replan-every-years must be positive, got {every_years}"
+                );
+                Ok(ReplanPolicy::Periodic { deployed_years: every_years })
+            }
+            other => {
+                anyhow::bail!("unknown re-plan policy '{other}' (never|threshold|periodic)")
+            }
+        }
+    }
+}
+
+/// Everything the closed loop needs beyond the static fleet: the fresh
+/// characterization registry (drift re-derivation base), the power model
+/// (re-solve energies), the trigger policy, the warm-start options, and
+/// the quality-vs-age sampling density. Enabling adaptation with
+/// [`ReplanPolicy::Never`] is meaningful: the fleet then *measures* its
+/// quality decay without acting on it — the no-replan arm of every
+/// with/without comparison.
+#[derive(Clone, Debug)]
+pub struct AdaptiveContext {
+    pub registry: ErrorModelRegistry,
+    pub power: PePowerModel,
+    pub replan: ReplanPolicy,
+    pub resolve: ResolveOptions,
+    /// Target number of quality samples per device over the run.
+    pub quality_samples: usize,
+}
+
+impl AdaptiveContext {
+    pub fn new(
+        registry: ErrorModelRegistry,
+        power: PePowerModel,
+        replan: ReplanPolicy,
+    ) -> Self {
+        // Re-plans solve to 90% of the budget so the drift accrued
+        // *between* re-plans stays inside it too.
+        let resolve = ResolveOptions { budget_scale: 0.9, ..Default::default() };
+        Self { registry, power, replan, resolve, quality_samples: 32 }
+    }
+}
 
 /// Fleet-wide simulation parameters.
 #[derive(Clone, Debug)]
@@ -125,8 +219,17 @@ pub struct Router {
     devices: Vec<Device>,
     policy: Box<dyn RoutePolicy>,
     /// Per-quality-class aging intensity (x-rate per busy second of
-    /// serving that class), shared by all devices.
+    /// serving that class), shared by all devices. Routing keys on the
+    /// *boot-time* intensities: re-plans only ever move traffic toward
+    /// higher voltages, so the boot ordering of classes by harshness is
+    /// conservative and stable.
     class_intensity: Vec<f64>,
+    /// The closed-loop machinery (None = static fleet, PR-4 behavior).
+    adaptive: Option<AdaptiveContext>,
+    /// Re-plan events accumulated during the last `run`/`run_with_inference`.
+    replan_events: Vec<ReplanEvent>,
+    /// Quality-vs-age samples accumulated during the last run.
+    quality_curve: Vec<QualitySample>,
 }
 
 /// Outcome of the virtual-time replay, before inference/telemetry.
@@ -165,7 +268,81 @@ impl Router {
             }
             devices.push(d);
         }
-        Ok(Self { cfg, devices, policy, class_intensity })
+        Ok(Self {
+            cfg,
+            devices,
+            policy,
+            class_intensity,
+            adaptive: None,
+            replan_events: Vec::new(),
+            quality_curve: Vec::new(),
+        })
+    }
+
+    /// Build an *adaptive* fleet: same routing, plus per-device drift
+    /// tracking, quality-vs-age sampling, and (policy permitting)
+    /// drift-triggered incremental re-planning. The context's registry
+    /// must be the one the plans were solved against.
+    pub fn with_adaptation(
+        engine: Arc<Engine>,
+        plans: &[VoltagePlan],
+        policy: Box<dyn RoutePolicy>,
+        cfg: FleetConfig,
+        adaptive: AdaptiveContext,
+    ) -> Result<Self> {
+        let ladder: Vec<f64> =
+            adaptive.registry.ladder.levels().iter().map(|l| l.volts).collect();
+        for p in plans {
+            anyhow::ensure!(
+                p.volts.len() == ladder.len()
+                    && p.volts.iter().zip(&ladder).all(|(a, b)| (a - b).abs() < 1e-9),
+                "plan '{}' was not solved against the adaptive context's registry",
+                p.name
+            );
+        }
+        let mut fleet = Self::new(engine, plans, policy, cfg)?;
+        fleet.adaptive = Some(adaptive);
+        Ok(fleet)
+    }
+
+    /// Re-plan device `d` if its policy says so; record the event.
+    fn maybe_replan(&mut self, d: usize, now: f64) {
+        let Some(ctx) = self.adaptive.as_ref() else { return };
+        if !self.devices[d].wants_replan(&ctx.replan) {
+            return;
+        }
+        // Infallible by construction (ladders are validated at build time);
+        // a failure here is a bug worth stopping on, not telemetry.
+        let event = self.devices[d]
+            .replan(&ctx.registry, &ctx.power, &ctx.resolve, now)
+            .expect("drift re-plan failed on a validated fleet");
+        self.replan_events.push(event);
+    }
+
+    /// Push one quality-vs-age sample per device at virtual time `now`.
+    fn sample_quality(&mut self, now: f64) {
+        let Some(ctx) = self.adaptive.as_ref() else { return };
+        let mut samples = Vec::with_capacity(self.devices.len());
+        for d in &self.devices {
+            let stress = d.stress();
+            let drifted = ctx.registry.drifted(stress.delta_vth());
+            let vars: Vec<f64> =
+                drifted.registry().models().iter().map(|m| m.variance).collect();
+            let per_class = d.class_mse(&vars);
+            samples.push(QualitySample {
+                virtual_seconds: now,
+                device: d.id,
+                generation: d.generation(),
+                delta_vth: drifted.delta_vth,
+                delay_margin: stress.delay_margin(),
+                predicted_mse: per_class.iter().map(|&(m, _)| m).collect(),
+                mse_ratio: per_class
+                    .iter()
+                    .map(|&(m, b)| if b > 0.0 { Some(m / b) } else { None })
+                    .collect(),
+            });
+        }
+        self.quality_curve.extend(samples);
     }
 
     pub fn policy_name(&self) -> &'static str {
@@ -195,6 +372,16 @@ impl Router {
 
     fn simulate(&mut self, trace: &Trace) -> SimOutcome {
         let n_classes = self.class_intensity.len();
+        self.replan_events.clear();
+        self.quality_curve.clear();
+        let total = trace.request_count();
+        // Quality-vs-age sampling grid (adaptive runs only): every
+        // `sample_every` requests, plus one final end-of-run sample.
+        let sample_every = self
+            .adaptive
+            .as_ref()
+            .map(|ctx| (total / ctx.quality_samples.max(1)).max(1))
+            .unwrap_or(usize::MAX);
         let mut out = SimOutcome {
             latencies_ms: Vec::with_capacity(trace.request_count()),
             per_class: vec![0; n_classes],
@@ -211,6 +398,12 @@ impl Router {
             out.assigned[d].push((class, idx));
             first_arrival = first_arrival.min(arrival);
             last_done = last_done.max(done);
+            // The closed loop: wear just accrued on device `d` — check
+            // its re-plan trigger, then sample quality on the grid.
+            this.maybe_replan(d, arrival);
+            if idx % sample_every == 0 {
+                this.sample_quality(arrival);
+            }
             done
         };
         match trace {
@@ -246,6 +439,10 @@ impl Router {
         if first_arrival.is_finite() {
             out.duration_seconds = (last_done - first_arrival).max(0.0);
         }
+        // End-of-run sample so the curve always covers the final state.
+        if self.adaptive.is_some() && total > 0 {
+            self.sample_quality(last_done);
+        }
         out
     }
 
@@ -260,6 +457,12 @@ impl Router {
     /// backend-pool slot: request `i` uses row `i % data.len()` of `data`,
     /// served at its assigned quality level, batched per (device, class).
     /// Accuracy lands in the telemetry.
+    ///
+    /// Static fleets execute against the engine's installed quality
+    /// levels. Adaptive fleets execute under each device's *end-of-run*
+    /// state instead: its (possibly re-planned) levels priced by its
+    /// accrued drift — so the measured accuracy reflects what the aged
+    /// fleet actually serves, stale noise included.
     pub fn run_with_inference(
         &mut self,
         trace: &Trace,
@@ -273,6 +476,10 @@ impl Router {
         for d in &self.devices {
             let mut rng = Xoshiro256pp::stream(seed ^ 0xF1EE7, d.id as u64);
             let engine = d.engine();
+            let drift_specs = self
+                .adaptive
+                .as_ref()
+                .map(|ctx| d.class_specs(&ctx.registry));
             let mut by_class: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
             for &(class, idx) in &outcome.assigned[d.id] {
                 by_class.entry(class).or_default().push(idx);
@@ -286,7 +493,14 @@ impl Router {
                         x.row_mut(r).copy_from_slice(data.images.row(row));
                         labels.push(data.labels[row]);
                     }
-                    let logits = engine.execute_batch(d.id, &x, class, &mut rng);
+                    let logits = match &drift_specs {
+                        Some(specs) => {
+                            let spec = &specs[class.min(specs.len() - 1)];
+                            let noise = if spec.is_silent() { None } else { Some(spec) };
+                            engine.execute_with_spec(d.id, &x, noise, &mut rng)
+                        }
+                        None => engine.execute_batch(d.id, &x, class, &mut rng),
+                    };
                     for (r, &label) in labels.iter().enumerate() {
                         executed[d.id] += 1;
                         if argmax_f32(logits.row(r)) == label as usize {
@@ -325,6 +539,7 @@ impl Router {
                     .stress()
                     .projected_lifetime_years(d.accrued_x(), observed_years),
                 accuracy: accuracy.as_ref().and_then(|a| a[d.id]),
+                generation: d.generation(),
             })
             .collect();
         let requests: u64 = devices.iter().map(|d| d.requests).sum();
@@ -357,6 +572,11 @@ impl Router {
                 None => (c, n),
             }
         });
+        let max_mse_ratio = self
+            .quality_curve
+            .iter()
+            .flat_map(|s| s.mse_ratio.iter().flatten())
+            .fold(0.0f64, |m, &r| m.max(r));
         FleetTelemetry {
             policy: self.policy.name().to_string(),
             requests,
@@ -376,6 +596,15 @@ impl Router {
             mean_lifetime_years: crate::util::stats::mean(&lifetimes),
             accuracy: if acc_total > 0 { Some(acc_correct / acc_total as f64) } else { None },
             devices,
+            replan_policy: self
+                .adaptive
+                .as_ref()
+                .map(|ctx| ctx.replan.name())
+                .unwrap_or("never")
+                .to_string(),
+            replan_events: self.replan_events.clone(),
+            quality_curve: self.quality_curve.clone(),
+            max_mse_ratio,
         }
     }
 }
@@ -420,6 +649,8 @@ mod tests {
             model_fingerprint: "fp".into(),
             config_hash: crate::plan::config_hash(&cfg),
             config: cfg.clone(),
+            generation: 0,
+            drift_delta_vth: 0.0,
             level,
         };
         let plans = vec![
@@ -508,6 +739,102 @@ mod tests {
         // A closed loop can never queue more than the client population:
         // worst-case latency is population × service time.
         assert!(t.latency_p99_ms <= 4.0 * 1.0 + 1e-9, "p99 {}", t.latency_p99_ms);
+    }
+
+    #[test]
+    fn replan_policy_parsing_and_names() {
+        assert_eq!(ReplanPolicy::from_name("never", 0.0, 0.0).unwrap(), ReplanPolicy::Never);
+        assert_eq!(
+            ReplanPolicy::from_name("threshold", 0.1, 0.0).unwrap(),
+            ReplanPolicy::Threshold { guard_band: 0.1 }
+        );
+        assert_eq!(
+            ReplanPolicy::from_name("periodic", 0.0, 0.02).unwrap(),
+            ReplanPolicy::Periodic { deployed_years: 0.02 }
+        );
+        assert!(ReplanPolicy::from_name("threshold", 0.0, 0.0).is_err());
+        assert!(ReplanPolicy::from_name("periodic", 0.1, 0.0).is_err());
+        assert!(ReplanPolicy::from_name("sometimes", 0.1, 0.1).is_err());
+        assert_eq!(ReplanPolicy::Never.name(), "never");
+        assert_eq!(ReplanPolicy::Threshold { guard_band: 0.1 }.name(), "threshold");
+    }
+
+    /// An adaptive fleet with a synthetic (zero-variance-free) registry:
+    /// the threshold policy must fire as wear accrues, generations must
+    /// advance, and the quality curve must cover the run.
+    #[test]
+    fn threshold_policy_fires_and_advances_generations() {
+        let (engine, plans) = fixture();
+        let reg = ErrorModelRegistry::synthetic(
+            &VoltageLadder::paper_default(),
+            &[3.0e4, 1.0e4, 2.0e3, 0.0],
+        );
+        let power = crate::plan::measure_power_model(7);
+        let cfg = FleetConfig {
+            devices: 2,
+            // Heavy wear clock: the exact class's nominal-voltage stress
+            // consumes guard band fast enough for a 1-second trace.
+            wear_accel: 5.0e6,
+            ..FleetConfig::default()
+        };
+        let ctx = AdaptiveContext::new(
+            reg.clone(),
+            power,
+            ReplanPolicy::Threshold { guard_band: 0.1 },
+        );
+        let mut fleet = Router::with_adaptation(
+            engine,
+            &plans,
+            Box::<RoundRobin>::default(),
+            cfg,
+            ctx,
+        )
+        .unwrap();
+        let trace = Trace::poisson(400.0, 1.0, &[1.0, 1.0], 11);
+        let t = fleet.run(&trace);
+        assert_eq!(t.replan_policy, "threshold");
+        assert!(
+            !t.replan_events.is_empty(),
+            "nominal-voltage wear at 5e6× must trigger the threshold policy"
+        );
+        // Generations advance monotonically per device, and the device
+        // telemetry reports the final one.
+        for d in &t.devices {
+            let evs: Vec<_> =
+                t.replan_events.iter().filter(|e| e.device == d.id).collect();
+            assert_eq!(d.generation, evs.len() as u64, "device {} generation", d.id);
+            for (i, e) in evs.iter().enumerate() {
+                assert_eq!(e.generation, i as u64 + 1);
+                assert!(e.delta_vth > 0.0);
+                assert!(e.solve_ms >= 0.0 && e.swap_ms >= 0.0);
+            }
+        }
+        // The quality curve covers both devices and reports budget ratios
+        // only for the budgeted class ("exact" has budget 0 → None/null).
+        assert!(!t.quality_curve.is_empty());
+        for s in &t.quality_curve {
+            assert_eq!(s.predicted_mse.len(), 2);
+            assert!(s.mse_ratio[0].is_none(), "exact class has no ratio");
+        }
+        // The no-replan arm of the same setup measures but never acts.
+        let (engine2, plans2) = fixture();
+        let ctx2 = AdaptiveContext::new(
+            reg,
+            crate::plan::measure_power_model(7),
+            ReplanPolicy::Never,
+        );
+        let mut never = Router::with_adaptation(
+            engine2,
+            &plans2,
+            Box::<RoundRobin>::default(),
+            FleetConfig { devices: 2, wear_accel: 5.0e6, ..FleetConfig::default() },
+            ctx2,
+        )
+        .unwrap();
+        let tn = never.run(&trace);
+        assert!(tn.replan_events.is_empty());
+        assert!(tn.devices.iter().all(|d| d.generation == 0));
+        assert!(!tn.quality_curve.is_empty(), "Never still measures quality");
     }
 
     #[test]

@@ -104,6 +104,12 @@ pub struct WearLeveling {
     picks: u64,
     /// Device ids sorted by headroom ascending (most worn first).
     ranking: Vec<usize>,
+    /// Sum of device plan generations at the last re-ranking. A re-plan
+    /// changes a device's voltage mix (and thus how fast each traffic
+    /// class wears it), so a frozen ranking goes stale the moment any
+    /// device swaps generations — the generation-aware router re-ranks
+    /// immediately instead of waiting out `rebalance_every`.
+    gen_sum: u64,
 }
 
 impl WearLeveling {
@@ -119,6 +125,7 @@ impl WearLeveling {
             rebalance_every: rebalance_every.max(1),
             picks: 0,
             ranking: Vec::new(),
+            gen_sum: 0,
         }
     }
 
@@ -132,6 +139,7 @@ impl WearLeveling {
                 .then(a.cmp(&b))
         });
         self.ranking = ids;
+        self.gen_sum = devices.iter().map(|d| d.generation()).sum();
     }
 }
 
@@ -147,7 +155,11 @@ impl RoutePolicy for WearLeveling {
     }
 
     fn pick(&mut self, now: f64, _class: usize, rel: f64, devices: &[Device]) -> usize {
-        if self.picks % self.rebalance_every == 0 || self.ranking.len() != devices.len() {
+        let gen_sum: u64 = devices.iter().map(|d| d.generation()).sum();
+        if self.picks % self.rebalance_every == 0
+            || self.ranking.len() != devices.len()
+            || gen_sum != self.gen_sum
+        {
             self.rerank(devices);
         }
         self.picks += 1;

@@ -1,16 +1,19 @@
 //! Fleet telemetry: the JSON report `xtpu fleet` emits.
 //!
 //! Everything an operator (or CI job) needs to judge a run: per-device
-//! request/energy/wear accounting with projected lifetime, and fleet-level
+//! request/energy/wear accounting with projected lifetime, fleet-level
 //! latency percentiles, throughput, aggregate energy saving vs all-nominal
-//! serving, and the minimum projected device lifetime — the metric the
-//! wear-leveling router exists to maximize.
+//! serving, the minimum projected device lifetime — and, for adaptive
+//! runs, the closed-loop observables: re-plan events (with solve/swap
+//! latency), the quality-vs-age curve, and the worst served-MSE-to-budget
+//! ratio the fleet ever exhibited.
 //!
 //! Reports serialize through [`crate::util::json`] (deterministic key
 //! order) and round-trip losslessly through `write_file`/`read_file`.
 
 pub use crate::power::JOULES_PER_ENERGY_UNIT;
 
+use super::device::ReplanEvent;
 use crate::util::json::Json;
 
 /// Per-device slice of a fleet report.
@@ -35,6 +38,8 @@ pub struct DeviceTelemetry {
     /// Classification accuracy over this device's executed requests
     /// (`None` when the run was timing/wear-only).
     pub accuracy: Option<f64>,
+    /// The device's final plan generation (0 = never re-planned).
+    pub generation: u64,
 }
 
 impl DeviceTelemetry {
@@ -56,8 +61,67 @@ impl DeviceTelemetry {
                 "accuracy",
                 self.accuracy.map(Json::Num).unwrap_or(Json::Null),
             ),
+            ("generation", Json::Num(self.generation as f64)),
         ])
     }
+}
+
+/// One point on the quality-vs-age curve: a device's predicted served MSE
+/// per quality class under its drift at that instant, sampled on a fixed
+/// request grid during the run.
+#[derive(Clone, Debug)]
+pub struct QualitySample {
+    pub virtual_seconds: f64,
+    pub device: usize,
+    /// Device plan generation at the sample.
+    pub generation: u64,
+    /// Accrued ΔVth (V) at the sample.
+    pub delta_vth: f64,
+    /// Remaining guard-band fraction at the sample.
+    pub delay_margin: f64,
+    /// Per class: predicted served MSE under the drift (eq. 29 re-priced).
+    pub predicted_mse: Vec<f64>,
+    /// Per class: `predicted_mse / budget_abs`, `None` for zero-budget
+    /// (exact) classes where the ratio is undefined.
+    pub mse_ratio: Vec<Option<f64>>,
+}
+
+impl QualitySample {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("virtual_seconds", Json::Num(self.virtual_seconds)),
+            ("device", Json::Num(self.device as f64)),
+            ("generation", Json::Num(self.generation as f64)),
+            ("delta_vth", Json::Num(self.delta_vth)),
+            ("delay_margin", Json::Num(self.delay_margin)),
+            ("predicted_mse", Json::arr_f64(&self.predicted_mse)),
+            (
+                "mse_ratio",
+                Json::Arr(
+                    self.mse_ratio
+                        .iter()
+                        .map(|r| r.map(Json::Num).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn replan_event_json(e: &ReplanEvent) -> Json {
+    Json::obj(vec![
+        ("device", Json::Num(e.device as f64)),
+        ("virtual_seconds", Json::Num(e.virtual_seconds)),
+        ("deployed_years", Json::Num(e.deployed_years)),
+        ("generation", Json::Num(e.generation as f64)),
+        ("delta_vth", Json::Num(e.delta_vth)),
+        ("delay_margin", Json::Num(e.delay_margin)),
+        ("frozen", Json::Num(e.frozen as f64)),
+        ("resolved", Json::Num(e.resolved as f64)),
+        ("feasible", Json::Bool(e.feasible)),
+        ("solve_ms", Json::Num(e.solve_ms)),
+        ("swap_ms", Json::Num(e.swap_ms)),
+    ])
 }
 
 /// The full fleet report.
@@ -83,6 +147,16 @@ pub struct FleetTelemetry {
     pub mean_lifetime_years: f64,
     /// Fleet-wide accuracy (`None` for timing/wear-only runs).
     pub accuracy: Option<f64>,
+    /// Re-plan policy name (`never` when adaptation was off).
+    pub replan_policy: String,
+    /// Every re-plan the run performed, in trigger order.
+    pub replan_events: Vec<ReplanEvent>,
+    /// Quality-vs-age samples (empty when adaptation was off).
+    pub quality_curve: Vec<QualitySample>,
+    /// Worst `predicted served MSE / budget` over every sample and every
+    /// budgeted class — ≤ 1.0 means the fleet never left the user's
+    /// quality budget. 0 when no samples were taken.
+    pub max_mse_ratio: f64,
 }
 
 impl FleetTelemetry {
@@ -112,6 +186,17 @@ impl FleetTelemetry {
                 "accuracy",
                 self.accuracy.map(Json::Num).unwrap_or(Json::Null),
             ),
+            ("replan_policy", Json::Str(self.replan_policy.clone())),
+            ("replans", Json::Num(self.replan_events.len() as f64)),
+            (
+                "replan_events",
+                Json::Arr(self.replan_events.iter().map(replan_event_json).collect()),
+            ),
+            (
+                "quality_curve",
+                Json::Arr(self.quality_curve.iter().map(|s| s.to_json()).collect()),
+            ),
+            ("max_mse_ratio", Json::Num(self.max_mse_ratio)),
         ])
     }
 
@@ -131,11 +216,21 @@ impl FleetTelemetry {
             self.min_lifetime_years,
             self.mean_lifetime_years,
         );
+        if self.replan_policy != "never" || !self.replan_events.is_empty() {
+            s.push_str(&format!(
+                "adaptive: policy {} · {} re-plan(s) · worst served-MSE/budget {:.3}\n",
+                self.replan_policy,
+                self.replan_events.len(),
+                self.max_mse_ratio,
+            ));
+        }
         for d in &self.devices {
             s.push_str(&format!(
-                "  device {}: {:>6} reqs · ΔVth {:.4} V · margin {:>5.1}% · life {:>8.3} y\n",
+                "  device {}: {:>6} reqs · gen {} · ΔVth {:.4} V · margin {:>5.1}% · \
+                 life {:>8.3} y\n",
                 d.id,
                 d.requests,
+                d.generation,
                 d.delta_vth,
                 d.delay_margin * 100.0,
                 d.projected_lifetime_years,

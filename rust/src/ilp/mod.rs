@@ -19,4 +19,4 @@ pub mod mckp;
 
 pub use genetic::{solve_genetic, GaConfig};
 pub use greedy::solve_greedy;
-pub use mckp::{solve_mckp, MckpInstance, MckpSolution};
+pub use mckp::{solve_mckp, MckpError, MckpInstance, MckpSolution};

@@ -17,13 +17,18 @@
 //! xtpu fleet          aging-aware multi-device fleet simulation: spin N
 //!                     devices from plan files, replay a trace through a
 //!                     routing policy, emit a JSON telemetry report
+//!                     (`--replan threshold --guard-band 0.05` closes the
+//!                     adaptive loop: devices re-solve their plans as BTI
+//!                     drift consumes delay margin)
 //! xtpu info           list artifacts + PJRT platform
 //! ```
 
 use anyhow::Result;
 use xtpu::aging::{BtiModel, Device};
 use xtpu::assign::Solver;
-use xtpu::fleet::{policy_from_name, FleetConfig, Router, Trace, WearLeveling};
+use xtpu::fleet::{
+    policy_from_name, AdaptiveContext, FleetConfig, ReplanPolicy, Router, Trace, WearLeveling,
+};
 use xtpu::config::ExperimentConfig;
 use xtpu::coordinator::Pipeline;
 use xtpu::errormodel::{CharacterizeOptions, ErrorModelRegistry};
@@ -88,7 +93,7 @@ fn print_help() {
            aging         BTI aging study (Fig 15)\n\
            simulate      matmul on the cycle-level X-TPU simulator\n\
            serve         quality-adjustable inference server (--plan = pre-solved)\n\
-           fleet         aging-aware multi-device fleet simulation (--plan = pre-solved)\n\
+           fleet         aging-aware fleet simulation (--plan = pre-solved; --replan = adaptive)\n\
            info          list artifacts + PJRT platform\n\n\
          Run `xtpu <command> --help` for options."
     );
@@ -553,7 +558,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let quantized = trained.quantized.clone();
     let input_dim = trained.model.input.numel();
     let engine = Engine::from_plans(quantized, &registry, &plans, input_dim)?;
-    for (i, l) in engine.levels.iter().enumerate() {
+    for (i, l) in engine.plan_set().levels.iter().enumerate() {
         println!("quality {i}: {} (saving {:.1}%)", l.name, l.energy_saving * 100.0);
     }
     println!("levels ready in {:.2}s", t0.elapsed().as_secs_f64());
@@ -567,7 +572,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let workers = policy.resolved_workers();
     let pool = xtpu::plan::make_backend_pool(&planner.cfg, &registry, workers)?;
     println!("execution backend: {} × {workers} workers", pool[0].name());
-    let n_levels = engine.levels.len();
+    let n_levels = engine.num_levels();
     let engine = engine.with_backend_pool(pool);
     let mut server = Server::spawn(engine, args.usize("port")? as u16, policy)?;
     println!("serving on {}", server.addr);
@@ -625,6 +630,21 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
                 "",
                 "prior service years per device (cycled), e.g. 2.0,1.0,0",
             ),
+            OptSpec::opt(
+                "replan",
+                "never",
+                "drift-triggered re-planning: never | threshold | periodic",
+            ),
+            OptSpec::opt(
+                "guard-band",
+                "0.05",
+                "threshold re-plan: delay-margin decay (fraction) that triggers a re-solve",
+            ),
+            OptSpec::opt(
+                "replan-every-years",
+                "0.01",
+                "periodic re-plan: deployed (wear-clock) years between re-solves",
+            ),
             OptSpec::opt("report", "", "write the JSON telemetry report to this path"),
             OptSpec::flag("smoke", "self-check the emitted report, then exit"),
         ],
@@ -679,13 +699,35 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         initial_age_years: args.f64_list("initial-ages")?,
         ..FleetConfig::default()
     };
-    let mut fleet = Router::new(engine, &plans, policy, cfg)?;
+    // Adaptive loop: any --replan policy other than `never` closes the
+    // characterize → plan → serve → age → re-plan cycle. The power model
+    // and registry come from the same planner `serve` resolves plans with,
+    // so re-solved energies stay comparable to the boot-time plans.
+    let replan = ReplanPolicy::from_name(
+        args.str("replan"),
+        args.f64("guard-band")?,
+        args.f64("replan-every-years")?,
+    )?;
+    let adaptive = replan != ReplanPolicy::Never;
+    let mut fleet = if adaptive {
+        let power = *planner.power();
+        Router::with_adaptation(
+            engine,
+            &plans,
+            policy,
+            cfg,
+            AdaptiveContext::new(registry.clone(), power, replan),
+        )?
+    } else {
+        Router::new(engine, &plans, policy, cfg)?
+    };
     println!(
-        "fleet: {} devices × {} plans ({} requests, policy {}) ready in {:.1}s",
+        "fleet: {} devices × {} plans ({} requests, policy {}, replan {}) ready in {:.1}s",
         devices,
         plans.len(),
         trace.request_count(),
         fleet.policy_name(),
+        replan.name(),
         t0.elapsed().as_secs_f64()
     );
     let t1 = std::time::Instant::now();
@@ -725,6 +767,23 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         }
         let served: u64 = back.get("requests")?.as_u64()?;
         anyhow::ensure!(served as usize == trace.request_count(), "request conservation");
+        if adaptive {
+            // Adaptive smoke: the loop must have closed — re-plan events
+            // recorded, quality curve sampled, and the report must carry
+            // the keys the CI adaptive-smoke job asserts on.
+            for key in ["replan_policy", "replans", "replan_events", "quality_curve", "max_mse_ratio"]
+            {
+                anyhow::ensure!(back.get(key).is_ok(), "adaptive report missing '{key}'");
+            }
+            anyhow::ensure!(
+                back.get("replans")?.as_u64()? > 0,
+                "adaptive smoke expected at least one re-plan event"
+            );
+            anyhow::ensure!(
+                !back.get("quality_curve")?.as_arr()?.is_empty(),
+                "adaptive smoke expected quality-vs-age samples"
+            );
+        }
         println!("fleet smoke OK");
     }
     Ok(())

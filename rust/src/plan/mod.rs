@@ -29,7 +29,8 @@ mod planner;
 
 pub use planner::{
     baseline_mse_vs_onehot, characterize_registry, make_backend, make_backend_pool,
-    measure_power_model, train_model, BaselineStage, EsStage, Planner, TrainedStage,
+    measure_power_model, resolve_plan_from, train_model, BaselineStage, EsStage, Planner,
+    ReplanOutcome, ResolveOptions, TrainedStage,
 };
 pub(crate) use planner::solve_one;
 
@@ -81,6 +82,16 @@ pub struct VoltagePlan {
     /// The full experiment config, embedded so `xtpu serve --plan` can
     /// rebuild the (cached) model + registry without extra inputs.
     pub config: ExperimentConfig,
+    /// Re-plan lineage: 0 for a fresh offline solve, incremented by every
+    /// [`resolve_plan_from`] hop. Engines tag responses with the
+    /// generation they served so operators can audit which era of the
+    /// adaptive loop answered a request.
+    pub generation: u64,
+    /// The accrued ΔVth (V) this plan was (re-)solved under — 0 for fresh
+    /// solves. Together with `generation` this is the drift provenance:
+    /// `registry.drifted(drift_delta_vth)` reconstructs the exact error
+    /// models the solve saw.
+    pub drift_delta_vth: f64,
 }
 
 impl VoltagePlan {
@@ -114,6 +125,8 @@ impl VoltagePlan {
             model_fingerprint: model_fingerprint.to_string(),
             config_hash: config_hash(cfg),
             config: cfg.clone(),
+            generation: 0,
+            drift_delta_vth: 0.0,
         }
     }
 
@@ -126,6 +139,20 @@ impl VoltagePlan {
     /// exactly what the validation pass injected when the plan was solved.
     pub fn noise_spec(&self, registry: &ErrorModelRegistry) -> NoiseSpec {
         NoiseSpec::from_plan(self, registry)
+    }
+
+    /// Predicted served MSE of this plan under arbitrary per-level column
+    /// variances: `Σ ES²·k·vars[level]` (eq. 29 re-priced). The **single**
+    /// definition of the served-MSE observable — the warm-start re-planner
+    /// prices candidate assignments with it, the fleet samples
+    /// quality-vs-age curves with it (via drift-adjusted variances), and
+    /// the L3i bench times it.
+    pub fn served_mse(&self, vars: &[f64]) -> f64 {
+        self.level
+            .iter()
+            .zip(self.es.iter().zip(&self.fan_in))
+            .map(|(&l, (&e, &k))| e * e * k as f64 * vars[l.min(vars.len() - 1)])
+            .sum()
     }
 
     /// Check this plan can be deployed on `quantized` under `registry`:
@@ -217,6 +244,8 @@ impl VoltagePlan {
             ("model_fingerprint", Json::Str(self.model_fingerprint.clone())),
             ("config_hash", Json::Str(self.config_hash.clone())),
             ("config", self.config.to_json()),
+            ("generation", Json::Num(self.generation as f64)),
+            ("drift_delta_vth", Json::Num(self.drift_delta_vth)),
         ])
     }
 
@@ -250,6 +279,14 @@ impl VoltagePlan {
             model_fingerprint: j.get("model_fingerprint")?.as_str()?.to_string(),
             config_hash: j.get("config_hash")?.as_str()?.to_string(),
             config: ExperimentConfig::from_json(j.get("config")?)?,
+            // Absent in pre-adaptive plan files: default to a fresh,
+            // undrifted generation-0 artifact.
+            generation: j.opt("generation").map(|v| v.as_u64()).transpose()?.unwrap_or(0),
+            drift_delta_vth: j
+                .opt("drift_delta_vth")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(0.0),
         })
     }
 
@@ -386,9 +423,29 @@ mod tests {
             assert_eq!(plan.config_hash, back.config_hash);
             assert_eq!(plan.config.model, back.config.model);
             assert_eq!(plan.config.seed, back.config.seed);
+            assert_eq!(plan.generation, back.generation);
+            assert_eq!(plan.drift_delta_vth, back.drift_delta_vth);
             // And a second hop through text is byte-identical.
             assert_eq!(plan.to_json().to_string(), back.to_json().to_string());
         });
+    }
+
+    #[test]
+    fn pre_adaptive_plan_files_still_load() {
+        // A plan serialized before the adaptive loop existed carries no
+        // generation / drift keys; loading must default them rather than
+        // refuse the artifact.
+        let mut rng = Xoshiro256pp::seeded(77);
+        let plan = fake_plan(&mut rng, 5);
+        let j = plan.to_json();
+        let mut obj = j.as_obj().unwrap().clone();
+        obj.remove("generation");
+        obj.remove("drift_delta_vth");
+        let legacy = Json::Obj(obj);
+        let back = VoltagePlan::from_json(&legacy).unwrap();
+        assert_eq!(back.generation, 0);
+        assert_eq!(back.drift_delta_vth, 0.0);
+        assert_eq!(back.level, plan.level);
     }
 
     #[test]

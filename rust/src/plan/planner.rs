@@ -22,7 +22,8 @@ use anyhow::{Context, Result};
 use super::{model_fingerprint, VoltagePlan};
 use crate::assign::{AssignmentProblem, Solver, VoltageAssignment};
 use crate::config::ExperimentConfig;
-use crate::errormodel::{CharacterizeOptions, ErrorModelRegistry};
+use crate::errormodel::{CharacterizeOptions, DriftedRegistry, ErrorModelRegistry};
+use crate::ilp::{solve_mckp, MckpError, MckpInstance};
 use crate::exec::{self, Backend};
 use crate::nn::data::{synth_cifar, synth_mnist, Dataset};
 use crate::nn::model::{fc_mnist, lenet5, resnet_tiny, Model};
@@ -277,6 +278,35 @@ impl Planner {
         parts.into_iter().flatten().collect()
     }
 
+    /// Incrementally re-solve a deployed plan against a drift-aware
+    /// registry (see [`resolve_plan_from`]): warm-started from the
+    /// deployed assignment, it only re-solves neurons whose MSE
+    /// contribution actually moved. Bit-for-bit the deployed assignment at
+    /// zero drift. Uses [`ResolveOptions::default`]; pass budget-headroom
+    /// or solver overrides through [`Planner::resolve_from_with`].
+    pub fn resolve_from(
+        &mut self,
+        deployed: &VoltagePlan,
+        drifted: &DriftedRegistry,
+    ) -> Result<ReplanOutcome> {
+        self.resolve_from_with(deployed, drifted, &ResolveOptions::default())
+    }
+
+    /// [`Planner::resolve_from`] with explicit [`ResolveOptions`] — e.g.
+    /// the `budget_scale < 1.0` headroom an adaptive fleet re-plans with.
+    pub fn resolve_from_with(
+        &mut self,
+        deployed: &VoltagePlan,
+        drifted: &DriftedRegistry,
+        opts: &ResolveOptions,
+    ) -> Result<ReplanOutcome> {
+        self.registry()?;
+        self.power();
+        let base = self.registry.as_ref().unwrap();
+        let power = self.power.as_ref().unwrap();
+        resolve_plan_from(deployed, base, drifted, power, opts)
+    }
+
     /// Solve every budget in the config and write one plan file per budget
     /// into `dir`. Returns the plans and their paths.
     pub fn emit_plans(&mut self, dir: &std::path::Path) -> Result<Vec<(VoltagePlan, PathBuf)>> {
@@ -341,6 +371,217 @@ pub(crate) fn solve_one(
         solver,
     );
     Ok((assignment, plan))
+}
+
+// --- incremental re-planning (the adaptive loop's solve step) -------------
+
+/// Knobs for [`resolve_plan_from`].
+#[derive(Clone, Copy, Debug)]
+pub struct ResolveOptions {
+    /// A neuron is *frozen* at its deployed level when the drift moved its
+    /// MSE contribution by less than `freeze_tol × budget / neurons` — so
+    /// the frozen set perturbs the total by at most `freeze_tol × budget`.
+    /// At ΔVth = 0 every contribution is unchanged, everything freezes,
+    /// and the result is bit-for-bit the deployed assignment.
+    pub freeze_tol: f64,
+    /// Scale applied to the plan's absolute budget when re-solving —
+    /// < 1.0 leaves headroom for the drift that accrues *between*
+    /// re-plans, so the served MSE stays inside the user budget for the
+    /// whole inter-replan window, not just at the solve instant.
+    pub budget_scale: f64,
+    /// Solver for the non-frozen subproblem.
+    pub solver: Solver,
+}
+
+impl Default for ResolveOptions {
+    fn default() -> Self {
+        // budget_scale defaults to 1.0 so the zero-drift warm path is
+        // bit-for-bit (a scaled budget would thaw a deployed plan that
+        // legitimately fills its full budget); adaptive fleets pass < 1.0
+        // to buy inter-replan headroom.
+        Self { freeze_tol: 0.02, budget_scale: 1.0, solver: Solver::Ilp }
+    }
+}
+
+/// Result of one incremental re-solve.
+#[derive(Clone, Debug)]
+pub struct ReplanOutcome {
+    /// The next-generation plan (generation incremented, drift recorded).
+    pub plan: VoltagePlan,
+    /// Neurons kept at their deployed level without re-solving.
+    pub frozen: usize,
+    /// Neurons the warm-started MCKP actually re-solved.
+    pub resolved: usize,
+    /// `false` when even the all-nominal assignment exceeds the budget
+    /// under this drift — the device has reached *quality* end of life;
+    /// the returned plan is pinned all-nominal (minimum achievable MSE).
+    pub feasible: bool,
+    pub solve_seconds: f64,
+}
+
+/// Warm-start an MCKP re-solve of `deployed` against a drift-aware
+/// registry: freeze every neuron whose MSE contribution barely moved,
+/// re-solve only the rest against the residual budget. `base` must be the
+/// fresh (characterization-time) registry — the contributions the deployed
+/// plan assumed are reconstructed from it via the plan's own drift
+/// provenance (`base.drifted(deployed.drift_delta_vth)`), so re-planning
+/// chains correctly across generations.
+pub fn resolve_plan_from(
+    deployed: &VoltagePlan,
+    base: &ErrorModelRegistry,
+    drifted: &DriftedRegistry,
+    power: &PePowerModel,
+    opts: &ResolveOptions,
+) -> Result<ReplanOutcome> {
+    let ladder: Vec<f64> =
+        drifted.registry().ladder.levels().iter().map(|l| l.volts).collect();
+    anyhow::ensure!(
+        deployed.volts.len() == ladder.len()
+            && deployed.volts.iter().zip(&ladder).all(|(a, b)| (a - b).abs() < 1e-9),
+        "plan '{}' ladder {:?} does not match the drifted registry ladder {:?}",
+        deployed.name,
+        deployed.volts,
+        ladder
+    );
+    let n = deployed.neurons();
+    anyhow::ensure!(n > 0, "plan '{}' covers no neurons", deployed.name);
+    let t0 = std::time::Instant::now();
+
+    // The error models the deployed assignment was solved against.
+    let old = base.drifted(deployed.drift_delta_vth);
+    let budget = deployed.budget_abs * opts.budget_scale;
+    // Per-neuron per-level MSE contributions (eq. 29 weights) under the
+    // new drift, plus the deployed level's old/new contributions.
+    let new_vars: Vec<f64> =
+        drifted.registry().models().iter().map(|m| m.variance).collect();
+    let old_vars: Vec<f64> = old.registry().models().iter().map(|m| m.variance).collect();
+    let freeze_limit = opts.freeze_tol * budget / n as f64;
+    let mut frozen = vec![false; n];
+    let mut frozen_weight = 0.0;
+    for u in 0..n {
+        let (e, k, l) = (deployed.es[u], deployed.fan_in[u] as f64, deployed.level[u]);
+        let w_old = e * e * k * old_vars[l];
+        let w_new = e * e * k * new_vars[l];
+        if (w_new - w_old).abs() <= freeze_limit {
+            frozen[u] = true;
+            frozen_weight += w_new;
+        }
+    }
+    // The frozen set must leave a usable residual budget; if the drift
+    // moved it past the budget the warm start is void — thaw everything.
+    // (The 1e-9 slack admits a deployed plan that fills its budget to the
+    // solver's own feasibility tolerance.)
+    if frozen_weight > budget + 1e-9 {
+        frozen.fill(false);
+        frozen_weight = 0.0;
+    }
+    let mut active: Vec<usize> = (0..n).filter(|&u| !frozen[u]).collect();
+
+    // Per-neuron rows for the (sub)instance builder.
+    let cost_row = |u: usize| -> Vec<f64> {
+        ladder.iter().map(|&v| power.neuron_energy(deployed.fan_in[u], v)).collect()
+    };
+    let weight_row = |u: usize| -> Vec<f64> {
+        let ek = deployed.es[u] * deployed.es[u] * deployed.fan_in[u] as f64;
+        new_vars.iter().map(|&v| ek * v).collect()
+    };
+    let solve_sub = |subset: &[usize], sub_budget: f64| {
+        let inst = MckpInstance {
+            cost: subset.iter().map(|&u| cost_row(u)).collect(),
+            weight: subset.iter().map(|&u| weight_row(u)).collect(),
+            budget: sub_budget,
+        };
+        match opts.solver {
+            Solver::Ilp => solve_mckp(&inst),
+            Solver::Greedy => crate::ilp::solve_greedy(&inst),
+            Solver::Genetic => crate::ilp::solve_genetic(&inst, &crate::ilp::GaConfig::default()),
+        }
+    };
+
+    let mut level = deployed.level.clone();
+    let mut feasible = true;
+    let mut optimal = true;
+    if !active.is_empty() {
+        let mut sub = solve_sub(&active, budget - frozen_weight);
+        if matches!(sub, Err(MckpError::Infeasible(_))) && active.len() < n {
+            // A residual budget can be unservable even when a full
+            // re-solve is not (frozen neurons may sit on weight a full
+            // solve would reassign): thaw everything and retry once.
+            active = (0..n).collect();
+            sub = solve_sub(&active, budget);
+        }
+        match sub {
+            Ok(sol) => {
+                optimal = sol.optimal;
+                for (i, &u) in active.iter().enumerate() {
+                    level[u] = sol.choice[i];
+                }
+            }
+            Err(MckpError::Infeasible(_)) => {
+                // Even all-nominal violates the (scaled) budget: quality
+                // end of life. Pin to the minimum-MSE assignment.
+                feasible = false;
+                optimal = false;
+                let nominal = ladder.len() - 1;
+                level.iter_mut().for_each(|l| *l = nominal);
+            }
+            Err(e) => anyhow::bail!("re-plan MCKP failed: {e}"),
+        }
+    }
+
+    // Re-price the merged assignment under the drifted models (summed in
+    // neuron order, so the frozen-everything path reproduces the deployed
+    // plan deterministically).
+    let mut predicted_mse = 0.0;
+    let mut energy = 0.0;
+    let mut nominal_energy = 0.0;
+    let v_nom = *ladder.last().unwrap();
+    for u in 0..n {
+        let (e, k) = (deployed.es[u], deployed.fan_in[u]);
+        predicted_mse += e * e * k as f64 * new_vars[level[u]];
+        energy += power.neuron_energy(k, ladder[level[u]]);
+        nominal_energy += power.neuron_energy(k, v_nom);
+    }
+    let assignment = VoltageAssignment {
+        volts: level.iter().map(|&l| ladder[l]).collect(),
+        predicted_mse,
+        energy,
+        energy_saving: 1.0 - energy / nominal_energy,
+        optimal,
+        nodes_explored: 0,
+        solve_seconds: t0.elapsed().as_secs_f64(),
+        level,
+    };
+    // A fully-frozen pass kept the deployed solver's assignment; any
+    // actual re-solve is attributed to the solver that ran it.
+    let solver = if active.is_empty() {
+        Solver::from_name(&deployed.solver).unwrap_or(opts.solver)
+    } else {
+        opts.solver
+    };
+    let mut plan = VoltagePlan::from_assignment(
+        &deployed.config,
+        &deployed.model_fingerprint,
+        &deployed.es,
+        &deployed.fan_in,
+        drifted.registry(),
+        deployed.mse_ub_fraction,
+        deployed.baseline_mse,
+        &assignment,
+        solver,
+    );
+    // Preserve identity, advance lineage, record the drift.
+    plan.name = deployed.name.clone();
+    plan.generation = deployed.generation + 1;
+    plan.drift_delta_vth = drifted.delta_vth;
+    let frozen_count = n - active.len();
+    Ok(ReplanOutcome {
+        plan,
+        frozen: frozen_count,
+        resolved: active.len(),
+        feasible,
+        solve_seconds: assignment.solve_seconds,
+    })
 }
 
 /// One backend instance per serving worker — the share-nothing pool
@@ -559,6 +800,189 @@ mod tests {
         many[2]
             .validate_against(&planner.trained().unwrap().quantized, &registry)
             .unwrap();
+
+        // The Planner-level adaptive seam: zero drift is a frozen no-op
+        // (bit-for-bit levels, lineage advanced), and an options override
+        // with budget headroom stays feasible against the scaled budget.
+        let out = planner.resolve_from(&single, &registry.drifted(0.0)).unwrap();
+        assert_eq!(out.plan.level, single.level);
+        assert_eq!((out.resolved, out.plan.generation), (0, 1));
+        let opts = ResolveOptions { budget_scale: 0.9, ..Default::default() };
+        let scaled = planner
+            .resolve_from_with(&single, &registry.drifted(0.005), &opts)
+            .unwrap();
+        assert!(scaled.feasible);
+        assert!(scaled.plan.predicted_mse <= single.budget_abs * 0.9 + 1e-9);
+    }
+
+    fn synthetic_problem() -> (
+        Vec<f64>,
+        Vec<usize>,
+        crate::errormodel::ErrorModelRegistry,
+        crate::power::PePowerModel,
+    ) {
+        use crate::power::RegionActivity;
+        use crate::timing::voltage::{Technology, VoltageLadder};
+        let es = vec![0.001, 0.002, 0.004, 0.01, 0.05, 0.3, 1.0, 0.8];
+        let fan_in = vec![784, 784, 784, 784, 128, 128, 128, 128];
+        let reg = crate::errormodel::ErrorModelRegistry::synthetic(
+            &VoltageLadder::paper_default(),
+            &[3.0e6, 1.4e6, 2.0e5, 0.0],
+        );
+        let power = crate::power::PePowerModel::new(
+            RegionActivity { toggle_energy_per_cycle: 60.0, leakage_sum: 400.0 },
+            RegionActivity { toggle_energy_per_cycle: 20.0, leakage_sum: 120.0 },
+            Technology::default(),
+        );
+        (es, fan_in, reg, power)
+    }
+
+    fn cold_plan(budget_abs: f64) -> (VoltagePlan, crate::errormodel::ErrorModelRegistry, crate::power::PePowerModel) {
+        let (es, fan_in, reg, power) = synthetic_problem();
+        let baseline_mse = 1.0;
+        let (_, plan) = solve_one(
+            &ExperimentConfig::smoke(),
+            "deadbeefdeadbeef",
+            &es,
+            &fan_in,
+            &reg,
+            &power,
+            baseline_mse,
+            budget_abs, // fraction of baseline 1.0 ⇒ budget_abs == fraction
+            Solver::Ilp,
+        )
+        .unwrap();
+        (plan, reg, power)
+    }
+
+    #[test]
+    fn resolve_from_zero_drift_is_bit_for_bit() {
+        let (plan, reg, power) = cold_plan(2000.0);
+        assert!(plan.level.iter().any(|&l| l < 3), "budget must overscale something");
+        let out = resolve_plan_from(
+            &plan,
+            &reg,
+            &reg.drifted(0.0),
+            &power,
+            &ResolveOptions::default(),
+        )
+        .unwrap();
+        // Zero drift: nothing re-solved, assignment bit-for-bit, lineage
+        // advanced, drift provenance recorded.
+        assert_eq!(out.plan.level, plan.level, "levels must match the cold solve exactly");
+        assert_eq!(out.frozen, plan.neurons());
+        assert_eq!(out.resolved, 0);
+        assert!(out.feasible);
+        assert_eq!(out.plan.generation, 1);
+        assert_eq!(out.plan.drift_delta_vth, 0.0);
+        crate::util::checks::assert_close(out.plan.predicted_mse, plan.predicted_mse, 1e-9);
+        crate::util::checks::assert_close(out.plan.energy_saving, plan.energy_saving, 1e-9);
+        // Provenance survives: the re-planned artifact still pairs with
+        // its siblings from the original offline run.
+        out.plan.check_compatible(&plan).unwrap();
+    }
+
+    #[test]
+    fn resolve_from_drift_restores_the_budget() {
+        let (plan, reg, power) = cold_plan(2000.0);
+        let drifted = reg.drifted(0.015);
+        // The deployed assignment re-priced under drift must have left the
+        // budget (otherwise this test exercises nothing). Priced through
+        // the canonical observable the fleet also samples.
+        let aged_vars: Vec<f64> =
+            drifted.registry().models().iter().map(|m| m.variance).collect();
+        let aged_mse = plan.served_mse(&aged_vars);
+        assert!(
+            aged_mse > plan.budget_abs,
+            "drift must push the stale plan out of budget ({aged_mse} ≤ {})",
+            plan.budget_abs
+        );
+        let out = resolve_plan_from(
+            &plan,
+            &reg,
+            &drifted,
+            &power,
+            &ResolveOptions::default(),
+        )
+        .unwrap();
+        assert!(out.feasible);
+        assert!(
+            out.plan.predicted_mse <= plan.budget_abs + 1e-9,
+            "re-plan must pull the served MSE back inside the budget"
+        );
+        assert_eq!(out.plan.generation, 1);
+        assert_eq!(out.plan.drift_delta_vth, 0.015);
+        // Quality costs energy: the re-plan can only move neurons up-ladder.
+        assert!(out.plan.energy_saving <= plan.energy_saving + 1e-12);
+        assert!(out.plan.energy_saving > 0.0, "saving must survive the re-plan");
+
+        // Warm-start is never better than a cold re-solve (the cold ILP is
+        // optimal) and both respect the budget.
+        let (es, fan_in, _, _) = synthetic_problem();
+        let cold = AssignmentProblem::build(
+            &es,
+            &fan_in,
+            drifted.registry(),
+            &power,
+            plan.budget_abs,
+        )
+        .solve(Solver::Ilp)
+        .unwrap();
+        assert!(cold.predicted_mse <= plan.budget_abs + 1e-9);
+        assert!(out.plan.energy >= cold.energy - 1e-9);
+    }
+
+    #[test]
+    fn resolve_from_chains_generations_through_drift_provenance() {
+        let (plan, reg, power) = cold_plan(2000.0);
+        let opts = ResolveOptions::default();
+        let gen1 = resolve_plan_from(&plan, &reg, &reg.drifted(0.008), &power, &opts)
+            .unwrap()
+            .plan;
+        assert_eq!((gen1.generation, gen1.drift_delta_vth), (1, 0.008));
+        // Re-planning the re-plan reconstructs gen1's registry from its own
+        // provenance — and at unchanged drift the second hop is a no-op.
+        let again = resolve_plan_from(&gen1, &reg, &reg.drifted(0.008), &power, &opts).unwrap();
+        assert_eq!(again.plan.level, gen1.level, "same drift ⇒ same assignment");
+        assert_eq!(again.resolved, 0, "unchanged drift must freeze everything");
+        assert_eq!(again.plan.generation, 2);
+        let gen2 = resolve_plan_from(&gen1, &reg, &reg.drifted(0.02), &power, &opts)
+            .unwrap()
+            .plan;
+        assert_eq!((gen2.generation, gen2.drift_delta_vth), (2, 0.02));
+        assert!(gen2.predicted_mse <= gen2.budget_abs + 1e-9);
+    }
+
+    #[test]
+    fn resolve_from_flags_quality_end_of_life() {
+        // An exact (zero-budget) plan past the guard band cannot be made
+        // feasible: the outcome pins all-nominal and reports it.
+        let (es, fan_in, reg, power) = synthetic_problem();
+        let (_, exact) = solve_one(
+            &ExperimentConfig::smoke(),
+            "deadbeefdeadbeef",
+            &es,
+            &fan_in,
+            &reg,
+            &power,
+            1.0,
+            0.0,
+            Solver::Ilp,
+        )
+        .unwrap();
+        let tech = reg.ladder.tech;
+        let crit = crate::aging::BtiModel::default().critical_delta_vth(&tech, tech.v_nominal);
+        let out = resolve_plan_from(
+            &exact,
+            &reg,
+            &reg.drifted(crit * 1.5),
+            &power,
+            &ResolveOptions::default(),
+        )
+        .unwrap();
+        assert!(!out.feasible, "past the guard band the exact budget is unservable");
+        assert!(out.plan.level.iter().all(|&l| l == 3), "EOL pins all-nominal");
+        assert!(out.plan.predicted_mse > 0.0, "aged nominal is no longer error-free");
     }
 
     #[test]

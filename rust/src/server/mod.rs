@@ -6,7 +6,10 @@
 //!
 //! Protocol: newline-delimited JSON.
 //!   → {"pixels": [784 × f32], "quality": <level index>}
-//!   ← {"class": c, "logits": [...], "quality": q, "energy_saving": s}
+//!   ← {"class": c, "logits": [...], "quality": q, "generation": g}
+//!   (or {"error": "..."} when the serving batch failed — the connection
+//!   stays usable). `generation` is the hot-swappable plan set that served
+//!   the request; `{"stats": true}` returns the audit counters.
 //!
 //! Requests are funneled through a dynamic batcher (size- or deadline-
 //! triggered) so concurrent clients share quantized forward passes, like a
@@ -30,11 +33,12 @@
 //! seed produces bit-identical noisy outputs at any thread count (see
 //! [`crate::exec::kernel`]).
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -60,14 +64,41 @@ pub struct QualityLevel {
     pub energy: f64,
 }
 
+/// One generation of deployed quality levels: what a request executes
+/// against, immutable once installed. The engine swaps whole `PlanSet`s
+/// atomically ([`Engine::swap_levels`] / [`Engine::swap_plans`]); a batch
+/// snapshots the active set once and finishes on it, so in-flight work
+/// never observes a half-applied swap and every response is served by
+/// exactly one generation.
+#[derive(Clone, Debug)]
+pub struct PlanSet {
+    /// The engine's swap counter at install time (0 = the initial set).
+    /// Distinct from [`VoltagePlan::generation`], which tracks a single
+    /// plan's re-plan lineage.
+    pub generation: u64,
+    pub levels: Vec<QualityLevel>,
+}
+
+impl PlanSet {
+    /// Clamp a requested quality index to a valid level of this set.
+    pub fn clamp(&self, quality: usize) -> usize {
+        quality.min(self.levels.len().saturating_sub(1))
+    }
+}
+
 /// The inference engine shared by all connections: the quantized model,
-/// the pre-solved quality levels, and a pool of per-worker [`Backend`]
-/// instances. Backends are `Send + Sync` with `&self` execution, so the
-/// pool needs no locks — each batch worker just holds its own handle.
+/// the (hot-swappable) pre-solved quality levels, and a pool of per-worker
+/// [`Backend`] instances. Backends are `Send + Sync` with `&self`
+/// execution, so the pool needs no locks — each batch worker just holds
+/// its own handle. The active [`PlanSet`] lives behind an `RwLock<Arc<…>>`:
+/// readers take a snapshot (one `Arc` clone), writers swap the pointer —
+/// the serving hot path never blocks on a swap in progress beyond that
+/// pointer exchange.
 pub struct Engine {
     pub quantized: QuantizedModel,
-    pub levels: Vec<QualityLevel>,
     pub input_dim: usize,
+    active: RwLock<Arc<PlanSet>>,
+    swap_counter: AtomicU64,
     backends: Vec<Arc<dyn Backend>>,
 }
 
@@ -84,7 +115,13 @@ impl Engine {
             !levels.is_empty(),
             "engine needs at least one quality level (got none)"
         );
-        Ok(Self { quantized, levels, input_dim, backends: Vec::new() })
+        Ok(Self {
+            quantized,
+            input_dim,
+            active: RwLock::new(Arc::new(PlanSet { generation: 0, levels })),
+            swap_counter: AtomicU64::new(0),
+            backends: Vec::new(),
+        })
     }
 
     /// Build an engine whose quality levels come from deployable
@@ -99,23 +136,52 @@ impl Engine {
         plans: &[VoltagePlan],
         input_dim: usize,
     ) -> Result<Self> {
-        anyhow::ensure!(!plans.is_empty(), "engine needs at least one plan (got none)");
-        for p in plans {
-            p.validate_against(&quantized, registry)?;
-        }
-        for p in &plans[1..] {
-            plans[0].check_compatible(p)?;
-        }
-        let levels = plans
-            .iter()
-            .map(|p| QualityLevel {
-                name: p.name.clone(),
-                noise: p.noise_spec(registry),
-                energy_saving: p.energy_saving,
-                energy: p.energy,
-            })
-            .collect();
+        let levels = levels_from_plans(&quantized, registry, plans)?;
         Self::new(quantized, levels, input_dim)
+    }
+
+    /// Snapshot the active [`PlanSet`]. Cheap (one `Arc` clone); the
+    /// returned set stays valid across swaps — this is how in-flight
+    /// batches finish on the generation they started with.
+    pub fn plan_set(&self) -> Arc<PlanSet> {
+        self.active.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Number of quality levels in the currently active set.
+    pub fn num_levels(&self) -> usize {
+        self.plan_set().levels.len()
+    }
+
+    /// The active set's generation (last completed swap).
+    pub fn generation(&self) -> u64 {
+        self.swap_counter.load(Ordering::SeqCst)
+    }
+
+    /// Atomically replace the active quality levels with a new
+    /// generation. In-flight batches keep executing on the snapshot they
+    /// already hold; every batch collected after this returns sees the new
+    /// set. Returns the new generation number.
+    pub fn swap_levels(&self, levels: Vec<QualityLevel>) -> Result<u64> {
+        anyhow::ensure!(!levels.is_empty(), "cannot swap in an empty quality-level set");
+        // Counter bump and pointer store happen under the write lock so
+        // concurrent swappers cannot publish generations out of order.
+        let mut guard = self.active.write().unwrap_or_else(|e| e.into_inner());
+        let generation = self.swap_counter.fetch_add(1, Ordering::SeqCst) + 1;
+        *guard = Arc::new(PlanSet { generation, levels });
+        Ok(generation)
+    }
+
+    /// [`Self::swap_levels`] from deployable plans: validates every plan
+    /// against the engine's model and the given registry (which may be a
+    /// drift-adjusted one — [`crate::errormodel::DriftedRegistry::registry`])
+    /// before the swap, so a bad artifact can never replace a serving set.
+    pub fn swap_plans(
+        &self,
+        registry: &ErrorModelRegistry,
+        plans: &[VoltagePlan],
+    ) -> Result<u64> {
+        let levels = levels_from_plans(&self.quantized, registry, plans)?;
+        self.swap_levels(levels)
     }
 
     /// Install one execution backend instance shared by every batch worker
@@ -147,16 +213,18 @@ impl Engine {
         }
     }
 
-    /// Clamp a requested quality index to a valid level (`Engine::new`
-    /// guarantees at least one level exists).
+    /// Clamp a requested quality index to a valid level of the *active*
+    /// set (`Engine::new` guarantees at least one level exists). Batch
+    /// workers clamp against their snapshot instead, so a mid-batch swap
+    /// cannot shear the clamp from the execution.
     pub fn clamp_level(&self, quality: usize) -> usize {
-        quality.min(self.levels.len().saturating_sub(1))
+        self.plan_set().clamp(quality)
     }
 
     /// Execute one batch of rows at the given (clamped) quality level on
-    /// worker `worker`'s backend and return the logits. This is the single
-    /// inference entry both the TCP batch workers and the fleet simulator's
-    /// devices go through — one engine, many serving frontends.
+    /// worker `worker`'s backend and return the logits. Snapshots the
+    /// active plan set; use [`Self::execute_on`] to pin a batch to a
+    /// generation across multiple calls.
     pub fn execute_batch(
         &self,
         worker: usize,
@@ -164,25 +232,55 @@ impl Engine {
         quality: usize,
         rng: &mut Xoshiro256pp,
     ) -> Tensor {
-        let level = self.clamp_level(quality);
-        let spec = &self.levels[level].noise;
-        let noise_opt = if spec.is_silent() { None } else { Some(spec) };
-        let backend = self.backend_for(worker);
-        self.quantized.forward_with(backend.as_ref(), x, noise_opt, rng)
+        let set = self.plan_set();
+        self.execute_on(&set, worker, x, quality, rng)
     }
 
-    /// Estimated energy of one request at `quality` (clamped), in the
-    /// normalized gate-energy units of [`crate::power`]. Zero when the
-    /// levels carry no energy model (hand-assembled engines).
+    /// Execute one batch against an explicit [`PlanSet`] snapshot — the
+    /// single inference entry the TCP batch workers, the hot-swap path and
+    /// the fleet simulator's devices all go through.
+    pub fn execute_on(
+        &self,
+        set: &PlanSet,
+        worker: usize,
+        x: &Tensor,
+        quality: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Tensor {
+        let spec = &set.levels[set.clamp(quality)].noise;
+        let noise_opt = if spec.is_silent() { None } else { Some(spec) };
+        self.execute_with_spec(worker, x, noise_opt, rng)
+    }
+
+    /// Lowest-level execution seam: run one batch with an explicit noise
+    /// spec (or none) on worker `worker`'s backend. The fleet simulator
+    /// uses this to serve requests under *drift-adjusted* specs that never
+    /// correspond to an installed level.
+    pub fn execute_with_spec(
+        &self,
+        worker: usize,
+        x: &Tensor,
+        noise: Option<&crate::nn::quant::NoiseSpec>,
+        rng: &mut Xoshiro256pp,
+    ) -> Tensor {
+        let backend = self.backend_for(worker);
+        self.quantized.forward_with(backend.as_ref(), x, noise, rng)
+    }
+
+    /// Estimated energy of one request at `quality` (clamped) on the
+    /// active set, in the normalized gate-energy units of [`crate::power`].
+    /// Zero when the levels carry no energy model (hand-assembled engines).
     pub fn energy_estimate(&self, quality: usize) -> f64 {
-        self.levels[self.clamp_level(quality)].energy
+        let set = self.plan_set();
+        set.levels[set.clamp(quality)].energy
     }
 
     /// Estimated energy one request would cost at the all-nominal
     /// assignment — the reference `energy_saving` fractions are relative
     /// to. Zero when the levels carry no energy model.
     pub fn nominal_energy_estimate(&self) -> f64 {
-        self.levels
+        self.plan_set()
+            .levels
             .iter()
             .find(|l| l.energy > 0.0 && l.energy_saving < 1.0)
             .map(|l| l.energy / (1.0 - l.energy_saving))
@@ -190,10 +288,39 @@ impl Engine {
     }
 }
 
+/// Derive the quality levels a set of deployable plans encodes under
+/// `registry`, after validating plan ↔ model ↔ registry consistency and
+/// cross-plan provenance. Shared by [`Engine::from_plans`] and
+/// [`Engine::swap_plans`] so boot-time and hot-swap deployment can never
+/// diverge.
+fn levels_from_plans(
+    quantized: &QuantizedModel,
+    registry: &ErrorModelRegistry,
+    plans: &[VoltagePlan],
+) -> Result<Vec<QualityLevel>> {
+    anyhow::ensure!(!plans.is_empty(), "engine needs at least one plan (got none)");
+    for p in plans {
+        p.validate_against(quantized, registry)?;
+    }
+    for p in &plans[1..] {
+        plans[0].check_compatible(p)?;
+    }
+    Ok(plans
+        .iter()
+        .map(|p| QualityLevel {
+            name: p.name.clone(),
+            noise: p.noise_spec(registry),
+            energy_saving: p.energy_saving,
+            energy: p.energy,
+        })
+        .collect())
+}
+
 struct Job {
     pixels: Vec<f32>,
     quality: usize,
-    reply: Sender<(usize, Vec<f32>)>,
+    /// `(applied level, plan-set generation, logits)`.
+    reply: Sender<(usize, u64, Vec<f32>)>,
 }
 
 /// Server statistics (exposed for tests/benches, and to clients via a
@@ -210,19 +337,50 @@ pub struct ServerStats {
     pub peak_concurrent_batches: AtomicU64,
     /// Requests served per quality level (index = clamped level), so
     /// operators can see which deployed plans are actually exercised.
-    pub per_level: Vec<AtomicU64>,
+    /// Grows on demand: a hot swap to a larger plan set keeps counting.
+    per_level: Mutex<Vec<u64>>,
+    /// Requests attributed per plan-set generation — the audit trail of a
+    /// hot swap: in-flight batches drain onto the old generation while new
+    /// batches land on the new one. Failed (panicked) batches are
+    /// attributed too, so the counters always conserve `requests`.
+    pub per_generation: Mutex<BTreeMap<u64, u64>>,
+    /// Batch-worker panics survived: the worker recovered (or a peer
+    /// recovered its poisoned queue lock) instead of cascading the panic
+    /// across the pool.
+    pub worker_panics: AtomicU64,
 }
 
 impl ServerStats {
     pub fn new(levels: usize) -> Self {
-        Self {
-            per_level: (0..levels).map(|_| AtomicU64::new(0)).collect(),
-            ..Default::default()
+        Self { per_level: Mutex::new(vec![0; levels]), ..Default::default() }
+    }
+
+    fn record_level(&self, level: usize, requests: u64) {
+        let mut counts = self.per_level.lock().unwrap_or_else(|e| e.into_inner());
+        if level >= counts.len() {
+            counts.resize(level + 1, 0);
         }
+        counts[level] += requests;
+    }
+
+    /// Requests served per (clamped) quality level.
+    pub fn per_level_counts(&self) -> Vec<u64> {
+        self.per_level.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    fn record_generation(&self, generation: u64, requests: u64) {
+        let mut map = self.per_generation.lock().unwrap_or_else(|e| e.into_inner());
+        *map.entry(generation).or_insert(0) += requests;
     }
 
     /// Snapshot as JSON — what the server returns for a stats request.
     pub fn to_json(&self) -> Json {
+        let per_generation = {
+            let map = self.per_generation.lock().unwrap_or_else(|e| e.into_inner());
+            Json::Obj(
+                map.iter().map(|(g, n)| (g.to_string(), Json::Num(*n as f64))).collect(),
+            )
+        };
         Json::obj(vec![
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
@@ -233,11 +391,16 @@ impl ServerStats {
             (
                 "per_level",
                 Json::Arr(
-                    self.per_level
+                    self.per_level_counts()
                         .iter()
-                        .map(|c| Json::Num(c.load(Ordering::Relaxed) as f64))
+                        .map(|&c| Json::Num(c as f64))
                         .collect(),
                 ),
+            ),
+            ("per_generation", per_generation),
+            (
+                "worker_panics",
+                Json::Num(self.worker_panics.load(Ordering::Relaxed) as f64),
             ),
         ])
     }
@@ -284,14 +447,24 @@ impl BatchPolicy {
 impl Server {
     /// Bind to `127.0.0.1:port` (0 = ephemeral) and start serving.
     pub fn spawn(engine: Engine, port: u16, policy: BatchPolicy) -> Result<Server> {
+        Self::spawn_shared(Arc::new(engine), port, policy)
+    }
+
+    /// Like [`Self::spawn`] but the caller keeps a handle on the engine —
+    /// the adaptive loop's entry point: hold the `Arc`, serve traffic, and
+    /// [`Engine::swap_plans`] re-solved plans into the live server.
+    pub fn spawn_shared(
+        engine: Arc<Engine>,
+        port: u16,
+        policy: BatchPolicy,
+    ) -> Result<Server> {
         let listener =
             TcpListener::bind(("127.0.0.1", port)).context("binding server socket")?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(ServerStats::new(engine.levels.len()));
+        let stats = Arc::new(ServerStats::new(engine.num_levels()));
         let (tx, rx) = channel::<Job>();
-        let engine = Arc::new(engine);
 
         // Batch workers: each owns a backend handle from the engine's pool
         // and a private RNG; they share only the job queue (collection) —
@@ -366,9 +539,12 @@ impl Drop for Server {
 
 /// Collect one batch under the queue lock: block briefly for the first
 /// job, then drain up to `max_batch` or until the deadline. The lock is
-/// released before execution starts.
+/// released before execution starts. A poisoned lock (a peer worker
+/// panicked while holding it) is recovered, not propagated — the queue's
+/// `Receiver` state is valid regardless of where the panicker died, so
+/// cascading the poison would turn one bad batch into a dead pool.
 fn collect_batch(rx: &Mutex<Receiver<Job>>, policy: &BatchPolicy) -> Vec<Job> {
-    let rx = rx.lock().unwrap();
+    let rx = rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
     let first = match rx.recv_timeout(Duration::from_millis(20)) {
         Ok(j) => j,
         Err(_) => return Vec::new(),
@@ -391,6 +567,16 @@ fn collect_batch(rx: &Mutex<Receiver<Job>>, policy: &BatchPolicy) -> Vec<Job> {
 /// One batch worker: collect → execute on this worker's own backend and
 /// RNG → reply. No shared mutable state during execution, so workers run
 /// batches (and thus different quality levels) concurrently.
+///
+/// Each collected batch pins the active [`PlanSet`] **once**: clamping,
+/// execution and the generation tag on every reply all come from that one
+/// snapshot, so a hot swap mid-batch can neither shear a request across
+/// generations nor drop it. A panic inside execution (a backend bug, a
+/// poisoned artifact) is caught per level-group: the affected requests'
+/// reply channels drop (their handlers answer the client with an error
+/// line), the panic is counted in [`ServerStats::worker_panics`], and the
+/// worker keeps serving — it neither dies nor poisons the shared queue
+/// lock for its peers.
 fn batch_worker(
     engine: Arc<Engine>,
     worker: usize,
@@ -409,22 +595,43 @@ fn batch_worker(
         stats.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         let inflight = stats.inflight_batches.fetch_add(1, Ordering::SeqCst) + 1;
         stats.peak_concurrent_batches.fetch_max(inflight, Ordering::SeqCst);
+        // One snapshot for the whole batch — the hot-swap invariant.
+        let set = engine.plan_set();
         // Group by quality level (each level has its own noise spec).
         let mut by_level: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
         for (i, j) in jobs.iter().enumerate() {
-            by_level.entry(engine.clamp_level(j.quality)).or_default().push(i);
+            by_level.entry(set.clamp(j.quality)).or_default().push(i);
         }
         for (level, idxs) in by_level {
-            if let Some(counter) = stats.per_level.get(level) {
-                counter.fetch_add(idxs.len() as u64, Ordering::Relaxed);
-            }
-            let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
+            // Batch assembly is inside the catch too: a malformed request
+            // (wrong pixel count) panics `copy_from_slice`, and that must
+            // cost one error reply, not a worker thread.
+            let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
+                for (r, &i) in idxs.iter().enumerate() {
+                    x.row_mut(r).copy_from_slice(&jobs[i].pixels);
+                }
+                engine.execute_on(&set, worker, &x, level, &mut rng)
+            }));
+            let logits = match executed {
+                Ok(logits) => logits,
+                Err(_) => {
+                    // Dropping the senders below (jobs go out of scope
+                    // un-replied at the end of the batch) surfaces the
+                    // failure to each affected client as an error line.
+                    // The failed requests are still attributed to this
+                    // generation so per_generation conserves `requests`
+                    // (which counted them at collection); per_level only
+                    // counts *served* requests, so it is skipped.
+                    stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+                    stats.record_generation(set.generation, idxs.len() as u64);
+                    continue;
+                }
+            };
+            stats.record_level(level, idxs.len() as u64);
+            stats.record_generation(set.generation, idxs.len() as u64);
             for (r, &i) in idxs.iter().enumerate() {
-                x.row_mut(r).copy_from_slice(&jobs[i].pixels);
-            }
-            let logits = engine.execute_batch(worker, &x, level, &mut rng);
-            for (r, &i) in idxs.iter().enumerate() {
-                let _ = jobs[i].reply.send((level, logits.row(r).to_vec()));
+                let _ = jobs[i].reply.send((level, set.generation, logits.row(r).to_vec()));
             }
         }
         stats.inflight_batches.fetch_sub(1, Ordering::SeqCst);
@@ -483,9 +690,32 @@ fn handle_connection(
         let (reply_tx, reply_rx) = channel();
         tx.send(Job { pixels, quality, reply: reply_tx })
             .map_err(|_| anyhow::anyhow!("engine stopped"))?;
-        let (level, logits) = reply_rx
-            .recv_timeout(Duration::from_secs(30))
-            .map_err(|_| anyhow::anyhow!("inference timed out"))?;
+        let (level, generation, logits) = match reply_rx.recv_timeout(Duration::from_secs(30))
+        {
+            Ok(reply) => reply,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // The batch worker dropped our sender without replying —
+                // either it caught a panic executing this batch, or the
+                // server is shutting down with this request still queued.
+                // Tell the client instead of letting it time out, and
+                // keep the connection alive.
+                let resp = Json::obj(vec![(
+                    "error",
+                    Json::Str(
+                        "inference failed (worker recovered from a panic, or server \
+                         shutting down)"
+                            .into(),
+                    ),
+                )]);
+                writer.write_all(resp.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                continue;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                anyhow::bail!("inference timed out")
+            }
+        };
         // NaN-safe argmax: a NaN logit (however it got there) must neither
         // panic the handler thread nor win the classification.
         let class = crate::util::stats::argmax_f32(&logits);
@@ -496,6 +726,7 @@ fn handle_connection(
                 Json::arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>()),
             ),
             ("quality", Json::Num(level as f64)),
+            ("generation", Json::Num(generation as f64)),
         ]);
         writer.write_all(resp.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
@@ -527,6 +758,18 @@ impl Client {
         pixels: &[f32],
         quality: usize,
     ) -> Result<(usize, Vec<f32>, usize)> {
+        let (class, logits, applied, _) = self.infer_tagged(pixels, quality)?;
+        Ok((class, logits, applied))
+    }
+
+    /// Like [`Self::infer_full`] but also returns the plan-set generation
+    /// that served the request — the observable a hot-swap test (or an
+    /// auditing operator) keys on. Pre-swap servers report generation 0.
+    pub fn infer_tagged(
+        &mut self,
+        pixels: &[f32],
+        quality: usize,
+    ) -> Result<(usize, Vec<f32>, usize, u64)> {
         let req = Json::obj(vec![
             (
                 "pixels",
@@ -541,11 +784,15 @@ impl Client {
         let mut line = String::new();
         reader.read_line(&mut line)?;
         let resp = Json::parse(&line)?;
+        if let Some(err) = resp.opt("error") {
+            anyhow::bail!("server error: {}", err.as_str().unwrap_or("unknown"));
+        }
         let class = resp.get("class")?.as_usize()?;
         let logits: Vec<f32> =
             resp.get("logits")?.as_f64_vec()?.iter().map(|&v| v as f32).collect();
         let applied = resp.get("quality")?.as_usize()?;
-        Ok((class, logits, applied))
+        let generation = resp.get("generation")?.as_u64()?;
+        Ok((class, logits, applied, generation))
     }
 
     /// Fetch the server's stats snapshot (`{"stats": true}` request).
@@ -638,9 +885,10 @@ mod tests {
         assert!(server.stats.requests.load(Ordering::Relaxed) >= n as u64 + 2);
         // Per-level counters: n requests at level 0; level 1 saw the
         // explicit + the clamped request.
-        assert_eq!(server.stats.per_level.len(), 2);
-        assert_eq!(server.stats.per_level[0].load(Ordering::Relaxed), n as u64);
-        assert_eq!(server.stats.per_level[1].load(Ordering::Relaxed), 2);
+        let counts = server.stats.per_level_counts();
+        assert_eq!(counts.len(), 2);
+        assert_eq!(counts[0], n as u64);
+        assert_eq!(counts[1], 2);
         // And the same numbers are visible to clients via the stats request.
         let j = client.stats().unwrap();
         assert_eq!(j.get("requests").unwrap().as_u64().unwrap(), n as u64 + 2);
@@ -662,7 +910,8 @@ mod tests {
             &VoltageLadder::paper_default(),
             &[3.0e4, 1.0e4, 2.0e3, 0.0],
         );
-        let engine = Engine::new(engine.quantized.clone(), engine.levels.clone(), 784)
+        let levels = engine.plan_set().levels.clone();
+        let engine = Engine::new(engine.quantized.clone(), levels, 784)
             .unwrap()
             .with_backend(Box::new(crate::exec::Statistical::new(reg)));
         let mut server = Server::spawn(engine, 0, BatchPolicy::default()).unwrap();
@@ -703,20 +952,24 @@ mod tests {
             model_fingerprint: "fp".into(),
             config_hash: crate::plan::config_hash(&cfg),
             config: cfg.clone(),
+            generation: 0,
+            drift_delta_vth: 0.0,
             level,
         };
         let nominal = mk("exact", vec![3; n], 0.0);
         let eco = mk("eco", vec![0; n], 0.35);
         let e = Engine::from_plans(q.clone(), &reg, &[nominal.clone(), eco.clone()], 784)
             .unwrap();
-        assert_eq!(e.levels.len(), 2);
-        assert!(e.levels[0].noise.is_silent(), "nominal plan → silent spec");
-        assert!(!e.levels[1].noise.is_silent());
-        assert_eq!(e.levels[1].energy_saving, 0.35);
+        let set = e.plan_set();
+        assert_eq!(set.levels.len(), 2);
+        assert_eq!(set.generation, 0);
+        assert!(set.levels[0].noise.is_silent(), "nominal plan → silent spec");
+        assert!(!set.levels[1].noise.is_silent());
+        assert_eq!(set.levels[1].energy_saving, 0.35);
         // Expected composition: std = sqrt(k · var(0.5V)).
         for (u, &k) in q.neuron_fan_in.iter().enumerate() {
             crate::util::checks::assert_close(
-                e.levels[1].noise.std[u],
+                set.levels[1].noise.std[u],
                 (k as f64 * 3.0e4).sqrt(),
                 1e-12,
             );
@@ -729,6 +982,115 @@ mod tests {
         let mut other = eco.clone();
         other.model_fingerprint = "other".into();
         assert!(Engine::from_plans(q, &reg, &[nominal, other], 784).is_err());
+    }
+
+    #[test]
+    fn hot_swap_is_atomic_and_generation_tagged() {
+        let (engine, test) = test_engine();
+        let engine = Arc::new(engine);
+        let set0 = engine.plan_set();
+        assert_eq!((set0.generation, engine.generation()), (0, 0));
+        let mut server = Server::spawn_shared(engine.clone(), 0, BatchPolicy::default()).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        let (_, _, applied, gen) = client.infer_tagged(test.images.row(0), 1).unwrap();
+        assert_eq!((applied, gen), (1, 0), "pre-swap requests serve generation 0");
+
+        // Swap in a new set (same shape, renamed levels) mid-serve.
+        let mut renamed = engine.plan_set().levels.clone();
+        renamed[0].name = "exact_v2".into();
+        let g1 = engine.swap_levels(renamed).unwrap();
+        assert_eq!((g1, engine.generation()), (1, 1));
+        let set1 = engine.plan_set();
+        assert_eq!(set1.generation, 1);
+        assert_eq!(set1.levels[0].name, "exact_v2");
+        // The old snapshot is untouched — in-flight work on it is safe.
+        assert_eq!(set0.generation, 0);
+        // Post-swap requests are served (and tagged) by the new set.
+        let (_, _, _, gen) = client.infer_tagged(test.images.row(1), 0).unwrap();
+        assert_eq!(gen, 1);
+        // Both generations appear in the audit counters.
+        let j = client.stats().unwrap();
+        let per_gen = j.get("per_generation").unwrap().as_obj().unwrap();
+        assert_eq!(per_gen.get("0").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(per_gen.get("1").unwrap().as_u64().unwrap(), 1);
+        // Empty sets are refused; the active set stays serviceable.
+        assert!(engine.swap_levels(Vec::new()).is_err());
+        assert_eq!(engine.generation(), 1);
+        // A swap may GROW the level set; the per-level counters follow.
+        let mut wider = engine.plan_set().levels.clone();
+        let mut extra = wider[1].clone();
+        extra.name = "ultra_eco".into();
+        wider.push(extra);
+        assert_eq!(engine.swap_levels(wider).unwrap(), 2);
+        let (_, _, applied, gen) = client.infer_tagged(test.images.row(2), 2).unwrap();
+        assert_eq!((applied, gen), (2, 2));
+        let counts = server.stats.per_level_counts();
+        assert_eq!(counts.len(), 3, "per-level counters must grow with the swap");
+        assert_eq!(counts[2], 1);
+        // Executing on a pinned old snapshot still works after the swap.
+        let mut rng = Xoshiro256pp::seeded(5);
+        let x = {
+            let mut t = Tensor::zeros(&[1, 784]);
+            t.row_mut(0).copy_from_slice(test.images.row(0));
+            t
+        };
+        let y_old = engine.execute_on(&set0, 0, &x, 0, &mut rng);
+        assert_eq!(y_old.shape, vec![1, 10]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_is_recovered_not_cascaded() {
+        // A single batch worker and a request whose pixel vector has the
+        // wrong length: batch assembly panics. With the old
+        // `rx.lock().unwrap()` worker loop the panic killed the worker
+        // (and a panic under the collection lock poisoned it for every
+        // peer) — the pool went dead and clients hung. Now the worker must
+        // catch the panic, answer the bad request with an error line,
+        // count it, and keep serving the same connection.
+        let (engine, test) = test_engine();
+        let mut server = Server::spawn(
+            engine,
+            0,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2), workers: 1 },
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        for round in 0..3 {
+            writer
+                .write_all(b"{\"pixels\": [0.5, 0.25, 0.125], \"quality\": 0}\n")
+                .unwrap();
+            writer.flush().unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Json::parse(&line).unwrap();
+            assert!(resp.opt("error").is_some(), "round {round}: want an error reply, got {line}");
+        }
+        assert_eq!(server.stats.worker_panics.load(Ordering::Relaxed), 3);
+        // The same (sole) worker still serves well-formed requests — it
+        // neither died nor poisoned the queue lock.
+        let mut client = Client::connect(server.addr).unwrap();
+        let (_, logits) = client.infer(test.images.row(0), 0).unwrap();
+        assert_eq!(logits.len(), 10);
+        // And the typed client surfaces the error as Err, not a hang.
+        let err = client.infer(&[1.0, 2.0], 0).unwrap_err();
+        assert!(err.to_string().contains("server error"), "{err}");
+        // Audit conservation holds even across panics: every collected
+        // request (served or failed) is attributed to a generation.
+        let total = server.stats.requests.load(Ordering::Relaxed);
+        let attributed: u64 = server
+            .stats
+            .per_generation
+            .lock()
+            .unwrap()
+            .values()
+            .sum();
+        assert_eq!(attributed, total, "per-generation counters must conserve requests");
+        // …while per-level only counts the successfully served one.
+        assert_eq!(server.stats.per_level_counts().iter().sum::<u64>(), 1);
+        server.shutdown();
     }
 
     #[test]

@@ -57,6 +57,65 @@ impl Technology {
     pub fn energy_scale(&self, v: f64) -> f64 {
         (v / self.v_nominal).powi(2)
     }
+
+    /// The *effective* supply voltage of an aged device: the fresh-device
+    /// voltage whose alpha-power delay equals the aged delay at supply `v`
+    /// with threshold shift `delta_vth`, i.e. the unique `v_eff ≤ v` with
+    ///
+    /// ```text
+    /// alpha_power(v_eff) = v / (v − (v_th + ΔVth))^α
+    /// ```
+    ///
+    /// This is the bridge the drift-aware error models ride on: an aged PE
+    /// at ladder voltage `v` mis-times like a fresh PE at `v_eff`, so its
+    /// error statistics can be re-read off the fresh characterization
+    /// curve instead of re-running gate-level Monte Carlo. Exact at
+    /// `delta_vth == 0` (returns `v` bit-for-bit). Valid while the aged
+    /// overdrive stays positive: `delta_vth < v − v_th` (asserted).
+    pub fn effective_voltage(&self, v: f64, delta_vth: f64) -> f64 {
+        assert!(delta_vth >= 0.0, "negative threshold drift");
+        if delta_vth == 0.0 {
+            return v;
+        }
+        assert!(
+            v - (self.v_th + delta_vth) > 1e-9,
+            "drift {delta_vth} V leaves no overdrive at {v} V (validity: ΔVth < v − Vth)"
+        );
+        let target = v / (v - (self.v_th + delta_vth)).powf(self.alpha);
+        self.invert_alpha_power(target, v)
+    }
+
+    /// The unique `v ∈ (v_th, hi)` with `alpha_power(v) == target`, by
+    /// bisection — well-defined because alpha_power is strictly decreasing
+    /// on `(v_th, ∞)` for α > 1. Shared inverse of
+    /// [`Self::effective_voltage`] and [`Self::error_onset_voltage`], so
+    /// the drift model and the onset anchor can never diverge on
+    /// convergence behavior.
+    fn invert_alpha_power(&self, target: f64, hi: f64) -> f64 {
+        let (mut lo, mut hi) = (self.v_th + 1e-9, hi);
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if self.alpha_power(mid) > target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// The voltage below which timing errors begin on a fresh device: the
+    /// supply whose delay stretch exactly consumes the clock guard band
+    /// (`alpha_power(v) = (1 + clock_guard) · alpha_power(v_nominal)`).
+    /// Above it the shipped clock still meets timing and the error model
+    /// is exactly zero; below it late bits start being captured. Dual of
+    /// [`crate::aging::BtiModel::critical_delta_vth`]: an aged nominal
+    /// level crosses this onset exactly when ΔVth crosses the critical
+    /// drift.
+    pub fn error_onset_voltage(&self) -> f64 {
+        let target = (1.0 + self.clock_guard) * self.alpha_power(self.v_nominal);
+        self.invert_alpha_power(target, self.v_nominal)
+    }
 }
 
 /// A discrete operating voltage level of the X-TPU.
@@ -199,5 +258,50 @@ mod tests {
     #[should_panic(expected = "top out at the nominal")]
     fn ladder_requires_nominal_top() {
         VoltageLadder::new(&[0.5, 0.6], Technology::default());
+    }
+
+    #[test]
+    fn effective_voltage_inverts_aged_delay() {
+        let t = Technology::default();
+        // Exact at zero drift, strictly below v for positive drift.
+        assert_eq!(t.effective_voltage(0.8, 0.0), 0.8);
+        for v in [0.5, 0.6, 0.7, 0.8] {
+            for dvth in [0.005, 0.01, 0.02] {
+                let v_eff = t.effective_voltage(v, dvth);
+                assert!(v_eff < v, "v_eff {v_eff} must drop below {v}");
+                assert!(v_eff > t.v_th);
+                // Defining property: fresh delay at v_eff = aged delay at v.
+                assert_close(
+                    t.alpha_power(v_eff),
+                    v / (v - (t.v_th + dvth)).powf(t.alpha),
+                    1e-9 * t.alpha_power(v_eff),
+                );
+            }
+            // Monotone: more drift → lower effective voltage.
+            assert!(t.effective_voltage(v, 0.02) < t.effective_voltage(v, 0.01));
+        }
+        // Low-overdrive levels shift further than ΔVth itself (the
+        // alpha-power curve steepens toward Vth).
+        assert!(0.5 - t.effective_voltage(0.5, 0.02) > 0.02);
+    }
+
+    #[test]
+    #[should_panic(expected = "no overdrive")]
+    fn effective_voltage_rejects_drift_past_overdrive() {
+        Technology::default().effective_voltage(0.5, 0.2);
+    }
+
+    #[test]
+    fn error_onset_sits_inside_the_guard_band() {
+        let t = Technology::default();
+        let v_on = t.error_onset_voltage();
+        assert!(v_on < t.v_nominal && v_on > 0.7, "onset {v_on}");
+        // Defining property: delay stretch at onset = 1 + guard band.
+        assert_close(t.delay_scale(v_on), 1.0 + t.clock_guard, 1e-9);
+        // Duality with the aging model: drifting the nominal level by the
+        // critical ΔVth lands its effective voltage exactly on the onset.
+        let bti = crate::aging::BtiModel::default();
+        let crit = bti.critical_delta_vth(&t, t.v_nominal);
+        assert_close(t.effective_voltage(t.v_nominal, crit), v_on, 1e-6);
     }
 }

@@ -9,7 +9,8 @@ use std::sync::Arc;
 
 use xtpu::config::ExperimentConfig;
 use xtpu::fleet::{
-    policy_from_name, FleetConfig, LeastLoaded, RoundRobin, Router, Trace, WearLeveling,
+    policy_from_name, AdaptiveContext, FleetConfig, LeastLoaded, ReplanPolicy, RoundRobin,
+    Router, Trace, WearLeveling,
 };
 use xtpu::plan::{Planner, VoltagePlan};
 use xtpu::server::Engine;
@@ -194,4 +195,138 @@ fn closed_loop_trace_and_least_loaded_behave() {
     assert!(t.per_class[0] > t.per_class[1], "mix weights ignored: {:?}", t.per_class);
     // JSON emission parses on this path too.
     assert!(Json::parse(&t.to_json().to_string()).is_ok());
+}
+
+/// The closed loop, end to end (the PR's acceptance test): on an
+/// accelerated wear clock, a fleet with threshold re-planning keeps its
+/// served MSE inside the user quality budget for the whole run, while the
+/// identical fleet without re-planning drifts out of it — and the
+/// re-planned fleet still reports positive energy saving vs all-nominal
+/// serving.
+///
+/// Quality is the analytic served-MSE-to-budget ratio the fleet samples
+/// during the run (`Σ ES²·k·var_drift(level)` over the device's deployed
+/// plan, re-priced under its accrued ΔVth — eq. 29 at age): exact,
+/// deterministic, and the same observable `resolve_plan_from` solves
+/// against.
+#[test]
+fn threshold_replanning_keeps_served_mse_in_budget_while_static_fleet_exits() {
+    let devices = 2;
+    // Budget 100% of nominal MSE: tight enough that the solver is
+    // budget-constrained (high utilization) with contributions from the
+    // steep 0.6/0.7 V levels, which is exactly where BTI drift bites.
+    let mut planner = Planner::new(smoke_cfg());
+    let plans = planner.solve_many(&[0.0, 1.0]).unwrap();
+    let registry = planner.registry().unwrap().clone();
+    let power = *planner.power();
+    let trained = planner.trained().unwrap();
+    let quantized = trained.quantized.clone();
+    let input_dim = trained.model.input.numel();
+    let budgeted = &plans[1];
+    let util = budgeted.predicted_mse / budgeted.budget_abs;
+    assert!(
+        util > 0.8,
+        "fixture assumption broken: the {} plan only fills {:.0}% of its budget — \
+         pick a tighter budget fraction so drift can push it out",
+        budgeted.name,
+        util * 100.0
+    );
+
+    let fleet_cfg = FleetConfig {
+        devices,
+        service_seconds: 1.0e-3,
+        // ≳0.07 deployed years per device over the 2 s trace: enough
+        // nominal-voltage stress to consume the whole clock guard band.
+        wear_accel: 4.0e6,
+        ..FleetConfig::default()
+    };
+    // Identical trace for both arms; 50/50 exact (the stressor) and
+    // budgeted (the quality observable) traffic.
+    let trace = Trace::poisson(600.0, 2.0, &[1.0, 1.0], 0xADA97);
+
+    let build = |replan: ReplanPolicy| -> Router {
+        let pool =
+            xtpu::plan::make_backend_pool(&planner.cfg, &registry, devices).unwrap();
+        let engine = Arc::new(
+            Engine::from_plans(quantized.clone(), &registry, &plans, input_dim)
+                .unwrap()
+                .with_backend_pool(pool),
+        );
+        Router::with_adaptation(
+            engine,
+            &plans,
+            Box::<RoundRobin>::default(),
+            fleet_cfg.clone(),
+            AdaptiveContext::new(registry.clone(), power, replan),
+        )
+        .unwrap()
+    };
+
+    let mut adaptive = build(ReplanPolicy::Threshold { guard_band: 0.05 });
+    let t_adapt = adaptive.run(&trace);
+    let mut frozen = build(ReplanPolicy::Never);
+    let t_never = frozen.run(&trace);
+
+    // Same trace, same routing: both arms served the same request multiset.
+    assert_eq!(t_adapt.requests, t_never.requests);
+    assert_eq!(t_adapt.per_class, t_never.per_class);
+
+    // The static fleet measurably exits the user budget as it ages…
+    assert!(
+        t_never.max_mse_ratio > 1.02,
+        "no-replan fleet stayed in budget (max ratio {:.3}) — wear clock too slow \
+         or boot utilization {util:.2} too low",
+        t_never.max_mse_ratio
+    );
+    assert!(t_never.replan_events.is_empty());
+    // …while the closed loop never leaves it (re-plans solve to 90% of
+    // budget, and the threshold trigger bounds inter-replan drift).
+    assert!(
+        t_adapt.max_mse_ratio <= 1.0 + 1e-6,
+        "re-planning fleet left the quality budget: max ratio {:.4}",
+        t_adapt.max_mse_ratio
+    );
+    assert!(
+        t_adapt.replan_events.len() >= 2,
+        "threshold policy never fired ({} events)",
+        t_adapt.replan_events.len()
+    );
+    // Re-plan provenance: generations advance 1, 2, … per device and land
+    // in the device telemetry; solve/swap latency is recorded.
+    for d in &t_adapt.devices {
+        let evs: Vec<_> =
+            t_adapt.replan_events.iter().filter(|e| e.device == d.id).collect();
+        assert_eq!(d.generation, evs.len() as u64);
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.generation, i as u64 + 1);
+            assert!(e.delta_vth > 0.0 && e.solve_ms >= 0.0);
+        }
+    }
+    assert!(t_never.devices.iter().all(|d| d.generation == 0));
+
+    // The headline economics: adapting costs some saving (re-plans move
+    // neurons up-ladder) but the fleet still beats all-nominal serving.
+    assert!(
+        t_adapt.energy_saving_vs_nominal > 0.0,
+        "re-planned fleet lost its energy saving ({:.4})",
+        t_adapt.energy_saving_vs_nominal
+    );
+    assert!(
+        t_adapt.energy_saving_vs_nominal <= t_never.energy_saving_vs_nominal + 1e-9,
+        "quality restoration cannot be free: adaptive saving {:.4} vs static {:.4}",
+        t_adapt.energy_saving_vs_nominal,
+        t_never.energy_saving_vs_nominal
+    );
+
+    // The full adaptive report round-trips through util::json with the
+    // closed-loop keys the CI adaptive-smoke job asserts on.
+    let j = t_adapt.to_json();
+    let back = Json::parse(&j.to_string()).unwrap();
+    assert_eq!(back.get("replan_policy").unwrap().as_str().unwrap(), "threshold");
+    assert_eq!(
+        back.get("replans").unwrap().as_u64().unwrap() as usize,
+        t_adapt.replan_events.len()
+    );
+    assert!(!back.get("quality_curve").unwrap().as_arr().unwrap().is_empty());
+    assert!(back.get("max_mse_ratio").unwrap().as_f64().unwrap() <= 1.0 + 1e-6);
 }

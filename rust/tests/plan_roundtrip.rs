@@ -71,7 +71,9 @@ fn plan_files_serve_identically_to_in_memory_assignments() {
     let engine_mem = Engine::new(sys.quantized.clone(), levels, 784).unwrap();
 
     // The derived noise specs must match bit-exactly…
-    for (a, b) in engine_plans.levels.iter().zip(&engine_mem.levels) {
+    let set_plans = engine_plans.plan_set();
+    let set_mem = engine_mem.plan_set();
+    for (a, b) in set_plans.levels.iter().zip(&set_mem.levels) {
         assert_eq!(a.name, b.name);
         assert_eq!(a.energy_saving, b.energy_saving);
         assert_eq!(a.noise.mean, b.noise.mean);
@@ -80,19 +82,19 @@ fn plan_files_serve_identically_to_in_memory_assignments() {
     // …and so must actual noisy inference through the shared kernel.
     let backend = Statistical::new(sys.registry.clone());
     let (x, _) = sys.test.batch(&(0..16).collect::<Vec<_>>());
-    for level in 0..engine_plans.levels.len() {
+    for level in 0..set_plans.levels.len() {
         let mut rng_a = Xoshiro256pp::seeded(0xD15C ^ level as u64);
         let mut rng_b = Xoshiro256pp::seeded(0xD15C ^ level as u64);
         let ya = engine_plans.quantized.forward_with(
             &backend,
             &x,
-            Some(&engine_plans.levels[level].noise),
+            Some(&set_plans.levels[level].noise),
             &mut rng_a,
         );
         let yb = engine_mem.quantized.forward_with(
             &backend,
             &x,
-            Some(&engine_mem.levels[level].noise),
+            Some(&set_mem.levels[level].noise),
             &mut rng_b,
         );
         assert_eq!(ya.data, yb.data, "level {level} logits diverge");

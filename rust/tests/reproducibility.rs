@@ -382,3 +382,147 @@ fn server_stress_mixed_quality_concurrent_batches() {
     );
     server.shutdown();
 }
+
+/// Hot-swap under concurrent load: 16 clients hammer one quality level
+/// while the main thread swaps the plan set three times. The invariants:
+///
+/// - **never drops**: every request gets a well-formed reply (no hangs,
+///   no disconnects, no error lines);
+/// - **never mixes**: every reply is tagged with exactly one generation,
+///   and the applied noise provably belongs to that generation —
+///   generation 0's level 0 is silent (logits must bit-match the clean
+///   reference), every later generation's level 0 carries heavy noise
+///   (logits must NOT match);
+/// - per sequential client the observed generation is monotone
+///   non-decreasing (a request enqueued after a reply from generation `g`
+///   can never be served by a generation older than `g`);
+/// - the per-generation audit counters conserve the request count.
+#[test]
+fn hot_swap_under_concurrent_load_never_drops_or_mixes() {
+    let mut rng = Xoshiro256pp::seeded(91);
+    let mut model = fc_mnist(Activation::Relu, &mut rng);
+    let train_set = synth_mnist(400, 92);
+    train(&mut model, &train_set, &TrainConfig { epochs: 2, ..Default::default() });
+    let test = synth_mnist(64, 93);
+    let calib = test.batch(&(0..32).collect::<Vec<_>>()).0;
+    let q = QuantizedModel::quantize(&model, &calib);
+    let n = q.num_neurons();
+    let levels = vec![QualityLevel {
+        name: "exact".into(),
+        noise: NoiseSpec::silent(n),
+        energy_saving: 0.0,
+        energy: 0.0,
+    }];
+    let engine = Arc::new(Engine::new(q, levels, 784).unwrap());
+
+    // Clean reference logits: what generation 0 must reproduce exactly.
+    let expected: Vec<Vec<f32>> = {
+        let idx: Vec<usize> = (0..test.len()).collect();
+        let (x, _) = test.batch(&idx);
+        let mut r = Xoshiro256pp::seeded(1);
+        let logits = engine.quantized.forward(&x, None, &mut r);
+        (0..test.len()).map(|r| logits.row(r).to_vec()).collect()
+    };
+
+    let mut server = Server::spawn_shared(
+        engine.clone(),
+        0,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5), workers: 4 },
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    let n_clients = 16usize;
+    let per_client = 10usize;
+    let swaps = 3u64;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let expected = expected.clone();
+            let test = test.clone();
+            std::thread::spawn(move || -> Vec<u64> {
+                let mut client = Client::connect(addr).unwrap();
+                let mut gens = Vec::with_capacity(per_client);
+                for r in 0..per_client {
+                    let idx = (c * per_client + r) % test.len();
+                    let (_, logits, applied, gen) =
+                        client.infer_tagged(test.images.row(idx), 0).unwrap();
+                    assert_eq!(applied, 0, "client {c} req {r}");
+                    assert_eq!(logits.len(), 10, "client {c} req {r}");
+                    let matches_clean = logits
+                        .iter()
+                        .zip(&expected[idx])
+                        .all(|(g, e)| (g - e).abs() <= 1e-4 * e.abs().max(1.0));
+                    if gen == 0 {
+                        assert!(
+                            matches_clean,
+                            "client {c} req {r}: generation-0 reply must carry \
+                             generation-0 (silent) noise"
+                        );
+                    } else {
+                        assert!(
+                            !matches_clean,
+                            "client {c} req {r}: generation-{gen} reply carried \
+                             generation-0 noise — generations mixed"
+                        );
+                    }
+                    gens.push(gen);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                gens
+            })
+        })
+        .collect();
+
+    // Swap three generations in while the clients run. Every post-swap
+    // set's single level carries obvious noise, so a mixed generation is
+    // detectable from the logits alone.
+    for s in 1..=swaps {
+        std::thread::sleep(Duration::from_millis(8));
+        let mut levels = engine.plan_set().levels.clone();
+        levels[0].name = format!("exact_g{s}");
+        for sd in levels[0].noise.std.iter_mut().take(128) {
+            *sd = 5000.0;
+        }
+        let got = engine.swap_levels(levels).unwrap();
+        assert_eq!(got, s, "swap generations must be sequential");
+    }
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    let mut all_gens: Vec<Vec<u64>> = Vec::new();
+    for h in handles {
+        while !h.is_finished() {
+            assert!(std::time::Instant::now() < deadline, "server deadlocked under swap load");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        all_gens.push(h.join().unwrap());
+    }
+    for (c, gens) in all_gens.iter().enumerate() {
+        assert_eq!(gens.len(), per_client, "client {c} dropped requests");
+        for w in gens.windows(2) {
+            assert!(
+                w[1] >= w[0],
+                "client {c}: generation went backwards ({} after {})",
+                w[1],
+                w[0]
+            );
+        }
+        assert!(gens.iter().all(|&g| g <= swaps), "client {c} saw unknown generation");
+    }
+
+    // After the last swap drains, new requests land on the final set.
+    let mut client = Client::connect(addr).unwrap();
+    let (_, _, _, gen) = client.infer_tagged(test.images.row(0), 0).unwrap();
+    assert_eq!(gen, swaps, "post-swap request must serve the latest generation");
+
+    // Audit counters conserve: every request is attributed to exactly one
+    // generation.
+    let stats = client.stats().unwrap();
+    let per_gen = stats.get("per_generation").unwrap().as_obj().unwrap();
+    let attributed: u64 =
+        per_gen.values().map(|v| v.as_u64().unwrap()).sum();
+    let total = server.stats.requests.load(Ordering::Relaxed);
+    assert_eq!(total, (n_clients * per_client) as u64 + 1);
+    assert_eq!(attributed, total, "per-generation counters must conserve requests");
+    assert_eq!(server.stats.worker_panics.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
