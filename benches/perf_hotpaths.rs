@@ -93,10 +93,38 @@ fn main() {
     let stat = Statistical::new(reg.clone());
     let stat_nom_mmacs = bench_backend("Statistical, nominal cols", &stat, 3);
     let stat_vos_mmacs = bench_backend("Statistical, 0.5V cols", &stat, 0);
+
+    // Forced scalar vs. active-path kernel throughput on the same workload
+    // (still pinned to one thread). The dispatch property tests prove the
+    // outputs identical; this is the before/after the SIMD work buys.
+    let active = xtpu::exec::dispatch::active();
+    let bench_path = |path: xtpu::exec::dispatch::SimdPath| -> f64 {
+        let mut scratch = xtpu::exec::kernel::KernelScratch::new();
+        let mut out = Vec::new();
+        xtpu::exec::kernel::matmul_i8_path(path, &a, &w, mm, kk, nn, &mut out, &mut scratch);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            xtpu::exec::kernel::matmul_i8_path(path, &a, &w, mm, kk, nn, &mut out, &mut scratch);
+            std::hint::black_box(&out);
+        }
+        macs * reps as f64 / t0.elapsed().as_secs_f64() / 1e6
+    };
+    let scalar_mmacs = bench_path(xtpu::exec::dispatch::SimdPath::Scalar);
+    let simd_mmacs = bench_path(active);
+    println!(
+        "L3b kernel paths  : {scalar_mmacs:>8.1} M MAC/s scalar → {simd_mmacs:>8.1} M MAC/s \
+         {} (×{:.2}, 1 thread)",
+        active.name(),
+        simd_mmacs / scalar_mmacs
+    );
     match l3b_prior_threads {
         Some(v) => std::env::set_var("XTPU_THREADS", v),
         None => std::env::remove_var("XTPU_THREADS"),
     }
+    report.push(("simd_path", Json::Str(active.name().to_string())));
+    report.push(("l3b_kernel_scalar_mmacs", Json::Num(scalar_mmacs)));
+    report.push(("l3b_kernel_simd_mmacs", Json::Num(simd_mmacs)));
+    report.push(("l3b_simd_speedup", Json::Num(simd_mmacs / scalar_mmacs)));
     report.push(("l3b_exec_exact_mmacs", Json::Num(exact_mmacs)));
     report.push(("l3b_exec_statistical_nominal_mmacs", Json::Num(stat_nom_mmacs)));
     report.push(("l3b_exec_statistical_vos_mmacs", Json::Num(stat_vos_mmacs)));

@@ -1,0 +1,213 @@
+//! One-time runtime SIMD feature detection for the exec kernel.
+//!
+//! The shared int8 kernel ([`crate::exec::kernel`]) has three code paths:
+//! a portable scalar loop, an AVX2 path (`_mm256_madd_epi16` widening MAC
+//! over k-pair interleaved weight tiles), and a NEON path (`vmull_s8` +
+//! `vpadalq_s16` over the same layout). All three produce **bit-identical**
+//! i32 outputs — int8×int8 products fit `i16`, every accumulation step is
+//! exact in `i32`, and integer addition is associative, so reassociating the
+//! sum across vector lanes cannot change the result. The reproducibility
+//! suite pins this (`simd paths bit-identical` property test) rather than
+//! assuming it.
+//!
+//! Path selection happens **once** per process ([`active`]) from:
+//!
+//! 1. the `XTPU_SIMD` environment variable (`auto` | `scalar` | `avx2` |
+//!    `neon`) — a requested path that is not available on the running host
+//!    is downgraded with a warning, never trusted blindly;
+//! 2. otherwise runtime CPU feature detection ([`best_available`]):
+//!    `is_x86_feature_detected!("avx2")` on x86-64, always NEON on aarch64
+//!    (NEON is baseline there), scalar everywhere else.
+//!
+//! Tests that need a *specific* path must not mutate `XTPU_SIMD` (the
+//! [`active`] value is cached process-wide); they force paths explicitly via
+//! [`crate::exec::kernel::matmul_i8_path`] /
+//! [`crate::exec::kernel::matmul_i8t_path`] instead.
+
+use std::sync::OnceLock;
+
+/// One executable kernel implementation. Ordered roughly by preference;
+/// `Scalar` is always available and is the bit-exactness oracle.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdPath {
+    /// Portable scalar loops — available everywhere, pinned by the tests.
+    Scalar,
+    /// 256-bit AVX2 (`_mm256_madd_epi16`) — x86-64 with runtime detection.
+    Avx2,
+    /// 128-bit NEON (`vmull_s8`/`vpadalq_s16`) — baseline on aarch64.
+    Neon,
+}
+
+impl SimdPath {
+    /// Stable lowercase name (the `XTPU_SIMD` vocabulary, also used in
+    /// bench reports and BENCH_*.json keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+        }
+    }
+
+    /// Can this path actually execute on the running host?
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdPath::Scalar => true,
+            SimdPath::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdPath::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// The fastest path the running host supports.
+pub fn best_available() -> SimdPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdPath::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdPath::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdPath::Scalar
+}
+
+/// Every path executable on this host, scalar first. The dispatch-seam
+/// property tests iterate this so the suite exercises whatever the CI
+/// machine can actually run.
+pub fn available() -> Vec<SimdPath> {
+    let mut v = vec![SimdPath::Scalar];
+    let best = best_available();
+    if best != SimdPath::Scalar {
+        v.push(best);
+    }
+    v
+}
+
+/// Downgrade a requested path to `Scalar` if the host cannot run it. The
+/// kernel sanitizes every explicit path request through this, so the packed
+/// weight layout always matches the code that will consume it.
+pub fn sanitize(path: SimdPath) -> SimdPath {
+    if path.is_available() {
+        path
+    } else {
+        SimdPath::Scalar
+    }
+}
+
+/// The process-wide active path: `XTPU_SIMD` override (sanitized) or
+/// [`best_available`]. Computed once and cached — the kernel hot loops read
+/// a plain copy, never the environment.
+pub fn active() -> SimdPath {
+    static ACTIVE: OnceLock<SimdPath> = OnceLock::new();
+    *ACTIVE.get_or_init(|| from_request(std::env::var("XTPU_SIMD").ok().as_deref()))
+}
+
+/// Resolve an `XTPU_SIMD`-style request string (split out of [`active`] so
+/// the policy is testable without touching the process environment).
+fn from_request(request: Option<&str>) -> SimdPath {
+    let requested = match request.map(|s| s.trim().to_ascii_lowercase()) {
+        None => None,
+        Some(s) => match s.as_str() {
+            "" | "auto" => None,
+            "scalar" => Some(SimdPath::Scalar),
+            "avx2" => Some(SimdPath::Avx2),
+            "neon" => Some(SimdPath::Neon),
+            other => {
+                eprintln!("xtpu: unknown XTPU_SIMD={other:?} (want auto|scalar|avx2|neon), using auto");
+                None
+            }
+        },
+    };
+    match requested {
+        Some(p) if p.is_available() => p,
+        Some(p) => {
+            let fallback = best_available();
+            eprintln!(
+                "xtpu: XTPU_SIMD={} not available on this host, using {}",
+                p.name(),
+                fallback.name()
+            );
+            fallback
+        }
+        None => best_available(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available() {
+        assert!(SimdPath::Scalar.is_available());
+        assert_eq!(sanitize(SimdPath::Scalar), SimdPath::Scalar);
+    }
+
+    #[test]
+    fn best_available_is_available() {
+        let best = best_available();
+        assert!(best.is_available(), "best_available returned {best:?}");
+        // sanitize is a no-op on anything available.
+        assert_eq!(sanitize(best), best);
+    }
+
+    #[test]
+    fn available_lists_scalar_first_and_only_runnable_paths() {
+        let paths = available();
+        assert_eq!(paths[0], SimdPath::Scalar);
+        assert!(paths.iter().all(|p| p.is_available()));
+        assert!(paths.len() <= 2);
+    }
+
+    #[test]
+    fn request_resolution_policy() {
+        // auto/empty/None → best available.
+        assert_eq!(from_request(None), best_available());
+        assert_eq!(from_request(Some("auto")), best_available());
+        assert_eq!(from_request(Some("")), best_available());
+        assert_eq!(from_request(Some("  AUTO  ")), best_available());
+        // scalar is always honored.
+        assert_eq!(from_request(Some("scalar")), SimdPath::Scalar);
+        assert_eq!(from_request(Some("Scalar")), SimdPath::Scalar);
+        // garbage → auto, never a panic.
+        assert_eq!(from_request(Some("avx512-please")), best_available());
+        // A SIMD request resolves to something runnable, whatever the host.
+        for req in ["avx2", "neon"] {
+            assert!(from_request(Some(req)).is_available());
+        }
+    }
+
+    #[test]
+    fn sanitize_never_returns_unavailable() {
+        for p in [SimdPath::Scalar, SimdPath::Avx2, SimdPath::Neon] {
+            assert!(sanitize(p).is_available());
+        }
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(SimdPath::Scalar.name(), "scalar");
+        assert_eq!(SimdPath::Avx2.name(), "avx2");
+        assert_eq!(SimdPath::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn active_is_cached_and_runnable() {
+        let a = active();
+        assert!(a.is_available());
+        assert_eq!(active(), a, "active() must be stable across calls");
+    }
+}

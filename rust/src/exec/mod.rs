@@ -57,7 +57,17 @@
 //! across [`crate::util::threadpool`] (`XTPU_THREADS`) with deterministic
 //! per-shard RNG streams, so outputs are bit-identical at any thread count
 //! (see [`kernel`] and the reproducibility test suite).
+//!
+//! **SIMD dispatch.** The shared kernel runs on one of three bit-identical
+//! code paths — portable scalar, AVX2 (`_mm256_madd_epi16` over k-pair
+//! interleaved weight tiles), or NEON (`vmull_s8`/`vpadalq_s16`) — selected
+//! once per process by [`dispatch`] from runtime CPU detection (overridable
+//! via `XTPU_SIMD=auto|scalar|avx2|neon`). Exact i32 accumulation makes the
+//! lane reassociation invisible, so backend outputs do not depend on the
+//! path; the reproducibility suite pins scalar vs. SIMD bit-equality on
+//! ragged shapes.
 
+pub mod dispatch;
 pub mod kernel;
 
 use crate::errormodel::ErrorModelRegistry;

@@ -133,27 +133,69 @@ impl Xoshiro256pp {
         self.next_f64() < p
     }
 
-    /// Standard normal N(0, 1) via the Marsaglia polar method.
-    pub fn next_gaussian(&mut self) -> f64 {
-        if let Some(g) = self.gauss_spare.take() {
-            return g;
-        }
+    /// One accepted polar-method sample pair (both outputs, no spare
+    /// caching). The shared core of [`Self::next_gaussian`] and
+    /// [`Self::fill_gaussian_block`] — keeping it in one place is what
+    /// guarantees the block fill consumes the raw stream identically to
+    /// repeated single draws.
+    #[inline]
+    fn gauss_pair(&mut self) -> (f64, f64) {
         loop {
             let u = 2.0 * self.next_f64() - 1.0;
             let v = 2.0 * self.next_f64() - 1.0;
             let s = u * u + v * v;
             if s > 0.0 && s < 1.0 {
                 let f = (-2.0 * s.ln() / s).sqrt();
-                self.gauss_spare = Some(v * f);
-                return u * f;
+                return (u * f, v * f);
             }
         }
+    }
+
+    /// Standard normal N(0, 1) via the Marsaglia polar method.
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        let (g0, g1) = self.gauss_pair();
+        self.gauss_spare = Some(g1);
+        g0
     }
 
     /// Normal with given mean and standard deviation.
     #[inline]
     pub fn gaussian(&mut self, mean: f64, std_dev: f64) -> f64 {
         mean + std_dev * self.next_gaussian()
+    }
+
+    /// Fill `out` with N(mean, std_dev²) draws — **bit-identical** to
+    /// calling [`Self::gaussian`] `out.len()` times, including the final
+    /// generator state (raw stream position *and* polar spare cache), but
+    /// without the per-call spare bookkeeping: the body consumes whole
+    /// accepted pairs, so the branchy acceptance loop runs once per *two*
+    /// samples and the scale/offset fuses into a tight block loop. This is
+    /// the batched path the exec kernel's per-column statistical noise
+    /// injection runs on.
+    pub fn fill_gaussian_block(&mut self, mean: f64, std_dev: f64, out: &mut [f64]) {
+        let mut i = 0;
+        if !out.is_empty() {
+            if let Some(g) = self.gauss_spare.take() {
+                out[0] = mean + std_dev * g;
+                i = 1;
+            }
+        }
+        while i + 1 < out.len() {
+            let (g0, g1) = self.gauss_pair();
+            out[i] = mean + std_dev * g0;
+            out[i + 1] = mean + std_dev * g1;
+            i += 2;
+        }
+        if i < out.len() {
+            // Odd tail: draw a pair and cache the second half, exactly like
+            // a trailing single-sample call would.
+            let (g0, g1) = self.gauss_pair();
+            self.gauss_spare = Some(g1);
+            out[i] = mean + std_dev * g0;
+        }
     }
 
     /// Fisher–Yates shuffle.
@@ -267,6 +309,49 @@ mod tests {
         let samples: Vec<f64> = (0..n).map(|_| r.gaussian(5.0, 2.0)).collect();
         let mean = samples.iter().sum::<f64>() / n as f64;
         assert!((mean - 5.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn fill_gaussian_block_bit_matches_sequential_draws() {
+        // The block fill must be indistinguishable from repeated single
+        // draws: same values bit-for-bit AND same generator state after
+        // (raw stream position and polar spare cache), for every parity of
+        // length and spare-cache starting condition.
+        for warmup in [0usize, 1, 2, 3] {
+            for len in [0usize, 1, 2, 3, 7, 8, 17, 64, 1000] {
+                let mut seq = Xoshiro256pp::seeded(0xB10C + warmup as u64);
+                for _ in 0..warmup {
+                    seq.next_gaussian(); // odd warmup leaves a cached spare
+                }
+                let mut blk = seq.clone();
+                let expect: Vec<f64> = (0..len).map(|_| seq.gaussian(2.5, 7.0)).collect();
+                let mut got = vec![0.0f64; len];
+                blk.fill_gaussian_block(2.5, 7.0, &mut got);
+                for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
+                    assert_eq!(e.to_bits(), g.to_bits(), "warmup={warmup} len={len} i={i}");
+                }
+                // Post-state: both continue to identical gaussians AND
+                // identical raw u64s (catches a desynced spare cache).
+                assert_eq!(
+                    seq.next_gaussian().to_bits(),
+                    blk.next_gaussian().to_bits(),
+                    "spare cache desynced at warmup={warmup} len={len}"
+                );
+                assert_eq!(seq.next_u64(), blk.next_u64(), "warmup={warmup} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_gaussian_block_moments() {
+        let mut r = Xoshiro256pp::seeded(29);
+        let mut samples = vec![0.0f64; 200_000];
+        r.fill_gaussian_block(0.0, 1.0, &mut samples);
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
     }
 
     #[test]

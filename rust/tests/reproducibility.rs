@@ -3,6 +3,9 @@
 //!
 //! - property-style randomized kernel tests (~100 shapes, ragged/empty/
 //!   1-row, int8 saturation corners) bit-matched against the naive oracle;
+//! - bit-identical exact AND noisy outputs across every SIMD dispatch path
+//!   the host can run (scalar vs AVX2/NEON), forced explicitly through the
+//!   kernel's `*_path` seam so the check does not depend on `XTPU_SIMD`;
 //! - bit-identical `Statistical` backend output across `XTPU_THREADS`
 //!   (the deterministic per-shard RNG stream guarantee);
 //! - per-column error moments still matching the registry predictions;
@@ -105,6 +108,71 @@ fn kernel_saturated_inputs_accumulate_exactly() {
     let w2 = vec![127i8; k * n];
     let out2 = kernel::matmul_i8(&a, &w2, m, k, n);
     assert!(out2.iter().all(|&v| v == (k as i32) * -128 * 127));
+}
+
+#[test]
+fn simd_dispatch_paths_bit_identical_on_ragged_shapes() {
+    // The dispatch seam: whatever SIMD path the host offers must produce
+    // byte-for-byte the scalar result — exact i32 outputs AND noisy outputs
+    // at a fixed stream key — on random ragged shapes including the
+    // TILE_K±1 / TILE_N±1 packing edge cases (odd k exercises the
+    // zero-padded k-pair lane, odd n the vector tails).
+    use xtpu::exec::dispatch;
+    use xtpu::exec::kernel::{ColumnNoise, KernelScratch};
+
+    let paths = dispatch::available();
+    assert_eq!(paths[0], dispatch::SimdPath::Scalar);
+    let mut rng = Xoshiro256pp::seeded(0x51D5);
+    let mut shapes: Vec<(usize, usize, usize)> = vec![
+        (1, 1, 1),
+        (2, kernel::TILE_K - 1, kernel::TILE_N - 1),
+        (2, kernel::TILE_K + 1, kernel::TILE_N + 1),
+        (3, kernel::TILE_K, kernel::TILE_N),
+        (1, 784, 138),
+        (64, 784, 128),
+    ];
+    for _ in 0..40 {
+        shapes.push((1 + rng.index(17), 1 + rng.index(300), 1 + rng.index(300)));
+    }
+    let mut scratch = KernelScratch::new();
+    for (i, &(m, k, n)) in shapes.iter().enumerate() {
+        let (a, w) = random_mats(m, k, n, &mut rng);
+        let mut wt = vec![0i8; n * k];
+        for r in 0..k {
+            for c in 0..n {
+                wt[c * k + r] = w[r * n + c];
+            }
+        }
+        let noise: Vec<ColumnNoise> = (0..n)
+            .map(|c| {
+                if c % 3 == 0 {
+                    ColumnNoise::SILENT
+                } else {
+                    ColumnNoise { mean: c as f64 * 0.5, std: 40.0 + c as f64 }
+                }
+            })
+            .collect();
+        let key = 0xD15F + i as u64;
+        let mut per_path: Vec<(Vec<i32>, Vec<i32>, Vec<i32>)> = Vec::new();
+        for &path in &paths {
+            let mut exact = Vec::new();
+            kernel::matmul_i8_path(path, &a, &w, m, k, n, &mut exact, &mut scratch);
+            let mut noisy = exact.clone();
+            kernel::add_column_noise_keyed(&mut noisy, n, m, 0, &noise, key);
+            let mut t = Vec::new();
+            kernel::matmul_i8t_path(path, &a, &wt, m, k, n, &mut t);
+            per_path.push((exact, noisy, t));
+        }
+        let reference = kernel::reference_matmul(&a, &w, m, k, n);
+        assert_eq!(per_path[0].0, reference, "shape {i}: {m}×{k}×{n} scalar vs oracle");
+        assert_eq!(per_path[0].2, reference, "shape {i}: {m}×{k}×{n} scalar i8t vs oracle");
+        for (p, got) in per_path.iter().enumerate().skip(1) {
+            let name = paths[p].name();
+            assert_eq!(got.0, per_path[0].0, "shape {i}: {m}×{k}×{n} exact {name} vs scalar");
+            assert_eq!(got.1, per_path[0].1, "shape {i}: {m}×{k}×{n} noisy {name} vs scalar");
+            assert_eq!(got.2, per_path[0].2, "shape {i}: {m}×{k}×{n} i8t {name} vs scalar");
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,8 @@
+#!/bin/sh
+# Build and run the C bench replica (see replica.c header for what it
+# measures and why it exists). Compiles like rustc compiles the crate:
+# baseline x86-64, AVX2 confined to target-attributed functions.
+set -e
+cd "$(dirname "$0")"
+gcc -O3 -std=gnu11 -Wall -Wextra -o replica replica.c -lm
+exec ./replica "$@"

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Gate a perf_hotpaths JSON report against the checked-in BENCH records.
+
+Usage: check_bench_regression.py <bench_report.json> [--repo-root DIR]
+
+Three layers of checking, all driven by the "gates" sections of the
+BENCH_*.json records (so thresholds live next to the numbers they guard):
+
+1. Presence — every gated key must be emitted and non-null. A key that
+   silently disappears from the bench is a gate bypass, not a pass.
+2. Absolute bounds — throughput keys must be >= their recorded floor
+   (BENCH_exec_refactor.json, BENCH_parallel_exec.json); latency keys must
+   be <= their recorded ceiling (BENCH_adaptive_replan.json). Floors sit
+   well under the recorded figures so runner-class differences don't trip
+   them; ceilings are generous for the same reason.
+3. Calibrated relative check — a >15% throughput regression fails even on
+   a runner much faster than the record host. The runner's speed is
+   calibrated by the scalar-kernel key (same workload, no SIMD, so it
+   tracks the runner, not the optimization), and every other throughput
+   key must reach 85% of its recorded value scaled by that calibration
+   ratio. A uniform runner slowdown cancels out; an optimization-specific
+   regression (SIMD path losing its edge, exec wrapper growing overhead,
+   serving path re-allocating) does not.
+
+The parallel-speedup gate applies only when the runner actually has
+multiple cores (l3f_threads >= 2): the record host has one core, where a
+speedup of 1.0 is the honest expected value.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+REGRESSION_TOLERANCE = 0.85  # fail below 85% of calibrated expectation
+CALIBRATION_KEY = "l3b_kernel_scalar_mmacs"
+
+# Throughput keys subject to the calibrated 15% rule, all from the
+# "after" section of BENCH_exec_refactor.json (higher is better).
+CALIBRATED_KEYS = [
+    "l3b_kernel_simd_mmacs",
+    "l3b_exec_exact_mmacs",
+    "l3b_exec_statistical_nominal_mmacs",
+    "l3b_exec_statistical_vos_mmacs",
+    "l3d_inferences_per_s",
+]
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report")
+    ap.add_argument("--repo-root", default=str(pathlib.Path(__file__).resolve().parent.parent))
+    args = ap.parse_args()
+
+    root = pathlib.Path(args.repo_root)
+    report = load(args.report)
+    exec_rec = load(root / "BENCH_exec_refactor.json")
+    par_rec = load(root / "BENCH_parallel_exec.json")
+    adapt_rec = load(root / "BENCH_adaptive_replan.json")
+
+    failures = []
+    checks = 0
+
+    def emitted(key):
+        v = report.get(key)
+        if not isinstance(v, (int, float)):
+            failures.append(f"missing/non-numeric key in bench report: {key}")
+            return None
+        return v
+
+    # --- layer 2: absolute floors (throughput, higher is better) ---------
+    floors = {}
+    floors.update(exec_rec["gates"])
+    floors.update(par_rec["gates"])
+    special = {"comment", "l3f_parallel_speedup_min_if_multicore"}
+    for key, floor in floors.items():
+        if key in special:
+            continue
+        checks += 1
+        v = emitted(key)
+        if v is not None and v < floor:
+            failures.append(f"{key} = {v:.1f} below floor {floor}")
+
+    # --- layer 2: absolute ceilings (latency, lower is better) -----------
+    for key, ceiling in adapt_rec["gates"].items():
+        if key == "comment":
+            continue
+        checks += 1
+        v = emitted(key)
+        if v is not None and v > ceiling:
+            failures.append(f"{key} = {v:.2f} above ceiling {ceiling}")
+
+    # --- multicore-only scaling gate --------------------------------------
+    threads = report.get("l3f_threads")
+    min_speedup = par_rec["gates"]["l3f_parallel_speedup_min_if_multicore"]
+    if isinstance(threads, (int, float)) and threads >= 2:
+        checks += 1
+        v = emitted("l3f_parallel_speedup")
+        if v is not None and v < min_speedup:
+            failures.append(
+                f"l3f_parallel_speedup = {v:.2f} below {min_speedup} "
+                f"on a {int(threads)}-thread runner"
+            )
+
+    # --- layer 3: calibrated 15% regression rule --------------------------
+    recorded = exec_rec["after"]
+    cal_meas = emitted(CALIBRATION_KEY)
+    cal_rec = recorded[CALIBRATION_KEY]
+    if cal_meas is not None and cal_rec:
+        ratio = cal_meas / cal_rec
+        for key in CALIBRATED_KEYS:
+            checks += 1
+            v = emitted(key)
+            if v is None:
+                continue
+            expect = recorded[key] * ratio * REGRESSION_TOLERANCE
+            if v < expect:
+                failures.append(
+                    f"{key} = {v:.1f}, below {expect:.1f} "
+                    f"(85% of recorded {recorded[key]} x runner calibration {ratio:.2f})"
+                )
+
+    if failures:
+        print(f"bench regression gate: {len(failures)} failure(s) / {checks} checks")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"bench regression gate: all {checks} checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
