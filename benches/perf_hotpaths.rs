@@ -129,6 +129,37 @@ fn main() {
     report.push(("l3b_exec_statistical_nominal_mmacs", Json::Num(stat_nom_mmacs)));
     report.push(("l3b_exec_statistical_vos_mmacs", Json::Num(stat_vos_mmacs)));
 
+    // --- L3j: TE-Drop backend matmul (detect + drop recovery) -------------
+    // Same workload and single-thread pin as L3b, through exec::TeDrop.
+    // Nominal columns price the detection machinery when no MAC ever
+    // faults (rate 0 ⇒ the drop pass must be near-free); the 0.5 V number
+    // includes the geometric skip-sampled drop pass at the ladder's worst
+    // per-MAC error rate.
+    let te = xtpu::exec::TeDrop::new(reg.clone());
+    let l3j_prior_threads = std::env::var("XTPU_THREADS").ok();
+    std::env::set_var("XTPU_THREADS", "1");
+    let bench_tedrop = |label: &str, level: usize| -> f64 {
+        let levels = vec![level; nn];
+        let mut rng = Xoshiro256pp::seeded(5);
+        std::hint::black_box(te.matmul_i8(&a, &w, mm, kk, nn, &levels, &mut rng));
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(te.matmul_i8(&a, &w, mm, kk, nn, &levels, &mut rng));
+        }
+        let mmacs = macs * reps as f64 / t0.elapsed().as_secs_f64() / 1e6;
+        println!("L3j tedrop matmul : {mmacs:>8.1} M MAC/s ({label}, 1 thread)");
+        mmacs
+    };
+    let te_nom_mmacs = bench_tedrop("TE-Drop, nominal cols", 3);
+    let te_vos_mmacs = bench_tedrop("TE-Drop, 0.5V cols", 0);
+    match l3j_prior_threads {
+        Some(v) => std::env::set_var("XTPU_THREADS", v),
+        None => std::env::remove_var("XTPU_THREADS"),
+    }
+    report.push(("l3j_tedrop_nominal_mmacs", Json::Num(te_nom_mmacs)));
+    report.push(("l3j_tedrop_vos_mmacs", Json::Num(te_vos_mmacs)));
+    report.push(("l3j_tedrop_drop_cost", Json::Num(te_nom_mmacs / te_vos_mmacs)));
+
     // --- L3f: parallel exec scaling (threads=1 vs threads=N) --------------
     // The BENCH_parallel_exec.json record tracks these keys. Same seed at
     // both thread counts — the outputs must be bit-identical (the parallel

@@ -29,10 +29,15 @@ pub struct ExperimentConfig {
     /// Validation repetitions per budget (noise is stochastic).
     pub validation_runs: usize,
     /// Execution backend for validation/serving inference: "exact" |
-    /// "statistical" | "pjrt" (see [`crate::exec`]). Selects the
+    /// "statistical" | "tedrop" | "pjrt" (see [`crate::exec`]). Selects the
     /// level-driven matmul/artifact engine; per-neuron noise specs from a
     /// voltage assignment are injected identically on every backend.
     pub backend: String,
+    /// Operating regime the planner prices levels under: "statistical"
+    /// (tolerate, the paper's default) | "tedrop" (detect + drop, see
+    /// [`crate::errormodel::PlanMode`]). Absent in pre-mode configs/plans
+    /// and defaults to "statistical" on load.
+    pub mode: String,
 }
 
 impl Default for ExperimentConfig {
@@ -51,6 +56,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             validation_runs: 3,
             backend: "statistical".into(),
+            mode: "statistical".into(),
         }
     }
 }
@@ -94,6 +100,7 @@ impl ExperimentConfig {
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
             ("validation_runs", Json::Num(self.validation_runs as f64)),
             ("backend", Json::Str(self.backend.clone())),
+            ("mode", Json::Str(self.mode.clone())),
         ])
     }
 
@@ -141,6 +148,15 @@ impl ExperimentConfig {
                 .map(|v| v.as_str().map(String::from))
                 .transpose()?
                 .unwrap_or(d.backend),
+            mode: {
+                let mode = j
+                    .opt("mode")
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?
+                    .unwrap_or(d.mode);
+                crate::errormodel::PlanMode::from_name(&mode)?;
+                mode
+            },
         })
     }
 
@@ -193,6 +209,19 @@ mod tests {
     fn bad_solver_rejected() {
         let j = Json::parse(r#"{"solver": "quantum"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn mode_defaults_roundtrips_and_rejects_unknown() {
+        // Pre-mode JSON (no "mode" key) loads with the statistical default.
+        let j = Json::parse(r#"{"model": "fc_mnist"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().mode, "statistical");
+        let mut c = ExperimentConfig::smoke();
+        c.mode = "tedrop".into();
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.mode, "tedrop");
+        let bad = Json::parse(r#"{"mode": "razor"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
     }
 
     #[test]

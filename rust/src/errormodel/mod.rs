@@ -78,6 +78,80 @@ impl ErrorModel {
     }
 }
 
+/// Second moment `E[(a·w)²]` of one int8×int8 product under the same
+/// uniform operand streams the characterization pass drives: operands are
+/// uniform on `[-128, 127]`, so `E[a²] = E[w²] ≈ 127·128/3` and the product
+/// moment factorizes over the independent operands. This is the variance a
+/// *dropped* MAC contributes in the TE-Drop regime (the detected product is
+/// zeroed, so the error is `−a·w` with the level's `error_rate`), making
+/// the per-MAC TE-Drop variance `error_rate · MAC_SECOND_MOMENT` — bounded,
+/// unlike the tolerate-regime's characterized `variance` which grows with
+/// the magnitude of the timing-corrupted bits.
+pub const MAC_SECOND_MOMENT: f64 = (127.0 * 128.0 / 3.0) * (127.0 * 128.0 / 3.0);
+
+/// The operating regime a voltage plan is priced (and executed) under —
+/// the detect-vs-tolerate axis of the approximate-accelerator design space.
+///
+/// - `Statistical`: the X-TPU paper's tolerate regime. Errors land in the
+///   accumulator as characterized; a column of `k` MACs composes to
+///   `N(k·μ_v, k·σ²_v)` (eqs 11–13).
+/// - `TeDrop`: the ThUnderVolt detect-and-recover regime. Timing errors are
+///   detected per MAC and the faulting product is dropped, so the per-MAC
+///   error is the (bounded) product itself: zero mean under symmetric
+///   operands, variance `error_rate · `[`MAC_SECOND_MOMENT`]. At aggressive
+///   levels this is far below the tolerate-regime variance, which is what
+///   lets the planner admit deeper ladder levels at the same MSE budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    Statistical,
+    TeDrop,
+}
+
+impl PlanMode {
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "statistical" => Ok(Self::Statistical),
+            "tedrop" => Ok(Self::TeDrop),
+            other => anyhow::bail!("unknown plan mode '{other}' (statistical | tedrop)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Statistical => "statistical",
+            Self::TeDrop => "tedrop",
+        }
+    }
+
+    /// Per-MAC error mean under this regime. Dropped products are symmetric
+    /// around zero, so TE-Drop carries no bias term.
+    pub fn mac_mean(self, m: &ErrorModel) -> f64 {
+        match self {
+            Self::Statistical => m.mean,
+            Self::TeDrop => 0.0,
+        }
+    }
+
+    /// Per-MAC error variance under this regime — the per-level weight of
+    /// the MCKP quality constraint (eq. 29 generalized across regimes).
+    pub fn mac_variance(self, m: &ErrorModel) -> f64 {
+        match self {
+            Self::Statistical => m.variance,
+            Self::TeDrop => m.error_rate.clamp(0.0, 1.0) * MAC_SECOND_MOMENT,
+        }
+    }
+
+    /// Column composition over `k` independent MACs (eqs 12–13, regime-
+    /// priced).
+    pub fn column_mean(self, m: &ErrorModel, k: usize) -> f64 {
+        self.mac_mean(m) * k as f64
+    }
+
+    pub fn column_variance(self, m: &ErrorModel, k: usize) -> f64 {
+        self.mac_variance(m) * k as f64
+    }
+}
+
 /// Options for the Monte-Carlo characterization pass.
 #[derive(Clone, Copy, Debug)]
 pub struct CharacterizeOptions {
@@ -296,18 +370,33 @@ impl ErrorModelRegistry {
     /// nominal level). Keeps fixture construction in one place instead of
     /// hand-building the JSON at every test site.
     pub fn synthetic(ladder: &VoltageLadder, variances: &[f64]) -> Self {
+        let rates: Vec<f64> =
+            variances.iter().map(|&v| if v > 0.0 { 0.05 } else { 0.0 }).collect();
+        Self::synthetic_with_rates(ladder, variances, &rates)
+    }
+
+    /// [`Self::synthetic`] with explicit per-level error rates — the
+    /// probability source the TE-Drop regime prices and injects from
+    /// (`synthetic` pins a flat 0.05 on every erroneous level, which is too
+    /// degenerate for regime-comparison and monotonicity fixtures).
+    pub fn synthetic_with_rates(
+        ladder: &VoltageLadder,
+        variances: &[f64],
+        rates: &[f64],
+    ) -> Self {
         assert_eq!(variances.len(), ladder.len(), "one variance per ladder level");
+        assert_eq!(rates.len(), ladder.len(), "one error rate per ladder level");
         let models = ladder
             .levels()
             .iter()
-            .zip(variances)
-            .map(|(l, &v)| ErrorModel {
+            .zip(variances.iter().zip(rates))
+            .map(|(l, (&v, &p))| ErrorModel {
                 volts: l.volts,
                 mean: 0.0,
                 variance: v,
                 skewness: 0.0,
                 kurtosis_excess: 0.0,
-                error_rate: if v > 0.0 { 0.05 } else { 0.0 },
+                error_rate: p,
                 samples: 1_000_000,
             })
             .collect();
@@ -730,6 +819,88 @@ mod tests {
         let d = reg.drifted(1.0);
         assert_eq!(d.delta_vth, max);
         assert!(d.registry().model(0).variance >= reg.model(0).variance);
+    }
+
+    #[test]
+    fn drifted_error_rate_bounded_and_monotone_in_effective_voltage() {
+        // Guards the ln-domain knot interpolation: wherever a drift lands
+        // the effective voltage, the re-read error_rate must stay a
+        // probability and must never *fall* as the effective voltage drops.
+        let ladder = VoltageLadder::paper_default();
+        let mut reg = ErrorModelRegistry::synthetic(&ladder, &[3.0e6, 1.4e6, 2.0e5, 0.0]);
+        // Realistically decreasing detection rates (synthetic() pins a flat
+        // 0.05, which would make monotonicity trivial); 0.9 at 0.5 V means
+        // the below-lowest-knot extrapolation crosses 1.0 quickly, which is
+        // exactly the clamp this test polices.
+        for (m, rate) in reg.models.iter_mut().zip([0.9, 0.2, 0.01, 0.0]) {
+            m.error_rate = rate;
+        }
+        let max = reg.max_drift();
+        crate::util::checks::property("drifted error_rate bounded+monotone", 48, |rng, _| {
+            // Up to 1.2× the validity limit so the clamp path is exercised.
+            let mut drifts: Vec<f64> =
+                (0..6).map(|_| rng.next_f64() * max * 1.2).collect();
+            drifts.push(0.0);
+            drifts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut prev: Option<Vec<f64>> = None;
+            for &dv in &drifts {
+                let d = reg.drifted(dv);
+                let rates: Vec<f64> =
+                    d.registry().models().iter().map(|m| m.error_rate).collect();
+                for (l, &p) in rates.iter().enumerate() {
+                    assert!(
+                        (0.0..=1.0).contains(&p),
+                        "level {l} rate {p} out of [0,1] at ΔVth {dv}"
+                    );
+                }
+                // Within one drifted registry the levels ascend in volts
+                // (and so in effective voltage): rates must not increase.
+                for w in rates.windows(2) {
+                    assert!(
+                        w[1] <= w[0] + 1e-12,
+                        "rate rose with voltage: {w:?} at ΔVth {dv}"
+                    );
+                }
+                // Across drifts, a deeper drift lowers every level's
+                // effective voltage: rates must not fall.
+                if let Some(prev) = &prev {
+                    for (l, (&now, &was)) in rates.iter().zip(prev).enumerate() {
+                        assert!(
+                            now + 1e-12 >= was,
+                            "level {l} rate fell {was} → {now} as drift grew to {dv}"
+                        );
+                    }
+                }
+                prev = Some(rates);
+            }
+        });
+    }
+
+    #[test]
+    fn plan_mode_prices_the_two_regimes() {
+        assert_eq!(PlanMode::from_name("statistical").unwrap(), PlanMode::Statistical);
+        assert_eq!(PlanMode::from_name("tedrop").unwrap(), PlanMode::TeDrop);
+        assert!(PlanMode::from_name("razor").is_err());
+        let m = ErrorModel {
+            volts: 0.5,
+            mean: 3.0,
+            variance: 3.0e6,
+            skewness: 0.0,
+            kurtosis_excess: 0.0,
+            error_rate: 0.05,
+            samples: 1000,
+        };
+        assert_eq!(PlanMode::Statistical.mac_variance(&m), 3.0e6);
+        assert_eq!(PlanMode::Statistical.column_mean(&m, 16), 48.0);
+        let te = PlanMode::TeDrop.mac_variance(&m);
+        assert!((te - 0.05 * MAC_SECOND_MOMENT).abs() < 1e-9);
+        assert_eq!(PlanMode::TeDrop.column_mean(&m, 16), 0.0);
+        // The regime trade at this (typical) operating point: detection +
+        // drop prices well below tolerate-and-absorb.
+        assert!(te < m.variance);
+        // A (hypothetical) out-of-range rate is clamped, not propagated.
+        let hot = ErrorModel { error_rate: 1.7, ..m };
+        assert_eq!(PlanMode::TeDrop.mac_variance(&hot), MAC_SECOND_MOMENT);
     }
 
     #[test]

@@ -571,6 +571,91 @@ pub fn add_column_noise_keyed(
     }
 }
 
+/// TE-Drop recovery pass over an exact `[m, n]` accumulator: every MAC
+/// `(s, r)` feeding column `c` faults independently with probability
+/// `rates[c]`, and a faulting MAC's product `a[s,r]·w[r,c]` is subtracted
+/// from `out[s,c]` — the detected-then-dropped contribution of a
+/// Razor-style timing-error pipeline. Column `c` draws only from
+/// [`Xoshiro256pp::stream`]`(key, c)`, so the fault set is independent of
+/// tiling, `XTPU_THREADS`, and the SIMD path.
+///
+/// Rather than one Bernoulli draw per MAC (`m·k` draws per column), each
+/// column samples the geometric gap to its *next* faulting MAC — about one
+/// draw per fault, which at realistic detection rates (a few percent) is
+/// the sparse-mask analogue of the dense vectorized fill in
+/// [`add_column_noise_keyed`]. Columns with `rates[c] >= 1` drop every
+/// product (the column reads all-zero); columns at `0` are skipped without
+/// touching the RNG.
+pub fn drop_column_macs_keyed(
+    out: &mut [i32],
+    a: &[i8],
+    w: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    rates: &[f64],
+    key: u64,
+) {
+    assert_eq!(rates.len(), n, "one fault rate per output column");
+    debug_assert!(out.len() >= m * n && a.len() >= m * k && w.len() >= k * n);
+    let cols: Vec<usize> = (0..n).filter(|&c| rates[c] > 0.0).collect();
+    if cols.is_empty() || m == 0 || k == 0 {
+        return;
+    }
+    let total = m * k;
+    // One column's faulting flat indices over [0, m·k), row-major (s·k + r).
+    let fault_hits = |c: usize| -> Vec<usize> {
+        let p = rates[c];
+        if p >= 1.0 {
+            return (0..total).collect();
+        }
+        let mut crng = Xoshiro256pp::stream(key, c as u64);
+        let log_q = (1.0 - p).ln();
+        let mut hits = Vec::new();
+        let mut next: usize = 0;
+        loop {
+            // Geometric gap >= 1: u in [0,1) keeps 1-u in (0,1] and the
+            // ratio of logs non-negative; the f64→usize cast saturates, and
+            // checked_add turns a saturated gap into loop exit.
+            let gap = ((1.0 - crng.next_f64()).ln() / log_q) as usize + 1;
+            next = match next.checked_add(gap) {
+                Some(v) if v <= total => v,
+                _ => break,
+            };
+            hits.push(next - 1);
+        }
+        hits
+    };
+    // Gather-then-apply, like the noise fill: fault sets are produced per
+    // column (serially below the draw threshold, fanned out above it) and
+    // the in-place subtraction always runs on the calling thread.
+    let apply = |out: &mut [i32], c: usize, hits: &[usize]| {
+        for &pos in hits {
+            let (s, r) = (pos / k, pos % k);
+            let prod = a[s * k + r] as i32 * w[r * n + c] as i32;
+            out[s * n + c] = out[s * n + c].wrapping_sub(prod);
+        }
+    };
+    if total * cols.len() < PAR_MIN_DRAWS * 8 {
+        for &c in &cols {
+            let hits = fault_hits(c);
+            apply(out, c, &hits);
+        }
+        return;
+    }
+    let gathered = threadpool::parallel_chunks(cols.len(), |range, _| {
+        range
+            .map(|i| {
+                let c = cols[i];
+                (c, fault_hits(c))
+            })
+            .collect::<Vec<_>>()
+    });
+    for (c, hits) in gathered.into_iter().flatten() {
+        apply(out, c, &hits);
+    }
+}
+
 /// Exact `A[m,k] × W[k,n] → i32[m,n]` (systolic weight layout) on the
 /// process-wide dispatch path, tiled over `k` and `n` and sharded over `m`
 /// across the thread pool (each worker owns a disjoint output row band;

@@ -5,16 +5,17 @@
 //!
 //! ```text
 //!  nn::quant  coordinator  server::Engine  benches/examples
-//!        \        |          |        /
-//!             exec::Backend (this module)
-//!        /        |          |        \
-//!   Exact   Statistical   GateLevel   Pjrt
-//!  (kernel) (kernel +     (cycle-level (AOT artifact via
-//!            fused eqs     XTpu grid)   runtime, kernel
-//!            11–13 draws)               fallback)
+//!        \        |           |         /
+//!              exec::Backend (this module)
+//!        /       |        |         |        \
+//!   Exact  Statistical  TeDrop  GateLevel   Pjrt
+//!  (kernel) (kernel +   (kernel + (cycle-level (AOT artifact via
+//!            fused eqs   per-MAC   XTpu grid)   runtime, kernel
+//!            11–13       TE-Drop)               fallback)
+//!            draws)
 //! ```
 //!
-//! All four backends share the tiled int8 kernel in [`kernel`]; they differ
+//! All five backends share the tiled int8 kernel in [`kernel`]; they differ
 //! in *where the VOS error comes from*:
 //!
 //! - [`Exact`] — no error (the nominal-voltage TPU).
@@ -22,6 +23,11 @@
 //!   `N(k·μ_v, k·σ²_v)` drawn from the fitted [`ErrorModelRegistry`]
 //!   and fused into the tile loop (eqs 10–13). This is what lets the
 //!   framework sweep many voltage assignments quickly.
+//! - [`TeDrop`] — the ThUnderVolt-style detect-and-recover regime: every
+//!   MAC faults independently with the level's `error_rate`, and a detected
+//!   fault's product is *dropped* (contributes zero) instead of corrupting
+//!   the accumulator — a bounded-bias error model, in contrast to the
+//!   tolerate-regime's unbounded Gaussian noise.
 //! - [`GateLevel`] — wraps the cycle-level [`XTpu`] systolic simulator with
 //!   per-PE Baugh-Wooley gate simulation; the validation oracle for the
 //!   statistical backend (and the only place a per-multiply loop remains).
@@ -306,6 +312,76 @@ impl Backend for Statistical {
 }
 
 // ---------------------------------------------------------------------------
+// TeDrop
+// ---------------------------------------------------------------------------
+
+/// Translate per-column ladder levels into per-MAC fault probabilities for
+/// the TE-Drop pass: the deployed level's characterized `error_rate`,
+/// clamped to `[0, 1]`. The nominal (last) level never faults, mirroring
+/// the silent column of [`column_noise_from_levels`].
+pub fn fault_rates_from_levels(registry: &ErrorModelRegistry, col_levels: &[usize]) -> Vec<f64> {
+    let nominal = registry.ladder.len() - 1;
+    col_levels
+        .iter()
+        .map(|&l| if l == nominal { 0.0 } else { registry.model(l).error_rate.clamp(0.0, 1.0) })
+        .collect()
+}
+
+/// The ThUnderVolt-style detect-and-recover backend: Razor-style per-MAC
+/// timing-error detection with TE-Drop recovery. Each MAC in a column
+/// faults independently with the deployed level's `error_rate`; a faulting
+/// MAC's product is dropped from the accumulation (contributes zero)
+/// instead of landing as a corrupted value — so the per-MAC error is
+/// bounded by the product magnitude (`|a·w| ≤ 127·128`), unlike the
+/// tolerate-regime's unbounded composed noise.
+///
+/// Detection is modeled, not simulated: the exact kernel runs first and the
+/// [`kernel::drop_column_macs_keyed`] pass subtracts the faulting products,
+/// with one key drawn from the caller's RNG per injection (none when every
+/// column is nominal or rate-zero, keeping the stream aligned with
+/// [`Exact`]). Spec-driven `execute_layer` keeps the shared default: the
+/// serving path approximates this regime by its composed column moments
+/// (mean `0`, variance `k·p·M₂`), exactly as [`Statistical`] approximates
+/// the gate-level process.
+#[derive(Clone, Debug)]
+pub struct TeDrop {
+    pub registry: ErrorModelRegistry,
+}
+
+impl TeDrop {
+    pub fn new(registry: ErrorModelRegistry) -> Self {
+        Self { registry }
+    }
+}
+
+impl Backend for TeDrop {
+    fn name(&self) -> &'static str {
+        "tedrop"
+    }
+
+    fn matmul_i8(
+        &self,
+        a: &[i8],
+        w: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        col_levels: &[usize],
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<i32> {
+        assert_eq!(col_levels.len(), n, "col_levels length");
+        let mut out = kernel::matmul_i8(a, w, m, k, n);
+        let rates = fault_rates_from_levels(&self.registry, col_levels);
+        if rates.iter().all(|&p| p <= 0.0) {
+            return out;
+        }
+        let key = rng.next_u64();
+        kernel::drop_column_macs_keyed(&mut out, a, w, m, k, n, &rates, key);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 // GateLevel
 // ---------------------------------------------------------------------------
 
@@ -532,6 +608,7 @@ fn _backends_are_send_sync() {
     fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<Exact>();
     assert_send_sync::<Statistical>();
+    assert_send_sync::<TeDrop>();
     assert_send_sync::<GateLevel>();
     assert_send_sync::<Pjrt>();
 }
@@ -598,6 +675,58 @@ mod tests {
                 stats[c].1
             );
         }
+    }
+
+    #[test]
+    fn tedrop_backend_nominal_columns_exact_and_rng_untouched() {
+        let be = TeDrop::new(fake_registry());
+        let (m, k, n) = (40, 16, 4);
+        let (a, w) = random_mats(m, k, n, 21);
+        let mut rng = Xoshiro256pp::seeded(22);
+        let mut twin = Xoshiro256pp::seeded(22);
+        let got = be.matmul_i8(&a, &w, m, k, n, &vec![3; n], &mut rng);
+        assert_eq!(got, kernel::reference_matmul(&a, &w, m, k, n));
+        // All-nominal injection must not consume the caller's stream.
+        assert_eq!(rng.next_u64(), twin.next_u64());
+    }
+
+    #[test]
+    fn tedrop_backend_drops_bounded_per_mac_contributions() {
+        // synthetic() pins error_rate = 0.05 on every positive-variance
+        // level, so level 0 faults ~5% of the 16 MACs per output.
+        let be = TeDrop::new(fake_registry());
+        let (m, k, n) = (400, 16, 4);
+        let (a, w) = random_mats(m, k, n, 23);
+        let mut rng = Xoshiro256pp::seeded(24);
+        let levels = vec![0, 3, 0, 3];
+        let got = be.matmul_i8(&a, &w, m, k, n, &levels, &mut rng);
+        let exact = kernel::reference_matmul(&a, &w, m, k, n);
+        let (mut touched, bound) = (0u64, 127i64 * 128 * k as i64);
+        for s in 0..m {
+            // Nominal columns untouched...
+            assert_eq!(got[s * n + 1], exact[s * n + 1]);
+            assert_eq!(got[s * n + 3], exact[s * n + 3]);
+            for c in [0usize, 2] {
+                let err = (got[s * n + c] as i64 - exact[s * n + c] as i64).abs();
+                touched += (err != 0) as u64;
+                // ...and every dropped-MAC error is bounded by the summed
+                // product magnitude (the bounded-bias property).
+                assert!(err <= bound, "err {err} exceeds TE-Drop bound {bound}");
+            }
+        }
+        assert!(touched > 0, "overscaled columns must drop some MACs");
+    }
+
+    #[test]
+    fn tedrop_backend_deterministic_under_shared_seed() {
+        let be = TeDrop::new(fake_registry());
+        let (m, k, n) = (64, 33, 7);
+        let (a, w) = random_mats(m, k, n, 25);
+        let run = || {
+            let mut rng = Xoshiro256pp::seeded(26);
+            be.matmul_i8(&a, &w, m, k, n, &vec![1; n], &mut rng)
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

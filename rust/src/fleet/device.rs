@@ -286,12 +286,20 @@ impl Device {
     }
 
     /// Per-class `(predicted served MSE, budget_abs)` under the given
-    /// per-level drifted variances — the quality-vs-age observable
-    /// ([`VoltagePlan::served_mse`] per deployed plan).
-    pub fn class_mse(&self, vars: &[f64]) -> Vec<(f64, f64)> {
+    /// (usually drift-adjusted) registry — the quality-vs-age observable
+    /// ([`VoltagePlan::served_mse`] per deployed plan). Each plan is priced
+    /// in its own operating regime ([`VoltagePlan::plan_mode`]), so a fleet
+    /// that mode-switched some devices to TE-Drop reads the right MSE for
+    /// both regimes side by side.
+    pub fn class_mse(&self, registry: &ErrorModelRegistry) -> Vec<(f64, f64)> {
         self.plans
             .iter()
-            .map(|p| (p.served_mse(vars), p.budget_abs))
+            .map(|p| {
+                let mode = p.plan_mode();
+                let vars: Vec<f64> =
+                    registry.models().iter().map(|m| mode.mac_variance(m)).collect();
+                (p.served_mse(&vars), p.budget_abs)
+            })
             .collect()
     }
 

@@ -326,9 +326,7 @@ impl Router {
         for d in &self.devices {
             let stress = d.stress();
             let drifted = ctx.registry.drifted(stress.delta_vth());
-            let vars: Vec<f64> =
-                drifted.registry().models().iter().map(|m| m.variance).collect();
-            let per_class = d.class_mse(&vars);
+            let per_class = d.class_mse(drifted.registry());
             samples.push(QualitySample {
                 virtual_seconds: now,
                 device: d.id,
@@ -651,6 +649,7 @@ mod tests {
             config: cfg.clone(),
             generation: 0,
             drift_delta_vth: 0.0,
+            mode: "statistical".into(),
             level,
         };
         let plans = vec![

@@ -109,7 +109,7 @@ fn common_specs() -> Vec<OptSpec> {
         OptSpec::opt(
             "backend",
             "statistical",
-            "matmul engine: exact | statistical | pjrt (per-neuron noise specs apply on all)",
+            "matmul engine: exact | statistical | tedrop | pjrt (per-neuron noise specs apply on all)",
         ),
         OptSpec::flag("help", "show usage"),
     ]
@@ -289,6 +289,12 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         vec![
             OptSpec::opt("mse-ubs", "0.0,0.5,2.0,10.0", "budget fractions of nominal MSE"),
             OptSpec::opt("solver", "ilp", "ilp | greedy | genetic"),
+            OptSpec::opt(
+                "mode",
+                "statistical",
+                "operating regime to price levels in: statistical | tedrop \
+                 (tedrop also selects the tedrop backend unless --backend is given)",
+            ),
             OptSpec::opt("out", "plans", "output directory for plan files"),
             OptSpec::flag("smoke", "tiny synthetic config (CI smoke run)"),
         ],
@@ -302,6 +308,13 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     }
     cfg.mse_ub_fractions = args.f64_list("mse-ubs")?;
     cfg.solver = Solver::from_name(args.str("solver"))?;
+    let mode = xtpu::errormodel::PlanMode::from_name(args.str("mode"))?;
+    cfg.mode = mode.name().to_string();
+    // TE-Drop plans should execute on the backend that actually drops
+    // faulting MACs; an explicit --backend still wins.
+    if mode == xtpu::errormodel::PlanMode::TeDrop && args.explicit("backend").is_none() {
+        cfg.backend = "tedrop".to_string();
+    }
     let t0 = std::time::Instant::now();
     let mut planner = Planner::new(cfg);
     let out = std::path::PathBuf::from(args.str("out"));
@@ -645,6 +658,12 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
                 "0.01",
                 "periodic re-plan: deployed (wear-clock) years between re-solves",
             ),
+            OptSpec::opt(
+                "replan-mode",
+                "",
+                "switch operating regime at the first re-plan: statistical | tedrop \
+                 (default: keep each plan's deployed mode)",
+            ),
             OptSpec::opt("report", "", "write the JSON telemetry report to this path"),
             OptSpec::flag("smoke", "self-check the emitted report, then exit"),
         ],
@@ -711,12 +730,21 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     let adaptive = replan != ReplanPolicy::Never;
     let mut fleet = if adaptive {
         let power = *planner.power();
+        let mut ctx = AdaptiveContext::new(registry.clone(), power, replan);
+        if !args.str("replan-mode").is_empty() {
+            // Drift-triggered regime switch: once a device re-plans, its
+            // plans are re-solved (and re-priced) in this mode — e.g.
+            // statistical fleets falling back to TE-Drop detection as BTI
+            // drift erodes the guard band.
+            ctx.resolve.switch_mode =
+                Some(xtpu::errormodel::PlanMode::from_name(args.str("replan-mode"))?);
+        }
         Router::with_adaptation(
             engine,
             &plans,
             policy,
             cfg,
-            AdaptiveContext::new(registry.clone(), power, replan),
+            ctx,
         )?
     } else {
         Router::new(engine, &plans, policy, cfg)?

@@ -46,24 +46,45 @@ impl NoiseSpec {
         fan_in: &[usize],
         registry: &crate::errormodel::ErrorModelRegistry,
     ) -> Self {
+        Self::from_levels_for_mode(
+            levels,
+            fan_in,
+            registry,
+            crate::errormodel::PlanMode::Statistical,
+        )
+    }
+
+    /// [`Self::from_levels`] with the column moments priced under an
+    /// explicit operating regime: the statistical regime composes the
+    /// characterized `(μ_v, σ²_v)`, the TE-Drop regime composes the
+    /// dropped-product moments `(0, p_v·M₂)` — the same moment-matched
+    /// Gaussian approximation the serving path uses for either regime.
+    pub fn from_levels_for_mode(
+        levels: &[usize],
+        fan_in: &[usize],
+        registry: &crate::errormodel::ErrorModelRegistry,
+        mode: crate::errormodel::PlanMode,
+    ) -> Self {
         assert_eq!(levels.len(), fan_in.len(), "one fan-in per neuron");
         let mut spec = Self::silent(levels.len());
         for (n, (&lvl, &k)) in levels.iter().zip(fan_in).enumerate() {
             let m = registry.model(lvl);
-            spec.mean[n] = m.column_mean(k);
-            spec.std[n] = m.column_variance(k).sqrt();
+            spec.mean[n] = mode.column_mean(m, k);
+            spec.std[n] = mode.column_variance(m, k).sqrt();
         }
         spec
     }
 
     /// Reconstruct the noise spec a deployable
     /// [`VoltagePlan`](crate::plan::VoltagePlan) encodes, under the given
-    /// registry — the online half of the offline-solve / online-serve split.
+    /// registry — the online half of the offline-solve / online-serve
+    /// split. Priced under the plan's operating regime, so a TE-Drop plan
+    /// serves with the (bounded) dropped-product moments its solve assumed.
     pub fn from_plan(
         plan: &crate::plan::VoltagePlan,
         registry: &crate::errormodel::ErrorModelRegistry,
     ) -> Self {
-        Self::from_levels(&plan.level, &plan.fan_in, registry)
+        Self::from_levels_for_mode(&plan.level, &plan.fan_in, registry, plan.plan_mode())
     }
 }
 

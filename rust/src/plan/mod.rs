@@ -38,7 +38,7 @@ use anyhow::{Context, Result};
 
 use crate::assign::{Solver, VoltageAssignment};
 use crate::config::ExperimentConfig;
-use crate::errormodel::ErrorModelRegistry;
+use crate::errormodel::{ErrorModelRegistry, PlanMode};
 use crate::nn::model::Model;
 use crate::nn::quant::{NoiseSpec, QuantizedModel};
 use crate::util::json::Json;
@@ -92,6 +92,12 @@ pub struct VoltagePlan {
     /// `registry.drifted(drift_delta_vth)` reconstructs the exact error
     /// models the solve saw.
     pub drift_delta_vth: f64,
+    /// Operating regime the assignment was priced under: "statistical"
+    /// (tolerate) | "tedrop" (detect + drop). Determines which per-level
+    /// column-moment formula reconstructs the plan's noise spec and served
+    /// MSE (see [`PlanMode`]). Absent in pre-mode plan files and defaults
+    /// to "statistical" on load.
+    pub mode: String,
 }
 
 impl VoltagePlan {
@@ -127,7 +133,16 @@ impl VoltagePlan {
             config: cfg.clone(),
             generation: 0,
             drift_delta_vth: 0.0,
+            mode: cfg.mode.clone(),
         }
+    }
+
+    /// The parsed operating regime of this plan. Plans built by
+    /// [`Self::from_assignment`] or loaded via [`Self::from_json`] always
+    /// carry a valid mode string; a hand-assembled invalid one falls back
+    /// to the statistical regime rather than panicking mid-serve.
+    pub fn plan_mode(&self) -> PlanMode {
+        PlanMode::from_name(&self.mode).unwrap_or(PlanMode::Statistical)
     }
 
     /// Number of neurons this plan covers.
@@ -246,6 +261,7 @@ impl VoltagePlan {
             ("config", self.config.to_json()),
             ("generation", Json::Num(self.generation as f64)),
             ("drift_delta_vth", Json::Num(self.drift_delta_vth)),
+            ("mode", Json::Str(self.mode.clone())),
         ])
     }
 
@@ -287,6 +303,17 @@ impl VoltagePlan {
                 .map(|v| v.as_f64())
                 .transpose()?
                 .unwrap_or(0.0),
+            // Absent in pre-mode plan files: the tolerate regime was the
+            // only one, so it is the compatible default.
+            mode: {
+                let mode = j
+                    .opt("mode")
+                    .map(|v| v.as_str().map(String::from))
+                    .transpose()?
+                    .unwrap_or_else(|| "statistical".to_string());
+                PlanMode::from_name(&mode)?;
+                mode
+            },
         })
     }
 
@@ -425,6 +452,7 @@ mod tests {
             assert_eq!(plan.config.seed, back.config.seed);
             assert_eq!(plan.generation, back.generation);
             assert_eq!(plan.drift_delta_vth, back.drift_delta_vth);
+            assert_eq!(plan.mode, back.mode);
             // And a second hop through text is byte-identical.
             assert_eq!(plan.to_json().to_string(), back.to_json().to_string());
         });
@@ -441,10 +469,13 @@ mod tests {
         let mut obj = j.as_obj().unwrap().clone();
         obj.remove("generation");
         obj.remove("drift_delta_vth");
+        obj.remove("mode");
         let legacy = Json::Obj(obj);
         let back = VoltagePlan::from_json(&legacy).unwrap();
         assert_eq!(back.generation, 0);
         assert_eq!(back.drift_delta_vth, 0.0);
+        assert_eq!(back.mode, "statistical");
+        assert_eq!(back.plan_mode(), PlanMode::Statistical);
         assert_eq!(back.level, plan.level);
     }
 

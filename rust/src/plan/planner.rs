@@ -22,7 +22,7 @@ use anyhow::{Context, Result};
 use super::{model_fingerprint, VoltagePlan};
 use crate::assign::{AssignmentProblem, Solver, VoltageAssignment};
 use crate::config::ExperimentConfig;
-use crate::errormodel::{CharacterizeOptions, DriftedRegistry, ErrorModelRegistry};
+use crate::errormodel::{CharacterizeOptions, DriftedRegistry, ErrorModelRegistry, PlanMode};
 use crate::ilp::{solve_mckp, MckpError, MckpInstance};
 use crate::exec::{self, Backend};
 use crate::nn::data::{synth_cifar, synth_mnist, Dataset};
@@ -357,7 +357,8 @@ pub(crate) fn solve_one(
     solver: Solver,
 ) -> Result<(VoltageAssignment, VoltagePlan)> {
     let budget_abs = fraction * baseline_mse;
-    let problem = AssignmentProblem::build(es, fan_in, registry, power, budget_abs);
+    let mode = PlanMode::from_name(&cfg.mode)?;
+    let problem = AssignmentProblem::build_for_mode(es, fan_in, registry, power, budget_abs, mode);
     let assignment = problem.solve(solver)?;
     let plan = VoltagePlan::from_assignment(
         cfg,
@@ -391,6 +392,13 @@ pub struct ResolveOptions {
     pub budget_scale: f64,
     /// Solver for the non-frozen subproblem.
     pub solver: Solver,
+    /// Re-solve into this operating regime instead of the deployed plan's
+    /// own (`None` keeps the regime). `Some(PlanMode::TeDrop)` is the
+    /// fleet's mode-switch lever: when BTI drift erodes the guard band
+    /// faster than the tolerate regime can absorb, the re-plan re-prices
+    /// every neuron under detect-and-drop weights — a regime change, so the
+    /// warm-start freeze set collapses and the solve is effectively full.
+    pub switch_mode: Option<PlanMode>,
 }
 
 impl Default for ResolveOptions {
@@ -399,7 +407,7 @@ impl Default for ResolveOptions {
         // bit-for-bit (a scaled budget would thaw a deployed plan that
         // legitimately fills its full budget); adaptive fleets pass < 1.0
         // to buy inter-replan headroom.
-        Self { freeze_tol: 0.02, budget_scale: 1.0, solver: Solver::Ilp }
+        Self { freeze_tol: 0.02, budget_scale: 1.0, solver: Solver::Ilp, switch_mode: None }
     }
 }
 
@@ -450,11 +458,18 @@ pub fn resolve_plan_from(
     // The error models the deployed assignment was solved against.
     let old = base.drifted(deployed.drift_delta_vth);
     let budget = deployed.budget_abs * opts.budget_scale;
-    // Per-neuron per-level MSE contributions (eq. 29 weights) under the
-    // new drift, plus the deployed level's old/new contributions.
+    // Operating regimes: the deployed plan's weights are reconstructed in
+    // its own regime; the re-solve prices in the target regime (same one
+    // unless the caller asked for a mode switch).
+    let old_mode = deployed.plan_mode();
+    let mode = opts.switch_mode.unwrap_or(old_mode);
+    // Per-neuron per-level MSE contributions (eq. 29 weights, regime-
+    // priced) under the new drift, plus the deployed level's old/new
+    // contributions.
     let new_vars: Vec<f64> =
-        drifted.registry().models().iter().map(|m| m.variance).collect();
-    let old_vars: Vec<f64> = old.registry().models().iter().map(|m| m.variance).collect();
+        drifted.registry().models().iter().map(|m| mode.mac_variance(m)).collect();
+    let old_vars: Vec<f64> =
+        old.registry().models().iter().map(|m| old_mode.mac_variance(m)).collect();
     let freeze_limit = opts.freeze_tol * budget / n as f64;
     let mut frozen = vec![false; n];
     let mut frozen_weight = 0.0;
@@ -559,8 +574,23 @@ pub fn resolve_plan_from(
     } else {
         opts.solver
     };
+    // A mode switch rides the re-plan into the embedded config (and flips
+    // the level-driven backend selection with it), so the next generation
+    // — and anything that re-serves the saved plan — stays self-consistent.
+    let mut cfg = deployed.config.clone();
+    if mode != old_mode {
+        cfg.mode = mode.name().to_string();
+        match mode {
+            PlanMode::TeDrop => cfg.backend = "tedrop".to_string(),
+            PlanMode::Statistical => {
+                if cfg.backend == "tedrop" {
+                    cfg.backend = "statistical".to_string();
+                }
+            }
+        }
+    }
     let mut plan = VoltagePlan::from_assignment(
-        &deployed.config,
+        &cfg,
         &deployed.model_fingerprint,
         &deployed.es,
         &deployed.fan_in,
@@ -680,7 +710,7 @@ pub fn characterize_registry(cfg: &ExperimentConfig) -> Result<ErrorModelRegistr
 }
 
 /// Construct the inference [`Backend`] the experiment config selects
-/// (`exact` | `statistical` | `pjrt`); validation and serving both run
+/// (`exact` | `statistical` | `tedrop` | `pjrt`); validation and serving both run
 /// through this seam. The cycle/gate-accurate backend is constructed
 /// explicitly via [`exec::GateLevel`] (it needs a characterized chip and is
 /// orders of magnitude slower).
@@ -691,6 +721,7 @@ pub fn make_backend(
     match cfg.backend.as_str() {
         "exact" => Ok(Box::new(exec::Exact)),
         "statistical" => Ok(Box::new(exec::Statistical::new(registry.clone()))),
+        "tedrop" => Ok(Box::new(exec::TeDrop::new(registry.clone()))),
         "pjrt" => {
             // Root the runtime at the experiment's artifacts dir (the same
             // one the model/registry caches use), not the global default,
@@ -699,7 +730,7 @@ pub fn make_backend(
             let rt = Runtime::new(&dir)?;
             Ok(Box::new(exec::Pjrt::new(rt).with_registry(registry.clone())))
         }
-        other => anyhow::bail!("unknown backend '{other}' (exact|statistical|pjrt)"),
+        other => anyhow::bail!("unknown backend '{other}' (exact|statistical|tedrop|pjrt)"),
     }
 }
 

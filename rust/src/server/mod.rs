@@ -43,7 +43,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::errormodel::ErrorModelRegistry;
+use crate::errormodel::{ErrorModelRegistry, PlanMode};
 use crate::exec::{Backend, Exact};
 use crate::nn::quant::{NoiseSpec, QuantizedModel};
 use crate::nn::tensor::Tensor;
@@ -288,11 +288,51 @@ impl Engine {
     }
 }
 
+/// Typed deployment error: the operating regime (`mode`) of a plan set is
+/// inconsistent — either a plan's `mode` disagrees with the backend family
+/// its embedded config builds (TE-Drop recovery only happens on the
+/// `tedrop` backend; moment-matched noise injection must not run on it),
+/// or two plans in one set were solved under different regimes. Surfaced
+/// through `anyhow`, so deployment tooling can
+/// `err.downcast_ref::<ModeMismatch>()` and report it distinctly from
+/// generic artifact corruption.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModeMismatch {
+    /// `plan` runs in `mode`, but its config selects `backend` — the pool
+    /// [`Engine::with_backend_pool`] installs from that config cannot
+    /// realize the regime the plan was priced for.
+    Backend { plan: String, mode: String, backend: String },
+    /// `plan` was solved in `mode`, but the set's first plan in
+    /// `expected` — one engine serves one operating regime.
+    CrossPlan { plan: String, mode: String, expected: String },
+}
+
+impl std::fmt::Display for ModeMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModeMismatch::Backend { plan, mode, backend } => write!(
+                f,
+                "plan '{plan}' runs in {mode} mode but its config builds the \
+                 '{backend}' backend (tedrop mode requires the tedrop backend; \
+                 statistical mode must not use it)"
+            ),
+            ModeMismatch::CrossPlan { plan, mode, expected } => write!(
+                f,
+                "plan '{plan}' was solved in {mode} mode but the deployed set \
+                 is {expected}: one engine serves one operating regime"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ModeMismatch {}
+
 /// Derive the quality levels a set of deployable plans encodes under
-/// `registry`, after validating plan ↔ model ↔ registry consistency and
-/// cross-plan provenance. Shared by [`Engine::from_plans`] and
-/// [`Engine::swap_plans`] so boot-time and hot-swap deployment can never
-/// diverge.
+/// `registry`, after validating plan ↔ model ↔ registry consistency,
+/// cross-plan provenance, and operating-regime coherence (one `mode`
+/// across the set, matched to the backend family each config builds).
+/// Shared by [`Engine::from_plans`] and [`Engine::swap_plans`] so
+/// boot-time and hot-swap deployment can never diverge.
 fn levels_from_plans(
     quantized: &QuantizedModel,
     registry: &ErrorModelRegistry,
@@ -304,6 +344,30 @@ fn levels_from_plans(
     }
     for p in &plans[1..] {
         plans[0].check_compatible(p)?;
+    }
+    let expected = plans[0].plan_mode();
+    for p in plans {
+        let mode = p.plan_mode();
+        if mode != expected {
+            return Err(ModeMismatch::CrossPlan {
+                plan: p.name.clone(),
+                mode: mode.name().to_string(),
+                expected: expected.name().to_string(),
+            }
+            .into());
+        }
+        let backend_fits = match mode {
+            PlanMode::TeDrop => p.config.backend == "tedrop",
+            PlanMode::Statistical => p.config.backend != "tedrop",
+        };
+        if !backend_fits {
+            return Err(ModeMismatch::Backend {
+                plan: p.name.clone(),
+                mode: mode.name().to_string(),
+                backend: p.config.backend.clone(),
+            }
+            .into());
+        }
     }
     Ok(plans
         .iter()
@@ -954,6 +1018,7 @@ mod tests {
             config: cfg.clone(),
             generation: 0,
             drift_delta_vth: 0.0,
+            mode: "statistical".into(),
             level,
         };
         let nominal = mk("exact", vec![3; n], 0.0);
@@ -981,7 +1046,25 @@ mod tests {
         assert!(Engine::from_plans(q.clone(), &reg, &[short], 784).is_err());
         let mut other = eco.clone();
         other.model_fingerprint = "other".into();
-        assert!(Engine::from_plans(q, &reg, &[nominal, other], 784).is_err());
+        assert!(Engine::from_plans(q.clone(), &reg, &[nominal.clone(), other], 784).is_err());
+        // Operating-regime guards surface the typed ModeMismatch error: a
+        // tedrop-mode plan whose config builds a non-tedrop backend pool,
+        // and a set mixing the two regimes.
+        let mut wrong_pool = eco.clone();
+        wrong_pool.mode = "tedrop".into();
+        let err = Engine::from_plans(q.clone(), &reg, &[wrong_pool], 784).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ModeMismatch>(),
+            Some(ModeMismatch::Backend { .. })
+        ));
+        let mut te = eco.clone();
+        te.mode = "tedrop".into();
+        te.config.backend = "tedrop".into();
+        let err = Engine::from_plans(q, &reg, &[nominal, te], 784).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ModeMismatch>(),
+            Some(ModeMismatch::CrossPlan { .. })
+        ));
     }
 
     #[test]

@@ -290,6 +290,86 @@ fn statistical_and_gate_level_backends_agree_on_16x16() {
 }
 
 #[test]
+fn tedrop_fast_path_agrees_with_naive_bernoulli_reference() {
+    // The TE-Drop analogue of the Statistical↔GateLevel suite above: the
+    // vectorized geometric skip-sampling fault pass must be statistically
+    // indistinguishable from the obvious oracle — an independent
+    // per-MAC Bernoulli(p) loop that subtracts each detected product —
+    // on a 16×16 layer. Agreement is in per-column error moments (the
+    // two draw different randomness), plus the analytic k·p·M2 pricing
+    // the planner budgets with.
+    use xtpu::errormodel::{ErrorModelRegistry, PlanMode, MAC_SECOND_MOMENT};
+    use xtpu::exec::{self, TeDrop};
+    use xtpu::timing::voltage::VoltageLadder;
+
+    let ladder = VoltageLadder::paper_default();
+    let reg = ErrorModelRegistry::synthetic_with_rates(
+        &ladder,
+        &[3.0e4, 1.0e4, 2.0e3, 0.0],
+        &[0.05, 0.02, 0.005, 0.0],
+    );
+    let (m, k, n) = (4000usize, 16usize, 16usize);
+    let p = reg.model(0).error_rate;
+    // ±127 inputs so E[a²] = E[w²] = 127·128/3 — exactly the factors in
+    // MAC_SECOND_MOMENT, making the analytic cross-check sharp.
+    let mut rng = Xoshiro256pp::seeded(0x7E5D);
+    let a: Vec<i8> = (0..m * k).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    let w: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    // All but the last column at 0.5 V (rate p); the last nominal (silent).
+    let mut levels = vec![0usize; n];
+    levels[n - 1] = ladder.len() - 1;
+
+    let te = TeDrop::new(reg.clone());
+    let stats = exec::column_error_stats(&te, &a, &w, m, k, n, &levels, &mut rng);
+
+    // Naive oracle: one Bernoulli(p) per MAC, drop = subtract the product.
+    let mut nrng = Xoshiro256pp::seeded(0x0B5E);
+    let mut naive = vec![(0.0f64, 0.0f64); n];
+    let mut errs = vec![0.0f64; m];
+    for (c, moments) in naive.iter_mut().enumerate().take(n - 1) {
+        for (s, e) in errs.iter_mut().enumerate() {
+            *e = 0.0;
+            for r in 0..k {
+                if nrng.chance(p) {
+                    *e -= a[s * k + r] as f64 * w[r * n + c] as f64;
+                }
+            }
+        }
+        let mean = errs.iter().sum::<f64>() / m as f64;
+        let var = errs.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / m as f64;
+        *moments = (mean, var);
+    }
+
+    let analytic = PlanMode::TeDrop.column_variance(reg.model(0), k);
+    assert!((analytic - k as f64 * p * MAC_SECOND_MOMENT).abs() < 1e-6);
+    let mean_tol = 8.0 * analytic.sqrt() / (m as f64).sqrt();
+    for c in 0..n - 1 {
+        let (tm, tv) = stats[c];
+        let (nm, nv) = naive[c];
+        let ratio = tv / nv.max(1e-12);
+        assert!(
+            (0.75..1.33).contains(&ratio),
+            "col {c}: fast-path var {tv:.3e} vs naive {nv:.3e} (ratio {ratio:.2})"
+        );
+        assert!(
+            (tm - nm).abs() < mean_tol,
+            "col {c}: fast-path mean {tm:.2} vs naive {nm:.2} (tol {mean_tol:.2})"
+        );
+        // Both estimators must also track the planner's k·p·M2 pricing
+        // (the naive loop's true variance carries a (1−p) factor the
+        // bound intentionally ignores; the window absorbs it).
+        for (label, v) in [("fast-path", tv), ("naive", nv)] {
+            assert!(
+                (0.6..1.6).contains(&(v / analytic)),
+                "col {c}: {label} var {v:.3e} vs analytic {analytic:.3e}"
+            );
+        }
+    }
+    let (zm, zv) = stats[n - 1];
+    assert_eq!((zm, zv), (0.0, 0.0), "nominal column must be untouched");
+}
+
+#[test]
 fn clean_inference_identical_across_backends() {
     // With no noise spec, every backend must produce bit-identical logits:
     // they share one exec::kernel.

@@ -10,16 +10,30 @@
 //! - The assignment solvers must agree: greedy/GA solutions are feasible
 //!   and never beat the exact branch-and-bound optimum (property test over
 //!   random MCKP instances).
+//! - Operating-regime compatibility: the checked-in pre-mode golden file
+//!   (`rust/tests/data/pre_mode_plan.json`) must load with the statistical
+//!   default and round-trip bit-exactly; tedrop-mode plans must survive
+//!   `to_json`/`from_json`; and [`Engine::from_plans`] must refuse
+//!   mode/backend-inconsistent plan sets with a typed [`ModeMismatch`].
 
 use xtpu::config::ExperimentConfig;
 use xtpu::coordinator::Pipeline;
+use xtpu::errormodel::PlanMode;
 use xtpu::exec::Statistical;
 use xtpu::ilp::{solve_genetic, solve_greedy, solve_mckp, GaConfig, MckpInstance};
 use xtpu::nn::quant::NoiseSpec;
 use xtpu::plan::VoltagePlan;
-use xtpu::server::{BatchPolicy, Client, Engine, QualityLevel, Server};
+use xtpu::server::{BatchPolicy, Client, Engine, ModeMismatch, QualityLevel, Server};
 use xtpu::util::checks::property;
+use xtpu::util::json::Json;
 use xtpu::util::rng::Xoshiro256pp;
+
+/// Path of the checked-in golden plan file, serialized before operating
+/// regimes (and the adaptive loop) existed: no `mode`, `generation`, or
+/// `drift_delta_vth` keys anywhere in the artifact.
+fn golden_pre_mode_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/pre_mode_plan.json")
+}
 
 fn smoke_config() -> ExperimentConfig {
     ExperimentConfig {
@@ -196,4 +210,102 @@ fn solvers_agree_on_random_instances() {
             );
         }
     });
+}
+
+#[test]
+fn golden_pre_mode_plan_file_loads_with_statistical_default() {
+    // Guard the fixture itself first: it must stay genuinely pre-mode, or
+    // this test silently stops exercising the compatibility path.
+    let path = golden_pre_mode_path();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        !text.contains("\"mode\"") && !text.contains("\"generation\""),
+        "golden fixture must not carry mode/lineage keys"
+    );
+
+    let plan = VoltagePlan::load(&path).unwrap();
+    assert_eq!(plan.mode, "statistical", "pre-mode plans default to tolerate");
+    assert_eq!(plan.plan_mode(), PlanMode::Statistical);
+    assert_eq!(plan.config.mode, "statistical", "embedded config defaults too");
+    assert_eq!(plan.generation, 0);
+    assert_eq!(plan.drift_delta_vth, 0.0);
+    // Spot-check the payload actually came through, not just the defaults.
+    assert_eq!(plan.name, "mse_ub_200pct");
+    assert_eq!(plan.level, vec![0, 1, 2, 3]);
+    assert_eq!(plan.fan_in, vec![784, 784, 256, 256]);
+    assert_eq!(plan.volts, vec![0.5, 0.6, 0.7, 0.8]);
+    assert_eq!(plan.config.backend, "statistical");
+
+    // A modern re-serialization emits the mode explicitly and the upgraded
+    // artifact round-trips bit-exactly from there on.
+    let j = plan.to_json();
+    assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "statistical");
+    let back = VoltagePlan::from_json(&j).unwrap();
+    assert_eq!(j.to_string(), back.to_json().to_string());
+}
+
+#[test]
+fn tedrop_plans_round_trip_and_unknown_modes_are_refused() {
+    // Flip the golden plan into the detect regime the way `xtpu plan
+    // --mode tedrop` would: plan mode + embedded config mode + backend.
+    let mut plan = VoltagePlan::load(&golden_pre_mode_path()).unwrap();
+    plan.mode = "tedrop".into();
+    plan.config.mode = "tedrop".into();
+    plan.config.backend = "tedrop".into();
+
+    let j = plan.to_json();
+    let back = VoltagePlan::from_json(&j).unwrap();
+    assert_eq!(back.mode, "tedrop");
+    assert_eq!(back.plan_mode(), PlanMode::TeDrop);
+    assert_eq!(back.config.mode, "tedrop");
+    assert_eq!(back.config.backend, "tedrop");
+    assert_eq!(j.to_string(), back.to_json().to_string(), "bit-exact round trip");
+
+    // An unrecognized regime is refused at load — on the plan itself and
+    // inside the embedded config — instead of being discovered mid-serve.
+    let mut bad_plan = j.as_obj().unwrap().clone();
+    bad_plan.insert("mode".into(), Json::Str("razor".into()));
+    assert!(VoltagePlan::from_json(&Json::Obj(bad_plan)).is_err());
+    let mut bad_cfg = j.as_obj().unwrap().clone();
+    let mut cfg = bad_cfg.get("config").unwrap().as_obj().unwrap().clone();
+    cfg.insert("mode".into(), Json::Str("razor".into()));
+    bad_cfg.insert("config".into(), Json::Obj(cfg));
+    assert!(VoltagePlan::from_json(&Json::Obj(bad_cfg)).is_err());
+}
+
+#[test]
+fn engines_refuse_cross_regime_plan_sets_with_typed_errors() {
+    let pipeline = Pipeline::new(smoke_config());
+    let sys = pipeline.prepare().unwrap();
+    let stat = pipeline.run_budget(&sys, 1.0).unwrap().plan;
+
+    // A plan claiming the tedrop regime while its config still builds a
+    // statistical backend is internally inconsistent: the served noise
+    // would not match the priced noise.
+    let mut inconsistent = stat.clone();
+    inconsistent.mode = "tedrop".into();
+    let err = Engine::from_plans(sys.quantized.clone(), &sys.registry, &[inconsistent], 784)
+        .unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<ModeMismatch>(), Some(ModeMismatch::Backend { .. })),
+        "expected ModeMismatch::Backend, got: {err}"
+    );
+
+    // A self-consistent tedrop plan builds an engine on its own…
+    let mut te = stat.clone();
+    te.mode = "tedrop".into();
+    te.config.mode = "tedrop".into();
+    te.config.backend = "tedrop".into();
+    Engine::from_plans(sys.quantized.clone(), &sys.registry, &[te.clone()], 784).unwrap();
+
+    // …but one engine serves one operating regime: mixing it with its
+    // statistical sibling is refused even though fingerprint and planning
+    // config hash (which excludes mode/backend) both match.
+    stat.check_compatible(&te).unwrap();
+    let err = Engine::from_plans(sys.quantized.clone(), &sys.registry, &[stat, te], 784)
+        .unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<ModeMismatch>(), Some(ModeMismatch::CrossPlan { .. })),
+        "expected ModeMismatch::CrossPlan, got: {err}"
+    );
 }

@@ -13,10 +13,11 @@
 //!   per-request responses, real batching, and genuinely concurrent batch
 //!   execution (no global backend mutex on the hot path).
 //!
-//! Environment note: every `XTPU_THREADS` mutation lives inside ONE test
-//! function. Other tests in this binary run concurrently with it, which is
-//! safe precisely because of the property under test — kernel output does
-//! not depend on the observed thread count.
+//! Environment note: the tests that mutate `XTPU_THREADS` serialize on
+//! [`ENV_LOCK`] so their save/restore windows never interleave. Other
+//! tests in this binary run concurrently with them, which is safe
+//! precisely because of the property under test — kernel output does not
+//! depend on the observed thread count.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -50,6 +51,11 @@ fn random_mats(m: usize, k: usize, n: usize, rng: &mut Xoshiro256pp) -> (Vec<i8>
 fn synthetic_registry() -> ErrorModelRegistry {
     ErrorModelRegistry::synthetic(&VoltageLadder::paper_default(), &[3.0e4, 1.0e4, 2.0e3, 0.0])
 }
+
+/// Serializes the `XTPU_THREADS` save/mutate/restore windows of the tests
+/// below (the kernel re-reads the variable per call, so only the windows
+/// need exclusion, not the whole binary).
+static ENV_LOCK: Mutex<()> = Mutex::new(());
 
 #[test]
 fn kernel_property_random_shapes_bit_match_reference() {
@@ -204,6 +210,7 @@ fn statistical_backend_bit_identical_across_thread_counts() {
 
     // Restore (not delete) any pre-set XTPU_THREADS afterwards — the CI
     // matrix pins it for the whole test run.
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let prior = std::env::var("XTPU_THREADS").ok();
     let mut mm_outs = Vec::new();
     let mut layer_outs = Vec::new();
@@ -228,6 +235,84 @@ fn statistical_backend_bit_identical_across_thread_counts() {
     assert_eq!(mm_outs[0], mm_outs[2], "matmul differs between 1 and 8 threads");
     assert_eq!(layer_outs[0], layer_outs[1], "execute_layer differs between 1 and 2 threads");
     assert_eq!(layer_outs[0], layer_outs[2], "execute_layer differs between 1 and 8 threads");
+}
+
+#[test]
+fn tedrop_backend_matches_exact_when_error_rates_are_zero() {
+    // Property (degenerate-regime identity): with `error_rate == 0` at
+    // EVERY ladder level, the TE-Drop backend is the Exact backend —
+    // bit-identical outputs on ragged random shapes across thread counts
+    // and every SIMD path the host offers, and the RNG stream is left
+    // untouched (a silent fault pass draws no key). The registry keeps
+    // *positive* noise variances, proving TE-Drop keys off the detection
+    // probability alone, never the tolerate-regime moments.
+    use xtpu::exec::dispatch;
+    use xtpu::exec::kernel::KernelScratch;
+
+    let reg = ErrorModelRegistry::synthetic_with_rates(
+        &VoltageLadder::paper_default(),
+        &[3.0e4, 1.0e4, 2.0e3, 0.0],
+        &[0.0, 0.0, 0.0, 0.0],
+    );
+    let te = exec::TeDrop::new(reg);
+    let mut srng = Xoshiro256pp::seeded(0x7ED0);
+    let mut shapes: Vec<(usize, usize, usize)> = vec![
+        (1, 1, 1),
+        (2, kernel::TILE_K - 1, kernel::TILE_N - 1),
+        (3, kernel::TILE_K + 1, kernel::TILE_N + 1),
+        (64, 784, 128),
+    ];
+    for _ in 0..24 {
+        shapes.push((1 + srng.index(33), 1 + srng.index(300), 1 + srng.index(96)));
+    }
+
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prior = std::env::var("XTPU_THREADS").ok();
+    let mut scratch = KernelScratch::new();
+    for (i, &(m, k, n)) in shapes.iter().enumerate() {
+        let (a, w) = random_mats(m, k, n, &mut srng);
+        // Every ladder level appears, including non-nominal ones — all
+        // silent because their rates are zero.
+        let levels: Vec<usize> = (0..n).map(|c| c % 4).collect();
+        let mut outs: Vec<Vec<i32>> = Vec::new();
+        for threads in ["1", "4"] {
+            std::env::set_var("XTPU_THREADS", threads);
+            let mut r_te = Xoshiro256pp::seeded(0xA11 + i as u64);
+            let mut r_ex = r_te.clone();
+            let got = te.matmul_i8(&a, &w, m, k, n, &levels, &mut r_te);
+            let want = exec::Exact.matmul_i8(&a, &w, m, k, n, &levels, &mut r_ex);
+            assert_eq!(got, want, "shape {i}: {m}×{k}×{n} at {threads} threads");
+            assert_eq!(
+                r_te.next_u64(),
+                r_ex.next_u64(),
+                "shape {i}: a zero-rate fault pass must not consume randomness"
+            );
+            outs.push(got);
+        }
+        assert_eq!(outs[0], outs[1], "shape {i}: {m}×{k}×{n} differs between 1 and 4 threads");
+        // SIMD axis, forced through the dispatch seam (the backend's own
+        // path is process-cached): every available path plus a zero-rate
+        // drop pass reproduces the same bits.
+        for &path in &dispatch::available() {
+            let mut out = Vec::new();
+            kernel::matmul_i8_path(path, &a, &w, m, k, n, &mut out, &mut scratch);
+            kernel::drop_column_macs_keyed(
+                &mut out,
+                &a,
+                &w,
+                m,
+                k,
+                n,
+                &vec![0.0; n],
+                0x5EED ^ i as u64,
+            );
+            assert_eq!(out, outs[0], "shape {i}: {m}×{k}×{n} via {}", path.name());
+        }
+    }
+    match prior {
+        Some(v) => std::env::set_var("XTPU_THREADS", v),
+        None => std::env::remove_var("XTPU_THREADS"),
+    }
 }
 
 #[test]
