@@ -432,6 +432,185 @@ fn main() {
         report.push(("l3e_inferences_per_s", Json::Null));
     }
 
+    // --- L3k: evented serving frontend (closed-loop stress) ---------------
+    // A modest in-process twin of examples/serve_stress.rs (the CI smoke
+    // run drives 10k connections; the bench stays well under the default
+    // fd ulimit): closed-loop clients with deadline tags against the
+    // evented frontend. Reports admitted throughput, served p99 against
+    // the SLO, and the shed fraction; the keys are presence-gated against
+    // BENCH_serving.json by tools/check_bench_regression.py.
+    {
+        use std::io::{ErrorKind, Read, Write};
+        use xtpu::nn::quant::NoiseSpec;
+        use xtpu::server::{
+            BatchPolicy, Engine, FrontendMode, FrontendOptions, QualityLevel, Server,
+        };
+        use xtpu::util::stats::LatencyHistogram;
+
+        struct C {
+            s: std::net::TcpStream,
+            out: Vec<u8>,
+            inbuf: Vec<u8>,
+            sent_at: std::time::Instant,
+            alive: bool,
+        }
+
+        let nq = q.num_neurons();
+        let mut noisy = NoiseSpec::silent(nq);
+        for s in noisy.std.iter_mut().take(128) {
+            *s = 2000.0;
+        }
+        let levels = vec![
+            QualityLevel {
+                name: "exact".into(),
+                noise: NoiseSpec::silent(nq),
+                energy_saving: 0.0,
+                energy: 10.0,
+            },
+            QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 7.0 },
+        ];
+        let engine = Engine::new(q.clone(), levels, 784).unwrap();
+        let slo = std::time::Duration::from_millis(100);
+        let opts = FrontendOptions {
+            mode: FrontendMode::Evented,
+            slo: Some(slo),
+            max_conns: 2048,
+            max_queue: 64,
+            ..Default::default()
+        };
+        let policy = BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(1),
+            workers: 2,
+        };
+        let mut server =
+            Server::spawn_opts(vec![std::sync::Arc::new(engine)], 0, policy, opts).unwrap();
+
+        let pixels: Vec<f64> = (0..784).map(|i| (i % 13) as f64 / 12.0).collect();
+        let mut line = Json::obj(vec![
+            ("pixels", Json::arr_f64(&pixels)),
+            ("quality", Json::Num(1.0)),
+            ("deadline_ms", Json::Num(slo.as_millis() as f64)),
+        ])
+        .to_string();
+        line.push('\n');
+        let req = line.into_bytes();
+
+        let conns = 256usize;
+        let mut pool: Vec<C> = Vec::with_capacity(conns);
+        for _ in 0..conns {
+            let s = std::net::TcpStream::connect(server.addr).unwrap();
+            s.set_nodelay(true).ok();
+            s.set_nonblocking(true).unwrap();
+            pool.push(C {
+                s,
+                out: req.clone(),
+                inbuf: Vec::new(),
+                sent_at: std::time::Instant::now(),
+                alive: true,
+            });
+        }
+
+        let hist = LatencyHistogram::new();
+        let (mut sent, mut served, mut shed) = (0u64, 0u64, 0u64);
+        let t0 = std::time::Instant::now();
+        let dur = std::time::Duration::from_millis(1500);
+        let mut issuing = true;
+        let mut inflight = 0u64;
+        let mut buf = [0u8; 4096];
+        loop {
+            if issuing && t0.elapsed() >= dur {
+                issuing = false;
+            }
+            if !issuing
+                && (inflight == 0 || t0.elapsed() > dur + std::time::Duration::from_secs(5))
+            {
+                break;
+            }
+            let mut progressed = false;
+            for c in pool.iter_mut() {
+                if !c.alive {
+                    continue;
+                }
+                while !c.out.is_empty() {
+                    match c.s.write(&c.out) {
+                        Ok(0) => {
+                            c.alive = false;
+                            break;
+                        }
+                        Ok(n) => {
+                            c.out.drain(..n);
+                            progressed = true;
+                            if c.out.is_empty() {
+                                c.sent_at = std::time::Instant::now();
+                                sent += 1;
+                                inflight += 1;
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            c.alive = false;
+                            break;
+                        }
+                    }
+                }
+                loop {
+                    match c.s.read(&mut buf) {
+                        Ok(0) => {
+                            c.alive = false;
+                            break;
+                        }
+                        Ok(n) => {
+                            progressed = true;
+                            c.inbuf.extend_from_slice(&buf[..n]);
+                            while let Some(p) = c.inbuf.iter().position(|&b| b == b'\n') {
+                                let reply: Vec<u8> = c.inbuf.drain(..=p).collect();
+                                inflight = inflight.saturating_sub(1);
+                                const NEEDLE: &[u8] = b"\"class\"";
+                                if reply.windows(NEEDLE.len()).any(|w| w == NEEDLE) {
+                                    served += 1;
+                                    hist.record_us(
+                                        c.sent_at.elapsed().as_micros().min(u64::MAX as u128)
+                                            as u64,
+                                    );
+                                } else {
+                                    shed += 1;
+                                }
+                                if issuing {
+                                    c.out = req.clone();
+                                }
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            c.alive = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if !progressed {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        let rps = served as f64 / dt;
+        let p99 = hist.quantile_us(0.99) as f64;
+        let shed_fraction = if sent > 0 { shed as f64 / sent as f64 } else { 0.0 };
+        println!(
+            "L3k evented serve : {rps:>8.1} req/s served ({conns} closed-loop conns, \
+             p99 {p99:.0} µs vs {} ms SLO, {:.1}% shed)",
+            slo.as_millis(),
+            shed_fraction * 100.0
+        );
+        report.push(("l3k_evented_rps", Json::Num(rps)));
+        report.push(("l3k_p99_us_at_slo", Json::Num(p99)));
+        report.push(("l3k_shed_fraction", Json::Num(shed_fraction)));
+    }
+
     if let Ok(path) = std::env::var("XTPU_BENCH_JSON") {
         let j = Json::obj(report);
         match xtpu::util::json::write_file(std::path::Path::new(&path), &j) {

@@ -1,0 +1,324 @@
+//! Closed-loop serving stress: thousands of concurrent connections against
+//! the evented frontend, with SLO admission control and wear-leveled
+//! shards — the ROADMAP's datacenter-scale acceptance run.
+//!
+//! One process plays both sides: an evented `xtpu` server (2 shards, one
+//! pre-worn, wear-leveling routing, deadline shedding) and a nonblocking
+//! closed-loop client driver (each connection keeps exactly one request in
+//! flight). Traffic is 3:1 gentle (aggressive-VOS level) to harsh
+//! (all-nominal level), so the wear-leveler's placement is visible in the
+//! final `per_shard` counts: gentle traffic parks on the worn shard.
+//!
+//! Prints one JSON summary line (prefixed `STRESS_JSON `) asserting the
+//! books: every sent request got exactly one reply (ok or typed shed),
+//! the server's `requests`/`shed` counters agree with the client's count,
+//! and served p99 stays under the stated SLO while shedding is active.
+//!
+//! ```sh
+//! ulimit -n 65536   # 10k sockets on each side
+//! cargo run --release --example serve_stress -- --conns 10000 --duration-s 5
+//! ```
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use xtpu::config::ExperimentConfig;
+use xtpu::fleet::WearLeveling;
+use xtpu::nn::data::synth_mnist;
+use xtpu::nn::layers::Activation;
+use xtpu::nn::model::fc_mnist;
+use xtpu::nn::quant::{NoiseSpec, QuantizedModel};
+use xtpu::nn::train::{train, TrainConfig};
+use xtpu::plan::VoltagePlan;
+use xtpu::server::shard::WearConfig;
+use xtpu::server::{
+    BatchPolicy, Client, Engine, FrontendMode, FrontendOptions, QualityLevel, Server,
+};
+use xtpu::timing::voltage::VoltageLadder;
+use xtpu::util::json::Json;
+use xtpu::util::rng::Xoshiro256pp;
+use xtpu::util::stats::LatencyHistogram;
+
+fn arg(name: &str, default: f64) -> f64 {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Small deterministic engine (same construction as the serving tests).
+fn build_engine() -> Engine {
+    let mut rng = Xoshiro256pp::seeded(1);
+    let mut model = fc_mnist(Activation::Relu, &mut rng);
+    let train_set = synth_mnist(200, 5);
+    train(&mut model, &train_set, &TrainConfig { epochs: 1, ..Default::default() });
+    let calib = train_set.batch(&(0..16).collect::<Vec<_>>()).0;
+    let q = QuantizedModel::quantize(&model, &calib);
+    let n = q.num_neurons();
+    let mut noisy = NoiseSpec::silent(n);
+    for s in noisy.std.iter_mut().take(128) {
+        *s = 2000.0;
+    }
+    let levels = vec![
+        QualityLevel {
+            name: "exact".into(),
+            noise: NoiseSpec::silent(n),
+            energy_saving: 0.0,
+            energy: 10.0,
+        },
+        QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 7.0 },
+    ];
+    Engine::new(q, levels, 784).unwrap()
+}
+
+/// Plans mirroring the two levels — level 0 all-nominal (harsh), level 1
+/// all-bottom-rung (gentle) — so wear accounting and the wear-leveler see
+/// the real intensity gap between the classes.
+fn plans_for(engine: &Engine) -> Vec<VoltagePlan> {
+    let q = &engine.quantized;
+    let n = q.num_neurons();
+    let cfg = ExperimentConfig::smoke();
+    let volts: Vec<f64> =
+        VoltageLadder::paper_default().levels().iter().map(|l| l.volts).collect();
+    let top = volts.len() - 1;
+    let mk = |name: &str, level: Vec<usize>, saving: f64| VoltagePlan {
+        name: name.into(),
+        mse_ub_fraction: 1.0,
+        budget_abs: 0.1,
+        baseline_mse: 0.1,
+        fan_in: q.neuron_fan_in.clone(),
+        es: vec![1.0; n],
+        volts: volts.clone(),
+        predicted_mse: 0.0,
+        energy: 1.0,
+        energy_saving: saving,
+        optimal: true,
+        solver: "ilp".into(),
+        model_fingerprint: "fp".into(),
+        config_hash: xtpu::plan::config_hash(&cfg),
+        config: cfg.clone(),
+        generation: 0,
+        drift_delta_vth: 0.0,
+        mode: "statistical".into(),
+        level,
+    };
+    vec![mk("exact", vec![top; n], 0.0), mk("eco", vec![0; n], 0.35)]
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Unsent bytes of the current request.
+    out: Vec<u8>,
+    /// Reply bytes accumulated so far (no newline yet).
+    inbuf: Vec<u8>,
+    sent_at: Instant,
+    alive: bool,
+}
+
+fn main() {
+    let conns = arg("--conns", 10_000.0) as usize;
+    let duration = Duration::from_secs_f64(arg("--duration-s", 5.0));
+    let slo_ms = arg("--slo-ms", 200.0);
+
+    let e0 = build_engine();
+    let e1 = build_engine();
+    let plans = plans_for(&e0);
+    let wear = WearConfig {
+        // Shard 0 arrives pre-worn: the wear-leveler must park gentle
+        // traffic there and steer harsh traffic to the fresh shard 1.
+        initial_age_years: vec![0.05, 0.0],
+        initial_age_duty: 1.0,
+        ..WearConfig::new(plans)
+    };
+    let opts = FrontendOptions {
+        mode: FrontendMode::Evented,
+        slo: Some(Duration::from_secs_f64(slo_ms / 1e3)),
+        max_conns: conns + 64,
+        max_queue: 256,
+        route: Some(Box::new(WearLeveling::new(30.0, 16))),
+        wear: Some(wear),
+    };
+    let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1), workers: 2 };
+    let mut server =
+        Server::spawn_opts(vec![Arc::new(e0), Arc::new(e1)], 0, policy, opts).unwrap();
+    let addr = server.addr;
+    eprintln!("serving on {addr}; opening {conns} connections…");
+
+    // Two request lines, reused verbatim: 3:1 gentle (eco) to harsh.
+    let pixels: Vec<f64> = (0..784).map(|i| (i % 17) as f64 / 16.0).collect();
+    let mk_req = |quality: usize| {
+        let mut line = Json::obj(vec![
+            ("pixels", Json::arr_f64(&pixels)),
+            ("quality", Json::Num(quality as f64)),
+            ("deadline_ms", Json::Num(slo_ms)),
+        ])
+        .to_string();
+        line.push('\n');
+        line.into_bytes()
+    };
+    let req_harsh = mk_req(0);
+    let req_gentle = mk_req(1);
+    let req_for = |i: usize| if i % 4 == 0 { &req_harsh } else { &req_gentle };
+
+    let mut pool: Vec<Conn> = Vec::with_capacity(conns);
+    for i in 0..conns {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                stream.set_nonblocking(true).unwrap();
+                pool.push(Conn {
+                    stream,
+                    out: req_for(i).clone(),
+                    inbuf: Vec::new(),
+                    sent_at: Instant::now(),
+                    alive: true,
+                });
+            }
+            Err(e) => {
+                eprintln!("connect {i} failed: {e} (raise ulimit -n?)");
+                break;
+            }
+        }
+    }
+    let opened = pool.len();
+
+    let hist = LatencyHistogram::new();
+    let (mut sent, mut ok, mut shed, mut errors) = (0u64, 0u64, 0u64, 0u64);
+    let start = Instant::now();
+    let mut issuing = true;
+    let mut inflight = 0u64;
+    // Seed: the initial request of every connection counts as sent when
+    // its bytes finish leaving (tracked below via `out` emptying).
+    let mut scratch = [0u8; 8192];
+    loop {
+        let now = Instant::now();
+        if issuing && now.duration_since(start) >= duration {
+            issuing = false; // stop issuing; drain what's in flight
+        }
+        if !issuing && inflight == 0 {
+            break;
+        }
+        if !issuing && now.duration_since(start) > duration + Duration::from_secs(10) {
+            eprintln!("drain timeout with {inflight} in flight");
+            break;
+        }
+        let mut progressed = false;
+        for (i, c) in pool.iter_mut().enumerate() {
+            if !c.alive {
+                continue;
+            }
+            // Push request bytes.
+            while !c.out.is_empty() {
+                match c.stream.write(&c.out) {
+                    Ok(0) => {
+                        c.alive = false;
+                        errors += 1;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.out.drain(..n);
+                        progressed = true;
+                        if c.out.is_empty() {
+                            c.sent_at = Instant::now();
+                            sent += 1;
+                            inflight += 1;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.alive = false;
+                        errors += 1;
+                        break;
+                    }
+                }
+            }
+            // Pull reply bytes.
+            loop {
+                match c.stream.read(&mut scratch) {
+                    Ok(0) => {
+                        c.alive = false;
+                        if c.out.is_empty() && !c.inbuf.is_empty() {
+                            errors += 1; // half a reply then EOF
+                        }
+                        break;
+                    }
+                    Ok(n) => {
+                        progressed = true;
+                        c.inbuf.extend_from_slice(&scratch[..n]);
+                        while let Some(pos) = c.inbuf.iter().position(|&b| b == b'\n') {
+                            let line: Vec<u8> = c.inbuf.drain(..=pos).collect();
+                            inflight = inflight.saturating_sub(1);
+                            const OK_NEEDLE: &[u8] = b"\"class\"";
+                            if line.windows(OK_NEEDLE.len()).any(|w| w == OK_NEEDLE) {
+                                ok += 1;
+                                hist.record_us(
+                                    c.sent_at.elapsed().as_micros().min(u64::MAX as u128)
+                                        as u64,
+                                );
+                            } else {
+                                shed += 1;
+                            }
+                            if issuing {
+                                c.out = req_for(i).clone(); // next request
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.alive = false;
+                        errors += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+
+    let server_stats = {
+        let mut c = Client::connect(addr).unwrap();
+        c.stats().unwrap()
+    };
+    let per_shard = server.stats.per_shard_counts();
+    let server_requests = server.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    let server_shed = server.stats.shed.load(std::sync::atomic::Ordering::Relaxed);
+    let p50 = hist.quantile_us(0.50);
+    let p99 = hist.quantile_us(0.99);
+    let answered = ok + shed;
+    let conserved = answered + errors >= sent && server_requests + server_shed >= answered;
+    let p99_within_slo = (p99 as f64) <= slo_ms * 1_000.0;
+    let summary = Json::obj(vec![
+        ("conns", Json::Num(opened as f64)),
+        ("duration_s", Json::Num(elapsed)),
+        ("sent", Json::Num(sent as f64)),
+        ("ok", Json::Num(ok as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("errors", Json::Num(errors as f64)),
+        ("rps", Json::Num(ok as f64 / elapsed)),
+        ("p50_us", Json::Num(p50 as f64)),
+        ("p99_us", Json::Num(p99 as f64)),
+        ("slo_ms", Json::Num(slo_ms)),
+        ("p99_within_slo", Json::Bool(p99_within_slo)),
+        ("server_requests", Json::Num(server_requests as f64)),
+        ("server_shed", Json::Num(server_shed as f64)),
+        (
+            "per_shard",
+            Json::Arr(per_shard.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        ("conserved", Json::Bool(conserved)),
+    ]);
+    println!("STRESS_JSON {summary}");
+    eprintln!("server books: {server_stats}");
+    server.shutdown();
+    assert!(conserved, "request accounting must conserve");
+    assert!(opened > 0 && ok > 0, "stress run served nothing");
+}

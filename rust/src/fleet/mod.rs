@@ -72,7 +72,9 @@ mod telemetry;
 
 pub use device::{plan_level_shares, plan_stress_intensity, Device, ReplanEvent};
 pub use loadgen::{pick_class, Request, Trace};
-pub use router::{policy_from_name, LeastLoaded, RoundRobin, RoutePolicy, WearLeveling};
+pub use router::{
+    policy_from_name, LeastLoaded, NodeSnapshot, RoundRobin, RoutePolicy, WearLeveling,
+};
 pub use telemetry::{DeviceTelemetry, FleetTelemetry, QualitySample, JOULES_PER_ENERGY_UNIT};
 
 use std::sync::Arc;
@@ -230,6 +232,9 @@ pub struct Router {
     replan_events: Vec<ReplanEvent>,
     /// Quality-vs-age samples accumulated during the last run.
     quality_curve: Vec<QualitySample>,
+    /// Reusable scratch for the per-request [`NodeSnapshot`] slice handed
+    /// to the policy — keeps the routing hot loop allocation-free.
+    snap_buf: Vec<NodeSnapshot>,
 }
 
 /// Outcome of the virtual-time replay, before inference/telemetry.
@@ -276,6 +281,7 @@ impl Router {
             adaptive: None,
             replan_events: Vec::new(),
             quality_curve: Vec::new(),
+            snap_buf: Vec::new(),
         })
     }
 
@@ -361,7 +367,16 @@ impl Router {
 
     fn dispatch(&mut self, arrival: f64, class: usize) -> (usize, f64) {
         let rel = self.rel_intensity(class);
-        let d = self.policy.pick(arrival, class, rel, &self.devices);
+        // Policies see plain snapshots (the same view the live shard
+        // router feeds them), not the simulator's Devices.
+        self.snap_buf.clear();
+        self.snap_buf.extend(self.devices.iter().map(|d| NodeSnapshot {
+            id: d.id,
+            backlog_seconds: d.backlog_seconds(arrival),
+            headroom_x: d.headroom_x(),
+            generation: d.generation(),
+        }));
+        let d = self.policy.pick(arrival, class, rel, &self.snap_buf);
         let d = d.min(self.devices.len() - 1);
         let done =
             self.devices[d].serve(arrival, class, self.cfg.service_seconds, self.cfg.wear_accel);

@@ -16,15 +16,39 @@
 
 use anyhow::Result;
 
-use super::device::Device;
+/// What a routing policy sees of one routable node — a plain snapshot, so
+/// the same policies drive both the fleet *simulator*'s [`Device`]s and the
+/// serving stack's live [`server::shard`](crate::server::shard) engines.
+/// The fleet fills these from virtual-time queue state; the shard router
+/// fills them from real queue depths and real accrued wear.
+///
+/// [`Device`]: super::device::Device
+#[derive(Clone, Copy, Debug)]
+pub struct NodeSnapshot {
+    /// Stable node id; ties and fallbacks resolve toward the lowest id so
+    /// every policy stays deterministic.
+    pub id: usize,
+    /// Seconds of queued work ahead of a request arriving now.
+    pub backlog_seconds: f64,
+    /// Remaining stress headroom (see
+    /// [`StressAccount::headroom_x`](crate::aging::StressAccount::headroom_x)).
+    /// Nodes without a wear ledger report a constant (e.g. 1.0).
+    pub headroom_x: f64,
+    /// Plan generation. The generation-aware wear-leveler re-ranks
+    /// immediately when any node's moves.
+    pub generation: u64,
+}
 
-/// A routing policy: given the virtual time, the request's quality class
-/// and its *relative* stress intensity (this class's aging rate divided by
-/// the harshest class's — 1.0 for the all-nominal plan, ≈ 0 for an
-/// aggressive-VOS plan), pick the device to serve it.
+/// A routing policy: given the time (virtual or wall seconds), the
+/// request's quality class and its *relative* stress intensity (this
+/// class's aging rate divided by the harshest class's — 1.0 for the
+/// all-nominal plan, ≈ 0 for an aggressive-VOS plan), pick the node to
+/// serve it. Returns a node *id* (policies treat slice position and id as
+/// interchangeable; callers pass nodes ordered by id).
 pub trait RoutePolicy: Send {
     fn name(&self) -> &'static str;
-    fn pick(&mut self, now: f64, class: usize, rel_intensity: f64, devices: &[Device]) -> usize;
+    fn pick(&mut self, now: f64, class: usize, rel_intensity: f64, nodes: &[NodeSnapshot])
+        -> usize;
 }
 
 /// Devices take strict turns, ignoring load and wear.
@@ -38,14 +62,14 @@ impl RoutePolicy for RoundRobin {
         "round_robin"
     }
 
-    fn pick(&mut self, _now: f64, _class: usize, _rel: f64, devices: &[Device]) -> usize {
-        let d = self.next % devices.len();
+    fn pick(&mut self, _now: f64, _class: usize, _rel: f64, nodes: &[NodeSnapshot]) -> usize {
+        let d = nodes[self.next % nodes.len()].id;
         self.next = self.next.wrapping_add(1);
         d
     }
 }
 
-/// Route to the device with the smallest backlog (ties → lowest id).
+/// Route to the node with the smallest backlog (ties → lowest id).
 #[derive(Default)]
 pub struct LeastLoaded;
 
@@ -54,19 +78,18 @@ impl RoutePolicy for LeastLoaded {
         "least_loaded"
     }
 
-    fn pick(&mut self, now: f64, _class: usize, _rel: f64, devices: &[Device]) -> usize {
-        argmin_backlog(now, devices)
+    fn pick(&mut self, _now: f64, _class: usize, _rel: f64, nodes: &[NodeSnapshot]) -> usize {
+        argmin_backlog(nodes)
     }
 }
 
-fn argmin_backlog(now: f64, devices: &[Device]) -> usize {
+fn argmin_backlog(nodes: &[NodeSnapshot]) -> usize {
     let mut best = 0;
     let mut best_b = f64::INFINITY;
-    for d in devices {
-        let b = d.backlog_seconds(now);
-        if b < best_b {
-            best_b = b;
-            best = d.id;
+    for n in nodes {
+        if n.backlog_seconds < best_b {
+            best_b = n.backlog_seconds;
+            best = n.id;
         }
     }
     best
@@ -102,7 +125,7 @@ pub struct WearLeveling {
     /// Picks between headroom re-rankings (plan-rotation granularity).
     pub rebalance_every: u64,
     picks: u64,
-    /// Device ids sorted by headroom ascending (most worn first).
+    /// Node positions sorted by headroom ascending (most worn first).
     ranking: Vec<usize>,
     /// Sum of device plan generations at the last re-ranking. A re-plan
     /// changes a device's voltage mix (and thus how fast each traffic
@@ -129,17 +152,17 @@ impl WearLeveling {
         }
     }
 
-    fn rerank(&mut self, devices: &[Device]) {
-        let mut ids: Vec<usize> = (0..devices.len()).collect();
+    fn rerank(&mut self, nodes: &[NodeSnapshot]) {
+        let mut ids: Vec<usize> = (0..nodes.len()).collect();
         // Total order: headroom, then id — deterministic and NaN-free.
         ids.sort_by(|&a, &b| {
-            devices[a]
-                .headroom_x()
-                .total_cmp(&devices[b].headroom_x())
+            nodes[a]
+                .headroom_x
+                .total_cmp(&nodes[b].headroom_x)
                 .then(a.cmp(&b))
         });
         self.ranking = ids;
-        self.gen_sum = devices.iter().map(|d| d.generation()).sum();
+        self.gen_sum = nodes.iter().map(|n| n.generation).sum();
     }
 }
 
@@ -154,31 +177,31 @@ impl RoutePolicy for WearLeveling {
         "wear_leveling"
     }
 
-    fn pick(&mut self, now: f64, _class: usize, rel: f64, devices: &[Device]) -> usize {
-        let gen_sum: u64 = devices.iter().map(|d| d.generation()).sum();
+    fn pick(&mut self, _now: f64, _class: usize, rel: f64, nodes: &[NodeSnapshot]) -> usize {
+        let gen_sum: u64 = nodes.iter().map(|n| n.generation).sum();
         if self.picks % self.rebalance_every == 0
-            || self.ranking.len() != devices.len()
+            || self.ranking.len() != nodes.len()
             || gen_sum != self.gen_sum
         {
-            self.rerank(devices);
+            self.rerank(nodes);
         }
         self.picks += 1;
-        let min_backlog = devices
+        let min_backlog = nodes
             .iter()
-            .map(|d| d.backlog_seconds(now))
+            .map(|n| n.backlog_seconds)
             .fold(f64::INFINITY, f64::min);
         let limit = min_backlog + self.slack_seconds;
-        let eligible = |id: usize| devices[id].backlog_seconds(now) <= limit;
+        let eligible = |i: usize| nodes[i].backlog_seconds <= limit;
         let pick = if rel >= Self::GENTLE_THRESHOLD {
             // Stress-bearing traffic → most headroom (fresh end).
-            self.ranking.iter().rev().find(|&&id| eligible(id))
+            self.ranking.iter().rev().find(|&&i| eligible(i))
         } else {
-            // Gentle traffic → most worn device that isn't overloaded.
-            self.ranking.iter().find(|&&id| eligible(id))
+            // Gentle traffic → most worn node that isn't overloaded.
+            self.ranking.iter().find(|&&i| eligible(i))
         };
-        // The argmin-backlog device is always eligible, so `pick` is Some;
+        // The argmin-backlog node is always eligible, so `pick` is Some;
         // the fallback only guards an empty fleet upstream bugs would hit.
-        pick.copied().unwrap_or(0)
+        pick.map(|&i| nodes[i].id).unwrap_or(0)
     }
 }
 

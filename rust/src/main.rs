@@ -34,7 +34,8 @@ use xtpu::coordinator::Pipeline;
 use xtpu::errormodel::{CharacterizeOptions, ErrorModelRegistry};
 use xtpu::exec::Backend;
 use xtpu::plan::{Planner, VoltagePlan};
-use xtpu::server::{BatchPolicy, Client, Engine, Server};
+use xtpu::server::shard::WearConfig;
+use xtpu::server::{BatchPolicy, Client, Engine, FrontendMode, FrontendOptions, Server};
 use xtpu::simulator::{ErrorInjector, XTpu};
 use xtpu::timing::sta::ChipInstance;
 use xtpu::timing::voltage::{Technology, VoltageLadder};
@@ -551,12 +552,38 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 "quality levels to solve at startup (ignored with --plan)",
             ),
             OptSpec::opt("max-batch", "16", "dynamic batch size"),
-            OptSpec::opt("workers", "0", "batch worker threads (0 = auto)"),
+            OptSpec::opt("workers", "0", "batch worker threads per shard (0 = auto)"),
             OptSpec::opt(
                 "plan",
                 "",
                 "pre-solved VoltagePlan file(s) from `xtpu plan`; repeat or \
                  comma-separate. Uses the plans' embedded config; no solving at startup",
+            ),
+            OptSpec::opt("frontend", "threaded", "connection frontend: threaded|evented"),
+            OptSpec::opt(
+                "slo-ms",
+                "0",
+                "latency SLO in milliseconds (0 = none): requests the admission \
+                 gate cannot serve in time are shed with a typed error line",
+            ),
+            OptSpec::opt("shards", "1", "engine shards serving the model"),
+            OptSpec::opt("max-conns", "1024", "concurrent connection cap"),
+            OptSpec::opt("max-queue", "4096", "queued-request cap (admission gate)"),
+            OptSpec::opt(
+                "route",
+                "round-robin",
+                "shard routing policy: round-robin|least-loaded|wear-level",
+            ),
+            OptSpec::opt(
+                "shard-ages",
+                "",
+                "prior service years per shard, comma-separated (enables live \
+                 wear accounting; wear-level routing then steers on real headroom)",
+            ),
+            OptSpec::opt(
+                "wear-accel",
+                "1e6",
+                "wear-clock acceleration for live stress accounting",
             ),
             OptSpec::flag("smoke", "serve one self-issued request per level, then exit"),
         ],
@@ -570,7 +597,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let trained = planner.trained()?;
     let quantized = trained.quantized.clone();
     let input_dim = trained.model.input.numel();
-    let engine = Engine::from_plans(quantized, &registry, &plans, input_dim)?;
+    let engine = Engine::from_plans(quantized.clone(), &registry, &plans, input_dim)?;
     for (i, l) in engine.plan_set().levels.iter().enumerate() {
         println!("quality {i}: {} (saving {:.1}%)", l.name, l.energy_saving * 100.0);
     }
@@ -580,15 +607,52 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         workers: args.usize("workers")?,
         ..Default::default()
     };
-    // Share-nothing pool: one backend instance per batch worker, so
-    // concurrent batches at different quality levels never contend.
+    // Share-nothing pools: one backend instance per batch worker per
+    // shard, so concurrent batches never contend.
     let workers = policy.resolved_workers();
-    let pool = xtpu::plan::make_backend_pool(&planner.cfg, &registry, workers)?;
-    println!("execution backend: {} × {workers} workers", pool[0].name());
     let n_levels = engine.num_levels();
-    let engine = engine.with_backend_pool(pool);
-    let mut server = Server::spawn(engine, args.usize("port")? as u16, policy)?;
-    println!("serving on {}", server.addr);
+    let n_shards = args.usize("shards")?.max(1);
+    let mut engines = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let pool = xtpu::plan::make_backend_pool(&planner.cfg, &registry, workers)?;
+        if engines.is_empty() {
+            println!(
+                "execution backend: {} × {workers} workers × {n_shards} shard(s)",
+                pool[0].name()
+            );
+        }
+        let e = Engine::from_plans(quantized.clone(), &registry, &plans, input_dim)?
+            .with_backend_pool(pool);
+        engines.push(std::sync::Arc::new(e));
+    }
+    let shard_ages = args.f64_list("shard-ages")?;
+    let wear_accel = args.f64("wear-accel")?;
+    let route_name = args.str("route").to_string();
+    // Wear ledgers whenever the operator asked for them (ages) or the
+    // routing policy needs them (wear-level steers on real headroom).
+    let wear = (!shard_ages.is_empty() || route_name.contains("wear")).then(|| {
+        let mut w = WearConfig::new(plans.clone());
+        w.wear_accel = wear_accel;
+        w.initial_age_years = shard_ages.clone();
+        w
+    });
+    let slo_ms = args.f64("slo-ms")?;
+    let opts = FrontendOptions {
+        mode: FrontendMode::from_name(args.str("frontend"))?,
+        slo: (slo_ms > 0.0).then(|| std::time::Duration::from_secs_f64(slo_ms / 1e3)),
+        max_conns: args.usize("max-conns")?,
+        max_queue: args.usize("max-queue")?,
+        route: Some(policy_from_name(&route_name)?),
+        wear,
+    };
+    let frontend = opts.mode;
+    let mut server = Server::spawn_opts(engines, args.usize("port")? as u16, policy, opts)?;
+    println!(
+        "serving on {} ({frontend:?} frontend, {n_shards} shard(s), {} routing{})",
+        server.addr,
+        server.shards.policy_name(),
+        if slo_ms > 0.0 { format!(", SLO {slo_ms}ms") } else { String::new() }
+    );
     println!("protocol: {{\"pixels\": [f32 × {input_dim}], \"quality\": idx}} per line");
     if args.flag("smoke") {
         // CI self-test: one request per quality level, then the stats

@@ -6,6 +6,9 @@
 //!
 //! Protocol: newline-delimited JSON.
 //!   → {"pixels": [784 × f32], "quality": <level index>}
+//!     (optional `"deadline_ms"`: the request's latency budget — requests
+//!     the admission gate cannot serve in time get a typed
+//!     `{"error": "shed", ...}` line instead of a late answer)
 //!   ← {"class": c, "logits": [...], "quality": q, "generation": g}
 //!   (or {"error": "..."} when the serving batch failed — the connection
 //!   stays usable). `generation` is the hot-swappable plan set that served
@@ -15,42 +18,68 @@
 //! triggered) so concurrent clients share quantized forward passes, like a
 //! production serving stack would.
 //!
+//! ## Frontends
+//!
+//! Two interchangeable frontends accept traffic
+//! ([`FrontendOptions::mode`]), both feeding the same shard queues through
+//! the same [`shard::ShardSet`] admission gate, and producing bit-identical
+//! replies for well-formed traffic:
+//!
+//! - **threaded** (default): one handler thread per connection — simple,
+//!   debuggable, bounded by [`FrontendOptions::max_conns`] (excess accepts
+//!   get a typed `{"error": "overloaded"}` line instead of an unbounded
+//!   thread spawn);
+//! - **evented** ([`reactor`]): one readiness-driven thread multiplexing
+//!   thousands of nonblocking connections — the datacenter-scale mode.
+//!
+//! Multiple engine shards ([`Server::spawn_opts`]) serve one logical model
+//! with placement governed by a live [`crate::fleet::RoutePolicy`] —
+//! including wear-leveling over each shard's real accrued BTI stress (see
+//! [`shard`]).
+//!
 //! ## Threading model
 //!
 //! Three thread populations cooperate, with **no global lock on the
 //! inference hot path**:
 //!
-//! - one acceptor + one detached handler thread per connection (I/O only);
-//! - [`BatchPolicy::workers`] *batch workers*, each owning its own
-//!   [`Backend`] instance (from the [`Engine`]'s per-worker pool) and its
-//!   own RNG. Workers contend only on the job queue while *collecting* a
-//!   batch; execution runs unlocked, so batches at different quality
-//!   levels proceed concurrently ([`ServerStats::peak_concurrent_batches`]
-//!   observes the overlap).
+//! - the frontend threads above (I/O only);
+//! - [`BatchPolicy::workers`] *batch workers per shard*, each owning its
+//!   own [`Backend`] instance (from its [`Engine`]'s per-worker pool) and
+//!   its own RNG. Workers contend only on their shard's job queue while
+//!   *collecting* a batch; execution runs unlocked, so batches at
+//!   different quality levels proceed concurrently
+//!   ([`ServerStats::peak_concurrent_batches`] observes the overlap).
 //!
 //! Within one batch, the shared exec kernel additionally shards the matmul
 //! across `XTPU_THREADS` with deterministic per-shard RNG streams — a fixed
 //! seed produces bit-identical noisy outputs at any thread count (see
 //! [`crate::exec::kernel`]).
 
+pub mod reactor;
+pub mod shard;
+
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::errormodel::{ErrorModelRegistry, PlanMode};
 use crate::exec::{Backend, Exact};
+use crate::fleet::RoutePolicy;
 use crate::nn::quant::{NoiseSpec, QuantizedModel};
 use crate::nn::tensor::Tensor;
 use crate::plan::VoltagePlan;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
+use crate::util::stats::LatencyHistogram;
 use crate::util::threadpool;
+
+use shard::ShardSet;
 
 /// A quality level: pre-solved assignment → noise spec + energy saving.
 #[derive(Clone, Debug)]
@@ -380,11 +409,39 @@ fn levels_from_plans(
         .collect())
 }
 
-struct Job {
-    pixels: Vec<f32>,
-    quality: usize,
-    /// `(applied level, plan-set generation, logits)`.
-    reply: Sender<(usize, u64, Vec<f32>)>,
+/// One queued inference request (both frontends produce these; the
+/// [`shard::ShardSet`] admission gate is the only producer path).
+pub(crate) struct Job {
+    pub(crate) pixels: Vec<f32>,
+    pub(crate) quality: usize,
+    /// Absolute reply-by time (from the request's `deadline_ms` tag, or
+    /// the server SLO). Late replies are still delivered, but counted in
+    /// [`ServerStats::deadline_missed`].
+    pub(crate) deadline: Option<Instant>,
+    /// When the admission gate accepted the job — the latency clock.
+    pub(crate) enqueued: Instant,
+    pub(crate) reply: Reply,
+}
+
+/// Where a finished inference goes: the handler thread's blocking channel
+/// (threaded frontend) or the reactor's completion queue (evented
+/// frontend). Both carry `(applied level, plan-set generation, logits)`;
+/// both surface a dropped-without-answer reply (worker panic, shutdown
+/// drain) to the client as the same typed error line.
+pub(crate) enum Reply {
+    Channel(Sender<(usize, u64, Vec<f32>)>),
+    Evented(reactor::CompletionSink),
+}
+
+impl Reply {
+    fn send_ok(&mut self, level: usize, generation: u64, logits: Vec<f32>) {
+        match self {
+            Reply::Channel(tx) => {
+                let _ = tx.send((level, generation, logits));
+            }
+            Reply::Evented(sink) => sink.complete_ok(level, generation, logits),
+        }
+    }
 }
 
 /// Server statistics (exposed for tests/benches, and to clients via a
@@ -412,6 +469,30 @@ pub struct ServerStats {
     /// recovered its poisoned queue lock) instead of cascading the panic
     /// across the pool.
     pub worker_panics: AtomicU64,
+    /// Requests refused by the admission gate (queue-depth or deadline) —
+    /// each got a typed `{"error": "shed", ...}` line, never a hang.
+    /// `shed + requests` conserves everything the gate accepted or
+    /// refused.
+    pub shed: AtomicU64,
+    /// Replies delivered after their deadline (the reply still goes out;
+    /// an SLO miss is an observable, not a drop).
+    pub deadline_missed: AtomicU64,
+    /// Connections refused at the frontend's concurrency cap (typed
+    /// `{"error": "overloaded"}` line, then close).
+    pub conn_rejected: AtomicU64,
+    /// Jobs currently sitting in shard queues — the admission gate's
+    /// queue-depth view (incremented on submit, decremented when a batch
+    /// worker collects).
+    pub queued: AtomicU64,
+    /// EWMA per-request service time in nanoseconds (0 until the first
+    /// batch completes) — the deadline gate's wait estimator.
+    pub est_service_ns: AtomicU64,
+    /// End-to-end request latency (admission → reply serialization),
+    /// power-of-two µs buckets; p50/p99 are surfaced in stats replies.
+    pub latency: LatencyHistogram,
+    /// Requests routed per shard — the observable that shard placement
+    /// (round-robin fairness, wear-leveling steering) actually happened.
+    per_shard: Mutex<Vec<u64>>,
 }
 
 impl ServerStats {
@@ -435,6 +516,33 @@ impl ServerStats {
     fn record_generation(&self, generation: u64, requests: u64) {
         let mut map = self.per_generation.lock().unwrap_or_else(|e| e.into_inner());
         *map.entry(generation).or_insert(0) += requests;
+    }
+
+    pub(crate) fn init_shards(&self, n: usize) {
+        let mut counts = self.per_shard.lock().unwrap_or_else(|e| e.into_inner());
+        *counts = vec![0; n];
+    }
+
+    pub(crate) fn record_shard(&self, shard: usize) {
+        let mut counts = self.per_shard.lock().unwrap_or_else(|e| e.into_inner());
+        if shard >= counts.len() {
+            counts.resize(shard + 1, 0);
+        }
+        counts[shard] += 1;
+    }
+
+    /// Requests routed per shard (index = shard id).
+    pub fn per_shard_counts(&self) -> Vec<u64> {
+        self.per_shard.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Fold one measured per-request service time into the EWMA the
+    /// deadline gate uses (α = 1/8; single-writer precision is not needed
+    /// — any worker's recent observation is a fine estimate).
+    pub(crate) fn observe_service(&self, ns_per_request: u64) {
+        let old = self.est_service_ns.load(Ordering::Relaxed);
+        let new = if old == 0 { ns_per_request } else { old - old / 8 + ns_per_request / 8 };
+        self.est_service_ns.store(new, Ordering::Relaxed);
     }
 
     /// Snapshot as JSON — what the server returns for a stats request.
@@ -466,6 +574,24 @@ impl ServerStats {
                 "worker_panics",
                 Json::Num(self.worker_panics.load(Ordering::Relaxed) as f64),
             ),
+            ("shed", Json::Num(self.shed.load(Ordering::Relaxed) as f64)),
+            (
+                "deadline_missed",
+                Json::Num(self.deadline_missed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "conn_rejected",
+                Json::Num(self.conn_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            ("queued", Json::Num(self.queued.load(Ordering::Relaxed) as f64)),
+            ("latency_p50_us", Json::Num(self.latency.quantile_us(0.50) as f64)),
+            ("latency_p99_us", Json::Num(self.latency.quantile_us(0.99) as f64)),
+            (
+                "per_shard",
+                Json::Arr(
+                    self.per_shard_counts().iter().map(|&c| Json::Num(c as f64)).collect(),
+                ),
+            ),
         ])
     }
 }
@@ -473,9 +599,67 @@ impl ServerStats {
 pub struct Server {
     pub addr: std::net::SocketAddr,
     pub stats: Arc<ServerStats>,
+    /// The shard set serving this server — exposes per-shard wear
+    /// (`Shard::headroom_x`) and the routing policy for introspection.
+    pub shards: Arc<ShardSet>,
     shutdown: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
     batch_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Which frontend accepts traffic (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontendMode {
+    /// One handler thread per connection, capped at
+    /// [`FrontendOptions::max_conns`].
+    Threaded,
+    /// One readiness-driven reactor thread ([`reactor`]) multiplexing all
+    /// connections.
+    Evented,
+}
+
+impl FrontendMode {
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "threaded" => Ok(Self::Threaded),
+            "evented" => Ok(Self::Evented),
+            other => anyhow::bail!("unknown frontend '{other}' (threaded|evented)"),
+        }
+    }
+}
+
+/// Frontend + admission-control configuration for [`Server::spawn_opts`].
+/// The default reproduces the classic single-shard threaded server with
+/// generous caps and no SLO, so existing callers change nothing.
+pub struct FrontendOptions {
+    pub mode: FrontendMode,
+    /// Server-wide latency SLO: requests without their own `deadline_ms`
+    /// inherit this budget at the admission gate. `None` = no deadline
+    /// shedding (the queue-depth gate still applies).
+    pub slo: Option<Duration>,
+    /// Concurrent-connection cap (both frontends reject past it).
+    pub max_conns: usize,
+    /// Queue-depth cap across all shards — the backpressure gate.
+    pub max_queue: usize,
+    /// Shard routing policy (`None` = round-robin). Only consulted when
+    /// more than one engine shard is spawned.
+    pub route: Option<Box<dyn RoutePolicy>>,
+    /// Wear accounting for the shards (enables wear-leveling routing on
+    /// real accrued stress; see [`shard::WearConfig`]).
+    pub wear: Option<shard::WearConfig>,
+}
+
+impl Default for FrontendOptions {
+    fn default() -> Self {
+        Self {
+            mode: FrontendMode::Threaded,
+            slo: None,
+            max_conns: 1024,
+            max_queue: 4096,
+            route: None,
+            wear: None,
+        }
+    }
 }
 
 /// Batching parameters.
@@ -522,62 +706,123 @@ impl Server {
         port: u16,
         policy: BatchPolicy,
     ) -> Result<Server> {
+        Self::spawn_opts(vec![engine], port, policy, FrontendOptions::default())
+    }
+
+    /// Full-control entry point: several engine shards serving one logical
+    /// model, an explicit frontend, and admission control. All engines
+    /// must share input dimension and quality-level count.
+    pub fn spawn_opts(
+        engines: Vec<Arc<Engine>>,
+        port: u16,
+        policy: BatchPolicy,
+        opts: FrontendOptions,
+    ) -> Result<Server> {
         let listener =
             TcpListener::bind(("127.0.0.1", port)).context("binding server socket")?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(ServerStats::new(engine.num_levels()));
-        let (tx, rx) = channel::<Job>();
+        anyhow::ensure!(!engines.is_empty(), "server needs at least one engine shard");
+        let stats = Arc::new(ServerStats::new(engines[0].num_levels()));
+        let workers = policy.resolved_workers();
+        let route = opts
+            .route
+            .unwrap_or_else(|| Box::<crate::fleet::RoundRobin>::default());
+        let shards = ShardSet::new(
+            engines,
+            route,
+            opts.wear,
+            stats.clone(),
+            opts.max_queue,
+            opts.slo,
+            workers,
+        )?;
 
-        // Batch workers: each owns a backend handle from the engine's pool
-        // and a private RNG; they share only the job queue (collection) —
-        // execution is lock-free and concurrent.
-        let rx = Arc::new(Mutex::new(rx));
-        let batch_handles: Vec<_> = (0..policy.resolved_workers())
-            .map(|worker| {
+        // Batch workers: `workers` per shard, each owning a backend handle
+        // from its shard engine's pool and a private RNG; workers contend
+        // only on their shard's job queue (collection) — execution is
+        // lock-free and concurrent. The RNG seed depends on the *local*
+        // worker index only, so a single-shard server is bit-identical to
+        // the pre-shard code at any fixed seed.
+        let mut batch_handles = Vec::with_capacity(shards.len() * workers);
+        for shard_idx in 0..shards.len() {
+            for worker in 0..workers {
                 let shutdown = shutdown.clone();
                 let stats = stats.clone();
-                let engine = engine.clone();
-                let rx = rx.clone();
+                let shards = shards.clone();
                 let rng = Xoshiro256pp::seeded(
-                    (0x5E47E ^ 0x1234) ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    (0x5E47E ^ 0x1234)
+                        ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
                 );
-                std::thread::spawn(move || {
-                    batch_worker(engine, worker, rx, policy, shutdown, stats, rng)
-                })
-            })
-            .collect();
+                batch_handles.push(std::thread::spawn(move || {
+                    batch_worker(shards, shard_idx, worker, policy, shutdown, stats, rng)
+                }));
+            }
+        }
 
-        // Acceptor thread: one handler thread per connection. Handlers are
-        // detached — they exit when their client disconnects or the process
-        // ends; joining them here would deadlock shutdown against clients
-        // that keep their sockets open.
-        let accept_handle = {
-            let shutdown = shutdown.clone();
-            let stats = stats.clone();
-            std::thread::spawn(move || {
-                while !shutdown.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let tx = tx.clone();
-                            let stats = stats.clone();
-                            let shutdown = shutdown.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_connection(stream, tx, stats, shutdown);
-                            });
+        let accept_handle = match opts.mode {
+            // Threaded frontend: one handler thread per connection,
+            // bounded by `max_conns`. Handlers are detached — they exit
+            // when their client disconnects or the process ends; joining
+            // them here would deadlock shutdown against clients that keep
+            // their sockets open.
+            FrontendMode::Threaded => {
+                let shutdown = shutdown.clone();
+                let stats = stats.clone();
+                let shards = shards.clone();
+                let max_conns = opts.max_conns.max(1);
+                std::thread::spawn(move || {
+                    let active = Arc::new(AtomicUsize::new(0));
+                    while !shutdown.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if active.load(Ordering::Relaxed) >= max_conns {
+                                    stats.conn_rejected.fetch_add(1, Ordering::Relaxed);
+                                    reject_overloaded(stream, max_conns);
+                                    continue;
+                                }
+                                active.fetch_add(1, Ordering::SeqCst);
+                                let guard = HandlerGuard(active.clone());
+                                let shards = shards.clone();
+                                let stats = stats.clone();
+                                let shutdown = shutdown.clone();
+                                std::thread::spawn(move || {
+                                    let _guard = guard;
+                                    let _ = handle_connection(
+                                        stream, shards, stats, shutdown,
+                                    );
+                                });
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(_) => break,
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
                     }
-                }
-            })
+                })
+            }
+            // Evented frontend: the reactor owns the listener and every
+            // connection; batch workers hand results back through the
+            // completion queue (which wakes the reactor).
+            FrontendMode::Evented => {
+                let completions = reactor::new_completion_queue()?;
+                let shutdown = shutdown.clone();
+                let stats = stats.clone();
+                let shards = shards.clone();
+                let cfg = reactor::ReactorConfig {
+                    max_conns: opts.max_conns.max(1),
+                    ..Default::default()
+                };
+                std::thread::spawn(move || {
+                    reactor::run(listener, shards, completions, stats, shutdown, cfg)
+                })
+            }
         };
         Ok(Server {
             addr,
             stats,
+            shards,
             shutdown,
             accept_handle: Some(accept_handle),
             batch_handles,
@@ -642,19 +887,24 @@ fn collect_batch(rx: &Mutex<Receiver<Job>>, policy: &BatchPolicy) -> Vec<Job> {
 /// worker keeps serving — it neither dies nor poisons the shared queue
 /// lock for its peers.
 fn batch_worker(
-    engine: Arc<Engine>,
+    shards: Arc<ShardSet>,
+    shard_idx: usize,
     worker: usize,
-    rx: Arc<Mutex<Receiver<Job>>>,
     policy: BatchPolicy,
     shutdown: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
     mut rng: Xoshiro256pp,
 ) {
+    let shard = shards.shards()[shard_idx].clone();
+    let engine = shard.engine.clone();
     while !shutdown.load(Ordering::Relaxed) {
-        let jobs = collect_batch(&rx, &policy);
+        let mut jobs = collect_batch(&shard.rx, &policy);
         if jobs.is_empty() {
             continue;
         }
+        // The collected jobs left the queue — shrink the admission gate's
+        // depth view before the (possibly long) execution.
+        shards.note_collected(shard_idx, jobs.len() as u64);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         let inflight = stats.inflight_batches.fetch_add(1, Ordering::SeqCst) + 1;
@@ -670,6 +920,7 @@ fn batch_worker(
             // Batch assembly is inside the catch too: a malformed request
             // (wrong pixel count) panics `copy_from_slice`, and that must
             // cost one error reply, not a worker thread.
+            let started = Instant::now();
             let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
                 for (r, &i) in idxs.iter().enumerate() {
@@ -680,31 +931,73 @@ fn batch_worker(
             let logits = match executed {
                 Ok(logits) => logits,
                 Err(_) => {
-                    // Dropping the senders below (jobs go out of scope
-                    // un-replied at the end of the batch) surfaces the
-                    // failure to each affected client as an error line.
-                    // The failed requests are still attributed to this
-                    // generation so per_generation conserves `requests`
-                    // (which counted them at collection); per_level only
-                    // counts *served* requests, so it is skipped.
+                    // Dropping the replies below (jobs go out of scope
+                    // un-answered at the end of the batch — for evented
+                    // requests the sink's `Drop` pushes an error
+                    // completion) surfaces the failure to each affected
+                    // client as an error line. The failed requests are
+                    // still attributed to this generation so
+                    // per_generation conserves `requests` (which counted
+                    // them at collection); per_level only counts *served*
+                    // requests, so it is skipped.
                     stats.worker_panics.fetch_add(1, Ordering::Relaxed);
                     stats.record_generation(set.generation, idxs.len() as u64);
                     continue;
                 }
             };
+            let exec = started.elapsed();
+            // Feed the admission gate's estimators and this shard's wear
+            // ledger with the measured execution cost.
+            stats.observe_service(
+                ((exec.as_nanos() / idxs.len().max(1) as u128).min(u64::MAX as u128)
+                    as u64)
+                    .max(1),
+            );
+            shard.record_service(level, exec.as_secs_f64());
             stats.record_level(level, idxs.len() as u64);
             stats.record_generation(set.generation, idxs.len() as u64);
+            let replied = Instant::now();
             for (r, &i) in idxs.iter().enumerate() {
-                let _ = jobs[i].reply.send((level, set.generation, logits.row(r).to_vec()));
+                jobs[i].reply.send_ok(level, set.generation, logits.row(r).to_vec());
+                let waited = replied.duration_since(jobs[i].enqueued);
+                stats
+                    .latency
+                    .record_us(waited.as_micros().min(u64::MAX as u128) as u64);
+                if jobs[i].deadline.is_some_and(|d| replied > d) {
+                    stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
         stats.inflight_batches.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
+/// Decrements the threaded frontend's active-handler count when a handler
+/// thread exits, however it exits.
+struct HandlerGuard(Arc<AtomicUsize>);
+
+impl Drop for HandlerGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Best-effort typed rejection for a connection past the threaded
+/// frontend's cap; blocking with a short timeout is fine because we close
+/// immediately after.
+fn reject_overloaded(mut stream: TcpStream, cap: usize) {
+    let line = Json::obj(vec![
+        ("error", Json::Str("overloaded".into())),
+        ("max_conns", Json::Num(cap as f64)),
+    ]);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.write_all(line.to_string().as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
 fn handle_connection(
     stream: TcpStream,
-    tx: Sender<Job>,
+    shards: Arc<ShardSet>,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
@@ -751,9 +1044,20 @@ fn handle_connection(
             .map(|&v| v as f32)
             .collect();
         let quality = req.opt("quality").map(|v| v.as_usize()).transpose()?.unwrap_or(0);
+        let deadline_ms = req.opt("deadline_ms").and_then(|v| v.as_f64().ok());
         let (reply_tx, reply_rx) = channel();
-        tx.send(Job { pixels, quality, reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        match shards.submit(pixels, quality, deadline_ms, Reply::Channel(reply_tx)) {
+            Ok(()) => {}
+            Err(shard::Shed::Stopped) => anyhow::bail!("engine stopped"),
+            Err(shed) => {
+                // Admission refused: answer with the typed shed line and
+                // keep the connection — the client may retry or back off.
+                writer.write_all(shed.to_json().to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                continue;
+            }
+        }
         let (level, generation, logits) = match reply_rx.recv_timeout(Duration::from_secs(30))
         {
             Ok(reply) => reply,
@@ -859,6 +1163,19 @@ impl Client {
         Ok((class, logits, applied, generation))
     }
 
+    /// Send one raw request line (no trailing newline) and parse the
+    /// single reply line — the escape hatch for protocol-level tests and
+    /// deadline-tagged (`"deadline_ms"`) requests.
+    pub fn request_line(&mut self, line: &str) -> Result<Json> {
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut reply = String::new();
+        reader.read_line(&mut reply)?;
+        Json::parse(&reply)
+    }
+
     /// Fetch the server's stats snapshot (`{"stats": true}` request).
     pub fn stats(&mut self) -> Result<Json> {
         self.stream.write_all(b"{\"stats\": true}\n")?;
@@ -870,16 +1187,18 @@ impl Client {
     }
 }
 
+/// Shared fixtures for the server-side unit tests (`server::tests`,
+/// `server::shard::tests`) — a small trained engine and matching voltage
+/// plans, kept here so sibling modules don't each re-train a model.
 #[cfg(test)]
-mod tests {
+pub(crate) mod testutil {
     use super::*;
     use crate::nn::data::synth_mnist;
     use crate::nn::layers::Activation;
     use crate::nn::model::fc_mnist;
-    use crate::nn::quant::QuantizedModel;
     use crate::nn::train::{train, TrainConfig};
 
-    fn test_engine() -> (Engine, crate::nn::data::Dataset) {
+    pub(crate) fn test_engine() -> (Engine, crate::nn::data::Dataset) {
         let mut rng = Xoshiro256pp::seeded(1);
         let mut model = fc_mnist(Activation::Relu, &mut rng);
         let train_set = synth_mnist(400, 5);
@@ -903,6 +1222,49 @@ mod tests {
         ];
         (Engine::new(q, levels, 784).unwrap(), test)
     }
+
+    /// Voltage plans mirroring the test engine's two levels: level 0 an
+    /// all-nominal "exact" plan, level 1 an aggressive-VOS "eco" plan —
+    /// just enough provenance (volts + per-neuron level + fan-in) for the
+    /// wear accounting in [`shard::WearConfig`].
+    pub(crate) fn test_plans(engine: &Engine) -> Vec<VoltagePlan> {
+        use crate::config::ExperimentConfig;
+        use crate::timing::voltage::VoltageLadder;
+        let q = &engine.quantized;
+        let n = q.num_neurons();
+        let cfg = ExperimentConfig::smoke();
+        let volts: Vec<f64> =
+            VoltageLadder::paper_default().levels().iter().map(|l| l.volts).collect();
+        let top = volts.len() - 1;
+        let mk = |name: &str, level: Vec<usize>, saving: f64| VoltagePlan {
+            name: name.into(),
+            mse_ub_fraction: 1.0,
+            budget_abs: 0.1,
+            baseline_mse: 0.1,
+            fan_in: q.neuron_fan_in.clone(),
+            es: vec![1.0; n],
+            volts: volts.clone(),
+            predicted_mse: 0.0,
+            energy: 1.0,
+            energy_saving: saving,
+            optimal: true,
+            solver: "ilp".into(),
+            model_fingerprint: "fp".into(),
+            config_hash: crate::plan::config_hash(&cfg),
+            config: cfg.clone(),
+            generation: 0,
+            drift_delta_vth: 0.0,
+            mode: "statistical".into(),
+            level,
+        };
+        vec![mk("exact", vec![top; n], 0.0), mk("eco", vec![0; n], 0.35)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::test_engine;
+    use super::*;
 
     #[test]
     fn energy_estimates_follow_levels() {

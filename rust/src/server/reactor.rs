@@ -1,0 +1,720 @@
+//! Readiness-driven (evented) serving frontend.
+//!
+//! One reactor thread multiplexes thousands of nonblocking TCP
+//! connections onto the existing batch-worker queues — no thread per
+//! client, no blocking read anywhere on the data path. The loop is the
+//! classic epoll shape, hand-rolled over `std::net` (the only FFI is the
+//! three `epoll` syscalls on Linux; everywhere else a portable
+//! scan-poller over nonblocking sockets keeps the exact same semantics):
+//!
+//! 1. wait for readiness events (or a waker byte from a batch worker),
+//! 2. accept-drain the listener (over [`ReactorConfig::max_conns`] →
+//!    typed `{"error":"overloaded"}` line and close),
+//! 3. read-drain ready connections into per-connection buffers, split
+//!    newline-delimited requests, parse the optional `"deadline_ms"` tag
+//!    and hand each request to the shared [`ShardSet`] admission gate —
+//!    shed requests are answered inline with the typed shed line,
+//! 4. drain the completion queue batch workers fill, serialize replies
+//!    (bit-identical to the threaded frontend's — same fields, same
+//!    canonical key order) into per-connection write buffers,
+//! 5. flush what the sockets will take, keeping `EPOLLOUT` interest only
+//!    while a write buffer is non-empty.
+//!
+//! Slow or hostile clients cost memory, never a thread: a connection that
+//! feeds bytes without a newline is capped at
+//! [`ReactorConfig::max_line_bytes`] (slow-loris bound), and one that
+//! stops reading its replies is closed once its write buffer exceeds
+//! [`ReactorConfig::max_wbuf_bytes`].
+//!
+//! Divergence from the threaded frontend: a malformed line gets a typed
+//! `{"error":"bad request...}` reply and the connection *stays open*
+//! (the threaded path, which dedicates a thread, bails). Well-formed
+//! traffic behaves identically on both.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::shard::ShardSet;
+use super::ServerStats;
+use crate::util::json::Json;
+use crate::util::stats::argmax_f32;
+
+/// Raw `epoll` bindings — Linux only, and only the three syscalls the
+/// reactor needs. Kept private so the rest of the crate sees only the
+/// portable [`Poller`].
+#[cfg(target_os = "linux")]
+mod epoll_sys {
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    /// Mirror of the kernel's `struct epoll_event`; packed on x86-64 only
+    /// (the kernel packs it there so 32/64-bit layouts agree).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+    }
+}
+
+/// One readiness report: a registered token plus what it is ready for.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error/hangup — the connection should be torn down.
+    pub closed: bool,
+}
+
+#[cfg(target_os = "linux")]
+struct EpollPoller {
+    epfd: std::os::fd::OwnedFd,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollPoller {
+    fn new() -> Result<Self> {
+        use std::os::fd::FromRawFd;
+        // SAFETY: epoll_create1 returns a fresh fd (or -1); ownership is
+        // transferred straight into OwnedFd, which closes it on drop.
+        let fd = unsafe { epoll_sys::epoll_create1(epoll_sys::EPOLL_CLOEXEC) };
+        anyhow::ensure!(fd >= 0, "epoll_create1: {}", std::io::Error::last_os_error());
+        Ok(Self { epfd: unsafe { std::os::fd::OwnedFd::from_raw_fd(fd) } })
+    }
+
+    fn ctl(&self, op: i32, fd: i32, token: u64, interest: u32) -> Result<()> {
+        use std::os::fd::AsRawFd;
+        let mut ev = epoll_sys::EpollEvent { events: interest, data: token };
+        // SAFETY: `ev` is a valid epoll_event for the duration of the call;
+        // DEL ignores it.
+        let rc = unsafe { epoll_sys::epoll_ctl(self.epfd.as_raw_fd(), op, fd, &mut ev) };
+        anyhow::ensure!(rc == 0, "epoll_ctl: {}", std::io::Error::last_os_error());
+        Ok(())
+    }
+
+    fn wait(&self, out: &mut Vec<Event>, timeout: Duration) -> Result<()> {
+        use std::os::fd::AsRawFd;
+        const CAP: usize = 1024;
+        let mut buf = [epoll_sys::EpollEvent { events: 0, data: 0 }; CAP];
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        // SAFETY: `buf` holds CAP writable epoll_event slots.
+        let n = unsafe {
+            epoll_sys::epoll_wait(self.epfd.as_raw_fd(), buf.as_mut_ptr(), CAP as i32, ms)
+        };
+        if n < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(()); // EINTR: spurious wakeup, not an error
+            }
+            return Err(err).context("epoll_wait");
+        }
+        for ev in buf.iter().take(n as usize) {
+            // Copy packed fields by value — never take references into a
+            // possibly-packed struct.
+            let events = { ev.events };
+            let token = { ev.data };
+            out.push(Event {
+                token,
+                readable: events & (epoll_sys::EPOLLIN | epoll_sys::EPOLLRDHUP) != 0,
+                writable: events & epoll_sys::EPOLLOUT != 0,
+                closed: events & (epoll_sys::EPOLLERR | epoll_sys::EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Portable fallback poller: sleeps briefly, then reports every
+/// registered token as both readable and writable. Correctness comes from
+/// the sockets being nonblocking — a "ready" socket with nothing to read
+/// just returns `WouldBlock` — at the cost of wakeups proportional to
+/// registered connections. Linux gets real epoll; this keeps every other
+/// platform (and `XTPU_POLLER=scan` test runs) on identical semantics.
+struct ScanPoller {
+    tokens: Vec<u64>,
+}
+
+impl ScanPoller {
+    fn new() -> Self {
+        Self { tokens: Vec::new() }
+    }
+
+    fn wait(&self, out: &mut Vec<Event>, timeout: Duration) {
+        std::thread::sleep(timeout.min(Duration::from_millis(2)));
+        for &token in &self.tokens {
+            out.push(Event { token, readable: true, writable: true, closed: false });
+        }
+    }
+}
+
+/// The reactor's readiness source: real epoll on Linux, the scan fallback
+/// elsewhere (or anywhere, via `XTPU_POLLER=scan`).
+enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(EpollPoller),
+    Scan(ScanPoller),
+}
+
+impl Poller {
+    fn new() -> Result<Self> {
+        if std::env::var("XTPU_POLLER").is_ok_and(|v| v == "scan") {
+            return Ok(Poller::Scan(ScanPoller::new()));
+        }
+        #[cfg(target_os = "linux")]
+        let poller = Poller::Epoll(EpollPoller::new()?);
+        #[cfg(not(target_os = "linux"))]
+        let poller = Poller::Scan(ScanPoller::new());
+        Ok(poller)
+    }
+
+    fn register(&mut self, fd: i32, token: u64) -> Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(
+                epoll_sys::EPOLL_CTL_ADD,
+                fd,
+                token,
+                epoll_sys::EPOLLIN | epoll_sys::EPOLLRDHUP,
+            ),
+            Poller::Scan(p) => {
+                p.tokens.push(token);
+                Ok(())
+            }
+        }
+    }
+
+    /// Toggle write-readiness interest (read interest is permanent).
+    fn set_writable(&mut self, fd: i32, token: u64, want_write: bool) -> Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => {
+                let mut interest = epoll_sys::EPOLLIN | epoll_sys::EPOLLRDHUP;
+                if want_write {
+                    interest |= epoll_sys::EPOLLOUT;
+                }
+                p.ctl(epoll_sys::EPOLL_CTL_MOD, fd, token, interest)
+            }
+            Poller::Scan(_) => Ok(()),
+        }
+    }
+
+    fn deregister(&mut self, fd: i32, token: u64) -> Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(epoll_sys::EPOLL_CTL_DEL, fd, token, 0),
+            Poller::Scan(p) => {
+                p.tokens.retain(|&t| t != token);
+                Ok(())
+            }
+        }
+    }
+
+    fn wait(&self, out: &mut Vec<Event>, timeout: Duration) -> Result<()> {
+        out.clear();
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.wait(out, timeout),
+            Poller::Scan(p) => {
+                p.wait(out, timeout);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Wakes the reactor from `wait` when a batch worker finishes a job —
+/// a loopback TCP pair, so it works with both pollers and needs no FFI.
+/// Workers write one byte (best-effort; a full pipe already guarantees a
+/// pending wakeup), the reactor drains.
+pub(crate) struct Waker {
+    tx: TcpStream,
+    rx: TcpStream,
+}
+
+impl Waker {
+    fn new() -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("waker bind")?;
+        let addr = listener.local_addr()?;
+        let tx = TcpStream::connect(addr).context("waker connect")?;
+        let (rx, _) = listener.accept().context("waker accept")?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        tx.set_nodelay(true)?;
+        Ok(Self { tx, rx })
+    }
+
+    pub(crate) fn wake(&self) {
+        // `Write for &TcpStream` — shared-ref writes are thread-safe.
+        // WouldBlock means the pipe is full: a wakeup is already pending.
+        let _ = (&self.tx).write(&[1u8]);
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 256];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+/// One finished (or failed) inference, keyed to the connection awaiting
+/// it. `Err(())` means the worker died or the server is stopping — the
+/// connection gets the same typed error line the threaded frontend sends.
+pub(crate) struct Completion {
+    pub conn: u64,
+    pub result: Result<(usize, u64, Vec<f32>), ()>,
+}
+
+/// Where batch workers deposit evented completions; the reactor drains it
+/// every tick.
+pub(crate) struct CompletionQueue {
+    pub(crate) done: Mutex<Vec<Completion>>,
+    pub(crate) waker: Waker,
+}
+
+impl CompletionQueue {
+    fn push(&self, c: Completion) {
+        self.done.lock().unwrap_or_else(|e| e.into_inner()).push(c);
+        self.waker.wake();
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        let mut g = self.done.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *g)
+    }
+}
+
+/// The per-job reply route for evented requests. Guarantees exactly one
+/// completion per submitted job: if the holder (a batch worker) drops it
+/// without answering — worker panic, shutdown drain — `Drop` pushes the
+/// error completion, mirroring the threaded path's `Disconnected` reply.
+pub(crate) struct CompletionSink {
+    queue: Arc<CompletionQueue>,
+    conn: u64,
+    done: bool,
+}
+
+impl CompletionSink {
+    pub(crate) fn complete_ok(&mut self, level: usize, generation: u64, logits: Vec<f32>) {
+        self.done = true;
+        self.queue.push(Completion {
+            conn: self.conn,
+            result: Ok((level, generation, logits)),
+        });
+    }
+}
+
+impl Drop for CompletionSink {
+    fn drop(&mut self) {
+        if !self.done {
+            self.queue.push(Completion { conn: self.conn, result: Err(()) });
+        }
+    }
+}
+
+/// One live client connection.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes received but not yet terminated by a newline.
+    rbuf: Vec<u8>,
+    /// Serialized replies not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// Whether EPOLLOUT interest is currently registered.
+    want_write: bool,
+    /// Replies submitted to workers and not yet answered. A connection
+    /// closed by the peer stays tracked until these drain (completions
+    /// for a gone connection are dropped, not delivered to a stranger).
+    pending: usize,
+    /// Peer closed or errored; tear down once `pending` reaches zero.
+    closing: bool,
+}
+
+/// Evented-frontend tuning knobs (all have serviceable defaults).
+#[derive(Clone, Debug)]
+pub struct ReactorConfig {
+    /// Concurrent connection cap; excess accepts get a typed
+    /// `{"error":"overloaded"}` line and an immediate close.
+    pub max_conns: usize,
+    /// Per-connection cap on buffered bytes without a newline — the
+    /// slow-loris bound.
+    pub max_line_bytes: usize,
+    /// Per-connection cap on unflushed reply bytes; a client that stops
+    /// reading is disconnected rather than ballooning memory.
+    pub max_wbuf_bytes: usize,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: 16384,
+            max_line_bytes: 1 << 20,
+            max_wbuf_bytes: 4 << 20,
+        }
+    }
+}
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_FIRST_CONN: u64 = 2;
+
+/// Reactor entry point — runs on the frontend thread until `shutdown`.
+/// Fatal setup/loop errors are reported on stderr; per-connection errors
+/// only ever close that connection.
+pub(crate) fn run(
+    listener: TcpListener,
+    shards: Arc<ShardSet>,
+    completions: Arc<CompletionQueue>,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+    cfg: ReactorConfig,
+) {
+    if let Err(e) = run_inner(listener, shards, completions, stats, shutdown, cfg) {
+        eprintln!("[server] evented frontend failed: {e:#}");
+    }
+}
+
+fn run_inner(
+    listener: TcpListener,
+    shards: Arc<ShardSet>,
+    completions: Arc<CompletionQueue>,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+    cfg: ReactorConfig,
+) -> Result<()> {
+    use std::os::fd::AsRawFd;
+
+    listener.set_nonblocking(true)?;
+    let mut poller = Poller::new()?;
+    poller.register(listener.as_raw_fd(), TOKEN_LISTENER)?;
+    poller.register(completions.waker.rx.as_raw_fd(), TOKEN_WAKER)?;
+    let input_dim = shards.input_dim();
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = TOKEN_FIRST_CONN;
+    let mut events: Vec<Event> = Vec::with_capacity(1024);
+    let mut dead: Vec<u64> = Vec::new();
+
+    while !shutdown.load(Ordering::SeqCst) {
+        poller.wait(&mut events, Duration::from_millis(20))?;
+
+        // Under the scan poller every tick reports everything; with epoll
+        // we only touch what the kernel flagged.
+        let (accept_ready, wake_ready) = match &poller {
+            Poller::Scan(_) => (true, true),
+            #[cfg(target_os = "linux")]
+            _ => (
+                events.iter().any(|e| e.token == TOKEN_LISTENER),
+                events.iter().any(|e| e.token == TOKEN_WAKER),
+            ),
+        };
+        if wake_ready {
+            completions.waker.drain();
+        }
+
+        if accept_ready {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _addr)) => {
+                        if conns.len() >= cfg.max_conns {
+                            stats.conn_rejected.fetch_add(1, Ordering::Relaxed);
+                            reject_overloaded(stream, conns.len(), cfg.max_conns);
+                            continue;
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        let token = next_token;
+                        next_token += 1;
+                        if poller.register(stream.as_raw_fd(), token).is_err() {
+                            continue;
+                        }
+                        conns.insert(
+                            token,
+                            Conn {
+                                stream,
+                                rbuf: Vec::new(),
+                                wbuf: Vec::new(),
+                                want_write: false,
+                                pending: 0,
+                                closing: false,
+                            },
+                        );
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // Read-drain ready connections and process complete lines.
+        for ev in events.iter().filter(|e| e.token >= TOKEN_FIRST_CONN) {
+            let Some(conn) = conns.get_mut(&ev.token) else { continue };
+            if ev.closed {
+                conn.closing = true;
+                continue;
+            }
+            if !ev.readable {
+                continue;
+            }
+            let mut buf = [0u8; 4096];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.closing = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&buf[..n]);
+                        if conn.rbuf.len() > cfg.max_line_bytes
+                            && !conn.rbuf.contains(&b'\n')
+                        {
+                            // Slow-loris / oversized line: answer and cut.
+                            push_reply(
+                                conn,
+                                Json::obj(vec![(
+                                    "error",
+                                    Json::Str("request line too long".into()),
+                                )]),
+                            );
+                            conn.closing = true;
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.closing = true;
+                        break;
+                    }
+                }
+            }
+            while let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                handle_line(
+                    &line[..line.len() - 1],
+                    ev.token,
+                    conn,
+                    &shards,
+                    &completions,
+                    &stats,
+                    input_dim,
+                );
+            }
+        }
+
+        // Deliver finished inferences into their connections' write buffers.
+        for c in completions.drain() {
+            let Some(conn) = conns.get_mut(&c.conn) else { continue }; // conn gone: drop
+            conn.pending = conn.pending.saturating_sub(1);
+            let reply = match c.result {
+                Ok((level, generation, logits)) => ok_reply(level, generation, &logits),
+                Err(()) => Json::obj(vec![(
+                    "error",
+                    Json::Str(
+                        "inference failed (worker recovered from a panic, or server \
+                         shutting down)"
+                            .into(),
+                    ),
+                )]),
+            };
+            push_reply(conn, reply);
+        }
+
+        // Flush, maintain EPOLLOUT interest, reap finished connections.
+        dead.clear();
+        for (&token, conn) in conns.iter_mut() {
+            if !conn.wbuf.is_empty() {
+                flush(conn);
+            }
+            if conn.wbuf.len() > cfg.max_wbuf_bytes {
+                conn.closing = true; // client stopped reading
+                conn.wbuf.clear();
+            }
+            let want = !conn.wbuf.is_empty();
+            if want != conn.want_write {
+                conn.want_write = want;
+                let _ = poller.set_writable(conn.stream.as_raw_fd(), token, want);
+            }
+            if conn.closing && conn.pending == 0 && conn.wbuf.is_empty() {
+                dead.push(token);
+            }
+        }
+        for token in &dead {
+            if let Some(conn) = conns.remove(token) {
+                let _ = poller.deregister(conn.stream.as_raw_fd(), *token);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parse and dispatch one complete request line. Every outcome produces
+/// exactly one eventual reply line: inline (stats, parse errors, shed) or
+/// via a [`CompletionSink`] a batch worker must answer or drop.
+fn handle_line(
+    line: &[u8],
+    token: u64,
+    conn: &mut Conn,
+    shards: &Arc<ShardSet>,
+    completions: &Arc<CompletionQueue>,
+    stats: &Arc<ServerStats>,
+    input_dim: usize,
+) {
+    let text = String::from_utf8_lossy(line);
+    if text.trim().is_empty() {
+        return;
+    }
+    let req = match Json::parse(&text) {
+        Ok(req) => req,
+        Err(e) => {
+            push_reply(
+                conn,
+                Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]),
+            );
+            return;
+        }
+    };
+    if matches!(req.opt("stats").map(|v| v.as_bool()), Some(Ok(true))) {
+        // Same shape as the threaded frontend: stats nested under "stats".
+        push_reply(conn, Json::obj(vec![("stats", stats.to_json())]));
+        return;
+    }
+    let pixels: Vec<f32> = match req.get("pixels").and_then(|v| v.as_f64_vec()) {
+        Ok(p) => p.iter().map(|&v| v as f32).collect(),
+        Err(e) => {
+            push_reply(
+                conn,
+                Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]),
+            );
+            return;
+        }
+    };
+    let quality = match req.opt("quality").map(|v| v.as_usize()).transpose() {
+        Ok(q) => q.unwrap_or(0),
+        Err(e) => {
+            push_reply(
+                conn,
+                Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]),
+            );
+            return;
+        }
+    };
+    if pixels.len() != input_dim {
+        // Rejected up front: the threaded path lets the backend panic on
+        // this (and recovers); the reactor never wastes a batch slot.
+        push_reply(
+            conn,
+            Json::obj(vec![(
+                "error",
+                Json::Str(format!(
+                    "bad request: expected {input_dim} pixels, got {}",
+                    pixels.len()
+                )),
+            )]),
+        );
+        return;
+    }
+    let deadline_ms = req.opt("deadline_ms").and_then(|v| v.as_f64().ok());
+    let sink = CompletionSink { queue: completions.clone(), conn: token, done: false };
+    match shards.submit(pixels, quality, deadline_ms, super::Reply::Evented(sink)) {
+        Ok(()) => conn.pending += 1,
+        Err(shed) => push_reply(conn, shed.to_json()),
+    }
+}
+
+/// The success reply — field-for-field identical to the threaded
+/// frontend's, and `Json::Obj` keys serialize in canonical (BTreeMap)
+/// order, so the bytes match too.
+fn ok_reply(level: usize, generation: u64, logits: &[f32]) -> Json {
+    Json::obj(vec![
+        ("class", Json::Num(argmax_f32(logits) as f64)),
+        (
+            "logits",
+            Json::arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+        ),
+        ("quality", Json::Num(level as f64)),
+        ("generation", Json::Num(generation as f64)),
+    ])
+}
+
+fn push_reply(conn: &mut Conn, reply: Json) {
+    conn.wbuf.extend_from_slice(reply.to_string().as_bytes());
+    conn.wbuf.push(b'\n');
+    // Opportunistic flush: most replies fit the socket buffer and never
+    // need an EPOLLOUT round-trip.
+    flush(conn);
+}
+
+fn flush(conn: &mut Conn) {
+    let mut written = 0;
+    let mut broken = false;
+    while written < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[written..]) {
+            Ok(0) => {
+                broken = true;
+                break;
+            }
+            Ok(n) => written += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                broken = true;
+                break;
+            }
+        }
+    }
+    if broken {
+        // The peer is gone: drop the unsent bytes so the reap condition
+        // (`closing && pending == 0 && wbuf empty`) can fire.
+        conn.closing = true;
+        conn.wbuf.clear();
+    } else {
+        conn.wbuf.drain(..written);
+    }
+}
+
+/// Best-effort typed rejection for an over-cap accept; the socket is
+/// nonblocking-agnostic here because we close immediately after.
+fn reject_overloaded(mut stream: TcpStream, active: usize, cap: usize) {
+    let line = Json::obj(vec![
+        ("error", Json::Str("overloaded".into())),
+        ("active_conns", Json::Num(active as f64)),
+        ("max_conns", Json::Num(cap as f64)),
+    ]);
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.write_all(line.to_string().as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
+pub(crate) fn new_completion_queue() -> Result<Arc<CompletionQueue>> {
+    Ok(Arc::new(CompletionQueue {
+        done: Mutex::new(Vec::new()),
+        waker: Waker::new()?,
+    }))
+}

@@ -1,0 +1,463 @@
+//! Live shard routing: one logical model spread across several [`Engine`]s.
+//!
+//! The fleet layer (PR 4/5) *simulates* many devices; this module is the
+//! serving-side counterpart — a [`ShardSet`] owns N real engines (each with
+//! its own batch-worker queue and backend pool) and routes every incoming
+//! request through a [`RoutePolicy`] snapshot, so round-robin,
+//! least-loaded and **wear-leveling** govern real placement instead of a
+//! virtual-time trace. Policies see [`NodeSnapshot`]s built from live
+//! queue depths (backlog ≈ queued × EWMA service time / workers) and, when
+//! a [`WearConfig`] is installed, from each shard's real accrued BTI
+//! stress ledger — batch workers charge every executed batch to their
+//! shard's [`StressAccount`] at the voltage mix of the level they served,
+//! exactly the share-weighted accounting the fleet simulator uses.
+//!
+//! The set is also the admission-control seam shared by both frontends
+//! ([`submit`](ShardSet::submit)): a queue-depth gate and an
+//! SLO/deadline gate (estimated wait = EWMA service time × queue depth per
+//! worker) shed over-capacity requests with a typed
+//! `{"error":"shed",...}` reply *before* they consume a queue slot — a
+//! saturated server answers cheaply instead of timing out expensively.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::{Engine, Job, Reply, ServerStats};
+use crate::aging::{BtiModel, StressAccount, SECONDS_PER_YEAR};
+use crate::fleet::{plan_level_shares, plan_stress_intensity, NodeSnapshot, RoutePolicy};
+use crate::plan::VoltagePlan;
+use crate::timing::voltage::Technology;
+use crate::util::json::Json;
+
+/// Wear-aware shard routing configuration: the deployed plans (one per
+/// quality level — their voltage mixes determine how fast each level ages
+/// a shard) plus the BTI model, so shards keep real stress ledgers and the
+/// wear-leveling policy has headroom to rank on. `initial_age_years`
+/// (cycled across shards) models a heterogeneous deployment — e.g. one
+/// worn canary among fresh replacements.
+#[derive(Clone)]
+pub struct WearConfig {
+    pub plans: Vec<VoltagePlan>,
+    pub bti: BtiModel,
+    pub tech: Technology,
+    /// Deployed stress-seconds accrued per wall-clock busy second (same
+    /// knob as the fleet simulator's `wear_accel` — lets a short stress
+    /// run stand in for months of deployment).
+    pub wear_accel: f64,
+    /// Prior service years per shard (cycled; empty = all fresh).
+    pub initial_age_years: Vec<f64>,
+    /// Activity duty factor of that prior service.
+    pub initial_age_duty: f64,
+}
+
+impl WearConfig {
+    /// Wear config for the given plans with default silicon models, no
+    /// pre-aging and a 1e6× wear clock (the fleet default).
+    pub fn new(plans: Vec<VoltagePlan>) -> Self {
+        Self {
+            plans,
+            bti: BtiModel::default(),
+            tech: Technology::default(),
+            wear_accel: 1.0e6,
+            initial_age_years: Vec::new(),
+            initial_age_duty: 0.3,
+        }
+    }
+}
+
+/// One shard's wear ledger + the per-level stress coefficients needed to
+/// charge served batches to it (mirrors [`crate::fleet::Device::serve`]).
+struct ShardWear {
+    stress: StressAccount,
+    /// Per-quality-level fan-in-weighted voltage shares.
+    level_shares: Vec<Vec<f64>>,
+    /// Per-quality-level aging intensity (x per deployed year of serving).
+    class_x_rate: Vec<f64>,
+    wear_accel: f64,
+}
+
+/// One shard: an engine, its private job queue, and (optionally) a live
+/// wear ledger. Batch workers drain `rx`; frontends enqueue through the
+/// owning [`ShardSet`] only, so admission control cannot be bypassed.
+pub struct Shard {
+    pub(crate) engine: Arc<Engine>,
+    pub(crate) tx: Sender<Job>,
+    pub(crate) rx: Arc<Mutex<Receiver<Job>>>,
+    /// Jobs currently queued on this shard (enqueued − collected).
+    pub(crate) queued: AtomicU64,
+    wear: Option<Mutex<ShardWear>>,
+}
+
+impl Shard {
+    /// Remaining stress headroom (1.0 when no wear ledger is installed).
+    pub fn headroom_x(&self) -> f64 {
+        match &self.wear {
+            Some(w) => {
+                w.lock().unwrap_or_else(|e| e.into_inner()).stress.headroom_x()
+            }
+            None => 1.0,
+        }
+    }
+
+    /// Accrued ΔVth (0.0 when no wear ledger is installed).
+    pub fn delta_vth(&self) -> f64 {
+        match &self.wear {
+            Some(w) => w.lock().unwrap_or_else(|e| e.into_inner()).stress.delta_vth(),
+            None => 0.0,
+        }
+    }
+
+    /// Charge `busy_seconds` of execution at quality `level` to this
+    /// shard's wear ledger — called by batch workers per executed
+    /// level-group, with the measured wall-clock execution time.
+    pub(crate) fn record_service(&self, level: usize, busy_seconds: f64) {
+        let Some(wear) = &self.wear else { return };
+        let mut guard = wear.lock().unwrap_or_else(|e| e.into_inner());
+        let w = &mut *guard;
+        let level = level.min(w.class_x_rate.len().saturating_sub(1));
+        let stressed = busy_seconds * w.wear_accel;
+        let dx = w.class_x_rate[level] * (stressed / SECONDS_PER_YEAR);
+        w.stress.accrue_weighted(dx, &w.level_shares[level], stressed);
+    }
+}
+
+/// Why a request was refused admission (the typed shed reply).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shed {
+    /// Queue-depth gate: `queued` jobs were already waiting against a cap
+    /// of `max`.
+    QueueFull { queued: u64, max: u64 },
+    /// Deadline gate: the estimated queueing delay exceeds the request's
+    /// remaining latency budget — serving it would only produce a
+    /// guaranteed-late reply.
+    Deadline { est_wait_us: u64, budget_us: u64 },
+    /// The batch workers are gone (server shutting down). Not counted as
+    /// shed — there is no capacity decision to audit.
+    Stopped,
+}
+
+impl Shed {
+    /// The one-line JSON reply a shed request receives instead of logits.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            Shed::QueueFull { queued, max } => Json::obj(vec![
+                ("error", Json::Str("shed".into())),
+                ("reason", Json::Str("queue_full".into())),
+                ("queued", Json::Num(queued as f64)),
+                ("max_queue", Json::Num(max as f64)),
+            ]),
+            Shed::Deadline { est_wait_us, budget_us } => Json::obj(vec![
+                ("error", Json::Str("shed".into())),
+                ("reason", Json::Str("deadline".into())),
+                ("est_wait_us", Json::Num(est_wait_us as f64)),
+                ("budget_us", Json::Num(budget_us as f64)),
+            ]),
+            Shed::Stopped => {
+                Json::obj(vec![("error", Json::Str("server stopping".into()))])
+            }
+        }
+    }
+}
+
+/// A set of shards serving one logical model behind one admission gate and
+/// one routing policy. Both frontends (threaded and evented) submit every
+/// inference request through [`Self::submit`].
+pub struct ShardSet {
+    shards: Vec<Arc<Shard>>,
+    policy: Mutex<Box<dyn RoutePolicy>>,
+    /// Per-quality-level relative stress intensity (this level's aging
+    /// rate / the harshest level's) — what the wear-leveling policy steers
+    /// on. All-1.0 without a wear config (every class assumed harsh).
+    class_rel_intensity: Vec<f64>,
+    max_queue: u64,
+    /// Default latency budget applied to requests without a deadline tag.
+    slo: Option<Duration>,
+    workers_per_shard: usize,
+    stats: Arc<ServerStats>,
+    /// Wall-clock origin for the policy's `now` argument.
+    start: Instant,
+}
+
+impl ShardSet {
+    pub(crate) fn new(
+        engines: Vec<Arc<Engine>>,
+        policy: Box<dyn RoutePolicy>,
+        wear: Option<WearConfig>,
+        stats: Arc<ServerStats>,
+        max_queue: usize,
+        slo: Option<Duration>,
+        workers_per_shard: usize,
+    ) -> Result<Arc<Self>> {
+        anyhow::ensure!(!engines.is_empty(), "shard set needs at least one engine");
+        let input_dim = engines[0].input_dim;
+        let levels = engines[0].num_levels();
+        for e in &engines {
+            anyhow::ensure!(
+                e.input_dim == input_dim && e.num_levels() == levels,
+                "all shards must serve the same logical model \
+                 (input dim {input_dim} × {levels} levels)"
+            );
+        }
+        let class_rel_intensity = match &wear {
+            Some(cfg) => {
+                anyhow::ensure!(
+                    cfg.plans.len() == levels,
+                    "wear config deploys {} plans but the engines serve {levels} levels",
+                    cfg.plans.len()
+                );
+                let raw: Vec<f64> = cfg
+                    .plans
+                    .iter()
+                    .map(|p| plan_stress_intensity(&cfg.bti, &cfg.tech, p))
+                    .collect();
+                let max = raw.iter().cloned().fold(0.0, f64::max);
+                raw.iter()
+                    .map(|&x| if max > 0.0 { x / max } else { 0.0 })
+                    .collect()
+            }
+            None => vec![1.0; levels],
+        };
+        let shards: Vec<Arc<Shard>> = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let (tx, rx) = channel::<Job>();
+                let shard_wear = wear.as_ref().map(|cfg| {
+                    let mut stress =
+                        StressAccount::new(cfg.bti, cfg.tech, &cfg.plans[0].volts);
+                    if !cfg.initial_age_years.is_empty() {
+                        let years =
+                            cfg.initial_age_years[i % cfg.initial_age_years.len()];
+                        stress.pre_age(cfg.tech.v_nominal, years, cfg.initial_age_duty);
+                    }
+                    Mutex::new(ShardWear {
+                        stress,
+                        level_shares: cfg.plans.iter().map(plan_level_shares).collect(),
+                        class_x_rate: cfg
+                            .plans
+                            .iter()
+                            .map(|p| plan_stress_intensity(&cfg.bti, &cfg.tech, p))
+                            .collect(),
+                        wear_accel: cfg.wear_accel,
+                    })
+                });
+                Arc::new(Shard {
+                    engine,
+                    tx,
+                    rx: Arc::new(Mutex::new(rx)),
+                    queued: AtomicU64::new(0),
+                    wear: shard_wear,
+                })
+            })
+            .collect();
+        stats.init_shards(shards.len());
+        Ok(Arc::new(Self {
+            shards,
+            policy: Mutex::new(policy),
+            class_rel_intensity,
+            max_queue: max_queue as u64,
+            slo,
+            workers_per_shard: workers_per_shard.max(1),
+            stats,
+            start: Instant::now(),
+        }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn shards(&self) -> &[Arc<Shard>] {
+        &self.shards
+    }
+
+    /// Input dimension of the (shared) logical model — the frontends use
+    /// this to reject malformed pixel vectors before they reach a worker.
+    pub fn input_dim(&self) -> usize {
+        self.shards[0].engine.input_dim
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.lock().unwrap_or_else(|e| e.into_inner()).name()
+    }
+
+    /// Admission control + routing: shed over-capacity work with a typed
+    /// reason, otherwise pick a shard via the routing policy and enqueue.
+    /// `deadline_ms` is the request's own latency tag; untagged requests
+    /// inherit the server SLO (when one is configured).
+    pub(crate) fn submit(
+        &self,
+        pixels: Vec<f32>,
+        quality: usize,
+        deadline_ms: Option<f64>,
+        reply: Reply,
+    ) -> Result<(), Shed> {
+        let queued = self.stats.queued.load(Ordering::Relaxed);
+        if queued >= self.max_queue {
+            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(Shed::QueueFull { queued, max: self.max_queue });
+        }
+        let now = Instant::now();
+        let budget = deadline_ms
+            .filter(|ms| ms.is_finite())
+            .map(|ms| Duration::from_secs_f64(ms.clamp(0.0, 86_400_000.0) / 1e3))
+            .or(self.slo);
+        if let Some(budget) = budget {
+            // Estimated queueing delay: EWMA per-request service time ×
+            // (queue depth per worker + our own service). Zero until the
+            // first batch completes — a cold server never sheds on a
+            // deadline it has no evidence it would miss.
+            let est_ns = self.stats.est_service_ns.load(Ordering::Relaxed);
+            if est_ns > 0 {
+                let workers =
+                    (self.shards.len() * self.workers_per_shard).max(1) as u64;
+                let wait_ns = est_ns.saturating_mul(queued / workers + 1);
+                if Duration::from_nanos(wait_ns) > budget {
+                    self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(Shed::Deadline {
+                        est_wait_us: wait_ns / 1_000,
+                        budget_us: budget.as_micros() as u64,
+                    });
+                }
+            }
+        }
+        let class = quality.min(self.class_rel_intensity.len().saturating_sub(1));
+        let s = self.pick_shard(class);
+        let job = Job {
+            pixels,
+            quality,
+            deadline: budget.map(|b| now + b),
+            enqueued: now,
+            reply,
+        };
+        // Count before sending: a worker may collect (and decrement) the
+        // instant the job lands, so incrementing afterwards could
+        // underflow the gauge.
+        self.stats.queued.fetch_add(1, Ordering::Relaxed);
+        self.shards[s].queued.fetch_add(1, Ordering::Relaxed);
+        if self.shards[s].tx.send(job).is_err() {
+            self.stats.queued.fetch_sub(1, Ordering::Relaxed);
+            self.shards[s].queued.fetch_sub(1, Ordering::Relaxed);
+            return Err(Shed::Stopped);
+        }
+        self.stats.record_shard(s);
+        Ok(())
+    }
+
+    /// Route one request of the given quality class: snapshot every shard
+    /// (live queue depth → backlog seconds, wear ledger → headroom) and
+    /// ask the policy. Single-shard sets skip the policy entirely.
+    pub(crate) fn pick_shard(&self, class: usize) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        let est_s = self.stats.est_service_ns.load(Ordering::Relaxed) as f64 / 1e9;
+        let per_worker = self.workers_per_shard as f64;
+        let nodes: Vec<NodeSnapshot> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(id, s)| NodeSnapshot {
+                id,
+                backlog_seconds: s.queued.load(Ordering::Relaxed) as f64 * est_s
+                    / per_worker,
+                headroom_x: s.headroom_x(),
+                generation: s.engine.generation(),
+            })
+            .collect();
+        let rel = self.class_rel_intensity.get(class).copied().unwrap_or(1.0);
+        let now = self.start.elapsed().as_secs_f64();
+        let mut policy = self.policy.lock().unwrap_or_else(|e| e.into_inner());
+        policy.pick(now, class, rel, &nodes).min(self.shards.len() - 1)
+    }
+
+    /// Called by a batch worker after collecting `n` jobs from `shard` —
+    /// they left the queue for a backend, so the admission gate's view of
+    /// queued work shrinks.
+    pub(crate) fn note_collected(&self, shard: usize, n: u64) {
+        self.stats.queued.fetch_sub(n, Ordering::Relaxed);
+        self.shards[shard].queued.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::WearLeveling;
+    use crate::server::testutil::{test_engine, test_plans};
+
+    fn two_shard_set(
+        ages: Vec<f64>,
+        policy: Box<dyn RoutePolicy>,
+    ) -> (Arc<ShardSet>, Arc<ServerStats>) {
+        let (e0, _) = test_engine();
+        let (e1, _) = test_engine();
+        let stats = Arc::new(ServerStats::new(e0.num_levels()));
+        let wear = WearConfig {
+            initial_age_years: ages,
+            initial_age_duty: 1.0,
+            ..WearConfig::new(test_plans(&e0))
+        };
+        let set = ShardSet::new(
+            vec![Arc::new(e0), Arc::new(e1)],
+            policy,
+            Some(wear),
+            stats.clone(),
+            4096,
+            None,
+            1,
+        )
+        .unwrap();
+        (set, stats)
+    }
+
+    #[test]
+    fn wear_leveling_places_gentle_traffic_on_the_worn_shard() {
+        // Shard 0 arrives with 0.05 years of prior nominal-voltage service,
+        // shard 1 fresh. Class 0 deploys the all-nominal plan (relative
+        // intensity 1.0), class 1 the aggressive-VOS plan (≈ 0): the
+        // wear-leveler must park gentle traffic on the worn shard and
+        // steer stress-bearing traffic to the fresh one — live placement
+        // following the headroom ranking, not load.
+        let (set, _) =
+            two_shard_set(vec![0.05, 0.0], Box::new(WearLeveling::new(10.0, 1)));
+        let worn = &set.shards()[0];
+        let fresh = &set.shards()[1];
+        assert!(worn.headroom_x() < fresh.headroom_x(), "pre-aging must cost headroom");
+        assert!(worn.delta_vth() > 0.0);
+        for _ in 0..8 {
+            assert_eq!(set.pick_shard(1), 0, "gentle class → worn shard");
+            assert_eq!(set.pick_shard(0), 1, "harsh class → fresh shard");
+        }
+    }
+
+    #[test]
+    fn served_batches_accrue_real_wear() {
+        let (set, _) = two_shard_set(Vec::new(), Box::<crate::fleet::RoundRobin>::default());
+        let shard = &set.shards()[0];
+        let before = shard.headroom_x();
+        assert_eq!(shard.delta_vth(), 0.0, "fresh shard starts unstressed");
+        // One simulated second of nominal-voltage serving under the 1e6×
+        // wear clock ≈ 11.6 deployed days — must visibly consume headroom.
+        shard.record_service(0, 1.0);
+        assert!(shard.headroom_x() < before, "service must consume headroom");
+        assert!(shard.delta_vth() > 0.0);
+        // The untouched shard is unchanged.
+        assert_eq!(set.shards()[1].delta_vth(), 0.0);
+    }
+
+    #[test]
+    fn round_robin_spreads_live_traffic() {
+        let (set, _) = two_shard_set(Vec::new(), Box::<crate::fleet::RoundRobin>::default());
+        let picks: Vec<usize> = (0..6).map(|_| set.pick_shard(0)).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1, 0, 1]);
+    }
+}

@@ -1,0 +1,296 @@
+//! Serving-stack integration tests: the evented (reactor) frontend, SLO
+//! admission control, and live shard routing — exercised over real TCP
+//! through the public API.
+//!
+//! The load-bearing property is **frontend equivalence**: at a fixed seed
+//! the evented frontend must produce byte-identical reply lines to the
+//! threaded frontend, so operators can switch `--frontend` without any
+//! numerical or protocol drift. On top of that: hostile-client bounds
+//! (malformed lines, slow-loris), shed accounting that exactly conserves
+//! requests, and round-robin shard placement visible in `per_shard`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use xtpu::nn::data::{synth_mnist, Dataset};
+use xtpu::nn::layers::Activation;
+use xtpu::nn::model::fc_mnist;
+use xtpu::nn::quant::{NoiseSpec, QuantizedModel};
+use xtpu::nn::train::{train, TrainConfig};
+use xtpu::server::{
+    BatchPolicy, Client, Engine, FrontendMode, FrontendOptions, QualityLevel, Server,
+};
+use xtpu::util::json::Json;
+use xtpu::util::rng::Xoshiro256pp;
+
+/// A small deterministic engine: fixed seed end to end, so two calls
+/// produce bit-identical engines (weights, quantization, noise specs).
+fn build_engine() -> (Engine, Dataset) {
+    let mut rng = Xoshiro256pp::seeded(1);
+    let mut model = fc_mnist(Activation::Relu, &mut rng);
+    let train_set = synth_mnist(200, 5);
+    train(&mut model, &train_set, &TrainConfig { epochs: 1, ..Default::default() });
+    let test = synth_mnist(20, 6);
+    let calib = test.batch(&(0..16).collect::<Vec<_>>()).0;
+    let q = QuantizedModel::quantize(&model, &calib);
+    let n = q.num_neurons();
+    let mut noisy = NoiseSpec::silent(n);
+    for s in noisy.std.iter_mut().take(128) {
+        *s = 2000.0;
+    }
+    let levels = vec![
+        QualityLevel {
+            name: "exact".into(),
+            noise: NoiseSpec::silent(n),
+            energy_saving: 0.0,
+            energy: 10.0,
+        },
+        QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 7.0 },
+    ];
+    (Engine::new(q, levels, 784).unwrap(), test)
+}
+
+fn spawn(mode: FrontendMode, opts: FrontendOptions, policy: BatchPolicy) -> (Server, Dataset) {
+    let (engine, test) = build_engine();
+    let server = Server::spawn_opts(
+        vec![Arc::new(engine)],
+        0,
+        policy,
+        FrontendOptions { mode, ..opts },
+    )
+    .unwrap();
+    (server, test)
+}
+
+fn one_worker() -> BatchPolicy {
+    BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(2), workers: 1 }
+}
+
+/// Send one raw line, read one raw reply line (trailing newline stripped).
+fn roundtrip(writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(reply.ends_with('\n'), "truncated reply: {reply:?}");
+    reply.trim_end().to_string()
+}
+
+fn connect_raw(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn request_line(pixels: &[f32], quality: usize) -> String {
+    Json::obj(vec![
+        (
+            "pixels",
+            Json::arr_f64(&pixels.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+        ),
+        ("quality", Json::Num(quality as f64)),
+    ])
+    .to_string()
+}
+
+/// Acceptance: replies bit-identical between frontends at a fixed seed.
+/// Sequential single-worker traffic pins the batch composition and RNG
+/// stream, so any divergence is a real frontend difference, not noise.
+#[test]
+fn evented_replies_are_bit_identical_to_threaded() {
+    let (mut threaded, test) =
+        spawn(FrontendMode::Threaded, FrontendOptions::default(), one_worker());
+    let (mut evented, _) =
+        spawn(FrontendMode::Evented, FrontendOptions::default(), one_worker());
+    let (mut tw, mut tr) = connect_raw(threaded.addr);
+    let (mut ew, mut er) = connect_raw(evented.addr);
+    for i in 0..6 {
+        // Level 1 is the noisy level — RNG-dependent, the hard case.
+        let req = request_line(test.images.row(i), i % 2);
+        let a = roundtrip(&mut tw, &mut tr, &req);
+        let b = roundtrip(&mut ew, &mut er, &req);
+        assert_eq!(a, b, "request {i}: frontends disagree");
+        assert!(a.contains("\"class\""), "not a success reply: {a}");
+    }
+    threaded.shutdown();
+    evented.shutdown();
+}
+
+#[test]
+fn evented_survives_malformed_and_partial_lines() {
+    let (mut server, test) =
+        spawn(FrontendMode::Evented, FrontendOptions::default(), one_worker());
+    let (mut w, mut r) = connect_raw(server.addr);
+    // Malformed JSON → typed error, connection stays open.
+    let reply = roundtrip(&mut w, &mut r, "this is not json");
+    assert!(reply.contains("bad request"), "{reply}");
+    // Wrong pixel count → typed error naming the expected dimension.
+    let reply = roundtrip(&mut w, &mut r, "{\"pixels\": [1.0, 2.0], \"quality\": 0}");
+    assert!(reply.contains("784"), "{reply}");
+    // Partial line: send a request in two chunks with a pause — the
+    // reactor must buffer, not reply early and not drop bytes.
+    let req = request_line(test.images.row(0), 0);
+    let (head, tail) = req.split_at(req.len() / 2);
+    w.write_all(head.as_bytes()).unwrap();
+    w.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    w.write_all(tail.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    w.flush().unwrap();
+    let mut reply = String::new();
+    r.read_line(&mut reply).unwrap();
+    assert!(reply.contains("\"class\""), "{reply}");
+    // And the connection still serves after all of the above.
+    let reply = roundtrip(&mut w, &mut r, &req);
+    assert!(reply.contains("\"class\""), "{reply}");
+    server.shutdown();
+}
+
+#[test]
+fn slow_loris_writer_is_bounded_not_buffered_forever() {
+    let (mut server, _) =
+        spawn(FrontendMode::Evented, FrontendOptions::default(), one_worker());
+    let (mut w, mut r) = connect_raw(server.addr);
+    // Feed > 1 MiB without ever sending a newline: the reactor must cap
+    // the buffer, answer with a typed error, and close — not grow forever.
+    let chunk = vec![b'x'; 64 * 1024];
+    let mut sent = 0usize;
+    while sent <= (1 << 20) + chunk.len() {
+        match w.write_all(&chunk) {
+            Ok(()) => sent += chunk.len(),
+            Err(_) => break, // server already closed on us — fine
+        }
+    }
+    let mut reply = String::new();
+    // Either we get the typed error line, or the server closed the socket
+    // after shedding the buffer — both are bounded outcomes.
+    match r.read_line(&mut reply) {
+        Ok(0) => {}
+        Ok(_) => assert!(reply.contains("too long"), "{reply}"),
+        Err(_) => {}
+    }
+    server.shutdown();
+}
+
+/// Queue-depth shedding with exact conservation: every pipelined request
+/// gets exactly one reply — ok or a typed shed — and the stats counters
+/// account for each (`requests` + `shed` == sent).
+#[test]
+fn saturation_sheds_with_exact_accounting() {
+    let opts = FrontendOptions { max_queue: 1, ..FrontendOptions::default() };
+    let (mut server, test) = spawn(FrontendMode::Evented, opts, one_worker());
+    let (mut w, mut r) = connect_raw(server.addr);
+    let n = 30;
+    let req = request_line(test.images.row(0), 0);
+    let mut burst = String::new();
+    for _ in 0..n {
+        burst.push_str(&req);
+        burst.push('\n');
+    }
+    // One write: the reactor submits the whole burst in a single
+    // read-drain, far faster than the single worker can collect.
+    w.write_all(burst.as_bytes()).unwrap();
+    w.flush().unwrap();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for _ in 0..n {
+        let mut reply = String::new();
+        r.read_line(&mut reply).unwrap();
+        if reply.contains("\"class\"") {
+            ok += 1;
+        } else {
+            assert!(reply.contains("\"shed\""), "unexpected reply: {reply}");
+            assert!(reply.contains("queue_full"), "{reply}");
+            shed += 1;
+        }
+    }
+    assert_eq!(ok + shed, n, "every request must get exactly one reply");
+    assert!(ok > 0, "a max_queue=1 server still serves");
+    assert!(shed > 0, "a 30-deep burst against max_queue=1 must shed");
+    // The server's own books agree with what the client saw.
+    let mut c = Client::connect(server.addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_u64().unwrap(), ok);
+    assert_eq!(stats.get("shed").unwrap().as_u64().unwrap(), shed);
+    // New surfaces exist and are sane.
+    assert!(stats.get("latency_p99_us").unwrap().as_u64().unwrap() > 0);
+    assert!(stats.get("queued").unwrap().as_u64().unwrap() == 0);
+    server.shutdown();
+}
+
+/// Deadline-tagged requests are shed once the service-time estimator has
+/// evidence: a zero budget can never be met, so after one warm-up request
+/// every tagged request gets the typed deadline shed.
+#[test]
+fn deadline_tagged_requests_shed_when_unservable() {
+    let (mut server, test) =
+        spawn(FrontendMode::Evented, FrontendOptions::default(), one_worker());
+    let (mut w, mut r) = connect_raw(server.addr);
+    // Warm-up: untagged request seeds est_service_ns (a cold server never
+    // deadline-sheds — it has no evidence it would miss).
+    let warm = roundtrip(&mut w, &mut r, &request_line(test.images.row(0), 0));
+    assert!(warm.contains("\"class\""), "{warm}");
+    let tagged = format!(
+        "{{\"pixels\": {}, \"quality\": 0, \"deadline_ms\": 0}}",
+        Json::arr_f64(&test.images.row(0).iter().map(|&v| v as f64).collect::<Vec<_>>())
+    );
+    for _ in 0..5 {
+        let reply = roundtrip(&mut w, &mut r, &tagged);
+        assert!(reply.contains("\"shed\""), "{reply}");
+        assert!(reply.contains("deadline"), "{reply}");
+    }
+    let mut c = Client::connect(server.addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("shed").unwrap().as_u64().unwrap(), 5);
+    server.shutdown();
+}
+
+/// Two shards behind the evented frontend with round-robin routing:
+/// placement alternates, and `per_shard` proves both engines served.
+#[test]
+fn multi_shard_round_robin_splits_live_traffic() {
+    let (e0, test) = build_engine();
+    let (e1, _) = build_engine();
+    let mut server = Server::spawn_opts(
+        vec![Arc::new(e0), Arc::new(e1)],
+        0,
+        one_worker(),
+        FrontendOptions { mode: FrontendMode::Evented, ..FrontendOptions::default() },
+    )
+    .unwrap();
+    let (mut w, mut r) = connect_raw(server.addr);
+    for i in 0..8 {
+        let reply = roundtrip(&mut w, &mut r, &request_line(test.images.row(i), 0));
+        assert!(reply.contains("\"class\""), "{reply}");
+    }
+    let per_shard = server.stats.per_shard_counts();
+    assert_eq!(per_shard, vec![4, 4], "round-robin must alternate shards");
+    // The same split is visible to clients through the stats line.
+    let mut c = Client::connect(server.addr).unwrap();
+    let stats = c.stats().unwrap();
+    let arr = stats.get("per_shard").unwrap().as_arr().unwrap();
+    assert_eq!(arr.len(), 2);
+    server.shutdown();
+}
+
+/// The threaded frontend's connection cap: connections past `max_conns`
+/// get a typed overloaded line instead of an unbounded thread spawn.
+#[test]
+fn threaded_frontend_caps_connections_with_typed_rejection() {
+    let opts = FrontendOptions { max_conns: 1, ..FrontendOptions::default() };
+    let (mut server, test) = spawn(FrontendMode::Threaded, opts, one_worker());
+    // First connection occupies the only slot.
+    let (mut w, mut r) = connect_raw(server.addr);
+    let reply = roundtrip(&mut w, &mut r, &request_line(test.images.row(0), 0));
+    assert!(reply.contains("\"class\""), "{reply}");
+    // Second connection must be rejected with the typed line.
+    let (_w2, mut r2) = connect_raw(server.addr);
+    let mut line = String::new();
+    r2.read_line(&mut line).unwrap();
+    assert!(line.contains("overloaded"), "{line}");
+    assert!(server.stats.conn_rejected.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    server.shutdown();
+}

@@ -46,13 +46,18 @@ CALIBRATED_KEYS = [
 ]
 
 # Keys that must be emitted and numeric but have no recorded baseline yet
-# (the TE-Drop backend landed after the BENCH records were captured). A key
-# vanishing from the bench is a gate bypass even without a floor to hold it
-# to; once a record host re-measures, these graduate to a gates section.
+# (the TE-Drop backend and the evented serving frontend landed after the
+# BENCH records were captured; the serving figures live in
+# BENCH_serving.json). A key vanishing from the bench is a gate bypass even
+# without a floor to hold it to; once a record host re-measures, these
+# graduate to a gates section.
 PRESENCE_ONLY_KEYS = [
     "l3j_tedrop_nominal_mmacs",
     "l3j_tedrop_vos_mmacs",
     "l3j_tedrop_drop_cost",
+    "l3k_evented_rps",
+    "l3k_p99_us_at_slo",
+    "l3k_shed_fraction",
 ]
 
 
