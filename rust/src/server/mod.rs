@@ -442,6 +442,18 @@ impl Reply {
             Reply::Evented(sink) => sink.complete_ok(level, generation, logits),
         }
     }
+
+    /// Disarm any drop-side error delivery. The admission gate calls this
+    /// before dropping a refused request's reply route: the frontend
+    /// answers with the typed shed line itself, and an evented sink whose
+    /// `Drop` still fired would enqueue a second, stray error line on the
+    /// same connection. (The channel arm needs no disarming — the threaded
+    /// handler never reads its receiver on the refused path.)
+    pub(crate) fn defuse(&mut self) {
+        if let Reply::Evented(sink) = self {
+            sink.defuse();
+        }
+    }
 }
 
 /// Server statistics (exposed for tests/benches, and to clients via a

@@ -262,7 +262,18 @@ impl Waker {
         let listener = TcpListener::bind("127.0.0.1:0").context("waker bind")?;
         let addr = listener.local_addr()?;
         let tx = TcpStream::connect(addr).context("waker connect")?;
-        let (rx, _) = listener.accept().context("waker accept")?;
+        let ours = tx.local_addr().context("waker local addr")?;
+        // Accept until the peer is our own connect: any local process can
+        // race a connection onto the ephemeral listener, and pairing with
+        // a foreign socket would leave the reactor deaf to its own wakes.
+        // Our connect has already completed, so it is guaranteed to be in
+        // the accept queue — the loop terminates.
+        let rx = loop {
+            let (stream, peer) = listener.accept().context("waker accept")?;
+            if peer == ours {
+                break stream;
+            }
+        };
         tx.set_nonblocking(true)?;
         rx.set_nonblocking(true)?;
         tx.set_nodelay(true)?;
@@ -309,9 +320,12 @@ impl CompletionQueue {
 }
 
 /// The per-job reply route for evented requests. Guarantees exactly one
-/// completion per submitted job: if the holder (a batch worker) drops it
+/// completion per *accepted* job: if the holder (a batch worker) drops it
 /// without answering — worker panic, shutdown drain — `Drop` pushes the
 /// error completion, mirroring the threaded path's `Disconnected` reply.
+/// A request refused at the admission gate is *not* an accepted job: the
+/// gate [`defuse`](Self::defuse)s the sink before dropping it, because
+/// the frontend's own typed shed line is the one reply the client gets.
 pub(crate) struct CompletionSink {
     queue: Arc<CompletionQueue>,
     conn: u64,
@@ -325,6 +339,14 @@ impl CompletionSink {
             conn: self.conn,
             result: Ok((level, generation, logits)),
         });
+    }
+
+    /// Disarm the drop-side error completion. Called by the admission gate
+    /// when it refuses a request: the caller answers with the typed shed
+    /// line itself, and an armed `Drop` here would push a second, stray
+    /// error reply onto the same connection (desyncing pipelined clients).
+    pub(crate) fn defuse(&mut self) {
+        self.done = true;
     }
 }
 
@@ -341,6 +363,12 @@ struct Conn {
     stream: TcpStream,
     /// Bytes received but not yet terminated by a newline.
     rbuf: Vec<u8>,
+    /// Persistent newline-scan cursor into `rbuf`: every byte of
+    /// `rbuf[..scan_from]` has been scanned, and the first unconsumed
+    /// newline (if any) is at or after `scan_from`. Keeps drip-fed lines
+    /// and pipelined bursts O(bytes) instead of rescanning the whole
+    /// buffer per 4 KiB chunk / per extracted line.
+    scan_from: usize,
     /// Serialized replies not yet accepted by the socket.
     wbuf: Vec<u8>,
     /// Whether EPOLLOUT interest is currently registered.
@@ -457,6 +485,7 @@ fn run_inner(
                             Conn {
                                 stream,
                                 rbuf: Vec::new(),
+                                scan_from: 0,
                                 wbuf: Vec::new(),
                                 want_write: false,
                                 pending: 0,
@@ -490,19 +519,32 @@ fn run_inner(
                     }
                     Ok(n) => {
                         conn.rbuf.extend_from_slice(&buf[..n]);
-                        if conn.rbuf.len() > cfg.max_line_bytes
-                            && !conn.rbuf.contains(&b'\n')
+                        // Incremental scan: only bytes appended since the
+                        // last scan are examined. Once a newline is found
+                        // the cursor parks on it (subsequent chunks re-check
+                        // one byte); while none exists the cursor tracks the
+                        // buffer tail, making the no-newline predicate O(1).
+                        match conn.rbuf[conn.scan_from..]
+                            .iter()
+                            .position(|&b| b == b'\n')
                         {
-                            // Slow-loris / oversized line: answer and cut.
-                            push_reply(
-                                conn,
-                                Json::obj(vec![(
-                                    "error",
-                                    Json::Str("request line too long".into()),
-                                )]),
-                            );
-                            conn.closing = true;
-                            break;
+                            Some(rel) => conn.scan_from += rel,
+                            None => {
+                                conn.scan_from = conn.rbuf.len();
+                                if conn.rbuf.len() > cfg.max_line_bytes {
+                                    // Slow-loris / oversized line: answer
+                                    // and cut.
+                                    push_reply(
+                                        conn,
+                                        Json::obj(vec![(
+                                            "error",
+                                            Json::Str("request line too long".into()),
+                                        )]),
+                                    );
+                                    conn.closing = true;
+                                    break;
+                                }
+                            }
                         }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
@@ -513,10 +555,23 @@ fn run_inner(
                     }
                 }
             }
-            while let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') {
-                let line: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+            // Single-pass extraction: resume the newline search at the
+            // parked cursor, copy each complete line out, and drain the
+            // processed prefix once — no per-line buffer shifting.
+            let mut consumed = 0;
+            loop {
+                let from = conn.scan_from.max(consumed);
+                let Some(rel) =
+                    conn.rbuf[from..].iter().position(|&b| b == b'\n')
+                else {
+                    break;
+                };
+                let pos = from + rel;
+                let line: Vec<u8> = conn.rbuf[consumed..pos].to_vec();
+                consumed = pos + 1;
+                conn.scan_from = consumed;
                 handle_line(
-                    &line[..line.len() - 1],
+                    &line,
                     ev.token,
                     conn,
                     &shards,
@@ -525,6 +580,12 @@ fn run_inner(
                     input_dim,
                 );
             }
+            if consumed > 0 {
+                conn.rbuf.drain(..consumed);
+            }
+            // Everything left is newline-free (the search above exhausted
+            // the buffer), so the cursor parks on the tail.
+            conn.scan_from = conn.rbuf.len();
         }
 
         // Deliver finished inferences into their connections' write buffers.
@@ -698,18 +759,21 @@ fn flush(conn: &mut Conn) {
     }
 }
 
-/// Best-effort typed rejection for an over-cap accept; the socket is
-/// nonblocking-agnostic here because we close immediately after.
+/// Best-effort typed rejection for an over-cap accept: one nonblocking
+/// write, then close. This runs on the reactor thread, so it must never
+/// block — a freshly accepted socket's send buffer is empty, so the line
+/// fits in practice; a peer that somehow can't take it just loses the
+/// courtesy line (the immediate close is the real signal).
 fn reject_overloaded(mut stream: TcpStream, active: usize, cap: usize) {
     let line = Json::obj(vec![
         ("error", Json::Str("overloaded".into())),
         ("active_conns", Json::Num(active as f64)),
         ("max_conns", Json::Num(cap as f64)),
     ]);
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
-    let _ = stream.write_all(line.to_string().as_bytes());
-    let _ = stream.write_all(b"\n");
+    let _ = stream.set_nonblocking(true);
+    let mut bytes = line.to_string().into_bytes();
+    bytes.push(b'\n');
+    let _ = stream.write(&bytes);
 }
 
 pub(crate) fn new_completion_queue() -> Result<Arc<CompletionQueue>> {

@@ -293,16 +293,21 @@ impl ShardSet {
     /// reason, otherwise pick a shard via the routing policy and enqueue.
     /// `deadline_ms` is the request's own latency tag; untagged requests
     /// inherit the server SLO (when one is configured).
+    ///
+    /// On `Err` the caller answers the client with the typed shed line —
+    /// every refused `reply` is [`defuse`](Reply::defuse)d here first, so
+    /// its drop-side error delivery never produces a second reply line.
     pub(crate) fn submit(
         &self,
         pixels: Vec<f32>,
         quality: usize,
         deadline_ms: Option<f64>,
-        reply: Reply,
+        mut reply: Reply,
     ) -> Result<(), Shed> {
         let queued = self.stats.queued.load(Ordering::Relaxed);
         if queued >= self.max_queue {
             self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            reply.defuse();
             return Err(Shed::QueueFull { queued, max: self.max_queue });
         }
         let now = Instant::now();
@@ -322,6 +327,7 @@ impl ShardSet {
                 let wait_ns = est_ns.saturating_mul(queued / workers + 1);
                 if Duration::from_nanos(wait_ns) > budget {
                     self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    reply.defuse();
                     return Err(Shed::Deadline {
                         est_wait_us: wait_ns / 1_000,
                         budget_us: budget.as_micros() as u64,
@@ -343,9 +349,13 @@ impl ShardSet {
         // underflow the gauge.
         self.stats.queued.fetch_add(1, Ordering::Relaxed);
         self.shards[s].queued.fetch_add(1, Ordering::Relaxed);
-        if self.shards[s].tx.send(job).is_err() {
+        if let Err(send_err) = self.shards[s].tx.send(job) {
             self.stats.queued.fetch_sub(1, Ordering::Relaxed);
             self.shards[s].queued.fetch_sub(1, Ordering::Relaxed);
+            // The channel hands the unsent job back — defuse its reply
+            // before it drops, like every other refused path.
+            let mut job = send_err.0;
+            job.reply.defuse();
             return Err(Shed::Stopped);
         }
         self.stats.record_shard(s);
