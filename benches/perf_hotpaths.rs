@@ -439,7 +439,7 @@ fn main() {
     // evented frontend. Reports admitted throughput, served p99 against
     // the SLO, and the shed fraction; the keys are presence-gated against
     // BENCH_serving.json by tools/check_bench_regression.py.
-    {
+    let l3k_rps = {
         use std::io::{ErrorKind, Read, Write};
         use xtpu::nn::quant::NoiseSpec;
         use xtpu::server::{
@@ -466,8 +466,15 @@ fn main() {
                 noise: NoiseSpec::silent(nq),
                 energy_saving: 0.0,
                 energy: 10.0,
+                predicted_mse: 0.0,
             },
-            QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 7.0 },
+            QualityLevel {
+                name: "eco".into(),
+                noise: noisy,
+                energy_saving: 0.3,
+                energy: 7.0,
+                predicted_mse: 0.0,
+            },
         ];
         let engine = Engine::new(q.clone(), levels, 784).unwrap();
         let slo = std::time::Duration::from_millis(100);
@@ -609,6 +616,39 @@ fn main() {
         report.push(("l3k_evented_rps", Json::Num(rps)));
         report.push(("l3k_p99_us_at_slo", Json::Num(p99)));
         report.push(("l3k_shed_fraction", Json::Num(shed_fraction)));
+        rps
+    };
+
+    // --- L3l: observability overhead (sampling off) ------------------------
+    // What the obs layer costs a request when nothing is sampled: one
+    // relaxed atomic load in Tracer::maybe_start plus the audit's disabled
+    // check — the exact hook sequence on the serving hot path. Expressed
+    // as a percentage of the measured per-request serving budget (the L3k
+    // closed loop above) and gated ≤ 2% by tools/check_bench_regression.py:
+    // "sampling 0 is measurably free" is a number, not a promise.
+    {
+        use xtpu::obs::audit::{AuditConfig, QualityAudit};
+        use xtpu::obs::metrics::Registry;
+        use xtpu::obs::trace::Tracer;
+        let tracer = std::sync::Arc::new(Tracer::new(4096));
+        tracer.set_sample_every(0);
+        let audit =
+            QualityAudit::new(AuditConfig::default(), std::sync::Arc::new(Registry::new()));
+        let iters = 10_000_000u64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(tracer.maybe_start());
+            std::hint::black_box(audit.should_sample());
+        }
+        let hook_ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+        let req_ns = if l3k_rps > 0.0 { 1e9 / l3k_rps } else { f64::INFINITY };
+        let overhead_pct = hook_ns / req_ns * 100.0;
+        println!(
+            "L3l obs overhead  : {hook_ns:>8.2} ns/req hooks (sampling off) = \
+             {overhead_pct:.4}% of the {req_ns:.0} ns/req serving budget [gate ≤ 2%]"
+        );
+        report.push(("l3l_obs_hook_ns", Json::Num(hook_ns)));
+        report.push(("l3l_obs_overhead_pct", Json::Num(overhead_pct)));
     }
 
     if let Ok(path) = std::env::var("XTPU_BENCH_JSON") {

@@ -69,8 +69,15 @@ fn build_engine() -> Engine {
             noise: NoiseSpec::silent(n),
             energy_saving: 0.0,
             energy: 10.0,
+            predicted_mse: 0.0,
         },
-        QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 7.0 },
+        QualityLevel {
+            name: "eco".into(),
+            noise: noisy,
+            energy_saving: 0.3,
+            energy: 7.0,
+            predicted_mse: 0.0,
+        },
     ];
     Engine::new(q, levels, 784).unwrap()
 }
@@ -141,6 +148,7 @@ fn main() {
         max_queue: 256,
         route: Some(Box::new(WearLeveling::new(30.0, 16))),
         wear: Some(wear),
+        ..Default::default()
     };
     let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1), workers: 2 };
     let mut server =

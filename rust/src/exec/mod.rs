@@ -173,6 +173,17 @@ pub fn execute_layer_kernel(
     noise: Option<NoiseView<'_>>,
     rng: &mut Xoshiro256pp,
 ) -> Vec<i32> {
+    // One relaxed increment per layer call into the process-global
+    // registry; the handle is resolved once and cached.
+    {
+        use std::sync::OnceLock;
+        static LAYER_CALLS: OnceLock<crate::obs::metrics::Counter> = OnceLock::new();
+        LAYER_CALLS
+            .get_or_init(|| {
+                crate::obs::metrics::global().counter("exec_layer_calls_total", &[])
+            })
+            .inc();
+    }
     let live = noise.filter(|nv| {
         debug_assert!(nv.mean.len() >= mac.out && nv.std.len() >= mac.out);
         nv.mean[..mac.out].iter().any(|&v| v != 0.0)

@@ -120,6 +120,12 @@ pub struct Device {
     /// Local plan generation: 0 at boot, +1 per re-plan. The
     /// generation-aware wear-leveling router re-ranks when it moves.
     generation: u64,
+    /// Worst drift-priced served-MSE-to-budget ratio observed since the
+    /// current generation was installed (0 = no observation yet). Fed by
+    /// the fleet's quality sampling grid; what
+    /// [`ReplanPolicy::ObservedQuality`](super::ReplanPolicy::ObservedQuality)
+    /// triggers on.
+    observed_quality_ratio: f64,
     pub requests: u64,
     pub per_class: Vec<u64>,
     pub energy_units: f64,
@@ -165,6 +171,7 @@ impl Device {
             margin_at_plan,
             duty_at_plan: 0.0,
             generation: 0,
+            observed_quality_ratio: 0.0,
             requests: 0,
             per_class: vec![0; plans.len()],
             energy_units: 0.0,
@@ -219,7 +226,27 @@ impl Device {
                 (self.stress.total_duty_seconds() - self.duty_at_plan) / SECONDS_PER_YEAR
                     >= deployed_years
             }
+            super::ReplanPolicy::ObservedQuality { max_ratio } => {
+                self.observed_quality_ratio >= max_ratio
+            }
         }
+    }
+
+    /// Record a measured served-MSE-to-budget ratio for this device (the
+    /// fleet's quality sampling grid calls this with the worst budgeted
+    /// class of each sample). Monotone per generation — re-planning
+    /// resets it, so the observed-quality trigger measures the *current*
+    /// plans, not history.
+    pub fn note_observed_quality(&mut self, ratio: f64) {
+        if ratio.is_finite() {
+            self.observed_quality_ratio = self.observed_quality_ratio.max(ratio);
+        }
+    }
+
+    /// Worst observed served-MSE-to-budget ratio since the last re-plan
+    /// (0 when quality was never sampled).
+    pub fn observed_quality_ratio(&self) -> f64 {
+        self.observed_quality_ratio
     }
 
     /// Re-solve every deployed plan against this device's accrued drift
@@ -256,6 +283,7 @@ impl Device {
         self.generation += 1;
         self.margin_at_plan = margin;
         self.duty_at_plan = self.stress.total_duty_seconds();
+        self.observed_quality_ratio = 0.0;
         let swap_ms = t1.elapsed().as_secs_f64() * 1e3;
 
         Ok(ReplanEvent {

@@ -90,7 +90,8 @@ use crate::power::PePowerModel;
 use crate::server::Engine;
 use crate::timing::voltage::Technology;
 use crate::util::rng::Xoshiro256pp;
-use crate::util::stats::{argmax_f32, quantile};
+use crate::obs::metrics::LatencyHistogram;
+use crate::util::stats::argmax_f32;
 
 /// When (if ever) a device re-solves its deployed plans against its own
 /// accrued drift. The trigger watches [`StressAccount::delay_margin`] —
@@ -108,6 +109,13 @@ pub enum ReplanPolicy {
     Threshold { guard_band: f64 },
     /// Re-plan every `deployed_years` of accrued wear-clock stress.
     Periodic { deployed_years: f64 },
+    /// Re-plan on *measured* quality decay: fires when a device's observed
+    /// (drift-priced) served-MSE-to-budget ratio — the same quantity the
+    /// serving stack's online audit gauges as `audit_mse_ratio` — reaches
+    /// `max_ratio`. Unlike the physics-side triggers this one watches the
+    /// quality the fleet actually delivers, so a mis-modeled error spec
+    /// trips it even while the delay margin still looks healthy.
+    ObservedQuality { max_ratio: f64 },
 }
 
 impl ReplanPolicy {
@@ -116,11 +124,17 @@ impl ReplanPolicy {
             ReplanPolicy::Never => "never",
             ReplanPolicy::Threshold { .. } => "threshold",
             ReplanPolicy::Periodic { .. } => "periodic",
+            ReplanPolicy::ObservedQuality { .. } => "observed",
         }
     }
 
     /// Construct from the CLI's `--replan` name plus its parameter flags.
-    pub fn from_name(name: &str, guard_band: f64, every_years: f64) -> Result<Self> {
+    pub fn from_name(
+        name: &str,
+        guard_band: f64,
+        every_years: f64,
+        quality_ratio: f64,
+    ) -> Result<Self> {
         match name {
             "never" => Ok(ReplanPolicy::Never),
             "threshold" => {
@@ -137,8 +151,17 @@ impl ReplanPolicy {
                 );
                 Ok(ReplanPolicy::Periodic { deployed_years: every_years })
             }
+            "observed" => {
+                anyhow::ensure!(
+                    quality_ratio > 0.0,
+                    "--replan-quality-ratio must be positive, got {quality_ratio}"
+                );
+                Ok(ReplanPolicy::ObservedQuality { max_ratio: quality_ratio })
+            }
             other => {
-                anyhow::bail!("unknown re-plan policy '{other}' (never|threshold|periodic)")
+                anyhow::bail!(
+                    "unknown re-plan policy '{other}' (never|threshold|periodic|observed)"
+                )
             }
         }
     }
@@ -345,6 +368,16 @@ impl Router {
                     .map(|&(m, b)| if b > 0.0 { Some(m / b) } else { None })
                     .collect(),
             });
+        }
+        // Feed the measured re-plan trigger: each device notes the worst
+        // budgeted-class ratio of its sample, so
+        // [`ReplanPolicy::ObservedQuality`] fires on quality the fleet
+        // actually exhibited rather than on a physics proxy.
+        for (d, s) in self.devices.iter_mut().zip(&samples) {
+            let worst = s.mse_ratio.iter().flatten().fold(0.0f64, |m, &r| m.max(r));
+            if worst > 0.0 {
+                d.note_observed_quality(worst);
+            }
         }
         self.quality_curve.extend(samples);
     }
@@ -570,9 +603,18 @@ impl Router {
         let (p50, p99, mean) = if outcome.latencies_ms.is_empty() {
             (0.0, 0.0, 0.0)
         } else {
+            // Percentiles go through the shared power-of-two histogram —
+            // the same machinery the serving stack's `ServerStats` reports
+            // with — so fleet and server latency summaries share one
+            // implementation (and one precision contract: values are
+            // upper bucket bounds, within 2× of exact).
+            let hist = LatencyHistogram::new();
+            for &ms in &outcome.latencies_ms {
+                hist.record_us((ms * 1e3).max(0.0).round() as u64);
+            }
             (
-                quantile(&outcome.latencies_ms, 0.5),
-                quantile(&outcome.latencies_ms, 0.99),
+                hist.quantile_us(0.5) as f64 / 1e3,
+                hist.quantile_us(0.99) as f64 / 1e3,
                 crate::util::stats::mean(&outcome.latencies_ms),
             )
         };
@@ -590,6 +632,29 @@ impl Router {
             .iter()
             .flat_map(|s| s.mse_ratio.iter().flatten())
             .fold(0.0f64, |m, &r| m.max(r));
+        // Budget violations surface as the same typed alarm the serving
+        // stack's online audit raises: worst budgeted class over every
+        // quality sample, reported only when it actually left the budget.
+        let quality_alarm = self
+            .quality_curve
+            .iter()
+            .flat_map(|s| {
+                s.mse_ratio
+                    .iter()
+                    .enumerate()
+                    .filter_map(move |(c, r)| r.map(|r| (s, c, r)))
+            })
+            .max_by(|a, b| a.2.total_cmp(&b.2))
+            .filter(|&(_, _, r)| r > 1.0)
+            .map(|(s, c, r)| crate::obs::audit::QualityAlarm {
+                level: c,
+                level_name: format!("class{c}"),
+                generation: s.generation,
+                observed_mse: s.predicted_mse[c],
+                predicted_mse: s.predicted_mse[c] / r,
+                ratio: r,
+                samples: self.quality_curve.len() as u64,
+            });
         FleetTelemetry {
             policy: self.policy.name().to_string(),
             requests,
@@ -618,6 +683,7 @@ impl Router {
             replan_events: self.replan_events.clone(),
             quality_curve: self.quality_curve.clone(),
             max_mse_ratio,
+            quality_alarm,
         }
     }
 }
@@ -707,8 +773,14 @@ mod tests {
         assert_eq!(t.devices[0].requests, 5);
         assert_eq!(t.devices[1].requests, 5);
         // 5 back-to-back 10 ms services: worst latency 50 ms, median 30 ms.
-        assert!((t.latency_p50_ms - 30.0).abs() < 1.0, "p50 {}", t.latency_p50_ms);
-        assert!(t.latency_p99_ms <= 50.0 + 1e-9);
+        // Percentiles report power-of-two bucket upper bounds: 30 ms →
+        // 32.767 ms, 50 ms → 65.535 ms.
+        assert!(
+            (30.0..=32.768).contains(&t.latency_p50_ms),
+            "p50 {}",
+            t.latency_p50_ms
+        );
+        assert!(t.latency_p99_ms <= 65.536, "p99 {}", t.latency_p99_ms);
     }
 
     #[test]
@@ -751,26 +823,36 @@ mod tests {
         let t = fleet.run(&trace);
         assert_eq!(t.requests, 100);
         // A closed loop can never queue more than the client population:
-        // worst-case latency is population × service time.
-        assert!(t.latency_p99_ms <= 4.0 * 1.0 + 1e-9, "p99 {}", t.latency_p99_ms);
+        // worst-case latency is population × service time (4 ms), which
+        // the histogram reports as its 4.095 ms bucket bound.
+        assert!(t.latency_p99_ms <= 4.096, "p99 {}", t.latency_p99_ms);
     }
 
     #[test]
     fn replan_policy_parsing_and_names() {
-        assert_eq!(ReplanPolicy::from_name("never", 0.0, 0.0).unwrap(), ReplanPolicy::Never);
         assert_eq!(
-            ReplanPolicy::from_name("threshold", 0.1, 0.0).unwrap(),
+            ReplanPolicy::from_name("never", 0.0, 0.0, 0.0).unwrap(),
+            ReplanPolicy::Never
+        );
+        assert_eq!(
+            ReplanPolicy::from_name("threshold", 0.1, 0.0, 0.0).unwrap(),
             ReplanPolicy::Threshold { guard_band: 0.1 }
         );
         assert_eq!(
-            ReplanPolicy::from_name("periodic", 0.0, 0.02).unwrap(),
+            ReplanPolicy::from_name("periodic", 0.0, 0.02, 0.0).unwrap(),
             ReplanPolicy::Periodic { deployed_years: 0.02 }
         );
-        assert!(ReplanPolicy::from_name("threshold", 0.0, 0.0).is_err());
-        assert!(ReplanPolicy::from_name("periodic", 0.1, 0.0).is_err());
-        assert!(ReplanPolicy::from_name("sometimes", 0.1, 0.1).is_err());
+        assert_eq!(
+            ReplanPolicy::from_name("observed", 0.0, 0.0, 1.5).unwrap(),
+            ReplanPolicy::ObservedQuality { max_ratio: 1.5 }
+        );
+        assert!(ReplanPolicy::from_name("threshold", 0.0, 0.0, 0.0).is_err());
+        assert!(ReplanPolicy::from_name("periodic", 0.1, 0.0, 0.0).is_err());
+        assert!(ReplanPolicy::from_name("observed", 0.1, 0.1, 0.0).is_err());
+        assert!(ReplanPolicy::from_name("sometimes", 0.1, 0.1, 1.0).is_err());
         assert_eq!(ReplanPolicy::Never.name(), "never");
         assert_eq!(ReplanPolicy::Threshold { guard_band: 0.1 }.name(), "threshold");
+        assert_eq!(ReplanPolicy::ObservedQuality { max_ratio: 1.5 }.name(), "observed");
     }
 
     /// An adaptive fleet with a synthetic (zero-variance-free) registry:

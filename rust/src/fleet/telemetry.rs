@@ -157,6 +157,11 @@ pub struct FleetTelemetry {
     /// budgeted class — ≤ 1.0 means the fleet never left the user's
     /// quality budget. 0 when no samples were taken.
     pub max_mse_ratio: f64,
+    /// Raised when the fleet's drift-priced served MSE exceeded a class's
+    /// budget at any quality sample (the worst offender) — the same typed
+    /// alarm the serving stack's online audit surfaces, so operators read
+    /// one shape in both places. `None` while the fleet stayed in budget.
+    pub quality_alarm: Option<crate::obs::audit::QualityAlarm>,
 }
 
 impl FleetTelemetry {
@@ -197,6 +202,10 @@ impl FleetTelemetry {
                 Json::Arr(self.quality_curve.iter().map(|s| s.to_json()).collect()),
             ),
             ("max_mse_ratio", Json::Num(self.max_mse_ratio)),
+            (
+                "quality_alarm",
+                self.quality_alarm.as_ref().map(|a| a.to_json()).unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -222,6 +231,13 @@ impl FleetTelemetry {
                 self.replan_policy,
                 self.replan_events.len(),
                 self.max_mse_ratio,
+            ));
+        }
+        if let Some(a) = &self.quality_alarm {
+            s.push_str(&format!(
+                "QUALITY ALARM: class {} gen {} · served MSE {:.4} vs budget {:.4} \
+                 (ratio {:.3})\n",
+                a.level, a.generation, a.observed_mse, a.predicted_mse, a.ratio,
             ));
         }
         for d in &self.devices {

@@ -51,6 +51,11 @@
 //!   pluggable policies (round-robin, least-loaded, wear-leveling) plus
 //!   trace-driven load generation and JSON telemetry reproduce the
 //!   paper's lifetime claim at fleet scale (`xtpu fleet`).
+//! - [`obs`] — **the runtime observability layer**: a lock-free labelled
+//!   metrics registry with JSON/Prometheus exposition, sampled
+//!   per-request tracing (chrome-trace dumps), and the online quality
+//!   audit that shadow-executes sampled batches on the exact backend to
+//!   verify the deployed plan's predicted MSE in production.
 
 pub mod aging;
 pub mod assign;
@@ -61,6 +66,7 @@ pub mod exec;
 pub mod fleet;
 pub mod ilp;
 pub mod nn;
+pub mod obs;
 pub mod plan;
 pub mod sensitivity;
 pub mod simulator;

@@ -585,6 +585,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 "1e6",
                 "wear-clock acceleration for live stress accounting",
             ),
+            OptSpec::opt(
+                "trace-sample",
+                "0",
+                "trace 1-in-N requests through the full request path \
+                 (0 = off); dump with {\"trace\": N}",
+            ),
+            OptSpec::opt(
+                "audit-sample",
+                "0",
+                "shadow-execute 1-in-N batch groups on the exact backend and \
+                 audit observed vs predicted MSE (0 = off)",
+            ),
+            OptSpec::opt(
+                "audit-band",
+                "2.0",
+                "quality alarm threshold: observed/predicted MSE ratio above \
+                 this raises a QualityAlarm",
+            ),
+            OptSpec::opt(
+                "metrics-file",
+                "",
+                "write the JSON metrics exposition to this path every 500 ms",
+            ),
             OptSpec::flag("smoke", "serve one self-issued request per level, then exit"),
         ],
     )?
@@ -637,6 +660,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         w
     });
     let slo_ms = args.f64("slo-ms")?;
+    let audit_band = args.f64("audit-band")?;
+    anyhow::ensure!(audit_band > 0.0, "--audit-band must be positive, got {audit_band}");
     let opts = FrontendOptions {
         mode: FrontendMode::from_name(args.str("frontend"))?,
         slo: (slo_ms > 0.0).then(|| std::time::Duration::from_secs_f64(slo_ms / 1e3)),
@@ -644,9 +669,28 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_queue: args.usize("max-queue")?,
         route: Some(policy_from_name(&route_name)?),
         wear,
+        trace_sample: args.u64("trace-sample")?,
+        audit: xtpu::obs::audit::AuditConfig {
+            sample_every: args.u64("audit-sample")?,
+            band: (0.0, audit_band),
+            ..Default::default()
+        },
     };
     let frontend = opts.mode;
     let mut server = Server::spawn_opts(engines, args.usize("port")? as u16, policy, opts)?;
+    // Periodic metrics exporter: snapshot the unified registry to disk so
+    // dashboards (and the CI obs-smoke job) can scrape without a client.
+    let metrics_path = args.str("metrics-file").to_string();
+    if !metrics_path.is_empty() {
+        let stats = server.stats.clone();
+        let path = std::path::PathBuf::from(metrics_path.clone());
+        std::thread::Builder::new()
+            .name("metrics-export".into())
+            .spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_millis(500));
+                let _ = xtpu::util::json::write_file(&path, &stats.metrics_json());
+            })?;
+    }
     println!(
         "serving on {} ({frontend:?} frontend, {n_shards} shard(s), {} routing{})",
         server.addr,
@@ -655,8 +699,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     );
     println!("protocol: {{\"pixels\": [f32 × {input_dim}], \"quality\": idx}} per line");
     if args.flag("smoke") {
-        // CI self-test: one request per quality level, then the stats
-        // snapshot, then a clean shutdown.
+        // CI self-test: one request per quality level (plus, with the
+        // audit on, enough traffic to push every level past the audit's
+        // min-sample window), then the stats snapshot, then a clean
+        // shutdown.
         let mut client = Client::connect(server.addr)?;
         let zeros = vec![0f32; input_dim];
         for q in 0..n_levels {
@@ -664,7 +710,54 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             anyhow::ensure!(applied == q, "level {q} applied as {applied}");
             println!("smoke: quality {q} → class {class} ({} logits)", logits.len());
         }
+        let audit_cfg = server.stats.audit.config().clone();
+        if audit_cfg.sample_every > 0 {
+            // One row per sampled group (sequential client, so every
+            // request is its own batch): N·(min_samples + 2) requests per
+            // level guarantee ≥ min_samples audited rows on each, however
+            // the 1-in-N grid lands on the level boundaries.
+            let per_level = audit_cfg.sample_every * (audit_cfg.min_samples + 2);
+            for q in 0..n_levels {
+                for _ in 0..per_level {
+                    client.infer(&zeros, q)?;
+                }
+            }
+            // Shadow runs land after the replies; wait for the books.
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+            loop {
+                let ratios = server.stats.audit.ratios();
+                let settled = ratios.len() >= n_levels
+                    && ratios.iter().all(|&(.., rows)| rows >= audit_cfg.min_samples);
+                if settled || std::time::Instant::now() >= deadline {
+                    anyhow::ensure!(settled, "audit never reached its min-sample window");
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
         println!("smoke: stats {}", client.stats()?);
+        // Observability self-checks: the metrics exposition and (when
+        // tracing is on) a chrome-trace dump must answer over the wire.
+        let metrics = client.metrics()?;
+        anyhow::ensure!(
+            metrics.get("server").is_ok() && metrics.get("process").is_ok(),
+            "metrics exposition missing server/process registries"
+        );
+        if args.u64("trace-sample")? > 0 {
+            let trace = client.trace(64)?;
+            let events = trace.get("traceEvents")?.as_arr()?;
+            anyhow::ensure!(!events.is_empty(), "tracing on but the ring is empty");
+            println!("SMOKE_TRACE {trace}");
+        }
+        if !metrics_path.is_empty() {
+            // Synchronous write so the CI job can assert on the file
+            // without racing the 500 ms exporter tick.
+            xtpu::util::json::write_file(
+                &std::path::PathBuf::from(&metrics_path),
+                &server.stats.metrics_json(),
+            )?;
+            println!("smoke: wrote metrics to {metrics_path}");
+        }
         server.shutdown();
         println!("smoke OK");
         return Ok(());
@@ -710,7 +803,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             OptSpec::opt(
                 "replan",
                 "never",
-                "drift-triggered re-planning: never | threshold | periodic",
+                "drift-triggered re-planning: never | threshold | periodic | observed",
             ),
             OptSpec::opt(
                 "guard-band",
@@ -721,6 +814,12 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
                 "replan-every-years",
                 "0.01",
                 "periodic re-plan: deployed (wear-clock) years between re-solves",
+            ),
+            OptSpec::opt(
+                "replan-quality-ratio",
+                "1.0",
+                "observed re-plan: measured served-MSE-to-budget ratio that \
+                 triggers a re-solve",
             ),
             OptSpec::opt(
                 "replan-mode",
@@ -790,6 +889,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         args.str("replan"),
         args.f64("guard-band")?,
         args.f64("replan-every-years")?,
+        args.f64("replan-quality-ratio")?,
     )?;
     let adaptive = replan != ReplanPolicy::Never;
     let mut fleet = if adaptive {

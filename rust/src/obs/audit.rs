@@ -1,0 +1,369 @@
+//! Online quality audit: verify the deployed plan's predicted MSE against
+//! *observed* output error in production.
+//!
+//! The paper's contract is that VOS output quality stays above the
+//! user-defined threshold — but the threshold is enforced offline, from
+//! the statistical error model. This module closes the loop: the serving
+//! batch workers shadow-execute 1-in-N sampled batch groups on the
+//! [`Exact`](crate::exec::Exact) backend and feed both logit matrices to
+//! [`QualityAudit::observe`], which accumulates per-(level, generation)
+//! observed MSE, publishes `audit_mse_ratio{level,generation}` gauges into
+//! the server's metrics [`Registry`], and raises a typed [`QualityAlarm`]
+//! when observed/predicted leaves the configured band — the measured
+//! trigger behind `fleet`'s `ReplanPolicy::ObservedQuality`.
+//!
+//! Levels whose plan predicts zero MSE (the exact level) are tracked but
+//! never alarmed on a ratio — there is nothing to divide by; instead they
+//! alarm only if observed error exceeds an absolute epsilon, which on the
+//! bit-exact kernel means a genuine deployment bug.
+
+use super::metrics::{Counter, Gauge, Registry};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Absolute observed-MSE threshold for levels with `predicted_mse <= 0`:
+/// the exact level must agree with the shadow run bit-for-bit, so any
+/// measurable error is an alarm in its own right.
+const ZERO_PRED_EPSILON: f64 = 1e-9;
+
+#[derive(Clone, Debug)]
+pub struct AuditConfig {
+    /// Shadow-execute every n-th batch group; 0 disables the audit.
+    pub sample_every: u64,
+    /// Acceptable `observed / predicted` MSE band `(lo, hi)`; leaving it
+    /// (after `min_samples`) raises a [`QualityAlarm`].
+    pub band: (f64, f64),
+    /// Minimum audited rows per (level, generation) before the band is
+    /// enforced — keeps one unlucky noise draw from paging an operator.
+    pub min_samples: u64,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        Self { sample_every: 0, band: (0.0, 2.0), min_samples: 16 }
+    }
+}
+
+/// A fired quality alarm: the deployed plan's error model no longer
+/// matches production reality for one (level, generation).
+#[derive(Clone, Debug)]
+pub struct QualityAlarm {
+    pub level: usize,
+    pub level_name: String,
+    pub generation: u64,
+    pub observed_mse: f64,
+    pub predicted_mse: f64,
+    pub ratio: f64,
+    pub samples: u64,
+}
+
+impl QualityAlarm {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("level", Json::Num(self.level as f64)),
+            ("level_name", Json::Str(self.level_name.clone())),
+            ("generation", Json::Num(self.generation as f64)),
+            ("observed_mse", Json::Num(self.observed_mse)),
+            ("predicted_mse", Json::Num(self.predicted_mse)),
+            ("ratio", Json::Num(self.ratio)),
+            ("samples", Json::Num(self.samples as f64)),
+        ])
+    }
+}
+
+struct LevelAcc {
+    level_name: String,
+    rows: u64,
+    sum_sq: f64,
+    predicted: f64,
+    alarmed: bool,
+    ratio_gauge: Gauge,
+    observed_gauge: Gauge,
+}
+
+/// Accumulator for observed-vs-predicted output MSE, keyed by
+/// (quality level, plan generation).
+pub struct QualityAudit {
+    cfg: AuditConfig,
+    registry: Arc<Registry>,
+    seq: AtomicU64,
+    sampled_groups: Counter,
+    audited_rows: Counter,
+    alarms_total: Counter,
+    acc: Mutex<BTreeMap<(usize, u64), LevelAcc>>,
+    alarm: Mutex<Option<QualityAlarm>>,
+}
+
+impl QualityAudit {
+    /// Registers the audit's unlabelled series in `registry` up front;
+    /// per-(level, generation) gauges appear on first observation.
+    pub fn new(cfg: AuditConfig, registry: Arc<Registry>) -> Self {
+        let sampled_groups = registry.counter("audit_sampled_groups_total", &[]);
+        let audited_rows = registry.counter("audit_rows_total", &[]);
+        let alarms_total = registry.counter("audit_alarms_total", &[]);
+        Self {
+            cfg,
+            registry,
+            seq: AtomicU64::new(0),
+            sampled_groups,
+            audited_rows,
+            alarms_total,
+            acc: Mutex::new(BTreeMap::new()),
+            alarm: Mutex::new(None),
+        }
+    }
+
+    pub fn config(&self) -> &AuditConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.sample_every > 0
+    }
+
+    /// Whether this batch group falls on the sampling grid. One relaxed
+    /// load (and nothing else) when the audit is disabled.
+    pub fn should_sample(&self) -> bool {
+        if self.cfg.sample_every == 0 {
+            return false;
+        }
+        self.seq.fetch_add(1, Ordering::Relaxed) % self.cfg.sample_every == 0
+    }
+
+    /// Record one shadow-executed batch group. `deployed` and `exact` are
+    /// row-major `[rows, width]` logit matrices from the deployed backend
+    /// and the exact shadow run on identical inputs. Returns the alarm if
+    /// this observation (newly) tripped the band.
+    pub fn observe(
+        &self,
+        level: usize,
+        level_name: &str,
+        generation: u64,
+        predicted_mse: f64,
+        deployed: &[f32],
+        exact: &[f32],
+        rows: usize,
+    ) -> Option<QualityAlarm> {
+        assert_eq!(deployed.len(), exact.len(), "shadow run shape mismatch");
+        if rows == 0 || deployed.is_empty() {
+            return None;
+        }
+        let width = deployed.len() / rows;
+        self.sampled_groups.inc();
+        self.audited_rows.add(rows as u64);
+
+        let mut sum_sq = 0.0f64;
+        for (d, e) in deployed.iter().zip(exact.iter()) {
+            let diff = (*d - *e) as f64;
+            sum_sq += diff * diff;
+        }
+        // Per-row mean squared error over the output vector.
+        let group_sq = sum_sq / width as f64;
+
+        let mut acc = self.acc.lock().unwrap();
+        let entry = acc.entry((level, generation)).or_insert_with(|| {
+            let gen_s = generation.to_string();
+            let lvl_s = level_name.to_string();
+            let labels: &[(&str, &str)] = &[("level", &lvl_s), ("generation", &gen_s)];
+            LevelAcc {
+                level_name: lvl_s.clone(),
+                rows: 0,
+                sum_sq: 0.0,
+                predicted: predicted_mse,
+                alarmed: false,
+                ratio_gauge: self.registry.gauge("audit_mse_ratio", labels),
+                observed_gauge: self.registry.gauge("audit_observed_mse", labels),
+            }
+        });
+        entry.rows += rows as u64;
+        entry.sum_sq += group_sq;
+        entry.predicted = predicted_mse;
+        // Observed MSE = mean over audited rows of per-row output MSE.
+        let observed = entry.sum_sq / entry.rows as f64;
+        entry.observed_gauge.set(observed);
+
+        let (in_band, ratio) = if predicted_mse > 0.0 {
+            let r = observed / predicted_mse;
+            entry.ratio_gauge.set(r);
+            (r >= self.cfg.band.0 && r <= self.cfg.band.1, r)
+        } else {
+            // No ratio to form; alarm only on measurable exact-path error.
+            (observed <= ZERO_PRED_EPSILON, f64::INFINITY)
+        };
+
+        if !in_band && !entry.alarmed && entry.rows >= self.cfg.min_samples {
+            entry.alarmed = true;
+            self.alarms_total.inc();
+            let alarm = QualityAlarm {
+                level,
+                level_name: entry.level_name.clone(),
+                generation,
+                observed_mse: observed,
+                predicted_mse,
+                ratio,
+                samples: entry.rows,
+            };
+            let mut slot = self.alarm.lock().unwrap();
+            // Keep the first alarm: it is the one that caught the drift.
+            if slot.is_none() {
+                *slot = Some(alarm.clone());
+            }
+            return Some(alarm);
+        }
+        None
+    }
+
+    /// The first alarm raised, if any.
+    pub fn alarm(&self) -> Option<QualityAlarm> {
+        self.alarm.lock().unwrap().clone()
+    }
+
+    /// Total audited rows across all levels and generations.
+    pub fn audited_rows(&self) -> u64 {
+        self.audited_rows.get()
+    }
+
+    /// `(level, generation, observed_mse, ratio, rows)` per audited key;
+    /// `ratio` is `None` for zero-prediction levels.
+    pub fn ratios(&self) -> Vec<(usize, u64, f64, Option<f64>, u64)> {
+        let acc = self.acc.lock().unwrap();
+        acc.iter()
+            .map(|(&(level, generation), e)| {
+                let observed = if e.rows > 0 { e.sum_sq_mean() } else { 0.0 };
+                let ratio = (e.predicted > 0.0).then(|| observed / e.predicted);
+                (level, generation, observed, ratio, e.rows)
+            })
+            .collect()
+    }
+
+    /// Stats-line summary: sampling config, per-key ratios, and the alarm.
+    pub fn to_json(&self) -> Json {
+        let keys: Vec<Json> = self
+            .ratios()
+            .into_iter()
+            .map(|(level, generation, observed, ratio, rows)| {
+                Json::obj(vec![
+                    ("level", Json::Num(level as f64)),
+                    ("generation", Json::Num(generation as f64)),
+                    ("observed_mse", Json::Num(observed)),
+                    ("mse_ratio", ratio.map(Json::Num).unwrap_or(Json::Null)),
+                    ("rows", Json::Num(rows as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("sample_every", Json::Num(self.cfg.sample_every as f64)),
+            ("band_lo", Json::Num(self.cfg.band.0)),
+            ("band_hi", Json::Num(self.cfg.band.1)),
+            ("rows", Json::Num(self.audited_rows.get() as f64)),
+            ("levels", Json::Arr(keys)),
+            ("alarm", self.alarm().map(|a| a.to_json()).unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+impl LevelAcc {
+    /// Mean per-row output MSE over everything audited so far. `sum_sq`
+    /// accumulates the sum of per-row MSEs (see `observe`), so dividing
+    /// by total rows recovers the row mean.
+    fn sum_sq_mean(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.sum_sq / self.rows as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn audit(sample_every: u64, band: (f64, f64), min: u64) -> QualityAudit {
+        QualityAudit::new(
+            AuditConfig { sample_every, band, min_samples: min },
+            Arc::new(Registry::new()),
+        )
+    }
+
+    #[test]
+    fn disabled_audit_samples_nothing() {
+        let a = audit(0, (0.0, 2.0), 1);
+        assert!(!a.enabled());
+        for _ in 0..10 {
+            assert!(!a.should_sample());
+        }
+    }
+
+    #[test]
+    fn sampling_grid_is_one_in_n() {
+        let a = audit(4, (0.0, 2.0), 1);
+        let hits = (0..16).filter(|_| a.should_sample()).count();
+        assert_eq!(hits, 4);
+    }
+
+    #[test]
+    fn well_modeled_plan_stays_quiet_and_mismodeled_plan_alarms() {
+        let a = audit(1, (0.0, 2.0), 4);
+        // Deployed output differs from exact by 1.0 per element ->
+        // per-row MSE = 1.0 exactly.
+        let exact = vec![0.0f32; 8];
+        let deployed = vec![1.0f32; 8];
+        // Predicted 1.0 -> ratio 1.0, inside (0, 2]: quiet.
+        for _ in 0..8 {
+            assert!(a.observe(1, "eco", 0, 1.0, &deployed, &exact, 2).is_none());
+        }
+        assert!(a.alarm().is_none());
+        // Same observed error but the plan promised 100x less: alarm once
+        // min_samples rows have accumulated, and only once.
+        let fired = (0..8)
+            .filter_map(|_| a.observe(2, "turbo", 0, 0.01, &deployed, &exact, 2))
+            .collect::<Vec<_>>();
+        assert_eq!(fired.len(), 1);
+        let alarm = a.alarm().expect("alarm latched");
+        assert_eq!(alarm.level, 2);
+        assert_eq!(alarm.level_name, "turbo");
+        assert!((alarm.ratio - 100.0).abs() < 1e-6, "ratio {}", alarm.ratio);
+        assert!(alarm.samples >= 4);
+    }
+
+    #[test]
+    fn zero_prediction_level_alarms_only_on_measurable_error() {
+        let a = audit(1, (0.0, 2.0), 1);
+        let x = vec![0.5f32; 4];
+        assert!(a.observe(0, "exact", 0, 0.0, &x, &x, 1).is_none());
+        assert!(a.alarm().is_none());
+        let y = vec![0.75f32; 4];
+        assert!(a.observe(0, "exact", 0, 0.0, &y, &x, 1).is_some());
+    }
+
+    #[test]
+    fn observed_mse_is_row_mean() {
+        let a = audit(1, (0.0, 100.0), 1);
+        // Two rows of width 2: per-row MSEs 1.0 and 4.0 -> mean 2.5.
+        let exact = vec![0.0f32; 4];
+        let deployed = vec![1.0f32, 1.0, 2.0, 2.0];
+        a.observe(1, "eco", 3, 10.0, &deployed, &exact, 2);
+        let r = a.ratios();
+        assert_eq!(r.len(), 1);
+        let (level, generation, observed, ratio, rows) = r[0];
+        assert_eq!((level, generation, rows), (1, 3, 2));
+        assert!((observed - 2.5).abs() < 1e-9, "observed {observed}");
+        assert!((ratio.unwrap() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_summary_has_alarm_and_levels() {
+        let a = audit(1, (0.0, 2.0), 1);
+        let exact = vec![0.0f32; 2];
+        let deployed = vec![3.0f32; 2];
+        a.observe(1, "eco", 0, 0.001, &deployed, &exact, 1);
+        let j = a.to_json();
+        assert!(!matches!(j.get("alarm").unwrap(), Json::Null), "alarm surfaced");
+        let levels = j.get("levels").unwrap().as_arr().unwrap();
+        assert_eq!(levels.len(), 1);
+        assert_eq!(j.get("rows").unwrap().as_u64().unwrap(), 1);
+    }
+}

@@ -1,0 +1,431 @@
+//! Process-wide, lock-free metrics: atomic counters, gauges, and
+//! power-of-two histograms behind a labelled [`Registry`].
+//!
+//! The registry is the single sink the serving stack and the fleet
+//! simulator publish through (`ServerStats`, `FleetTelemetry`, the quality
+//! audit). Recording is lock-free — a handle is a clone of an `Arc`'d
+//! atomic cell, so the hot path pays one relaxed atomic op per event.
+//! Registration (`counter`/`gauge`/`histogram`) takes a mutex and may
+//! allocate; call it at setup time or on cold events (a new plan
+//! generation), never per request.
+//!
+//! Two expositions are provided and must agree series-for-series:
+//!
+//! - [`Registry::to_json`] — a flat, canonically ordered JSON object
+//!   mapping `name{label="value",…}` to a number (histograms expand to
+//!   `_count`/`_p50`/`_p99` series).
+//! - [`Registry::to_text`] — Prometheus-style `name{label="value"} value`
+//!   lines over the same derived series, with values rendered by the same
+//!   JSON number formatter so the two views are bit-identical.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Typed handles
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing event count. Cloning shares the cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable instantaneous value (f64 stored as bits). `add`/`max` use a
+/// CAS loop, so they are lock-free but not wait-free — fine for per-batch
+/// bookkeeping, avoid in per-element loops.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn add(&self, d: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn max(&self, v: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        while v > f64::from_bits(cur) {
+            match self
+                .bits
+                .compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Registry handle to a shared [`Pow2Histogram`].
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    cell: Arc<Pow2Histogram>,
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        self.cell.record(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.cell.count()
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.cell.quantile(q)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Power-of-two histogram
+// ---------------------------------------------------------------------------
+
+/// Lock-free histogram over `u64` values with power-of-two buckets:
+/// bucket 0 holds the value 0 and bucket `i ≥ 1` holds `[2^(i-1), 2^i)`,
+/// saturating at bucket 63. Unit-agnostic — the serving stack records
+/// microseconds through the [`LatencyHistogram`] façade, the fleet
+/// simulator records duty/latency in whatever integer unit it quantizes
+/// to. Quantiles are upper bucket bounds, so they are conservative
+/// (`quantile(q)` never under-reports).
+#[derive(Debug)]
+pub struct Pow2Histogram {
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for Pow2Histogram {
+    fn default() -> Self {
+        Self { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl Pow2Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        ((64 - v.leading_zeros()) as usize).min(63)
+    }
+
+    /// Inclusive upper bound of bucket `i` (the value a quantile in that
+    /// bucket reports).
+    pub fn bucket_bound(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The upper bound of the bucket containing quantile `q` (clamped to
+    /// `[0, 1]`); 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_bound(i);
+            }
+        }
+        Self::bucket_bound(63)
+    }
+}
+
+/// Microsecond-latency façade over [`Pow2Histogram`] — the single
+/// histogram implementation in the tree. Historically lived in
+/// `util::stats`, which still re-exports it.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    inner: Pow2Histogram,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.inner.record(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.count()
+    }
+
+    /// Upper bound (µs) of the power-of-two bucket containing quantile
+    /// `q`; 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        self.inner.quantile(q)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Arc<Pow2Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+type SeriesKey = (String, Vec<(String, String)>);
+
+/// A labelled metric registry. One instance per server (exposed over the
+/// `{"metrics": true}` protocol line) plus the process-wide [`global`]
+/// registry that library layers like `exec` publish into.
+#[derive(Default)]
+pub struct Registry {
+    series: Mutex<BTreeMap<SeriesKey, Metric>>,
+}
+
+fn series_key(name: &str, labels: &[(&str, &str)]) -> SeriesKey {
+    let mut ls: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    ls.sort();
+    (name.to_string(), ls)
+}
+
+/// Render `name{k="v",…}`; just `name` when unlabelled.
+fn series_id(name: &str, labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let inner: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "'"))).collect();
+    format!("{name}{{{}}}", inner.join(","))
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn register(&self, name: &str, labels: &[(&str, &str)], fresh: Metric) -> Metric {
+        let want = fresh.kind();
+        let key = series_key(name, labels);
+        let mut map = self.series.lock().unwrap();
+        let entry = map.entry(key).or_insert(fresh);
+        // A second registration with a different type is a programming
+        // error; silently handing back a detached cell would make the
+        // exposition lie.
+        assert_eq!(entry.kind(), want, "metric '{name}' re-registered with a different type");
+        entry.clone()
+    }
+
+    /// Get-or-create a counter series. Takes the registry lock; not for
+    /// per-request paths (clone the handle once instead).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.register(name, labels, Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c,
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.register(name, labels, Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        match self.register(name, labels, Metric::Histogram(Arc::new(Pow2Histogram::new()))) {
+            Metric::Histogram(h) => Histogram { cell: h },
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Every derived series as `(id, value)`, canonically ordered by
+    /// (name, labels). Histograms expand into `name_count` / `name_p50` /
+    /// `name_p99` so both expositions stay scalar.
+    fn flatten(&self) -> Vec<(String, f64)> {
+        let map = self.series.lock().unwrap();
+        let mut out = Vec::with_capacity(map.len());
+        for ((name, labels), metric) in map.iter() {
+            match metric {
+                Metric::Counter(c) => out.push((series_id(name, labels), c.get() as f64)),
+                Metric::Gauge(g) => out.push((series_id(name, labels), g.get())),
+                Metric::Histogram(h) => {
+                    out.push((series_id(&format!("{name}_count"), labels), h.count() as f64));
+                    out.push((
+                        series_id(&format!("{name}_p50"), labels),
+                        h.quantile(0.50) as f64,
+                    ));
+                    out.push((
+                        series_id(&format!("{name}_p99"), labels),
+                        h.quantile(0.99) as f64,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Flat JSON object: `{"name{label=\"v\"}": value, …}`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.flatten().into_iter().map(|(id, v)| (id, Json::Num(v))).collect())
+    }
+
+    /// Prometheus-style text exposition over the same derived series as
+    /// [`to_json`], values rendered by the same JSON formatter.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for (id, v) in self.flatten() {
+            s.push_str(&id);
+            s.push(' ');
+            s.push_str(&Json::Num(v).to_string());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// The process-wide registry — library layers below the server (the exec
+/// kernel dispatch, fleet helpers) publish counters here.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_roundtrip() {
+        let reg = Registry::new();
+        let c = reg.counter("requests_total", &[("shard", "0")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same (name, labels) -> same cell, regardless of label order.
+        let c2 = reg.counter("requests_total", &[("shard", "0")]);
+        c2.inc();
+        assert_eq!(c.get(), 6);
+
+        let g = reg.gauge("est_service_ns", &[]);
+        g.set(1.5);
+        g.add(0.5);
+        assert_eq!(g.get(), 2.0);
+        g.max(1.0);
+        assert_eq!(g.get(), 2.0);
+        g.max(3.0);
+        assert_eq!(g.get(), 3.0);
+
+        let h = reg.histogram("latency_us", &[("level", "eco")]);
+        for _ in 0..100 {
+            h.record(100);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(0.5), 127);
+    }
+
+    #[test]
+    fn json_and_text_expositions_agree() {
+        let reg = Registry::new();
+        reg.counter("a_total", &[]).add(3);
+        reg.gauge("b_ratio", &[("level", "eco"), ("generation", "2")]).set(1.25);
+        let h = reg.histogram("lat_us", &[]);
+        h.record(7);
+        h.record(900);
+
+        let json = reg.to_json();
+        let Json::Obj(map) = &json else { panic!("flat object") };
+        let mut from_text = std::collections::BTreeMap::new();
+        for line in reg.to_text().lines() {
+            let (id, val) = line.rsplit_once(' ').unwrap();
+            from_text.insert(id.to_string(), val.parse::<f64>().unwrap());
+        }
+        assert_eq!(map.len(), from_text.len());
+        for (id, v) in map {
+            let Json::Num(n) = v else { panic!("numeric series") };
+            assert_eq!(from_text.get(id), Some(n), "series {id}");
+        }
+        // Labels are sorted into the id, histograms expand to 3 series.
+        assert!(map.contains_key("b_ratio{generation=\"2\",level=\"eco\"}"));
+        assert!(map.contains_key("lat_us_count"));
+        assert!(map.contains_key("lat_us_p50"));
+        assert!(map.contains_key("lat_us_p99"));
+    }
+
+    #[test]
+    fn pow2_histogram_matches_latency_facade() {
+        let h = Pow2Histogram::new();
+        let l = LatencyHistogram::new();
+        for v in [0u64, 1, 2, 127, 128, 1 << 20] {
+            h.record(v);
+            l.record_us(v);
+        }
+        assert_eq!(h.count(), l.count());
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), l.quantile_us(q));
+        }
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let c = global().counter("obs_test_global_total", &[]);
+        let before = c.get();
+        global().counter("obs_test_global_total", &[]).inc();
+        assert_eq!(c.get(), before + 1);
+    }
+}

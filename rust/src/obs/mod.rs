@@ -1,0 +1,24 @@
+//! Runtime observability: the measurement substrate for the serving stack
+//! and the fleet simulator.
+//!
+//! Three layers, wired through `server`, `exec`, and `fleet`:
+//!
+//! - [`metrics`] — a lock-free, labelled metrics [`Registry`](metrics::Registry)
+//!   (counters, gauges, power-of-two histograms) with JSON and
+//!   Prometheus-style text exposition. `ServerStats` and the fleet
+//!   telemetry publish through it; `xtpu serve` exposes it over the
+//!   `{"metrics": true}` protocol line and `--metrics-file`.
+//! - [`trace`] — sampled per-request spans (accept → admission → route →
+//!   queue wait → batch assembly → kernel → reply) carried on the job and
+//!   dumpable as chrome-trace JSON over `{"trace": N}`. Sampling rate 0
+//!   costs one relaxed atomic load per request.
+//! - [`audit`] — the online quality monitor: shadow-executes sampled
+//!   batches on the exact backend, compares observed output MSE to the
+//!   plan's predicted MSE, and raises a [`QualityAlarm`](audit::QualityAlarm)
+//!   when the ratio leaves the configured band. This turns the paper's
+//!   offline quality threshold into a runtime-verified invariant and
+//!   feeds `fleet::ReplanPolicy::ObservedQuality` a measured trigger.
+
+pub mod audit;
+pub mod metrics;
+pub mod trace;

@@ -1,0 +1,335 @@
+//! Sampled per-request tracing for the serving stack.
+//!
+//! A [`Tracer`] hands out at most one [`ActiveSpan`] per sampled request;
+//! the span rides on the job (`server::Job`) through accept → admission →
+//! shard route → queue wait → batch assembly → kernel → reply, each stage
+//! stamping a microsecond offset from the tracer's epoch. When the job is
+//! dropped — replied, shed, or lost to a worker panic — the span's record
+//! lands in a fixed-size ring buffer, so shed requests trace for free and
+//! nothing is ever left half-open.
+//!
+//! Cost contract: with `sample_every == 0` the per-request cost is a
+//! single relaxed atomic load (no counter bump, no allocation) — the
+//! `l3l_obs_overhead_pct` bench gate pins this. A sampled request pays one
+//! small boxed allocation plus `Instant` reads at stage boundaries.
+//!
+//! [`Tracer::dump`] renders the ring as chrome-trace JSON (the
+//! `chrome://tracing` / Perfetto "trace event" format): one complete
+//! (`"ph": "X"`) event per stage, `tid` = shard, one row per request via
+//! `args.id`.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Stage offset sentinel: "never reached".
+const UNSET: u64 = u64::MAX;
+
+/// One request's stage timeline, offsets in µs since the tracer epoch.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    pub id: u64,
+    pub shard: u32,
+    pub level: u32,
+    pub generation: u64,
+    pub shed: bool,
+    pub t_accept_us: u64,
+    pub t_admitted_us: u64,
+    pub t_routed_us: u64,
+    pub t_enqueued_us: u64,
+    pub t_collected_us: u64,
+    pub t_exec_us: u64,
+    pub t_exec_end_us: u64,
+    pub t_reply_us: u64,
+}
+
+impl TraceRecord {
+    fn unset(id: u64) -> Self {
+        Self {
+            id,
+            shard: 0,
+            level: 0,
+            generation: 0,
+            shed: false,
+            t_accept_us: UNSET,
+            t_admitted_us: UNSET,
+            t_routed_us: UNSET,
+            t_enqueued_us: UNSET,
+            t_collected_us: UNSET,
+            t_exec_us: UNSET,
+            t_exec_end_us: UNSET,
+            t_reply_us: UNSET,
+        }
+    }
+
+    /// `(name, start, end)` for each stage whose both boundaries were
+    /// stamped, in pipeline order.
+    fn stages(&self) -> Vec<(&'static str, u64, u64)> {
+        let pairs = [
+            ("admission", self.t_accept_us, self.t_admitted_us),
+            ("route", self.t_admitted_us, self.t_routed_us),
+            ("queue_wait", self.t_enqueued_us, self.t_collected_us),
+            ("batch_assembly", self.t_collected_us, self.t_exec_us),
+            ("kernel", self.t_exec_us, self.t_exec_end_us),
+            ("reply", self.t_exec_end_us, self.t_reply_us),
+        ];
+        pairs
+            .into_iter()
+            .filter(|&(_, a, b)| a != UNSET && b != UNSET && b >= a)
+            .collect()
+    }
+}
+
+struct Ring {
+    buf: Vec<TraceRecord>,
+    /// Next overwrite position once `buf` has reached capacity.
+    next: usize,
+}
+
+/// Sampling trace recorder with a bounded ring of completed records.
+pub struct Tracer {
+    epoch: Instant,
+    sample_every: AtomicU64,
+    seq: AtomicU64,
+    capacity: usize,
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    /// `capacity` bounds the ring (records, not bytes); sampling starts
+    /// off (`sample_every == 0`).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            sample_every: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            capacity: capacity.max(1),
+            ring: Mutex::new(Ring { buf: Vec::new(), next: 0 }),
+        }
+    }
+
+    /// 0 disables sampling; `n` traces every n-th request.
+    pub fn set_sample_every(&self, n: u64) {
+        self.sample_every.store(n, Ordering::Relaxed);
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every.load(Ordering::Relaxed)
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Start a span for this request if it falls on the sampling grid.
+    /// When sampling is off this is one relaxed load and `None`.
+    pub fn maybe_start(self: &Arc<Self>) -> Option<Box<ActiveSpan>> {
+        let every = self.sample_every.load(Ordering::Relaxed);
+        if every == 0 {
+            return None;
+        }
+        let s = self.seq.fetch_add(1, Ordering::Relaxed);
+        if s % every != 0 {
+            return None;
+        }
+        let mut rec = TraceRecord::unset(s);
+        rec.t_accept_us = self.now_us();
+        Some(Box::new(ActiveSpan { tracer: Arc::clone(self), rec }))
+    }
+
+    fn push(&self, rec: TraceRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.buf.len() < self.capacity {
+            ring.buf.push(rec);
+        } else {
+            let at = ring.next;
+            ring.buf[at] = rec;
+            ring.next = (at + 1) % self.capacity;
+        }
+    }
+
+    /// Number of records currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The newest `max` records, oldest first.
+    pub fn recent(&self, max: usize) -> Vec<TraceRecord> {
+        let ring = self.ring.lock().unwrap();
+        let n = ring.buf.len();
+        let take = max.min(n);
+        let mut out = Vec::with_capacity(take);
+        // Chronological order: ring.next is the oldest slot once full.
+        let start = if n < self.capacity { 0 } else { ring.next };
+        for i in 0..n {
+            out.push(ring.buf[(start + i) % n].clone());
+        }
+        out.split_off(n - take)
+    }
+
+    /// Chrome-trace JSON (`{"traceEvents": [...]}`) over the newest `max`
+    /// records: one `"ph": "X"` complete event per recorded stage, with
+    /// `tid` = shard and `args` carrying request id / level / generation.
+    pub fn dump(&self, max: usize) -> Json {
+        let mut events = Vec::new();
+        for rec in self.recent(max) {
+            for (name, start, end) in rec.stages() {
+                events.push(Json::obj(vec![
+                    ("name", Json::Str(name.to_string())),
+                    ("cat", Json::Str(if rec.shed { "shed" } else { "request" }.to_string())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("ts", Json::Num(start as f64)),
+                    ("dur", Json::Num((end - start) as f64)),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num(rec.shard as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("id", Json::Num(rec.id as f64)),
+                            ("level", Json::Num(rec.level as f64)),
+                            ("generation", Json::Num(rec.generation as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+    }
+}
+
+/// A live span riding on one request's job. Stage marks stamp offsets;
+/// dropping the span (reply sent, request shed, worker lost) commits the
+/// record to the tracer's ring.
+pub struct ActiveSpan {
+    tracer: Arc<Tracer>,
+    rec: TraceRecord,
+}
+
+impl ActiveSpan {
+    pub fn mark_admitted(&mut self) {
+        self.rec.t_admitted_us = self.tracer.now_us();
+    }
+
+    pub fn mark_routed(&mut self, shard: usize) {
+        self.rec.shard = shard as u32;
+        self.rec.t_routed_us = self.tracer.now_us();
+    }
+
+    pub fn mark_enqueued(&mut self) {
+        self.rec.t_enqueued_us = self.tracer.now_us();
+    }
+
+    pub fn mark_collected(&mut self) {
+        self.rec.t_collected_us = self.tracer.now_us();
+    }
+
+    pub fn mark_exec(&mut self, level: usize, generation: u64) {
+        self.rec.level = level as u32;
+        self.rec.generation = generation;
+        self.rec.t_exec_us = self.tracer.now_us();
+    }
+
+    pub fn mark_exec_end(&mut self) {
+        self.rec.t_exec_end_us = self.tracer.now_us();
+    }
+
+    pub fn mark_reply(&mut self) {
+        self.rec.t_reply_us = self.tracer.now_us();
+    }
+
+    pub fn mark_shed(&mut self) {
+        self.rec.shed = true;
+        self.rec.t_admitted_us = self.tracer.now_us();
+    }
+}
+
+impl Drop for ActiveSpan {
+    fn drop(&mut self) {
+        self.tracer.push(self.rec.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_zero_yields_no_spans() {
+        let t = Arc::new(Tracer::new(8));
+        assert!(t.maybe_start().is_none());
+        t.set_sample_every(2);
+        let started: usize = (0..10).filter(|_| t.maybe_start().is_some()).count();
+        assert_eq!(started, 5);
+    }
+
+    #[test]
+    fn spans_commit_on_drop_and_dump_as_chrome_trace() {
+        let t = Arc::new(Tracer::new(8));
+        t.set_sample_every(1);
+        {
+            let mut s = t.maybe_start().unwrap();
+            s.mark_admitted();
+            s.mark_routed(3);
+            s.mark_enqueued();
+            s.mark_collected();
+            s.mark_exec(1, 7);
+            s.mark_exec_end();
+            s.mark_reply();
+        }
+        assert_eq!(t.len(), 1);
+        let dump = t.dump(16);
+        let events = dump.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 6, "all six stages recorded");
+        let names: Vec<&str> =
+            events.iter().map(|e| e.get("name").unwrap().as_str().unwrap()).collect();
+        assert_eq!(
+            names,
+            ["admission", "route", "queue_wait", "batch_assembly", "kernel", "reply"]
+        );
+        for e in events {
+            assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+            let args = e.get("args").unwrap();
+            assert_eq!(args.get("generation").unwrap().as_u64().unwrap(), 7);
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let t = Arc::new(Tracer::new(4));
+        t.set_sample_every(1);
+        for _ in 0..10 {
+            let mut s = t.maybe_start().unwrap();
+            s.mark_admitted();
+        }
+        assert_eq!(t.len(), 4);
+        let recent = t.recent(16);
+        let ids: Vec<u64> = recent.iter().map(|r| r.id).collect();
+        assert_eq!(ids, [6, 7, 8, 9]);
+        assert_eq!(t.recent(2).iter().map(|r| r.id).collect::<Vec<_>>(), [8, 9]);
+    }
+
+    #[test]
+    fn shed_spans_record_partial_path() {
+        let t = Arc::new(Tracer::new(4));
+        t.set_sample_every(1);
+        {
+            let mut s = t.maybe_start().unwrap();
+            s.mark_shed();
+        }
+        let rec = &t.recent(1)[0];
+        assert!(rec.shed);
+        assert_eq!(rec.t_exec_us, u64::MAX, "never reached the kernel");
+        let dump = t.dump(4);
+        let events = dump.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1, "only the admission stage is emitted");
+        assert_eq!(events[0].get("cat").unwrap().as_str().unwrap(), "shed");
+    }
+}

@@ -73,10 +73,12 @@ use crate::exec::{Backend, Exact};
 use crate::fleet::RoutePolicy;
 use crate::nn::quant::{NoiseSpec, QuantizedModel};
 use crate::nn::tensor::Tensor;
+use crate::obs::audit::{AuditConfig, QualityAudit};
+use crate::obs::metrics::{LatencyHistogram, Registry};
+use crate::obs::trace::Tracer;
 use crate::plan::VoltagePlan;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256pp;
-use crate::util::stats::LatencyHistogram;
 use crate::util::threadpool;
 
 use shard::ShardSet;
@@ -91,6 +93,12 @@ pub struct QualityLevel {
     /// gate-energy units of [`crate::power`] (a plan's `energy` field).
     /// Zero when the level was hand-assembled without an energy model.
     pub energy: f64,
+    /// The offline error model's predicted served output MSE at this level
+    /// (a plan's `predicted_mse`). The online quality audit
+    /// ([`crate::obs::audit`]) compares observed shadow-execution MSE
+    /// against this; levels carrying 0 (the exact level, hand-assembled
+    /// levels) are audited on an absolute epsilon instead of a ratio.
+    pub predicted_mse: f64,
 }
 
 /// One generation of deployed quality levels: what a request executes
@@ -296,6 +304,16 @@ impl Engine {
         self.quantized.forward_with(backend.as_ref(), x, noise, rng)
     }
 
+    /// Error-free reference execution on a dedicated [`Exact`] backend —
+    /// the quality audit's shadow run. Bypasses the worker pool (whose
+    /// backends realize the *deployed* regime) and injects no noise; a
+    /// clean forward draws nothing from `rng`, so shadow-executing a
+    /// sampled batch leaves the worker's noise stream — and with it every
+    /// served output — bit-identical to an unaudited run.
+    pub fn execute_exact(&self, x: &Tensor, rng: &mut Xoshiro256pp) -> Tensor {
+        self.quantized.forward_with(&Exact, x, None, rng)
+    }
+
     /// Estimated energy of one request at `quality` (clamped) on the
     /// active set, in the normalized gate-energy units of [`crate::power`].
     /// Zero when the levels carry no energy model (hand-assembled engines).
@@ -405,6 +423,7 @@ fn levels_from_plans(
             noise: p.noise_spec(registry),
             energy_saving: p.energy_saving,
             energy: p.energy,
+            predicted_mse: p.predicted_mse,
         })
         .collect())
 }
@@ -421,6 +440,11 @@ pub(crate) struct Job {
     /// When the admission gate accepted the job — the latency clock.
     pub(crate) enqueued: Instant,
     pub(crate) reply: Reply,
+    /// Sampled trace span riding the request (None for unsampled
+    /// requests). Stage marks are stamped along the pipeline; dropping
+    /// the job — replied, shed, or lost to a worker panic — commits the
+    /// record to the tracer's ring.
+    pub(crate) trace: Option<Box<crate::obs::trace::ActiveSpan>>,
 }
 
 /// Where a finished inference goes: the handler thread's blocking channel
@@ -456,9 +480,17 @@ impl Reply {
     }
 }
 
+/// How many trace records the per-server ring buffer retains.
+const TRACE_RING_CAPACITY: usize = 4096;
+
 /// Server statistics (exposed for tests/benches, and to clients via a
 /// `{"stats": true}` request line).
-#[derive(Default)]
+///
+/// The atomic fields are the hot-path cells (one relaxed op per event);
+/// [`Self::publish`] snapshots them into the server's obs
+/// [`Registry`] — the single exposition surface behind the
+/// `{"metrics": true}` protocol line and `--metrics-file` — where the
+/// quality audit and the tracer register their own series directly.
 pub struct ServerStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
@@ -505,6 +537,39 @@ pub struct ServerStats {
     /// Requests routed per shard — the observable that shard placement
     /// (round-robin fairness, wear-leveling steering) actually happened.
     per_shard: Mutex<Vec<u64>>,
+    /// The server's metrics registry (see the struct docs).
+    pub registry: Arc<Registry>,
+    /// Sampled per-request tracing ([`crate::obs::trace`]); sampling is
+    /// off (rate 0) unless [`FrontendOptions::trace_sample`] enables it.
+    pub tracer: Arc<Tracer>,
+    /// The online quality audit ([`crate::obs::audit`]); disabled unless
+    /// [`FrontendOptions::audit`] configures a sampling rate.
+    pub audit: Arc<QualityAudit>,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        let registry = Arc::new(Registry::new());
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            inflight_batches: AtomicU64::new(0),
+            peak_concurrent_batches: AtomicU64::new(0),
+            per_level: Mutex::new(Vec::new()),
+            per_generation: Mutex::new(BTreeMap::new()),
+            worker_panics: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_missed: AtomicU64::new(0),
+            conn_rejected: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+            est_service_ns: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+            per_shard: Mutex::new(Vec::new()),
+            tracer: Arc::new(Tracer::new(TRACE_RING_CAPACITY)),
+            audit: Arc::new(QualityAudit::new(AuditConfig::default(), registry.clone())),
+            registry,
+        }
+    }
 }
 
 impl ServerStats {
@@ -557,7 +622,86 @@ impl ServerStats {
         self.est_service_ns.store(new, Ordering::Relaxed);
     }
 
+    /// Snapshot every hot-path cell into the obs registry: monotonic
+    /// counters advance by their delta (so registry counters stay
+    /// monotone), instantaneous values land in gauges. Called by the
+    /// metrics expositions, never on the request path — the audit's and
+    /// tracer's series live in the registry already and need no sync.
+    pub fn publish(&self) {
+        let reg = &self.registry;
+        let counter = |name: &str, labels: &[(&str, &str)], v: u64| {
+            let c = reg.counter(name, labels);
+            c.add(v.saturating_sub(c.get()));
+        };
+        counter("server_requests_total", &[], self.requests.load(Ordering::Relaxed));
+        counter("server_batches_total", &[], self.batches.load(Ordering::Relaxed));
+        counter("server_worker_panics_total", &[], self.worker_panics.load(Ordering::Relaxed));
+        counter("server_shed_total", &[], self.shed.load(Ordering::Relaxed));
+        counter(
+            "server_deadline_missed_total",
+            &[],
+            self.deadline_missed.load(Ordering::Relaxed),
+        );
+        counter("server_conn_rejected_total", &[], self.conn_rejected.load(Ordering::Relaxed));
+        for (i, &c) in self.per_level_counts().iter().enumerate() {
+            let level = i.to_string();
+            counter("server_served_total", &[("level", &level)], c);
+        }
+        for (i, &c) in self.per_shard_counts().iter().enumerate() {
+            let shard = i.to_string();
+            counter("server_routed_total", &[("shard", &shard)], c);
+        }
+        {
+            let map = self.per_generation.lock().unwrap_or_else(|e| e.into_inner());
+            for (g, &n) in map.iter() {
+                let generation = g.to_string();
+                counter(
+                    "server_requests_by_generation_total",
+                    &[("generation", &generation)],
+                    n,
+                );
+            }
+        }
+        reg.gauge("server_queued", &[]).set(self.queued.load(Ordering::Relaxed) as f64);
+        reg.gauge("server_inflight_batches", &[])
+            .set(self.inflight_batches.load(Ordering::Relaxed) as f64);
+        reg.gauge("server_peak_concurrent_batches", &[])
+            .set(self.peak_concurrent_batches.load(Ordering::Relaxed) as f64);
+        reg.gauge("server_est_service_ns", &[])
+            .set(self.est_service_ns.load(Ordering::Relaxed) as f64);
+        reg.gauge("server_request_latency_us_count", &[]).set(self.latency.count() as f64);
+        reg.gauge("server_request_latency_us_p50", &[])
+            .set(self.latency.quantile_us(0.50) as f64);
+        reg.gauge("server_request_latency_us_p99", &[])
+            .set(self.latency.quantile_us(0.99) as f64);
+        reg.gauge("trace_sample_every", &[]).set(self.tracer.sample_every() as f64);
+        reg.gauge("trace_records", &[]).set(self.tracer.len() as f64);
+    }
+
+    /// The `{"metrics": true}` payload: this server's registry plus the
+    /// process-wide one (where `exec` publishes), both freshly synced.
+    pub fn metrics_json(&self) -> Json {
+        self.publish();
+        Json::obj(vec![
+            ("server", self.registry.to_json()),
+            ("process", crate::obs::metrics::global().to_json()),
+        ])
+    }
+
+    /// Prometheus-style text over the same series as
+    /// [`Self::metrics_json`] (server registry first, then the process
+    /// registry; names do not collide).
+    pub fn metrics_text(&self) -> String {
+        self.publish();
+        let mut s = self.registry.to_text();
+        s.push_str(&crate::obs::metrics::global().to_text());
+        s
+    }
+
     /// Snapshot as JSON — what the server returns for a stats request.
+    /// The key set is pinned by a golden-file test
+    /// (`rust/tests/golden_stats_schema.txt`): every tracked counter is
+    /// exported, and removing a key is a breaking protocol change.
     pub fn to_json(&self) -> Json {
         let per_generation = {
             let map = self.per_generation.lock().unwrap_or_else(|e| e.into_inner());
@@ -568,6 +712,22 @@ impl ServerStats {
         Json::obj(vec![
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            (
+                "inflight_batches",
+                Json::Num(self.inflight_batches.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "est_service_ns",
+                Json::Num(self.est_service_ns.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "audit",
+                self.audit.to_json(),
+            ),
+            (
+                "quality_alarm",
+                self.audit.alarm().map(|a| a.to_json()).unwrap_or(Json::Null),
+            ),
             (
                 "peak_concurrent_batches",
                 Json::Num(self.peak_concurrent_batches.load(Ordering::Relaxed) as f64),
@@ -659,6 +819,13 @@ pub struct FrontendOptions {
     /// Wear accounting for the shards (enables wear-leveling routing on
     /// real accrued stress; see [`shard::WearConfig`]).
     pub wear: Option<shard::WearConfig>,
+    /// Trace every n-th request through the full pipeline
+    /// ([`crate::obs::trace`]); 0 (the default) is off and costs one
+    /// relaxed atomic load per request.
+    pub trace_sample: u64,
+    /// Online quality-audit configuration ([`crate::obs::audit`]);
+    /// `sample_every` 0 (the default) disables shadow execution entirely.
+    pub audit: AuditConfig,
 }
 
 impl Default for FrontendOptions {
@@ -670,6 +837,8 @@ impl Default for FrontendOptions {
             max_queue: 4096,
             route: None,
             wear: None,
+            trace_sample: 0,
+            audit: AuditConfig::default(),
         }
     }
 }
@@ -736,7 +905,13 @@ impl Server {
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         anyhow::ensure!(!engines.is_empty(), "server needs at least one engine shard");
-        let stats = Arc::new(ServerStats::new(engines[0].num_levels()));
+        let mut stats = ServerStats::new(engines[0].num_levels());
+        stats.tracer.set_sample_every(opts.trace_sample);
+        if opts.audit.sample_every > 0 {
+            stats.audit =
+                Arc::new(QualityAudit::new(opts.audit.clone(), stats.registry.clone()));
+        }
+        let stats = Arc::new(stats);
         let workers = policy.resolved_workers();
         let route = opts
             .route
@@ -917,6 +1092,11 @@ fn batch_worker(
         // The collected jobs left the queue — shrink the admission gate's
         // depth view before the (possibly long) execution.
         shards.note_collected(shard_idx, jobs.len() as u64);
+        for j in jobs.iter_mut() {
+            if let Some(t) = j.trace.as_mut() {
+                t.mark_collected();
+            }
+        }
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         let inflight = stats.inflight_batches.fetch_add(1, Ordering::SeqCst) + 1;
@@ -932,6 +1112,11 @@ fn batch_worker(
             // Batch assembly is inside the catch too: a malformed request
             // (wrong pixel count) panics `copy_from_slice`, and that must
             // cost one error reply, not a worker thread.
+            for &i in &idxs {
+                if let Some(t) = jobs[i].trace.as_mut() {
+                    t.mark_exec(level, set.generation);
+                }
+            }
             let started = Instant::now();
             let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
@@ -970,13 +1155,46 @@ fn batch_worker(
             stats.record_generation(set.generation, idxs.len() as u64);
             let replied = Instant::now();
             for (r, &i) in idxs.iter().enumerate() {
+                if let Some(t) = jobs[i].trace.as_mut() {
+                    t.mark_exec_end();
+                }
                 jobs[i].reply.send_ok(level, set.generation, logits.row(r).to_vec());
+                if let Some(t) = jobs[i].trace.as_mut() {
+                    t.mark_reply();
+                }
                 let waited = replied.duration_since(jobs[i].enqueued);
                 stats
                     .latency
                     .record_us(waited.as_micros().min(u64::MAX as u128) as u64);
                 if jobs[i].deadline.is_some_and(|d| replied > d) {
                     stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Online quality audit: shadow-execute this level group
+            // error-free on the exact backend and compare. Runs *after*
+            // the replies went out (audit cost never inflates client
+            // latency) and draws nothing from the worker RNG (clean
+            // forwards consume no stream), so served outputs stay
+            // bit-identical whether or not the group was sampled.
+            if stats.audit.should_sample() {
+                let lvl = &set.levels[level];
+                let shadow = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
+                    for (r, &i) in idxs.iter().enumerate() {
+                        x.row_mut(r).copy_from_slice(&jobs[i].pixels);
+                    }
+                    engine.execute_exact(&x, &mut rng)
+                }));
+                if let Ok(exact) = shadow {
+                    stats.audit.observe(
+                        level,
+                        &lvl.name,
+                        set.generation,
+                        lvl.predicted_mse,
+                        &logits.data,
+                        &exact.data,
+                        idxs.len(),
+                    );
                 }
             }
         }
@@ -1049,6 +1267,25 @@ fn handle_connection(
             writer.flush()?;
             continue;
         }
+        // `{"metrics": true}` — the unified registry exposition (server
+        // series + the process-global registry), same snapshot the
+        // `--metrics-file` exporter writes.
+        if matches!(req.opt("metrics").map(|v| v.as_bool()), Some(Ok(true))) {
+            let resp = Json::obj(vec![("metrics", stats.metrics_json())]);
+            writer.write_all(resp.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            continue;
+        }
+        // `{"trace": N}` — dump the most recent ≤N sampled request spans
+        // as a chrome-trace JSON document (load it in a trace viewer).
+        if let Some(n) = req.opt("trace").and_then(|v| v.as_usize().ok()) {
+            let resp = Json::obj(vec![("trace", stats.tracer.dump(n))]);
+            writer.write_all(resp.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            continue;
+        }
         let pixels: Vec<f32> = req
             .get("pixels")?
             .as_f64_vec()?
@@ -1058,7 +1295,8 @@ fn handle_connection(
         let quality = req.opt("quality").map(|v| v.as_usize()).transpose()?.unwrap_or(0);
         let deadline_ms = req.opt("deadline_ms").and_then(|v| v.as_f64().ok());
         let (reply_tx, reply_rx) = channel();
-        match shards.submit(pixels, quality, deadline_ms, Reply::Channel(reply_tx)) {
+        let trace = stats.tracer.maybe_start();
+        match shards.submit(pixels, quality, deadline_ms, Reply::Channel(reply_tx), trace) {
             Ok(()) => {}
             Err(shard::Shed::Stopped) => anyhow::bail!("engine stopped"),
             Err(shed) => {
@@ -1197,6 +1435,30 @@ impl Client {
         reader.read_line(&mut line)?;
         Ok(Json::parse(&line)?.get("stats")?.clone())
     }
+
+    /// Fetch the unified metrics exposition (`{"metrics": true}` request):
+    /// `{"server": {...}, "process": {...}}` flat series maps.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.stream.write_all(b"{\"metrics\": true}\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Ok(Json::parse(&line)?.get("metrics")?.clone())
+    }
+
+    /// Fetch the most recent ≤`max` sampled request spans as a
+    /// chrome-trace JSON document (`{"trace": N}` request).
+    pub fn trace(&mut self, max: usize) -> Result<Json> {
+        let req = Json::obj(vec![("trace", Json::Num(max as f64))]);
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Ok(Json::parse(&line)?.get("trace")?.clone())
+    }
 }
 
 /// Shared fixtures for the server-side unit tests (`server::tests`,
@@ -1229,8 +1491,15 @@ pub(crate) mod testutil {
                 noise: NoiseSpec::silent(n),
                 energy_saving: 0.0,
                 energy: 10.0,
+                predicted_mse: 0.0,
             },
-            QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 7.0 },
+            QualityLevel {
+                name: "eco".into(),
+                noise: noisy,
+                energy_saving: 0.3,
+                energy: 7.0,
+                predicted_mse: 0.0,
+            },
         ];
         (Engine::new(q, levels, 784).unwrap(), test)
     }

@@ -665,6 +665,15 @@ fn handle_line(
         push_reply(conn, Json::obj(vec![("stats", stats.to_json())]));
         return;
     }
+    if matches!(req.opt("metrics").map(|v| v.as_bool()), Some(Ok(true))) {
+        // Registry exposition — byte-identical to the threaded frontend.
+        push_reply(conn, Json::obj(vec![("metrics", stats.metrics_json())]));
+        return;
+    }
+    if let Some(n) = req.opt("trace").and_then(|v| v.as_usize().ok()) {
+        push_reply(conn, Json::obj(vec![("trace", stats.tracer.dump(n))]));
+        return;
+    }
     let pixels: Vec<f32> = match req.get("pixels").and_then(|v| v.as_f64_vec()) {
         Ok(p) => p.iter().map(|&v| v as f32).collect(),
         Err(e) => {
@@ -702,7 +711,8 @@ fn handle_line(
     }
     let deadline_ms = req.opt("deadline_ms").and_then(|v| v.as_f64().ok());
     let sink = CompletionSink { queue: completions.clone(), conn: token, done: false };
-    match shards.submit(pixels, quality, deadline_ms, super::Reply::Evented(sink)) {
+    let trace = stats.tracer.maybe_start();
+    match shards.submit(pixels, quality, deadline_ms, super::Reply::Evented(sink), trace) {
         Ok(()) => conn.pending += 1,
         Err(shed) => push_reply(conn, shed.to_json()),
     }

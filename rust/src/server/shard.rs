@@ -303,11 +303,15 @@ impl ShardSet {
         quality: usize,
         deadline_ms: Option<f64>,
         mut reply: Reply,
+        mut trace: Option<Box<crate::obs::trace::ActiveSpan>>,
     ) -> Result<(), Shed> {
         let queued = self.stats.queued.load(Ordering::Relaxed);
         if queued >= self.max_queue {
             self.stats.shed.fetch_add(1, Ordering::Relaxed);
             reply.defuse();
+            if let Some(t) = trace.as_mut() {
+                t.mark_shed();
+            }
             return Err(Shed::QueueFull { queued, max: self.max_queue });
         }
         let now = Instant::now();
@@ -328,6 +332,9 @@ impl ShardSet {
                 if Duration::from_nanos(wait_ns) > budget {
                     self.stats.shed.fetch_add(1, Ordering::Relaxed);
                     reply.defuse();
+                    if let Some(t) = trace.as_mut() {
+                        t.mark_shed();
+                    }
                     return Err(Shed::Deadline {
                         est_wait_us: wait_ns / 1_000,
                         budget_us: budget.as_micros() as u64,
@@ -335,14 +342,22 @@ impl ShardSet {
                 }
             }
         }
+        if let Some(t) = trace.as_mut() {
+            t.mark_admitted();
+        }
         let class = quality.min(self.class_rel_intensity.len().saturating_sub(1));
         let s = self.pick_shard(class);
+        if let Some(t) = trace.as_mut() {
+            t.mark_routed(s);
+            t.mark_enqueued();
+        }
         let job = Job {
             pixels,
             quality,
             deadline: budget.map(|b| now + b),
             enqueued: now,
             reply,
+            trace,
         };
         // Count before sending: a worker may collect (and decrement) the
         // instant the job lands, so incrementing afterwards could

@@ -212,80 +212,12 @@ impl Histogram {
     }
 }
 
-/// Thread-safe latency histogram with logarithmic (power-of-two
-/// microsecond) buckets, built for the serving hot path: [`Self::record_us`]
-/// is a single relaxed atomic add (no lock, no allocation), and quantiles
-/// are answered from a point-in-time sweep of the buckets. Bucket `i`
-/// holds samples in `[2^(i-1), 2^i)` µs (bucket 0 holds 0 µs), so the
-/// resolution is a constant factor of two — exactly what p50/p99 serving
-/// dashboards need, at none of the cost of recording raw samples. Unlike
-/// [`Histogram`] it is `Sync` and unbounded above (the last bucket
-/// saturates instead of overflowing).
-#[derive(Debug)]
-pub struct LatencyHistogram {
-    buckets: [std::sync::atomic::AtomicU64; 64],
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        // (`[AtomicU64; 64]` has no Default — the std impl stops at 32.)
-        Self { buckets: std::array::from_fn(|_| std::sync::atomic::AtomicU64::new(0)) }
-    }
-}
-
-impl LatencyHistogram {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    fn bucket_of(us: u64) -> usize {
-        ((64 - us.leading_zeros()) as usize).min(63)
-    }
-
-    /// Upper bound (inclusive, in µs) of bucket `i` — what quantiles report.
-    fn bucket_bound(i: usize) -> u64 {
-        if i == 0 {
-            0
-        } else {
-            (1u64 << i) - 1
-        }
-    }
-
-    pub fn record_us(&self, us: u64) {
-        self.buckets[Self::bucket_of(us)]
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.buckets
-            .iter()
-            .map(|b| b.load(std::sync::atomic::Ordering::Relaxed))
-            .sum()
-    }
-
-    /// The `q`-quantile in µs (upper bound of the bucket the quantile
-    /// falls in — conservative by at most 2×). Returns 0 on no samples.
-    pub fn quantile_us(&self, q: f64) -> u64 {
-        let counts: Vec<u64> = self
-            .buckets
-            .iter()
-            .map(|b| b.load(std::sync::atomic::Ordering::Relaxed))
-            .collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
-        let mut cum = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            cum += c;
-            if cum >= target {
-                return Self::bucket_bound(i);
-            }
-        }
-        Self::bucket_bound(63)
-    }
-}
+/// Thread-safe power-of-two latency histogram for the serving hot path.
+/// The implementation moved to [`crate::obs::metrics`] (it is the µs
+/// façade over [`crate::obs::metrics::Pow2Histogram`], the single
+/// histogram in the tree); this re-export keeps the historical
+/// `util::stats::LatencyHistogram` path working.
+pub use crate::obs::metrics::LatencyHistogram;
 
 /// NaN-safe argmax over f32 logits: ignores NaN entries entirely (a NaN
 /// logit must never win the classification, and — unlike

@@ -184,8 +184,9 @@ fn closed_loop_trace_and_least_loaded_behave() {
     let t = fleet.run(&trace);
     assert_eq!(t.requests, 240);
     // Closed loop self-throttles: at most `clients` requests in flight, so
-    // latency is bounded by population × service time.
-    assert!(t.latency_p99_ms <= 6.0 * 2.0 + 1e-9, "p99 {} ms", t.latency_p99_ms);
+    // latency is bounded by population × service time (12 ms), which the
+    // power-of-two histogram reports as its 16.383 ms bucket bound.
+    assert!(t.latency_p99_ms <= 16.384, "p99 {} ms", t.latency_p99_ms);
     // Least-loaded keeps the fleet reasonably balanced under a symmetric
     // closed loop.
     let counts: Vec<u64> = t.devices.iter().map(|d| d.requests).collect();

@@ -1,0 +1,265 @@
+//! Observability integration tests, exercised over real TCP through the
+//! public API:
+//!
+//! - the `{"stats": true}` schema is pinned by a golden file,
+//! - JSON and text metrics expositions agree series-for-series,
+//! - sampled traces reconstruct the full request path
+//!   (admission → route → queue wait → batch assembly → kernel → reply),
+//! - the online quality audit fires a [`QualityAlarm`] on a plan whose
+//!   predicted MSE understates the injected error, and stays quiet when
+//!   the model is honest — the acceptance property of the audit loop.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use xtpu::nn::data::{synth_mnist, Dataset};
+use xtpu::nn::layers::Activation;
+use xtpu::nn::model::fc_mnist;
+use xtpu::nn::quant::{NoiseSpec, QuantizedModel};
+use xtpu::nn::train::{train, TrainConfig};
+use xtpu::obs::audit::AuditConfig;
+use xtpu::server::{
+    BatchPolicy, Client, Engine, FrontendMode, FrontendOptions, QualityLevel, Server,
+};
+use xtpu::util::json::Json;
+use xtpu::util::rng::Xoshiro256pp;
+
+/// Deterministic two-level engine (same fixture as `tests/serving.rs`).
+/// `eco_predicted_mse` is the *claimed* output MSE of the noisy level —
+/// the quantity the online audit verifies against observed reality.
+fn build_engine(eco_predicted_mse: f64) -> (Engine, Dataset) {
+    let mut rng = Xoshiro256pp::seeded(1);
+    let mut model = fc_mnist(Activation::Relu, &mut rng);
+    let train_set = synth_mnist(200, 5);
+    train(&mut model, &train_set, &TrainConfig { epochs: 1, ..Default::default() });
+    let test = synth_mnist(20, 6);
+    let calib = test.batch(&(0..16).collect::<Vec<_>>()).0;
+    let q = QuantizedModel::quantize(&model, &calib);
+    let n = q.num_neurons();
+    let mut noisy = NoiseSpec::silent(n);
+    for s in noisy.std.iter_mut().take(128) {
+        *s = 2000.0;
+    }
+    let levels = vec![
+        QualityLevel {
+            name: "exact".into(),
+            noise: NoiseSpec::silent(n),
+            energy_saving: 0.0,
+            energy: 10.0,
+            predicted_mse: 0.0,
+        },
+        QualityLevel {
+            name: "eco".into(),
+            noise: noisy,
+            energy_saving: 0.3,
+            energy: 7.0,
+            predicted_mse: eco_predicted_mse,
+        },
+    ];
+    (Engine::new(q, levels, 784).unwrap(), test)
+}
+
+fn spawn(eco_predicted_mse: f64, opts: FrontendOptions) -> (Server, Dataset) {
+    let (engine, test) = build_engine(eco_predicted_mse);
+    let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(2), workers: 1 };
+    let server = Server::spawn_opts(vec![Arc::new(engine)], 0, policy, opts).unwrap();
+    (server, test)
+}
+
+/// Wait (bounded) for an asynchronous server-side effect: the audit's
+/// shadow execution and a span's ring commit both happen *after* the
+/// client reply goes out, so tests observe them with a short poll.
+fn poll<F: FnMut() -> bool>(mut f: F, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if f() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// The stats-line key set is a protocol surface: pinned by
+/// `golden_stats_schema.txt`, so exposition keys can't silently vanish.
+#[test]
+fn stats_line_schema_matches_golden_file() {
+    let (mut server, test) = spawn(0.0, FrontendOptions::default());
+    let mut c = Client::connect(server.addr).unwrap();
+    c.infer(test.images.row(0), 0).unwrap();
+    let stats = c.stats().unwrap();
+    let Json::Obj(map) = &stats else { panic!("stats reply must be an object") };
+    let got: Vec<&str> = map.keys().map(|s| s.as_str()).collect();
+    let want: Vec<&str> = include_str!("golden_stats_schema.txt")
+        .lines()
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .collect();
+    assert_eq!(
+        got, want,
+        "stats-line schema drifted; update rust/tests/golden_stats_schema.txt deliberately"
+    );
+    server.shutdown();
+}
+
+/// JSON and text expositions must agree: same series ids, same values
+/// (both render through the same number formatter).
+#[test]
+fn metrics_json_and_text_expositions_agree() {
+    let (mut server, test) = spawn(0.0, FrontendOptions::default());
+    let mut c = Client::connect(server.addr).unwrap();
+    for i in 0..4 {
+        c.infer(test.images.row(i), i % 2).unwrap();
+    }
+    // The worker finishes its bookkeeping (latency record, inflight
+    // decrement) just after the last reply; snapshot only once idle so
+    // the two expositions below see identical values.
+    poll(
+        || {
+            server.stats.latency.count() >= 4
+                && server.stats.inflight_batches.load(std::sync::atomic::Ordering::SeqCst)
+                    == 0
+        },
+        "worker bookkeeping to settle",
+    );
+    let wire = c.metrics().unwrap();
+    let text = server.stats.metrics_text();
+
+    let mut by_id: BTreeMap<String, f64> = BTreeMap::new();
+    for line in text.lines() {
+        let (id, val) = line.rsplit_once(' ').expect("text line is `series value`");
+        by_id.insert(id.to_string(), val.parse::<f64>().expect("numeric value"));
+    }
+    let Json::Obj(series) = wire.get("server").unwrap() else {
+        panic!("metrics reply must carry a server object")
+    };
+    assert!(!series.is_empty(), "server registry must not be empty");
+    for (id, v) in series {
+        let got = *by_id
+            .get(id)
+            .unwrap_or_else(|| panic!("series {id} missing from text exposition"));
+        let want = v.as_f64().unwrap();
+        assert_eq!(got, want, "series {id}: text {got} vs json {want}");
+    }
+    // Load-bearing series are present and agree with the traffic sent.
+    assert_eq!(series["server_requests_total"].as_u64().unwrap(), 4);
+    assert_eq!(series["server_served_total{level=\"0\"}"].as_u64().unwrap(), 2);
+    assert_eq!(series["server_served_total{level=\"1\"}"].as_u64().unwrap(), 2);
+    assert_eq!(series["server_request_latency_us_count"].as_u64().unwrap(), 4);
+    // The process-wide registry rides along: the exec kernel's dispatch
+    // counter has seen at least our four layered forwards.
+    let process = wire.get("process").unwrap();
+    assert!(process.get("exec_layer_calls_total").unwrap().as_u64().unwrap() > 0);
+    server.shutdown();
+}
+
+/// With `trace_sample = 1` every request records a span, and the chrome-
+/// trace dump reconstructs the full pipeline path per request id.
+#[test]
+fn traces_reconstruct_the_full_request_path() {
+    let opts = FrontendOptions {
+        mode: FrontendMode::Evented,
+        trace_sample: 1,
+        ..FrontendOptions::default()
+    };
+    let (mut server, test) = spawn(0.0, opts);
+    let mut c = Client::connect(server.addr).unwrap();
+    for i in 0..3 {
+        c.infer(test.images.row(i), 0).unwrap();
+    }
+    // A span commits to the ring when its job drops, just after the reply.
+    poll(|| server.stats.tracer.len() >= 3, "3 trace records");
+    let dump = c.trace(16).unwrap();
+    assert_eq!(dump.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    let events = dump.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut by_id: BTreeMap<u64, Vec<&str>> = BTreeMap::new();
+    for e in events {
+        assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(e.get("cat").unwrap().as_str().unwrap(), "request");
+        let id = e.get("args").unwrap().get("id").unwrap().as_u64().unwrap();
+        by_id.entry(id).or_default().push(e.get("name").unwrap().as_str().unwrap());
+    }
+    assert_eq!(by_id.len(), 3, "one span per request");
+    for (id, names) in &by_id {
+        assert_eq!(
+            names[..],
+            ["admission", "route", "queue_wait", "batch_assembly", "kernel", "reply"],
+            "request {id} did not reconstruct the full path"
+        );
+    }
+    server.shutdown();
+}
+
+/// Acceptance criterion for the audit loop: a plan whose `predicted_mse`
+/// understates the injected error raises [`QualityAlarm`] within the
+/// sampling window; the same traffic against an honestly-modeled plan
+/// stays quiet even after every group has been audited.
+#[test]
+fn mismodeled_plan_fires_quality_alarm_and_honest_plan_stays_quiet() {
+    let audit = AuditConfig { sample_every: 1, band: (0.0, 2.0), min_samples: 1 };
+    let opts = |audit: AuditConfig| FrontendOptions {
+        mode: FrontendMode::Evented,
+        audit,
+        ..FrontendOptions::default()
+    };
+
+    // Mis-modeled: the noisy level injects std-2000 accumulator noise but
+    // claims 1e-9 output MSE — observed/predicted leaves (0, 2] at once.
+    let (mut bad, test) = spawn(1e-9, opts(audit.clone()));
+    let mut c = Client::connect(bad.addr).unwrap();
+    for i in 0..8 {
+        c.infer(test.images.row(i), 1).unwrap();
+    }
+    poll(|| bad.stats.audit.alarm().is_some(), "quality alarm on the mis-modeled plan");
+    let alarm = bad.stats.audit.alarm().unwrap();
+    assert_eq!(alarm.level, 1);
+    assert_eq!(alarm.level_name, "eco");
+    assert_eq!(alarm.generation, 0, "no hot swap happened");
+    assert!(alarm.ratio > 2.0, "out-of-band ratio, got {}", alarm.ratio);
+    assert!(alarm.observed_mse > alarm.predicted_mse);
+    // The alarm is a wire surface too, not just an internal flag.
+    let stats = c.stats().unwrap();
+    let wire_alarm = stats.get("quality_alarm").unwrap();
+    assert_eq!(wire_alarm.get("level").unwrap().as_u64().unwrap(), 1);
+    assert!(wire_alarm.get("ratio").unwrap().as_f64().unwrap() > 2.0);
+    bad.shutdown();
+
+    // Honest model: a generous (but finite) predicted MSE keeps the ratio
+    // inside the band; and the exact level agrees bit-for-bit with its
+    // shadow run. Neither may alarm, even once all groups are audited.
+    let (mut good, test) = spawn(1e12, opts(audit));
+    let mut c = Client::connect(good.addr).unwrap();
+    for i in 0..8 {
+        c.infer(test.images.row(i), i % 2).unwrap();
+    }
+    poll(
+        || good.stats.audit.audited_rows() >= 8,
+        "all groups audited on the honest plan",
+    );
+    assert!(good.stats.audit.alarm().is_none(), "honest plan must stay quiet");
+    let stats = c.stats().unwrap();
+    assert!(
+        matches!(stats.get("quality_alarm").unwrap(), Json::Null),
+        "wire stats must carry no alarm"
+    );
+    // Both levels were audited and their ratios are in band (the exact
+    // level has no ratio — zero predicted MSE, zero observed error).
+    let ratios = good.stats.audit.ratios();
+    assert_eq!(ratios.len(), 2, "both (level, generation) keys audited");
+    for (level, generation, observed, ratio, rows) in ratios {
+        assert_eq!(generation, 0);
+        assert!(rows >= 1);
+        match level {
+            0 => {
+                assert!(observed == 0.0, "exact level must shadow bit-identically");
+                assert!(ratio.is_none());
+            }
+            1 => {
+                let r = ratio.unwrap();
+                assert!(r > 0.0 && r <= 2.0, "in-band ratio, got {r}");
+            }
+            other => panic!("unexpected audited level {other}"),
+        }
+    }
+    good.shutdown();
+}

@@ -80,6 +80,7 @@ fn plan_files_serve_identically_to_in_memory_assignments() {
             noise: NoiseSpec::from_levels(&r.assignment.level, &sys.fan_in, &sys.registry),
             energy_saving: r.assignment.energy_saving,
             energy: r.assignment.energy,
+            predicted_mse: r.plan.predicted_mse,
         })
         .collect();
     let engine_mem = Engine::new(sys.quantized.clone(), levels, 784).unwrap();

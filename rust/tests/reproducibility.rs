@@ -441,8 +441,15 @@ fn stress_engine() -> (Engine, xtpu::nn::data::Dataset) {
             noise: NoiseSpec::silent(n),
             energy_saving: 0.0,
             energy: 0.0,
+            predicted_mse: 0.0,
         },
-        QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 0.0 },
+        QualityLevel {
+            name: "eco".into(),
+            noise: noisy,
+            energy_saving: 0.3,
+            energy: 0.0,
+            predicted_mse: 0.0,
+        },
     ];
     (Engine::new(q, levels, 784).unwrap(), test)
 }
@@ -565,6 +572,7 @@ fn hot_swap_under_concurrent_load_never_drops_or_mixes() {
         noise: NoiseSpec::silent(n),
         energy_saving: 0.0,
         energy: 0.0,
+        predicted_mse: 0.0,
     }];
     let engine = Arc::new(Engine::new(q, levels, 784).unwrap());
 

@@ -46,8 +46,15 @@ fn build_engine() -> (Engine, Dataset) {
             noise: NoiseSpec::silent(n),
             energy_saving: 0.0,
             energy: 10.0,
+            predicted_mse: 0.0,
         },
-        QualityLevel { name: "eco".into(), noise: noisy, energy_saving: 0.3, energy: 7.0 },
+        QualityLevel {
+            name: "eco".into(),
+            noise: noisy,
+            energy_saving: 0.3,
+            energy: 7.0,
+            predicted_mse: 0.0,
+        },
     ];
     (Engine::new(q, levels, 784).unwrap(), test)
 }
@@ -218,6 +225,75 @@ fn saturation_sheds_with_exact_accounting() {
     // New surfaces exist and are sane.
     assert!(stats.get("latency_p99_us").unwrap().as_u64().unwrap() > 0);
     assert!(stats.get("queued").unwrap().as_u64().unwrap() == 0);
+    server.shutdown();
+}
+
+/// Counter conservation under load with the quality audit active: every
+/// request the gate saw is served, shed, or lost to a *counted* worker
+/// panic — `sent == requests + shed`, `requests == served + panicked`,
+/// and `per_generation` re-conserves `requests`. The audit shadow-
+/// executes on the same traffic without perturbing the books (and stays
+/// quiet: the exact level's plan is honestly modeled at zero MSE).
+#[test]
+fn counters_conserve_under_pipelined_burst_with_audit_active() {
+    let opts = FrontendOptions {
+        max_queue: 2,
+        audit: xtpu::obs::audit::AuditConfig { sample_every: 2, ..Default::default() },
+        ..FrontendOptions::default()
+    };
+    let (mut server, test) = spawn(FrontendMode::Evented, opts, one_worker());
+    let (mut w, mut r) = connect_raw(server.addr);
+    let n = 40;
+    let req = request_line(test.images.row(0), 0);
+    let mut burst = String::new();
+    for _ in 0..n {
+        burst.push_str(&req);
+        burst.push('\n');
+    }
+    w.write_all(burst.as_bytes()).unwrap();
+    w.flush().unwrap();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for _ in 0..n {
+        let mut reply = String::new();
+        r.read_line(&mut reply).unwrap();
+        if reply.contains("\"class\"") {
+            ok += 1;
+        } else {
+            assert!(reply.contains("\"shed\""), "unexpected reply: {reply}");
+            shed += 1;
+        }
+    }
+    assert_eq!(ok + shed, n, "every request gets exactly one reply");
+    assert!(ok > 0 && shed > 0, "the burst must both serve and shed");
+    let mut c = Client::connect(server.addr).unwrap();
+    let stats = c.stats().unwrap();
+    let requests = stats.get("requests").unwrap().as_u64().unwrap();
+    let shed_srv = stats.get("shed").unwrap().as_u64().unwrap();
+    let panics = stats.get("worker_panics").unwrap().as_u64().unwrap();
+    let served: u64 = stats
+        .get("per_level")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap())
+        .sum();
+    assert_eq!(requests + shed_srv, n, "admission books conserve the burst");
+    assert_eq!(panics, 0, "no worker was lost");
+    assert_eq!(served, requests - panics, "every collected request was served");
+    let by_generation: u64 = match stats.get("per_generation").unwrap() {
+        Json::Obj(map) => map.values().map(|v| v.as_u64().unwrap()).sum(),
+        other => panic!("per_generation must be an object, got {other}"),
+    };
+    assert_eq!(by_generation, requests, "generation attribution conserves requests");
+    // The audit sampled this traffic (shadow runs happen after replies —
+    // poll briefly) and found the honest zero-MSE plan in band.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while server.stats.audit.audited_rows() == 0 {
+        assert!(std::time::Instant::now() < deadline, "audit never sampled");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(server.stats.audit.alarm().is_none(), "honest plan must not alarm");
     server.shutdown();
 }
 

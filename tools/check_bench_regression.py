@@ -58,6 +58,7 @@ PRESENCE_ONLY_KEYS = [
     "l3k_evented_rps",
     "l3k_p99_us_at_slo",
     "l3k_shed_fraction",
+    "l3l_obs_hook_ns",
 ]
 
 
@@ -77,6 +78,7 @@ def main():
     exec_rec = load(root / "BENCH_exec_refactor.json")
     par_rec = load(root / "BENCH_parallel_exec.json")
     adapt_rec = load(root / "BENCH_adaptive_replan.json")
+    serving_rec = load(root / "BENCH_serving.json")
 
     failures = []
     checks = 0
@@ -120,6 +122,17 @@ def main():
             failures.append(
                 f"l3f_parallel_speedup = {v:.2f} below {min_speedup} "
                 f"on a {int(threads)}-thread runner"
+            )
+
+    # --- observability-overhead ceiling (same-run ratio, runner-independent)
+    obs_cap = serving_rec["gates"].get("l3l_obs_overhead_pct_max")
+    if obs_cap is not None:
+        checks += 1
+        v = emitted("l3l_obs_overhead_pct")
+        if v is not None and v > obs_cap:
+            failures.append(
+                f"l3l_obs_overhead_pct = {v:.4f} above ceiling {obs_cap} "
+                "(obs hooks with sampling off must be near-free)"
             )
 
     # --- layer 1: presence-only keys (no baseline recorded yet) -----------
