@@ -16,6 +16,43 @@
 #[path = "common.rs"]
 mod common;
 
+// With `--features alloc-count` the whole bench binary runs under a counting
+// global allocator so L3m can report allocations/request in the warm
+// prepacked serve loop as a measured number (the CI gate pins it to 0). The
+// counter is process-wide, so L3m takes the minimum over several trials to
+// shrug off unrelated background allocation. Without the feature the system
+// allocator is untouched and L3m reports null for the key.
+#[cfg(feature = "alloc-count")]
+mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub struct Counting;
+
+    // SAFETY: defers every operation to `System`; the counter is a relaxed
+    // atomic with no other side effects.
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTER: Counting = Counting;
+}
+
 use xtpu::assign::{AssignmentProblem, Solver};
 use xtpu::errormodel::{characterize_voltage, CharacterizeOptions};
 use xtpu::exec::{Backend, Exact, Statistical};
@@ -649,6 +686,164 @@ fn main() {
         );
         report.push(("l3l_obs_hook_ns", Json::Num(hook_ns)));
         report.push(("l3l_obs_overhead_pct", Json::Num(overhead_pct)));
+    }
+
+    // --- L3m: zero-repack serving data path --------------------------------
+    // The steady-state serve loop: weights SIMD-packed once per generation
+    // (PackedModel, held in the PlanSet snapshot) and activations /
+    // accumulators arena-reused across batches (ForwardArena). Three
+    // numbers, all pinned to one thread so they stay comparable across runs
+    // and with the single-threaded L3b kernel keys:
+    //   (1) transposed-kernel MAC/s, per-call layout vs the persistent
+    //       PackedLayer (bit-identical, asserted here);
+    //   (2) steady-state inferences/s, the L3d per-call forward vs the
+    //       prepacked+arena forward the batch workers run (bit-identical,
+    //       asserted here);
+    //   (3) allocations/request over the warm prepacked loop — measured
+    //       only under `--features alloc-count`, null otherwise.
+    {
+        use xtpu::exec::kernel;
+        use xtpu::nn::quant::{ForwardArena, PackedModel};
+
+        let l3m_prior_threads = std::env::var("XTPU_THREADS").ok();
+        std::env::set_var("XTPU_THREADS", "1");
+
+        // (1) kernel: per-call vs prepacked on the serve layer shape.
+        let (bm, bk, bn) = (64usize, 784usize, 128usize);
+        let mut rng = Xoshiro256pp::seeded(6);
+        let act: Vec<i8> = (0..bm * bk).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let wt: Vec<i8> = (0..bn * bk).map(|_| rng.range_i64(-127, 127) as i8).collect();
+        let kmacs = (bm * bk * bn) as f64;
+        let kreps = 60;
+        let mut out_call = Vec::new();
+        kernel::matmul_i8t_path(active, &act, &wt, bm, bk, bn, &mut out_call);
+        let t0 = std::time::Instant::now();
+        for _ in 0..kreps {
+            kernel::matmul_i8t_path(active, &act, &wt, bm, bk, bn, &mut out_call);
+            std::hint::black_box(&out_call);
+        }
+        let percall_mmacs = kmacs * kreps as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+        let pl = kernel::PackedLayer::pack(active, &wt, bk, bn);
+        let mut out_pre = Vec::new();
+        kernel::matmul_i8t_prepacked(&pl, &act, bm, &mut out_pre);
+        assert_eq!(out_call, out_pre, "prepacked kernel must be bit-identical");
+        let t0 = std::time::Instant::now();
+        for _ in 0..kreps {
+            kernel::matmul_i8t_prepacked(&pl, &act, bm, &mut out_pre);
+            std::hint::black_box(&out_pre);
+        }
+        let prepacked_mmacs = kmacs * kreps as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+        // (2) end-to-end: the exact L3d workload (clean forward, batch 64)
+        // re-timed at one thread as the per-call baseline, then the
+        // prepacked + arena path the batch workers actually run.
+        let sreps = 30;
+        let mut rng_a = Xoshiro256pp::seeded(3);
+        let y_call = q.forward_with(backend.as_ref(), &x, None, &mut rng_a);
+        let t0 = std::time::Instant::now();
+        for _ in 0..sreps {
+            std::hint::black_box(q.forward_with(backend.as_ref(), &x, None, &mut rng_a));
+        }
+        let serve_baseline_infs = (sreps * 64) as f64 / t0.elapsed().as_secs_f64();
+
+        let packed = PackedModel::pack(&q, active);
+        let mut arena = ForwardArena::default();
+        let mut logits: Vec<f32> = Vec::new();
+        let mut rng_b = Xoshiro256pp::seeded(3);
+        q.forward_prepacked(
+            backend.as_ref(),
+            &x,
+            None,
+            None,
+            &mut rng_b,
+            &packed,
+            &mut arena,
+            &mut logits,
+        );
+        let call_bits: Vec<u32> = y_call.data.iter().map(|v| v.to_bits()).collect();
+        let pre_bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(call_bits, pre_bits, "prepacked forward must be bit-identical");
+        let t0 = std::time::Instant::now();
+        for _ in 0..sreps {
+            q.forward_prepacked(
+                backend.as_ref(),
+                &x,
+                None,
+                None,
+                &mut rng_b,
+                &packed,
+                &mut arena,
+                &mut logits,
+            );
+            std::hint::black_box(&logits);
+        }
+        let serve_infs = (sreps * 64) as f64 / t0.elapsed().as_secs_f64();
+
+        // (3) allocations/request over the (already warm) loop. Minimum over
+        // trials: the counter is process-wide and a parked thread or OS
+        // buffer can allocate concurrently; if the loop itself is
+        // allocation-free, at least one trial observes exactly zero.
+        #[cfg(feature = "alloc-count")]
+        let allocs_per_req = {
+            use std::sync::atomic::Ordering;
+            let (trials, iters) = (5u32, 10u64);
+            let mut best = u64::MAX;
+            for _ in 0..trials {
+                let before = alloc_count::ALLOCS.load(Ordering::Relaxed);
+                for _ in 0..iters {
+                    q.forward_prepacked(
+                        backend.as_ref(),
+                        &x,
+                        None,
+                        None,
+                        &mut rng_b,
+                        &packed,
+                        &mut arena,
+                        &mut logits,
+                    );
+                    std::hint::black_box(&logits);
+                }
+                best = best.min(alloc_count::ALLOCS.load(Ordering::Relaxed) - before);
+            }
+            Some(best as f64 / (iters * 64) as f64)
+        };
+        #[cfg(not(feature = "alloc-count"))]
+        let allocs_per_req: Option<f64> = None;
+
+        match l3m_prior_threads {
+            Some(v) => std::env::set_var("XTPU_THREADS", v),
+            None => std::env::remove_var("XTPU_THREADS"),
+        }
+
+        println!(
+            "L3m zero-repack   : {percall_mmacs:>8.1} M MAC/s per-call → {prepacked_mmacs:>8.1} \
+             M MAC/s prepacked (×{:.2}, {} layout, 1 thread)",
+            prepacked_mmacs / percall_mmacs,
+            active.name()
+        );
+        println!(
+            "L3m steady serve  : {serve_baseline_infs:>8.1} inf/s per-call → {serve_infs:>8.1} \
+             inf/s prepacked+arena (×{:.2}, batch 64, 1 thread, allocs/req {})",
+            serve_infs / serve_baseline_infs,
+            match allocs_per_req {
+                Some(a) => format!("{a:.2}"),
+                None => "unmeasured: build with --features alloc-count".to_string(),
+            }
+        );
+        report.push(("l3m_percall_mmacs", Json::Num(percall_mmacs)));
+        report.push(("l3m_prepacked_mmacs", Json::Num(prepacked_mmacs)));
+        report.push(("l3m_prepacked_speedup", Json::Num(prepacked_mmacs / percall_mmacs)));
+        report.push(("l3m_serve_baseline_infs", Json::Num(serve_baseline_infs)));
+        report.push(("l3m_serve_infs", Json::Num(serve_infs)));
+        report.push(("l3m_serve_speedup_vs_l3d", Json::Num(serve_infs / serve_baseline_infs)));
+        report.push((
+            "l3m_allocs_per_req",
+            match allocs_per_req {
+                Some(a) => Json::Num(a),
+                None => Json::Null,
+            },
+        ));
     }
 
     if let Ok(path) = std::env::var("XTPU_BENCH_JSON") {

@@ -49,6 +49,15 @@ impl SimdPath {
         }
     }
 
+    /// Does this path consume interleaved packed-weight layouts? The SIMD
+    /// paths pack (k-pair tiles for the systolic layout, unit blocks for the
+    /// transposed layout); the scalar path reads plain row-major bytes. The
+    /// kernel's packing routines and the persistent packed-weight caches
+    /// both branch on this one predicate so layout and consumer agree.
+    pub fn interleaves(self) -> bool {
+        self != SimdPath::Scalar
+    }
+
     /// Can this path actually execute on the running host?
     pub fn is_available(self) -> bool {
         match self {

@@ -124,8 +124,23 @@ impl KernelScratch {
 /// NEON. The interleaved layout puts the two weights a `madd`/`vpadal` lane
 /// combines in adjacent bytes, so the vector inner loop is a single load.
 fn pack_weights(path: SimdPath, w: &[i8], k: usize, n: usize, scratch: &mut KernelScratch) {
-    let interleave = path != SimdPath::Scalar;
-    scratch.tiles.clear();
+    let KernelScratch { packed, tiles, .. } = scratch;
+    pack_weights_into(path, w, k, n, tiles, packed);
+}
+
+/// The packing body shared by the per-call [`KernelScratch`] path and the
+/// persistent [`PackedWeights`] cache — one implementation, so the two can
+/// never drift layout.
+fn pack_weights_into(
+    path: SimdPath,
+    w: &[i8],
+    k: usize,
+    n: usize,
+    tiles: &mut Vec<TileDesc>,
+    packed: &mut Vec<i8>,
+) {
+    let interleave = path.interleaves();
+    tiles.clear();
     let mut off = 0;
     let mut k0 = 0;
     while k0 < k {
@@ -133,15 +148,14 @@ fn pack_weights(path: SimdPath, w: &[i8], k: usize, n: usize, scratch: &mut Kern
         let mut n0 = 0;
         while n0 < n {
             let nc = (n - n0).min(TILE_N);
-            scratch.tiles.push(TileDesc { k0, kr, n0, nc, off });
+            tiles.push(TileDesc { k0, kr, n0, nc, off });
             off += if interleave { kr.div_ceil(2) * nc * 2 } else { kr * nc };
             n0 += nc;
         }
         k0 += kr;
     }
-    scratch.packed.clear();
-    scratch.packed.resize(off, 0);
-    let KernelScratch { packed, tiles, .. } = scratch;
+    packed.clear();
+    packed.resize(off, 0);
     for t in tiles.iter() {
         if interleave {
             let kp = t.kr.div_ceil(2);
@@ -315,6 +329,41 @@ mod avx2 {
         sum
     }
 
+    /// Multi-unit dot product over one unit-block of the prepacked
+    /// transposed layout (`blk` is `[k/16][8][16]` + a unit-major `k%16`
+    /// tail): one 16-byte activation load + widen feeds 8 independent
+    /// `madd` accumulators, then each of the first `nu` units is reduced
+    /// with the same [`hsum_epi32`] + scalar tail as [`dot_i8`] — so every
+    /// unit's value is bit-identical to a `dot_i8` over its own row.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 via [`super::dispatch`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot8(a: &[i8], blk: &[i8], k: usize, out: &mut [i32], nu: usize) {
+        const U: usize = super::UNIT_BLOCK;
+        let kc = k / 16;
+        debug_assert!(a.len() >= k && blk.len() >= U * k && out.len() >= nu && nu <= U);
+        let mut acc = [_mm256_setzero_si256(); U];
+        for c in 0..kc {
+            let av =
+                _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(c * 16) as *const __m128i));
+            let base = blk.as_ptr().add(c * U * 16);
+            for (u, accu) in acc.iter_mut().enumerate() {
+                let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(base.add(u * 16) as *const __m128i));
+                *accu = _mm256_add_epi32(*accu, _mm256_madd_epi16(wv, av));
+            }
+        }
+        let tail = k - kc * 16;
+        let tbase = kc * U * 16;
+        for (u, o) in out.iter_mut().enumerate().take(nu) {
+            let mut sum = hsum_epi32(acc[u]);
+            for i in 0..tail {
+                sum += a[kc * 16 + i] as i32 * blk[tbase + u * tail + i] as i32;
+            }
+            *o = sum;
+        }
+    }
+
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_epi32(v: __m256i) -> i32 {
         let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
@@ -399,6 +448,41 @@ mod neon {
     ///
     /// # Safety
     /// NEON is baseline on aarch64; `unsafe` is for the raw vector loads.
+    /// Multi-unit dot product over one unit-block of the prepacked
+    /// transposed layout (`blk` is `[k/16][8][16]` + a unit-major `k%16`
+    /// tail): one 16-byte activation load feeds 8 independent accumulators
+    /// with the same low/high `vmull_s8` + `vpadalq_s16` step order as
+    /// [`dot_i8`], then each of the first `nu` units reduces with the same
+    /// `vaddvq_s32` + scalar tail — bit-identical per unit.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; `unsafe` is for the raw vector loads.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot8(a: &[i8], blk: &[i8], k: usize, out: &mut [i32], nu: usize) {
+        const U: usize = super::UNIT_BLOCK;
+        let kc = k / 16;
+        debug_assert!(a.len() >= k && blk.len() >= U * k && out.len() >= nu && nu <= U);
+        let mut acc = [vdupq_n_s32(0); U];
+        for c in 0..kc {
+            let av = vld1q_s8(a.as_ptr().add(c * 16));
+            let base = blk.as_ptr().add(c * U * 16);
+            for (u, accu) in acc.iter_mut().enumerate() {
+                let wv = vld1q_s8(base.add(u * 16));
+                *accu = vpadalq_s16(*accu, vmull_s8(vget_low_s8(av), vget_low_s8(wv)));
+                *accu = vpadalq_s16(*accu, vmull_s8(vget_high_s8(av), vget_high_s8(wv)));
+            }
+        }
+        let tail = k - kc * 16;
+        let tbase = kc * U * 16;
+        for (u, o) in out.iter_mut().enumerate().take(nu) {
+            let mut sum = vaddvq_s32(acc[u]);
+            for i in 0..tail {
+                sum += a[kc * 16 + i] as i32 * blk[tbase + u * tail + i] as i32;
+            }
+            *o = sum;
+        }
+    }
+
     #[target_feature(enable = "neon")]
     pub unsafe fn dot_i8(x: &[i8], y: &[i8]) -> i32 {
         debug_assert_eq!(x.len(), y.len());
@@ -421,10 +505,11 @@ mod neon {
     }
 }
 
-/// Run every packed tile of `scratch` against the `[m, k]` activation band
-/// `a`, accumulating into the `[m, n]` band `out`, on the given (already
+/// Run every packed tile against the `[m, k]` activation band `a`,
+/// accumulating into the `[m, n]` band `out`, on the given (already
 /// sanitized) path. Each parallel worker calls this on its own disjoint
-/// band; `scratch` is shared read-only.
+/// band; the tile plan + packed bytes are shared read-only — they come from
+/// either a per-call [`KernelScratch`] or a persistent [`PackedWeights`].
 fn matmul_band(
     path: SimdPath,
     a: &[i8],
@@ -432,16 +517,17 @@ fn matmul_band(
     k: usize,
     n: usize,
     out: &mut [i32],
-    scratch: &KernelScratch,
+    tiles: &[TileDesc],
+    packed: &[i8],
 ) {
-    for t in &scratch.tiles {
+    for t in tiles {
         match path {
             SimdPath::Scalar => accumulate_tile(
                 a,
                 k,
                 t.k0,
                 t.kr,
-                &scratch.packed[t.off..t.off + t.kr * t.nc],
+                &packed[t.off..t.off + t.kr * t.nc],
                 t.nc,
                 out,
                 n,
@@ -455,7 +541,7 @@ fn matmul_band(
                     k,
                     t.k0,
                     t.kr,
-                    &scratch.packed[t.off..t.off + t.kr.div_ceil(2) * t.nc * 2],
+                    &packed[t.off..t.off + t.kr.div_ceil(2) * t.nc * 2],
                     t.nc,
                     out,
                     n,
@@ -470,7 +556,7 @@ fn matmul_band(
                     k,
                     t.k0,
                     t.kr,
-                    &scratch.packed[t.off..t.off + t.kr.div_ceil(2) * t.nc * 2],
+                    &packed[t.off..t.off + t.kr.div_ceil(2) * t.nc * 2],
                     t.nc,
                     out,
                     n,
@@ -482,6 +568,264 @@ fn matmul_band(
             // the kernel (the packed layout would not match).
             _ => unreachable!("SIMD path not available on this target"),
         }
+    }
+}
+
+/// Persistent SIMD-packed weights for the systolic `[k,n]` layout: the tile
+/// plan + packed bytes [`matmul_i8`] rebuilds per call, built **once** and
+/// reusable for the lifetime of the weights (the weight-stationary cache a
+/// real TPU keeps in its MAC array). The original `[k,n]` bytes are
+/// retained so recovery passes that re-derive individual products (TE-Drop)
+/// and compatibility fallbacks need no second copy of the weights.
+pub struct PackedWeights {
+    path: SimdPath,
+    k: usize,
+    n: usize,
+    w: Vec<i8>,
+    packed: Vec<i8>,
+    tiles: Vec<TileDesc>,
+}
+
+impl PackedWeights {
+    /// Pack `w[k,n]` for `path` (sanitized to the host's abilities, like
+    /// [`matmul_i8_path`] — an unavailable request packs for scalar).
+    pub fn pack(path: SimdPath, w: &[i8], k: usize, n: usize) -> Self {
+        assert_eq!(w.len(), k * n, "weight size");
+        let path = dispatch::sanitize(path);
+        let mut tiles = Vec::new();
+        let mut packed = Vec::new();
+        pack_weights_into(path, w, k, n, &mut tiles, &mut packed);
+        Self { path, k, n, w: w.to_vec(), packed, tiles }
+    }
+
+    pub fn path(&self) -> SimdPath {
+        self.path
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The original (un-packed) `[k,n]` row-major weights.
+    pub fn original(&self) -> &[i8] {
+        &self.w
+    }
+}
+
+impl std::fmt::Debug for PackedWeights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PackedWeights")
+            .field("path", &self.path.name())
+            .field("k", &self.k)
+            .field("n", &self.n)
+            .field("packed_bytes", &self.packed.len())
+            .finish()
+    }
+}
+
+/// Exact `A[m,k] × W[k,n]` against a persistent [`PackedWeights`] — the
+/// same tiled kernel as [`matmul_i8_path`] minus the per-call packing pass.
+/// Bit-identical to the per-call entry on every path (same tile plan, same
+/// packed layout, same accumulation order).
+pub fn matmul_i8_prepacked(pw: &PackedWeights, a: &[i8], m: usize, out: &mut Vec<i32>) {
+    let (k, n) = (pw.k, pw.n);
+    assert_eq!(a.len(), m * k, "activation size");
+    out.clear();
+    out.resize(m * n, 0);
+    if m * k * n < PAR_MIN_MACS {
+        matmul_band(pw.path, a, m, k, n, out, &pw.tiles, &pw.packed);
+        return;
+    }
+    threadpool::parallel_rows(out.as_mut_slice(), m, n, 1, |rows, band| {
+        matmul_band(
+            pw.path,
+            &a[rows.start * k..rows.end * k],
+            rows.len(),
+            k,
+            n,
+            band,
+            &pw.tiles,
+            &pw.packed,
+        );
+    });
+}
+
+/// Unit-block width of the prepacked transposed layout: [`dot8`] keeps one
+/// vector accumulator per unit, so 8 output units share every 16-byte
+/// activation load (with 16 ymm registers, 8 accumulators + the activation
+/// + a weight temp fit without spilling).
+pub const UNIT_BLOCK: usize = 8;
+
+/// Persistent packed weights for the **transposed** `[n,k]` layer layout
+/// (the [`crate::nn::quant::QuantMac`] serve path). The SIMD layout is
+/// *unit-block interleaved*: units are grouped in blocks of [`UNIT_BLOCK`],
+/// and within a block the k-axis is chunked by 16 bytes with the 8 units'
+/// chunks adjacent (`[block][k/16][8][16]`, then a unit-major `k%16` tail),
+/// so [`dot8`] amortizes one activation load + widen across 8 independent
+/// `madd` accumulators instead of re-loading it per unit as the per-call
+/// `dot_i8` loop does. Blocks past `n` are zero-padded; the scalar path
+/// stores the rows unchanged and runs the identical per-unit loop.
+pub struct PackedLayer {
+    path: SimdPath,
+    k: usize,
+    n: usize,
+    data: Vec<i8>,
+}
+
+impl PackedLayer {
+    /// Pack `wt[n,k]` (row-major over output units) for `path` (sanitized).
+    pub fn pack(path: SimdPath, wt: &[i8], k: usize, n: usize) -> Self {
+        assert_eq!(wt.len(), n * k, "weight size");
+        let path = dispatch::sanitize(path);
+        if !path.interleaves() {
+            return Self { path, k, n, data: wt.to_vec() };
+        }
+        let blocks = n.div_ceil(UNIT_BLOCK);
+        let mut data = vec![0i8; blocks * UNIT_BLOCK * k];
+        let (kc, tail) = (k / 16, k % 16);
+        for b in 0..blocks {
+            let base = b * UNIT_BLOCK * k;
+            for u in 0..UNIT_BLOCK {
+                let unit = b * UNIT_BLOCK + u;
+                if unit >= n {
+                    break; // zero padding already in place
+                }
+                let row = &wt[unit * k..(unit + 1) * k];
+                for c in 0..kc {
+                    data[base + (c * UNIT_BLOCK + u) * 16..][..16]
+                        .copy_from_slice(&row[c * 16..c * 16 + 16]);
+                }
+                if tail > 0 {
+                    data[base + kc * UNIT_BLOCK * 16 + u * tail..][..tail]
+                        .copy_from_slice(&row[kc * 16..]);
+                }
+            }
+        }
+        Self { path, k, n, data }
+    }
+
+    pub fn path(&self) -> SimdPath {
+        self.path
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+impl std::fmt::Debug for PackedLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PackedLayer")
+            .field("path", &self.path.name())
+            .field("k", &self.k)
+            .field("n", &self.n)
+            .field("packed_bytes", &self.data.len())
+            .finish()
+    }
+}
+
+/// Exact `A[m,k] × Wᵀ` against a persistent [`PackedLayer`] — the prepacked
+/// counterpart of [`matmul_i8t_path`], bit-identical to it on every path
+/// (per unit: same chunk order into one exact-i32 accumulator, same
+/// horizontal sum, same scalar tail).
+pub fn matmul_i8t_prepacked(pl: &PackedLayer, a: &[i8], m: usize, out: &mut Vec<i32>) {
+    let (k, n) = (pl.k, pl.n);
+    assert_eq!(a.len(), m * k, "activation size");
+    out.clear();
+    out.resize(m * n, 0);
+    if m * k * n < PAR_MIN_MACS {
+        matmul_i8t_prepacked_band(pl, a, m, out);
+        return;
+    }
+    threadpool::parallel_rows(out.as_mut_slice(), m, n, 1, |rows, band| {
+        matmul_i8t_prepacked_band(pl, &a[rows.start * k..rows.end * k], rows.len(), band);
+    });
+}
+
+/// Serial core of [`matmul_i8t_prepacked`] over a caller-provided `[m, n]`
+/// band (the band primitive the prepacked layer executor drives from inside
+/// its own row sharding).
+pub(crate) fn matmul_i8t_prepacked_band(pl: &PackedLayer, a: &[i8], m: usize, out: &mut [i32]) {
+    let (k, n) = (pl.k, pl.n);
+    debug_assert!(a.len() >= m * k && out.len() >= m * n);
+    match pl.path {
+        SimdPath::Scalar => {
+            // Identical to the scalar arm of the per-call transposed kernel:
+            // the scalar "packed" layout is the rows themselves.
+            for s in 0..m {
+                let arow = &a[s * k..(s + 1) * k];
+                let orow = &mut out[s * n..(s + 1) * n];
+                for (u, o) in orow.iter_mut().enumerate() {
+                    let wrow = &pl.data[u * k..(u + 1) * k];
+                    let mut acc = 0i32;
+                    for (&x, &wv) in arow.iter().zip(wrow) {
+                        acc += x as i32 * wv as i32;
+                    }
+                    *o = acc;
+                }
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => {
+            let nb = n / UNIT_BLOCK;
+            let rem = n % UNIT_BLOCK;
+            let bs = UNIT_BLOCK * k;
+            for s in 0..m {
+                let arow = &a[s * k..(s + 1) * k];
+                let orow = &mut out[s * n..(s + 1) * n];
+                for b in 0..nb {
+                    unsafe {
+                        avx2::dot8(
+                            arow,
+                            &pl.data[b * bs..(b + 1) * bs],
+                            k,
+                            &mut orow[b * UNIT_BLOCK..],
+                            UNIT_BLOCK,
+                        );
+                    }
+                }
+                if rem > 0 {
+                    unsafe {
+                        avx2::dot8(arow, &pl.data[nb * bs..], k, &mut orow[nb * UNIT_BLOCK..], rem);
+                    }
+                }
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => {
+            let nb = n / UNIT_BLOCK;
+            let rem = n % UNIT_BLOCK;
+            let bs = UNIT_BLOCK * k;
+            for s in 0..m {
+                let arow = &a[s * k..(s + 1) * k];
+                let orow = &mut out[s * n..(s + 1) * n];
+                for b in 0..nb {
+                    unsafe {
+                        neon::dot8(
+                            arow,
+                            &pl.data[b * bs..(b + 1) * bs],
+                            k,
+                            &mut orow[b * UNIT_BLOCK..],
+                            UNIT_BLOCK,
+                        );
+                    }
+                }
+                if rem > 0 {
+                    unsafe {
+                        neon::dot8(arow, &pl.data[nb * bs..], k, &mut orow[nb * UNIT_BLOCK..], rem);
+                    }
+                }
+            }
+        }
+        _ => unreachable!("SIMD path not available on this target"),
     }
 }
 
@@ -710,12 +1054,21 @@ pub fn matmul_i8_path(
     out.resize(m * n, 0);
     pack_weights(path, w, k, n, scratch);
     if m * k * n < PAR_MIN_MACS {
-        matmul_band(path, a, m, k, n, out, scratch);
+        matmul_band(path, a, m, k, n, out, &scratch.tiles, &scratch.packed);
         return;
     }
     let shared: &KernelScratch = scratch;
     threadpool::parallel_rows(out.as_mut_slice(), m, n, 1, |rows, band| {
-        matmul_band(path, &a[rows.start * k..rows.end * k], rows.len(), k, n, band, shared);
+        matmul_band(
+            path,
+            &a[rows.start * k..rows.end * k],
+            rows.len(),
+            k,
+            n,
+            band,
+            &shared.tiles,
+            &shared.packed,
+        );
     });
 }
 
@@ -1042,6 +1395,77 @@ mod tests {
             }
         }
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn prepacked_systolic_bit_matches_per_call() {
+        // The persistent PackedWeights cache must execute bit-identically
+        // to the per-call packing path on every host path, across ragged
+        // shapes and the serial/parallel threshold.
+        for path in dispatch::available() {
+            let mut scratch = KernelScratch::new();
+            for (i, &(m, k, n)) in [
+                (1, 1, 1),
+                (3, 7, 9),
+                (5, TILE_K - 1, 11),
+                (4, TILE_K + 1, TILE_N + 1),
+                (64, 784, 128),
+            ]
+            .iter()
+            .enumerate()
+            {
+                let (a, w) = random_mats(m, k, n, 600 + i as u64);
+                let pw = PackedWeights::pack(path, &w, k, n);
+                let mut got = Vec::new();
+                matmul_i8_prepacked(&pw, &a, m, &mut got);
+                let mut expect = Vec::new();
+                matmul_i8_path(path, &a, &w, m, k, n, &mut expect, &mut scratch);
+                assert_eq!(got, expect, "path {} shape {m}×{k}×{n}", path.name());
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_transposed_bit_matches_per_call() {
+        // Ragged n (partial unit block), ragged k (vector tail), and the
+        // serial/parallel threshold; the fc_mnist serve shapes included.
+        for path in dispatch::available() {
+            for (i, &(m, k, n)) in [
+                (1, 1, 1),
+                (3, 15, 5),
+                (7, 31, 10),
+                (2, 16, 8),
+                (64, 784, 128),
+                (64, 128, 10),
+            ]
+            .iter()
+            .enumerate()
+            {
+                let (a, wt) = random_mats(m, k, n, 700 + i as u64);
+                let pl = PackedLayer::pack(path, &wt, k, n);
+                let mut got = Vec::new();
+                matmul_i8t_prepacked(&pl, &a, m, &mut got);
+                let mut expect = Vec::new();
+                matmul_i8t_path(path, &a, &wt, m, k, n, &mut expect);
+                assert_eq!(got, expect, "path {} shape {m}×{k}×{n}", path.name());
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_reuse_is_stable_across_calls() {
+        // Same PackedLayer driven twice (and after unrelated kernel calls)
+        // must keep producing identical bytes — the cache is immutable.
+        let (m, k, n) = (9, 123, 19);
+        let (a, wt) = random_mats(m, k, n, 808);
+        let pl = PackedLayer::pack(dispatch::active(), &wt, k, n);
+        let mut first = Vec::new();
+        matmul_i8t_prepacked(&pl, &a, m, &mut first);
+        let (a2, w2) = random_mats(4, 64, 8, 809);
+        std::hint::black_box(matmul_i8(&a2, &w2, 4, 64, 8));
+        let mut second = Vec::new();
+        matmul_i8t_prepacked(&pl, &a, m, &mut second);
+        assert_eq!(first, second);
     }
 
     #[test]

@@ -147,6 +147,53 @@ pub trait Backend: Send + Sync {
         execute_layer_kernel(mac, xq, batch, noise, rng)
     }
 
+    /// [`Backend::matmul_i8`] against persistent [`kernel::PackedWeights`]
+    /// and a per-generation [`NoisePlan`], accumulating into a caller-owned
+    /// reusable buffer — the repack-free serving entry. The default
+    /// re-enters the per-call contract through `self.matmul_i8` (so a
+    /// backend that overrides only the per-call method — including test
+    /// doubles — keeps its semantics under the prepacked entry); the stock
+    /// error-model backends override it to skip the per-call packing and
+    /// parameter composition entirely. Overrides must stay bit-identical to
+    /// the per-call entry under a shared RNG state — the reproducibility
+    /// suite pins this.
+    fn matmul_i8_prepacked(
+        &self,
+        pw: &kernel::PackedWeights,
+        a: &[i8],
+        m: usize,
+        plan: &NoisePlan,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        let v = self.matmul_i8(a, pw.original(), m, pw.k(), pw.n(), &plan.col_levels, rng);
+        out.clear();
+        out.extend_from_slice(&v);
+    }
+
+    /// [`Backend::execute_layer`] against a persistent
+    /// [`kernel::PackedLayer`], accumulating into a caller-owned reusable
+    /// buffer. Same fallback contract as [`Backend::matmul_i8_prepacked`]:
+    /// the default defers to `self.execute_layer` so overridden per-call
+    /// semantics survive, and the stock backends override with the
+    /// repack-free kernel ([`execute_layer_kernel_prepacked`]).
+    #[allow(clippy::too_many_arguments)]
+    fn execute_layer_prepacked(
+        &self,
+        mac: &QuantMac,
+        packed: &kernel::PackedLayer,
+        xq: &[i8],
+        batch: usize,
+        noise: Option<NoiseView<'_>>,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        debug_assert_eq!((packed.k(), packed.n()), (mac.fan_in, mac.out));
+        let v = self.execute_layer(mac, xq, batch, noise, rng);
+        out.clear();
+        out.extend_from_slice(&v);
+    }
+
     /// Cycle/energy counters, for backends that keep them.
     fn stats(&self) -> Option<SimStats> {
         None
@@ -233,6 +280,73 @@ pub fn execute_layer_kernel(
     out
 }
 
+/// [`execute_layer_kernel`] against a persistent [`kernel::PackedLayer`]:
+/// same metrics counter, same noise-liveness scan, same single key draw,
+/// same fixed-chunk noise streams — only the matmul core changes (the
+/// prepacked band, no per-call layout work) and the accumulators land in a
+/// caller-owned reusable buffer, so a warm serving loop touches neither the
+/// allocator nor the weight bytes' layout. Outputs are bit-identical to the
+/// per-call path at any `XTPU_THREADS` and on every SIMD path.
+pub fn execute_layer_kernel_prepacked(
+    packed: &kernel::PackedLayer,
+    xq: &[i8],
+    batch: usize,
+    noise: Option<NoiseView<'_>>,
+    rng: &mut Xoshiro256pp,
+    out: &mut Vec<i32>,
+) {
+    {
+        use std::sync::OnceLock;
+        static LAYER_CALLS: OnceLock<crate::obs::metrics::Counter> = OnceLock::new();
+        LAYER_CALLS
+            .get_or_init(|| {
+                crate::obs::metrics::global().counter("exec_layer_calls_total", &[])
+            })
+            .inc();
+    }
+    let (fan_in, units) = (packed.k(), packed.n());
+    debug_assert_eq!(xq.len(), batch * fan_in, "activation size");
+    let live = noise.filter(|nv| {
+        debug_assert!(nv.mean.len() >= units && nv.std.len() >= units);
+        nv.mean[..units].iter().any(|&v| v != 0.0)
+            || nv.std[..units].iter().any(|&v| v != 0.0)
+    });
+    let key = live.map(|_| rng.next_u64());
+    out.clear();
+    out.resize(batch * units, 0);
+    let fill = |rows: std::ops::Range<usize>, band: &mut [i32]| {
+        kernel::matmul_i8t_prepacked_band(
+            packed,
+            &xq[rows.start * fan_in..rows.end * fan_in],
+            rows.len(),
+            band,
+        );
+        let (Some(nv), Some(key)) = (live, key) else {
+            return;
+        };
+        let mut r0 = rows.start;
+        while r0 < rows.end {
+            let r1 = (r0 + LAYER_ROW_CHUNK).min(rows.end);
+            let mut srng = Xoshiro256pp::stream(key, (r0 / LAYER_ROW_CHUNK) as u64);
+            for s in r0..r1 {
+                let row = &mut band[(s - rows.start) * units..(s - rows.start + 1) * units];
+                for (u, o) in row.iter_mut().enumerate() {
+                    let (mean, std) = (nv.mean[u], nv.std[u]);
+                    if std > 0.0 || mean != 0.0 {
+                        *o = o.wrapping_add(srng.gaussian(mean, std).round() as i32);
+                    }
+                }
+            }
+            r0 = r1;
+        }
+    };
+    if batch * fan_in * units < kernel::PAR_MIN_MACS {
+        fill(0..batch, out.as_mut_slice());
+    } else {
+        threadpool::parallel_rows(out.as_mut_slice(), batch, units, LAYER_ROW_CHUNK, fill);
+    }
+}
+
 /// Translate per-column ladder levels into composed [`ColumnNoise`]
 /// parameters for a column height of `k` (eqs 11–13). The nominal (last)
 /// level is silent by construction.
@@ -253,6 +367,56 @@ pub fn column_noise_from_levels(
             }
         })
         .collect()
+}
+
+/// Per-generation precomputed error parameters for one `(col_levels, k)`
+/// pair: the plan derivation work the per-call `matmul_i8` contracts redo
+/// on every batch ([`column_noise_from_levels`], [`fault_rates_from_levels`])
+/// hoisted out of the hot loop, so a prepacked serving path touches neither
+/// the model registry nor the allocator per call. The source levels are
+/// retained for the compatibility fallback (the default
+/// [`Backend::matmul_i8_prepacked`] re-enters the per-call contract).
+#[derive(Clone, Debug)]
+pub struct NoisePlan {
+    /// The per-column ladder levels the plan was composed from.
+    pub col_levels: Vec<usize>,
+    /// Composed per-column Gaussian parameters for a column height of `k`
+    /// (eqs 11–13); all-silent for an exact plan.
+    pub column_noise: Vec<ColumnNoise>,
+    /// Per-column TE-Drop fault probabilities; all-zero for an exact plan.
+    pub fault_rates: Vec<f64>,
+}
+
+impl NoisePlan {
+    /// Compose a plan from the registry for a column height of `k` — the
+    /// once-per-generation counterpart of the two per-call derivations.
+    pub fn from_levels(registry: &ErrorModelRegistry, col_levels: &[usize], k: usize) -> Self {
+        Self {
+            col_levels: col_levels.to_vec(),
+            column_noise: column_noise_from_levels(registry, col_levels, k),
+            fault_rates: fault_rates_from_levels(registry, col_levels),
+        }
+    }
+
+    /// An error-free plan (every column nominal-exact), for backends with
+    /// no registry.
+    pub fn exact(col_levels: &[usize]) -> Self {
+        Self {
+            col_levels: col_levels.to_vec(),
+            column_noise: vec![ColumnNoise::SILENT; col_levels.len()],
+            fault_rates: vec![0.0; col_levels.len()],
+        }
+    }
+
+    /// Does any column carry composed Gaussian noise?
+    pub fn any_noise(&self) -> bool {
+        self.column_noise.iter().any(|p| !p.is_silent())
+    }
+
+    /// Does any column carry a positive TE-Drop fault rate?
+    pub fn any_faults(&self) -> bool {
+        self.fault_rates.iter().any(|&p| p > 0.0)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -281,6 +445,33 @@ impl Backend for Exact {
     ) -> Vec<i32> {
         assert_eq!(col_levels.len(), n, "col_levels length");
         kernel::matmul_i8(a, w, m, k, n)
+    }
+
+    fn matmul_i8_prepacked(
+        &self,
+        pw: &kernel::PackedWeights,
+        a: &[i8],
+        m: usize,
+        plan: &NoisePlan,
+        _rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        assert_eq!(plan.col_levels.len(), pw.n(), "col_levels length");
+        kernel::matmul_i8_prepacked(pw, a, m, out);
+    }
+
+    fn execute_layer_prepacked(
+        &self,
+        mac: &QuantMac,
+        packed: &kernel::PackedLayer,
+        xq: &[i8],
+        batch: usize,
+        noise: Option<NoiseView<'_>>,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        debug_assert_eq!((packed.k(), packed.n()), (mac.fan_in, mac.out));
+        execute_layer_kernel_prepacked(packed, xq, batch, noise, rng, out);
     }
 }
 
@@ -319,6 +510,38 @@ impl Backend for Statistical {
         assert_eq!(col_levels.len(), n, "col_levels length");
         let noise = column_noise_from_levels(&self.registry, col_levels, k);
         kernel::matmul_i8_noisy(a, w, m, k, n, &noise, rng)
+    }
+
+    fn matmul_i8_prepacked(
+        &self,
+        pw: &kernel::PackedWeights,
+        a: &[i8],
+        m: usize,
+        plan: &NoisePlan,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        // Exact prepacked matmul plus the same fused injection as the
+        // per-call path — the plan carries the pre-composed column
+        // parameters, so the registry is never consulted here. One key draw
+        // iff any column is live, matching `add_column_noise` exactly.
+        assert_eq!(plan.column_noise.len(), pw.n(), "noise plan length");
+        kernel::matmul_i8_prepacked(pw, a, m, out);
+        kernel::add_column_noise(out, pw.n(), m, 0, &plan.column_noise, rng);
+    }
+
+    fn execute_layer_prepacked(
+        &self,
+        mac: &QuantMac,
+        packed: &kernel::PackedLayer,
+        xq: &[i8],
+        batch: usize,
+        noise: Option<NoiseView<'_>>,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        debug_assert_eq!((packed.k(), packed.n()), (mac.fan_in, mac.out));
+        execute_layer_kernel_prepacked(packed, xq, batch, noise, rng, out);
     }
 }
 
@@ -390,6 +613,51 @@ impl Backend for TeDrop {
         kernel::drop_column_macs_keyed(&mut out, a, w, m, k, n, &rates, key);
         out
     }
+
+    fn matmul_i8_prepacked(
+        &self,
+        pw: &kernel::PackedWeights,
+        a: &[i8],
+        m: usize,
+        plan: &NoisePlan,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        // The recovery pass re-derives individual products from the
+        // original [k,n] bytes the cache retains — no repack, no rate
+        // re-derivation, and the all-nominal case still leaves the caller's
+        // stream untouched (aligned with the per-call path).
+        assert_eq!(plan.fault_rates.len(), pw.n(), "fault plan length");
+        kernel::matmul_i8_prepacked(pw, a, m, out);
+        if !plan.any_faults() {
+            return;
+        }
+        let key = rng.next_u64();
+        kernel::drop_column_macs_keyed(
+            out,
+            a,
+            pw.original(),
+            m,
+            pw.k(),
+            pw.n(),
+            &plan.fault_rates,
+            key,
+        );
+    }
+
+    fn execute_layer_prepacked(
+        &self,
+        mac: &QuantMac,
+        packed: &kernel::PackedLayer,
+        xq: &[i8],
+        batch: usize,
+        noise: Option<NoiseView<'_>>,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        debug_assert_eq!((packed.k(), packed.n()), (mac.fan_in, mac.out));
+        execute_layer_kernel_prepacked(packed, xq, batch, noise, rng, out);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -445,6 +713,25 @@ impl Backend for GateLevel {
         rng: &mut Xoshiro256pp,
     ) -> Vec<i32> {
         self.tpu.lock().unwrap().matmul(a, w, m, k, n, col_levels, rng)
+    }
+
+    // Level-driven prepacked calls keep the trait default: the gate-level
+    // grid consumes the original weight bytes cycle by cycle, so the
+    // fallback through `matmul_i8` *is* the oracle semantics. Spec-driven
+    // layers share the kernel like every backend, so the prepacked kernel
+    // applies unchanged.
+    fn execute_layer_prepacked(
+        &self,
+        mac: &QuantMac,
+        packed: &kernel::PackedLayer,
+        xq: &[i8],
+        batch: usize,
+        noise: Option<NoiseView<'_>>,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        debug_assert_eq!((packed.k(), packed.n()), (mac.fan_in, mac.out));
+        execute_layer_kernel_prepacked(packed, xq, batch, noise, rng, out);
     }
 
     fn stats(&self) -> Option<SimStats> {
@@ -577,6 +864,24 @@ impl Backend for Pjrt {
             *o = o.wrapping_add((e as f64).round_ties_even() as i32);
         }
         out
+    }
+
+    // Level-driven prepacked calls keep the trait default — artifact
+    // dispatch wants the per-call entry (literal construction dominates, and
+    // the kernel fallback inside it already reuses the thread-local
+    // scratch). Spec-driven layers stay on the shared prepacked kernel.
+    fn execute_layer_prepacked(
+        &self,
+        mac: &QuantMac,
+        packed: &kernel::PackedLayer,
+        xq: &[i8],
+        batch: usize,
+        noise: Option<NoiseView<'_>>,
+        rng: &mut Xoshiro256pp,
+        out: &mut Vec<i32>,
+    ) {
+        debug_assert_eq!((packed.k(), packed.n()), (mac.fan_in, mac.out));
+        execute_layer_kernel_prepacked(packed, xq, batch, noise, rng, out);
     }
 }
 
@@ -780,5 +1085,133 @@ mod tests {
                 assert_eq!(acc[s * out + u] as i64, expect);
             }
         }
+    }
+
+    /// The prepacked trait entries must be bit-identical to the per-call
+    /// contracts under a shared RNG state, for every stock error-model
+    /// backend — this is the invariant that lets the serving engine swap in
+    /// the packed cache without perturbing any reply.
+    #[test]
+    fn prepacked_matmul_matches_per_call_per_backend() {
+        let reg = fake_registry();
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(Exact),
+            Box::new(Statistical::new(reg.clone())),
+            Box::new(TeDrop::new(reg.clone())),
+        ];
+        let (m, k, n) = (33, 48, 13);
+        let (a, w) = random_mats(m, k, n, 41);
+        let levels = vec![0, 3, 1, 3, 2, 0, 3, 1, 2, 3, 0, 1, 3];
+        for be in &backends {
+            for path in dispatch::available() {
+                let pw = kernel::PackedWeights::pack(path, &w, k, n);
+                let plan = NoisePlan::from_levels(&reg, &levels, k);
+                let mut rng_a = Xoshiro256pp::seeded(42);
+                let mut rng_b = Xoshiro256pp::seeded(42);
+                let per_call = be.matmul_i8(&a, &w, m, k, n, &levels, &mut rng_a);
+                let mut got = Vec::new();
+                be.matmul_i8_prepacked(&pw, &a, m, &plan, &mut rng_b, &mut got);
+                assert_eq!(per_call, got, "{} on {}", be.name(), path.name());
+                // Both entries must leave the caller's stream in the same
+                // position (the next consumer sees identical draws).
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{} stream", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_execute_layer_matches_per_call() {
+        use crate::nn::layers::Activation;
+        let mut seed_rng = Xoshiro256pp::seeded(43);
+        let (fan_in, out, batch) = (96, 21, 70);
+        let wq: Vec<i8> =
+            (0..out * fan_in).map(|_| seed_rng.range_i64(-127, 127) as i8).collect();
+        let mac = QuantMac {
+            wq: wq.clone(),
+            fan_in,
+            out,
+            w_scale: 1.0,
+            x_scale: 1.0,
+            bias: vec![0.0; out],
+            act: Activation::Linear,
+        };
+        let xq: Vec<i8> =
+            (0..batch * fan_in).map(|_| seed_rng.range_i64(-127, 127) as i8).collect();
+        let mean: Vec<f64> = (0..out).map(|u| if u % 3 == 0 { 0.5 } else { 0.0 }).collect();
+        let std: Vec<f64> = (0..out).map(|u| if u % 2 == 0 { 40.0 } else { 0.0 }).collect();
+        for path in dispatch::available() {
+            let packed = kernel::PackedLayer::pack(path, &wq, fan_in, out);
+            for noisy in [false, true] {
+                let noise = noisy.then(|| NoiseView::new(&mean, &std));
+                let mut rng_a = Xoshiro256pp::seeded(44);
+                let mut rng_b = Xoshiro256pp::seeded(44);
+                let per_call = execute_layer_kernel(&mac, &xq, batch, noise, &mut rng_a);
+                let mut got = vec![7i32; 3]; // stale contents must be cleared
+                Exact.execute_layer_prepacked(
+                    &mac, &packed, &xq, batch, noise, &mut rng_b, &mut got,
+                );
+                assert_eq!(per_call, got, "noisy={noisy} on {}", path.name());
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "stream position");
+            }
+        }
+    }
+
+    /// A backend that overrides only the per-call methods must keep its
+    /// semantics when driven through the prepacked entries (the trait
+    /// defaults fall back instead of silently bypassing the override).
+    #[test]
+    fn prepacked_defaults_preserve_per_call_overrides() {
+        struct Negate;
+        impl Backend for Negate {
+            fn name(&self) -> &'static str {
+                "negate"
+            }
+            fn matmul_i8(
+                &self,
+                a: &[i8],
+                w: &[i8],
+                m: usize,
+                k: usize,
+                n: usize,
+                _col_levels: &[usize],
+                _rng: &mut Xoshiro256pp,
+            ) -> Vec<i32> {
+                kernel::matmul_i8(a, w, m, k, n).into_iter().map(|v| -v).collect()
+            }
+            fn execute_layer(
+                &self,
+                mac: &QuantMac,
+                xq: &[i8],
+                batch: usize,
+                _noise: Option<NoiseView<'_>>,
+                _rng: &mut Xoshiro256pp,
+            ) -> Vec<i32> {
+                vec![batch as i32; batch * mac.out]
+            }
+        }
+        use crate::nn::layers::Activation;
+        let (m, k, n) = (5, 17, 3);
+        let (a, w) = random_mats(m, k, n, 45);
+        let pw = kernel::PackedWeights::pack(dispatch::active(), &w, k, n);
+        let mut rng = Xoshiro256pp::seeded(46);
+        let mut got = Vec::new();
+        Negate.matmul_i8_prepacked(&pw, &a, m, &NoisePlan::exact(&vec![0; n]), &mut rng, &mut got);
+        let exact = kernel::reference_matmul(&a, &w, m, k, n);
+        assert!(got.iter().zip(&exact).all(|(&g, &e)| g == -e), "override bypassed");
+        let mac = QuantMac {
+            wq: w.clone(),
+            fan_in: k,
+            out: n,
+            w_scale: 1.0,
+            x_scale: 1.0,
+            bias: vec![0.0; n],
+            act: Activation::Linear,
+        };
+        // PackedLayer wants [n,k]; reuse w by treating dims as transposed —
+        // the fallback never reads the packed bytes anyway.
+        let packed = kernel::PackedLayer::pack(dispatch::active(), &w, k, n);
+        let xq = vec![1i8; m * k];
+        Negate.execute_layer_prepacked(&mac, &packed, &xq, m, None, &mut rng, &mut got);
+        assert_eq!(got, vec![m as i32; m * n], "execute_layer override bypassed");
     }
 }

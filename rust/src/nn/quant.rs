@@ -18,6 +18,8 @@
 use super::layers::Activation;
 use super::model::{DataShape, Layer, Model};
 use super::tensor::Tensor;
+use crate::exec::dispatch::SimdPath;
+use crate::exec::kernel::PackedLayer;
 use crate::exec::{Backend, Exact, NoiseView};
 use crate::util::rng::Xoshiro256pp;
 
@@ -85,6 +87,25 @@ impl NoiseSpec {
         registry: &crate::errormodel::ErrorModelRegistry,
     ) -> Self {
         Self::from_levels_for_mode(&plan.level, &plan.fan_in, registry, plan.plan_mode())
+    }
+
+    /// Per-MAC-layer liveness of this spec over the given layer widths
+    /// (from [`QuantizedModel::mac_widths`]): `true` iff the layer's slice
+    /// carries any nonzero mean or std — exactly the predicate the layer
+    /// executor's per-call scan applies, hoisted to once per generation so
+    /// the serving loop can skip both the scan and the key draw on silent
+    /// layers without perturbing any RNG stream.
+    pub fn layer_liveness(&self, widths: &[usize]) -> Vec<bool> {
+        let mut base = 0;
+        widths
+            .iter()
+            .map(|&w| {
+                let live = self.mean[base..base + w].iter().any(|&v| v != 0.0)
+                    || self.std[base..base + w].iter().any(|&v| v != 0.0);
+                base += w;
+                live
+            })
+            .collect()
     }
 }
 
@@ -315,6 +336,31 @@ impl QuantizedModel {
         self.neuron_fan_in.len()
     }
 
+    /// Output widths of every MAC layer in neuron-enumeration order
+    /// (recursing into residual blocks: conv1, conv2, projection) — the
+    /// spans [`NoiseSpec::layer_liveness`] is computed over.
+    pub fn mac_widths(&self) -> Vec<usize> {
+        fn walk(l: &QLayer, acc: &mut Vec<usize>) {
+            match l {
+                QLayer::Dense(m) => acc.push(m.out),
+                QLayer::Conv { mac, .. } => acc.push(mac.out),
+                QLayer::Pool { .. } => {}
+                QLayer::Res { conv1, conv2, proj } => {
+                    walk(conv1, acc);
+                    walk(conv2, acc);
+                    if let Some(p) = proj {
+                        walk(p, acc);
+                    }
+                }
+            }
+        }
+        let mut acc = Vec::new();
+        for l in &self.layers {
+            walk(l, &mut acc);
+        }
+        acc
+    }
+
     /// Quantized forward pass with optional per-neuron noise injection on
     /// the default [`Exact`] kernel backend. `noise` must be indexed like
     /// [`Model::neurons`]; `rng` is used only when noise is present.
@@ -539,6 +585,141 @@ impl QuantizedModel {
         }
         y
     }
+
+    /// Quantized forward pass against a persistent [`PackedModel`], with
+    /// every intermediate buffer drawn from a caller-owned [`ForwardArena`]
+    /// and the logits written into `out` — the zero-repack, (near)
+    /// allocation-free serving path. Bit-identical to [`forward_with`] on
+    /// the same backend: quantization, accumulation, noise streams, and
+    /// dequantization are shared step for step, only the weight layout work
+    /// and the per-call buffers disappear.
+    ///
+    /// `layer_live`, when given, must hold the per-MAC-layer liveness of
+    /// `noise` ([`NoiseSpec::layer_liveness`] over [`Self::mac_widths`]) —
+    /// the once-per-generation precompute that lets silent layers skip the
+    /// per-call scan without touching any RNG stream. Models that are not a
+    /// pure dense chain fall back to [`forward_with`] (convolutions re-run
+    /// im2col per call anyway); the arena still absorbs the output copy.
+    ///
+    /// [`forward_with`]: Self::forward_with
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_prepacked(
+        &self,
+        backend: &dyn Backend,
+        x: &Tensor,
+        noise: Option<&NoiseSpec>,
+        layer_live: Option<&[bool]>,
+        rng: &mut Xoshiro256pp,
+        packed: &PackedModel,
+        arena: &mut ForwardArena,
+        out: &mut Vec<f32>,
+    ) {
+        if let Some(ns) = noise {
+            assert_eq!(ns.mean.len(), self.num_neurons(), "noise spec length");
+            assert_eq!(ns.std.len(), self.num_neurons(), "noise spec length");
+        }
+        if !packed.dense_chain() {
+            let y = self.forward_with(backend, x, noise, rng);
+            out.clear();
+            out.extend_from_slice(&y.data);
+            return;
+        }
+        let batch = x.shape[0];
+        arena.cur.clear();
+        arena.cur.extend_from_slice(&x.data);
+        let mut neuron_base = 0;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let QLayer::Dense(mac) = layer else {
+                unreachable!("dense_chain model holds only dense layers")
+            };
+            let pl = packed.layer(i).expect("packed dense layer");
+            arena.xq.clear();
+            arena.xq.resize(batch * mac.fan_in, 0);
+            for r in 0..batch {
+                mac.quantize_input(
+                    &arena.cur[r * mac.fan_in..(r + 1) * mac.fan_in],
+                    &mut arena.xq[r * mac.fan_in..(r + 1) * mac.fan_in],
+                );
+            }
+            // A stale liveness flag would desynchronize the key draw from
+            // the per-call path, so the contract is equality, not a hint.
+            let live = layer_live.map_or(true, |lv| lv[i]);
+            let nv = if live { Self::layer_noise(noise, neuron_base, mac.out) } else { None };
+            backend.execute_layer_prepacked(mac, pl, &arena.xq, batch, nv, rng, &mut arena.acc);
+            arena.next.clear();
+            arena.next.extend(
+                arena
+                    .acc
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &a)| mac.act.apply(mac.dequant(a as f64, j % mac.out))),
+            );
+            std::mem::swap(&mut arena.cur, &mut arena.next);
+            neuron_base += mac.out;
+        }
+        out.clear();
+        out.extend_from_slice(&arena.cur);
+    }
+}
+
+/// Persistent SIMD-packed weights for a whole [`QuantizedModel`]: one
+/// [`PackedLayer`] per dense layer, built **once** per (model, path) —
+/// at engine construction or plan hot-swap, never per batch. Immutable
+/// after construction, so serving snapshots share it through an `Arc` with
+/// no lock on the batch path.
+#[derive(Debug)]
+pub struct PackedModel {
+    path: SimdPath,
+    /// Indexed like [`QuantizedModel::layers`]; `None` for non-dense layers.
+    layers: Vec<Option<PackedLayer>>,
+    dense_chain: bool,
+}
+
+impl PackedModel {
+    /// Pack every dense layer of `q` for `path` (sanitized to the host's
+    /// abilities, like every kernel entry).
+    pub fn pack(q: &QuantizedModel, path: SimdPath) -> Self {
+        let path = crate::exec::dispatch::sanitize(path);
+        let layers = q
+            .layers
+            .iter()
+            .map(|l| match l {
+                QLayer::Dense(mac) => {
+                    Some(PackedLayer::pack(path, &mac.wq, mac.fan_in, mac.out))
+                }
+                _ => None,
+            })
+            .collect();
+        let dense_chain = q.layers.iter().all(|l| matches!(l, QLayer::Dense(_)));
+        Self { path, layers, dense_chain }
+    }
+
+    pub fn path(&self) -> SimdPath {
+        self.path
+    }
+
+    /// Is the model a pure dense chain (the shape the repack-free forward
+    /// serves; anything else falls back to the general path)?
+    pub fn dense_chain(&self) -> bool {
+        self.dense_chain
+    }
+
+    /// The packed weights of layer `i`, if it is dense.
+    pub fn layer(&self, i: usize) -> Option<&PackedLayer> {
+        self.layers.get(i).and_then(|l| l.as_ref())
+    }
+}
+
+/// Reusable per-worker buffers for [`QuantizedModel::forward_prepacked`]:
+/// quantized activations, raw accumulators, and the ping-pong float
+/// activation pair. Capacity is retained across batches, so a warm worker
+/// loop runs the whole forward pass without heap traffic.
+#[derive(Debug, Default)]
+pub struct ForwardArena {
+    xq: Vec<i8>,
+    acc: Vec<i32>,
+    cur: Vec<f32>,
+    next: Vec<f32>,
 }
 
 #[cfg(test)]
@@ -648,6 +829,78 @@ mod tests {
                 assert_eq!(*qf, n.fan_in);
             }
         }
+    }
+
+    #[test]
+    fn forward_prepacked_bit_matches_forward_with() {
+        let (model, test) = trained_fc();
+        let calib = test.batch(&(0..32).collect::<Vec<_>>()).0;
+        let q = QuantizedModel::quantize(&model, &calib);
+        let (x, _) = test.batch(&(0..24).collect::<Vec<_>>());
+        let mut spec = NoiseSpec::silent(q.num_neurons());
+        for (i, s) in spec.std.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *s = 300.0;
+            }
+        }
+        let widths = q.mac_widths();
+        assert_eq!(widths, vec![128, 10]);
+        for path in crate::exec::dispatch::available() {
+            let packed = PackedModel::pack(&q, path);
+            assert!(packed.dense_chain());
+            let mut arena = ForwardArena::default();
+            let mut out = Vec::new();
+            for noise in [None, Some(&spec)] {
+                let live = noise.map(|ns| ns.layer_liveness(&widths));
+                let mut rng_a = Xoshiro256pp::seeded(60);
+                let mut rng_b = Xoshiro256pp::seeded(60);
+                let want = q.forward_with(&Exact, &x, noise, &mut rng_a);
+                q.forward_prepacked(
+                    &Exact,
+                    &x,
+                    noise,
+                    live.as_deref(),
+                    &mut rng_b,
+                    &packed,
+                    &mut arena,
+                    &mut out,
+                );
+                assert_eq!(want.data.len(), out.len());
+                for (a, b) in want.data.iter().zip(&out) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "path {}", path.name());
+                }
+                // Both paths must leave the stream in the same position.
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn forward_prepacked_falls_back_on_conv_models() {
+        let mut rng = Xoshiro256pp::seeded(61);
+        let model = lenet5(&mut rng);
+        let input_len = model.input.numel();
+        let calib = Tensor::zeros(&[2, input_len]);
+        let q = QuantizedModel::quantize(&model, &calib);
+        let packed = PackedModel::pack(&q, crate::exec::dispatch::active());
+        assert!(!packed.dense_chain());
+        let x = Tensor::zeros(&[2, input_len]);
+        let mut rng_a = Xoshiro256pp::seeded(62);
+        let mut rng_b = Xoshiro256pp::seeded(62);
+        let want = q.forward_with(&Exact, &x, None, &mut rng_a);
+        let (mut arena, mut out) = (ForwardArena::default(), Vec::new());
+        q.forward_prepacked(&Exact, &x, None, None, &mut rng_b, &packed, &mut arena, &mut out);
+        assert_eq!(want.data, out);
+    }
+
+    #[test]
+    fn layer_liveness_matches_slices() {
+        let widths = [4usize, 3, 2];
+        let mut spec = NoiseSpec::silent(9);
+        spec.std[5] = 1.0; // second layer (indices 4..7)
+        assert_eq!(spec.layer_liveness(&widths), vec![false, true, false]);
+        spec.mean[8] = -0.5; // third layer (indices 7..9)
+        assert_eq!(spec.layer_liveness(&widths), vec![false, true, true]);
     }
 
     #[test]

@@ -71,7 +71,7 @@ use anyhow::{Context, Result};
 use crate::errormodel::{ErrorModelRegistry, PlanMode};
 use crate::exec::{Backend, Exact};
 use crate::fleet::RoutePolicy;
-use crate::nn::quant::{NoiseSpec, QuantizedModel};
+use crate::nn::quant::{ForwardArena, NoiseSpec, PackedModel, QuantizedModel};
 use crate::nn::tensor::Tensor;
 use crate::obs::audit::{AuditConfig, QualityAudit};
 use crate::obs::metrics::{LatencyHistogram, Registry};
@@ -114,9 +114,51 @@ pub struct PlanSet {
     /// plan's re-plan lineage.
     pub generation: u64,
     pub levels: Vec<QualityLevel>,
+    /// The generation's packed-weight cache and precomputed noise
+    /// liveness (see [`PackedCache`]): built once at install time, shared
+    /// lock-free by every batch worker holding this snapshot. A hot swap
+    /// publishes a whole new cache with the new set — the generation
+    /// mechanism *is* the cache invalidation.
+    pub packed: Arc<PackedCache>,
+}
+
+/// The once-per-generation precompute a [`PlanSet`] carries: the model's
+/// weights SIMD-packed for the process-active path ([`PackedModel`]) plus
+/// the per-level noise analysis ([`NoiseSpec`] silences) the per-batch hot
+/// path would otherwise rediscover on every call. Immutable after
+/// construction; batch workers reach it through their plan-set snapshot, so
+/// no lock and no copy sits on the serving path.
+#[derive(Debug)]
+pub struct PackedCache {
+    /// SIMD-packed weights of every dense layer (weight-stationary cache).
+    pub model: PackedModel,
+    /// `layer_live[level][mac_layer]`: does the level's noise spec touch
+    /// that layer ([`NoiseSpec::layer_liveness`])? Lets silent layers skip
+    /// the per-call scan without perturbing any RNG stream.
+    pub layer_live: Vec<Vec<bool>>,
+    /// `level_live[level] = !levels[level].noise.is_silent()` — the
+    /// whole-spec scan [`Engine::execute_on`] performs per batch, hoisted.
+    pub level_live: Vec<bool>,
 }
 
 impl PlanSet {
+    /// Build one generation snapshot: pack the quantized weights for the
+    /// process-active SIMD path and precompute every level's noise
+    /// liveness. All the per-swap cost lives here — the per-batch path
+    /// only follows `Arc`s.
+    fn build(generation: u64, levels: Vec<QualityLevel>, quantized: &QuantizedModel) -> Self {
+        let model = PackedModel::pack(quantized, crate::exec::dispatch::active());
+        let widths = quantized.mac_widths();
+        let layer_live =
+            levels.iter().map(|l| l.noise.layer_liveness(&widths)).collect();
+        let level_live = levels.iter().map(|l| !l.noise.is_silent()).collect();
+        Self {
+            generation,
+            levels,
+            packed: Arc::new(PackedCache { model, layer_live, level_live }),
+        }
+    }
+
     /// Clamp a requested quality index to a valid level of this set.
     pub fn clamp(&self, quality: usize) -> usize {
         quality.min(self.levels.len().saturating_sub(1))
@@ -152,10 +194,11 @@ impl Engine {
             !levels.is_empty(),
             "engine needs at least one quality level (got none)"
         );
+        let set = PlanSet::build(0, levels, &quantized);
         Ok(Self {
             quantized,
             input_dim,
-            active: RwLock::new(Arc::new(PlanSet { generation: 0, levels })),
+            active: RwLock::new(Arc::new(set)),
             swap_counter: AtomicU64::new(0),
             backends: Vec::new(),
         })
@@ -201,10 +244,12 @@ impl Engine {
     pub fn swap_levels(&self, levels: Vec<QualityLevel>) -> Result<u64> {
         anyhow::ensure!(!levels.is_empty(), "cannot swap in an empty quality-level set");
         // Counter bump and pointer store happen under the write lock so
-        // concurrent swappers cannot publish generations out of order.
+        // concurrent swappers cannot publish generations out of order. The
+        // repack cost (PlanSet::build) is paid here, on the swap path — the
+        // serving hot path only ever follows the published Arc.
         let mut guard = self.active.write().unwrap_or_else(|e| e.into_inner());
         let generation = self.swap_counter.fetch_add(1, Ordering::SeqCst) + 1;
-        *guard = Arc::new(PlanSet { generation, levels });
+        *guard = Arc::new(PlanSet::build(generation, levels, &self.quantized));
         Ok(generation)
     }
 
@@ -241,13 +286,22 @@ impl Engine {
     }
 
     /// The backend batch worker `worker` executes on ([`Exact`] when none
-    /// was installed).
+    /// was installed). The shared `Exact` fallback is a process-wide
+    /// singleton — resolving a worker's backend never allocates.
     fn backend_for(&self, worker: usize) -> Arc<dyn Backend> {
         if self.backends.is_empty() {
-            Arc::new(Exact)
+            static EXACT: std::sync::OnceLock<Arc<dyn Backend>> = std::sync::OnceLock::new();
+            EXACT.get_or_init(|| Arc::new(Exact)).clone()
         } else {
             self.backends[worker % self.backends.len()].clone()
         }
+    }
+
+    /// Public view of the worker → backend mapping, for callers that hold
+    /// the backend across many batches (the batch workers resolve theirs
+    /// once at startup; benches do the same).
+    pub fn worker_backend(&self, worker: usize) -> Arc<dyn Backend> {
+        self.backend_for(worker)
     }
 
     /// Clamp a requested quality index to a valid level of the *active*
@@ -287,6 +341,41 @@ impl Engine {
         let spec = &set.levels[set.clamp(quality)].noise;
         let noise_opt = if spec.is_silent() { None } else { Some(spec) };
         self.execute_with_spec(worker, x, noise_opt, rng)
+    }
+
+    /// Zero-repack batch execution against a [`PlanSet`] snapshot: the
+    /// steady-state entry the batch workers use. Consumes the snapshot's
+    /// [`PackedCache`] (weights packed once per generation, per-level
+    /// liveness precomputed) and the caller's [`ForwardArena`] + logits
+    /// buffer, so a warm call performs no repacking and no heap
+    /// allocation. Bit-identical to [`Self::execute_on`] for any seed:
+    /// the prepacked kernels replicate the per-call paths' accumulation
+    /// order and RNG key-draw schedule exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_packed(
+        &self,
+        set: &PlanSet,
+        backend: &dyn Backend,
+        x: &Tensor,
+        quality: usize,
+        rng: &mut Xoshiro256pp,
+        arena: &mut ForwardArena,
+        logits: &mut Vec<f32>,
+    ) {
+        let level = set.clamp(quality);
+        let cache = &set.packed;
+        let noise_opt =
+            if cache.level_live[level] { Some(&set.levels[level].noise) } else { None };
+        self.quantized.forward_prepacked(
+            backend,
+            x,
+            noise_opt,
+            Some(cache.layer_live[level].as_slice()),
+            rng,
+            &cache.model,
+            arena,
+            logits,
+        );
     }
 
     /// Lowest-level execution seam: run one batch with an explicit noise
@@ -483,6 +572,66 @@ impl Reply {
 /// How many trace records the per-server ring buffer retains.
 const TRACE_RING_CAPACITY: usize = 4096;
 
+/// A grow-on-demand vector of monotonic counters whose hot path is one
+/// read-lock acquire plus one relaxed `fetch_add`, and whose reporting
+/// path snapshots through an `Arc` instead of deep-cloning the counts
+/// under a mutex (the old `Mutex<Vec<u64>>` did both per event *and* per
+/// stats request). Growth replaces the whole vector under the write lock;
+/// because increments only ever happen while the read guard is held, a
+/// concurrent grow (which copies current values into the replacement)
+/// can never lose an update.
+pub struct CounterVec {
+    cells: RwLock<Arc<Vec<AtomicU64>>>,
+}
+
+impl CounterVec {
+    fn new(n: usize) -> Self {
+        Self { cells: RwLock::new(Arc::new((0..n).map(|_| AtomicU64::new(0)).collect())) }
+    }
+
+    /// Replace the contents with exactly `n` zeroed cells.
+    fn reset(&self, n: usize) {
+        let mut guard = self.cells.write().unwrap_or_else(|e| e.into_inner());
+        *guard = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    }
+
+    /// Add `n` to cell `idx`, growing the vector when `idx` is past the
+    /// end (a hot swap to a larger plan set keeps counting).
+    fn add(&self, idx: usize, n: u64) {
+        {
+            let cells = self.cells.read().unwrap_or_else(|e| e.into_inner());
+            if let Some(c) = cells.get(idx) {
+                // Increment under the read guard — see the struct docs.
+                c.fetch_add(n, Ordering::Relaxed);
+                return;
+            }
+        }
+        let guard = self.cells.write().unwrap_or_else(|e| e.into_inner());
+        // Re-check: a racing grower may already have made room.
+        if idx < guard.len() {
+            guard[idx].fetch_add(n, Ordering::Relaxed);
+            return;
+        }
+        let mut grown = guard;
+        let replacement: Vec<AtomicU64> = (0..=idx)
+            .map(|i| AtomicU64::new(grown.get(i).map_or(0, |c| c.load(Ordering::Relaxed))))
+            .collect();
+        replacement[idx].fetch_add(n, Ordering::Relaxed);
+        *grown = Arc::new(replacement);
+    }
+
+    /// Snapshot the cells: one `Arc` clone, no per-cell copy. The stats
+    /// and metrics expositions iterate this directly.
+    pub fn snapshot(&self) -> Arc<Vec<AtomicU64>> {
+        self.cells.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Materialized counts — the pre-existing public stats shape.
+    pub fn counts(&self) -> Vec<u64> {
+        self.snapshot().iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
 /// Server statistics (exposed for tests/benches, and to clients via a
 /// `{"stats": true}` request line).
 ///
@@ -503,7 +652,7 @@ pub struct ServerStats {
     /// Requests served per quality level (index = clamped level), so
     /// operators can see which deployed plans are actually exercised.
     /// Grows on demand: a hot swap to a larger plan set keeps counting.
-    per_level: Mutex<Vec<u64>>,
+    per_level: CounterVec,
     /// Requests attributed per plan-set generation — the audit trail of a
     /// hot swap: in-flight batches drain onto the old generation while new
     /// batches land on the new one. Failed (panicked) batches are
@@ -536,7 +685,7 @@ pub struct ServerStats {
     pub latency: LatencyHistogram,
     /// Requests routed per shard — the observable that shard placement
     /// (round-robin fairness, wear-leveling steering) actually happened.
-    per_shard: Mutex<Vec<u64>>,
+    per_shard: CounterVec,
     /// The server's metrics registry (see the struct docs).
     pub registry: Arc<Registry>,
     /// Sampled per-request tracing ([`crate::obs::trace`]); sampling is
@@ -555,7 +704,7 @@ impl Default for ServerStats {
             batches: AtomicU64::new(0),
             inflight_batches: AtomicU64::new(0),
             peak_concurrent_batches: AtomicU64::new(0),
-            per_level: Mutex::new(Vec::new()),
+            per_level: CounterVec::new(0),
             per_generation: Mutex::new(BTreeMap::new()),
             worker_panics: AtomicU64::new(0),
             shed: AtomicU64::new(0),
@@ -564,7 +713,7 @@ impl Default for ServerStats {
             queued: AtomicU64::new(0),
             est_service_ns: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
-            per_shard: Mutex::new(Vec::new()),
+            per_shard: CounterVec::new(0),
             tracer: Arc::new(Tracer::new(TRACE_RING_CAPACITY)),
             audit: Arc::new(QualityAudit::new(AuditConfig::default(), registry.clone())),
             registry,
@@ -574,20 +723,16 @@ impl Default for ServerStats {
 
 impl ServerStats {
     pub fn new(levels: usize) -> Self {
-        Self { per_level: Mutex::new(vec![0; levels]), ..Default::default() }
+        Self { per_level: CounterVec::new(levels), ..Default::default() }
     }
 
     fn record_level(&self, level: usize, requests: u64) {
-        let mut counts = self.per_level.lock().unwrap_or_else(|e| e.into_inner());
-        if level >= counts.len() {
-            counts.resize(level + 1, 0);
-        }
-        counts[level] += requests;
+        self.per_level.add(level, requests);
     }
 
     /// Requests served per (clamped) quality level.
     pub fn per_level_counts(&self) -> Vec<u64> {
-        self.per_level.lock().unwrap_or_else(|e| e.into_inner()).clone()
+        self.per_level.counts()
     }
 
     fn record_generation(&self, generation: u64, requests: u64) {
@@ -596,21 +741,16 @@ impl ServerStats {
     }
 
     pub(crate) fn init_shards(&self, n: usize) {
-        let mut counts = self.per_shard.lock().unwrap_or_else(|e| e.into_inner());
-        *counts = vec![0; n];
+        self.per_shard.reset(n);
     }
 
     pub(crate) fn record_shard(&self, shard: usize) {
-        let mut counts = self.per_shard.lock().unwrap_or_else(|e| e.into_inner());
-        if shard >= counts.len() {
-            counts.resize(shard + 1, 0);
-        }
-        counts[shard] += 1;
+        self.per_shard.add(shard, 1);
     }
 
     /// Requests routed per shard (index = shard id).
     pub fn per_shard_counts(&self) -> Vec<u64> {
-        self.per_shard.lock().unwrap_or_else(|e| e.into_inner()).clone()
+        self.per_shard.counts()
     }
 
     /// Fold one measured per-request service time into the EWMA the
@@ -643,13 +783,13 @@ impl ServerStats {
             self.deadline_missed.load(Ordering::Relaxed),
         );
         counter("server_conn_rejected_total", &[], self.conn_rejected.load(Ordering::Relaxed));
-        for (i, &c) in self.per_level_counts().iter().enumerate() {
+        for (i, c) in self.per_level.snapshot().iter().enumerate() {
             let level = i.to_string();
-            counter("server_served_total", &[("level", &level)], c);
+            counter("server_served_total", &[("level", &level)], c.load(Ordering::Relaxed));
         }
-        for (i, &c) in self.per_shard_counts().iter().enumerate() {
+        for (i, c) in self.per_shard.snapshot().iter().enumerate() {
             let shard = i.to_string();
-            counter("server_routed_total", &[("shard", &shard)], c);
+            counter("server_routed_total", &[("shard", &shard)], c.load(Ordering::Relaxed));
         }
         {
             let map = self.per_generation.lock().unwrap_or_else(|e| e.into_inner());
@@ -735,9 +875,10 @@ impl ServerStats {
             (
                 "per_level",
                 Json::Arr(
-                    self.per_level_counts()
+                    self.per_level
+                        .snapshot()
                         .iter()
-                        .map(|&c| Json::Num(c as f64))
+                        .map(|c| Json::Num(c.load(Ordering::Relaxed) as f64))
                         .collect(),
                 ),
             ),
@@ -761,7 +902,11 @@ impl ServerStats {
             (
                 "per_shard",
                 Json::Arr(
-                    self.per_shard_counts().iter().map(|&c| Json::Num(c as f64)).collect(),
+                    self.per_shard
+                        .snapshot()
+                        .iter()
+                        .map(|c| Json::Num(c.load(Ordering::Relaxed) as f64))
+                        .collect(),
                 ),
             ),
         ])
@@ -1084,6 +1229,13 @@ fn batch_worker(
 ) {
     let shard = shards.shards()[shard_idx].clone();
     let engine = shard.engine.clone();
+    // Steady-state reuse: this worker's backend handle, batch tensor,
+    // forward arena and logits buffer live for the thread's lifetime —
+    // once warm, assembling and executing a batch allocates nothing.
+    let backend = engine.worker_backend(worker);
+    let mut x = Tensor::zeros(&[0, engine.input_dim]);
+    let mut arena = ForwardArena::default();
+    let mut logits_buf: Vec<f32> = Vec::new();
     while !shutdown.load(Ordering::Relaxed) {
         let mut jobs = collect_batch(&shard.rx, &policy);
         if jobs.is_empty() {
@@ -1119,14 +1271,25 @@ fn batch_worker(
             }
             let started = Instant::now();
             let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
+                // Reuse the worker's batch tensor: every row is fully
+                // overwritten, so clearing is just a resize.
+                x.shape[0] = idxs.len();
+                x.data.resize(idxs.len() * engine.input_dim, 0.0);
                 for (r, &i) in idxs.iter().enumerate() {
                     x.row_mut(r).copy_from_slice(&jobs[i].pixels);
                 }
-                engine.execute_on(&set, worker, &x, level, &mut rng)
+                engine.execute_packed(
+                    &set,
+                    backend.as_ref(),
+                    &x,
+                    level,
+                    &mut rng,
+                    &mut arena,
+                    &mut logits_buf,
+                );
             }));
-            let logits = match executed {
-                Ok(logits) => logits,
+            match executed {
+                Ok(()) => {}
                 Err(_) => {
                     // Dropping the replies below (jobs go out of scope
                     // un-answered at the end of the batch — for evented
@@ -1154,11 +1317,16 @@ fn batch_worker(
             stats.record_level(level, idxs.len() as u64);
             stats.record_generation(set.generation, idxs.len() as u64);
             let replied = Instant::now();
+            let out_dim = logits_buf.len() / idxs.len().max(1);
             for (r, &i) in idxs.iter().enumerate() {
                 if let Some(t) = jobs[i].trace.as_mut() {
                     t.mark_exec_end();
                 }
-                jobs[i].reply.send_ok(level, set.generation, logits.row(r).to_vec());
+                jobs[i].reply.send_ok(
+                    level,
+                    set.generation,
+                    logits_buf[r * out_dim..(r + 1) * out_dim].to_vec(),
+                );
                 if let Some(t) = jobs[i].trace.as_mut() {
                     t.mark_reply();
                 }
@@ -1178,11 +1346,9 @@ fn batch_worker(
             // bit-identical whether or not the group was sampled.
             if stats.audit.should_sample() {
                 let lvl = &set.levels[level];
+                // The batch tensor is still assembled from execution above
+                // — the shadow run reuses it instead of rebuilding.
                 let shadow = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let mut x = Tensor::zeros(&[idxs.len(), engine.input_dim]);
-                    for (r, &i) in idxs.iter().enumerate() {
-                        x.row_mut(r).copy_from_slice(&jobs[i].pixels);
-                    }
                     engine.execute_exact(&x, &mut rng)
                 }));
                 if let Ok(exact) = shadow {
@@ -1191,7 +1357,7 @@ fn batch_worker(
                         &lvl.name,
                         set.generation,
                         lvl.predicted_mse,
-                        &logits.data,
+                        &logits_buf,
                         &exact.data,
                         idxs.len(),
                     );

@@ -371,6 +371,10 @@ struct Conn {
     scan_from: usize,
     /// Serialized replies not yet accepted by the socket.
     wbuf: Vec<u8>,
+    /// Reusable scratch for serializing one reply line before it is
+    /// appended to `wbuf` — keeps the per-reply `String` allocation the
+    /// old `reply.to_string()` path paid off the write path entirely.
+    sbuf: String,
     /// Whether EPOLLOUT interest is currently registered.
     want_write: bool,
     /// Replies submitted to workers and not yet answered. A connection
@@ -487,6 +491,7 @@ fn run_inner(
                                 rbuf: Vec::new(),
                                 scan_from: 0,
                                 wbuf: Vec::new(),
+                                sbuf: String::new(),
                                 want_write: false,
                                 pending: 0,
                                 closing: false,
@@ -734,7 +739,12 @@ fn ok_reply(level: usize, generation: u64, logits: &[f32]) -> Json {
 }
 
 fn push_reply(conn: &mut Conn, reply: Json) {
-    conn.wbuf.extend_from_slice(reply.to_string().as_bytes());
+    // Serialize into the connection's reusable scratch buffer
+    // (`Json::write_compact` is byte-identical to `to_string()`), then
+    // append — no per-reply String allocation once the buffer is warm.
+    conn.sbuf.clear();
+    reply.write_compact(&mut conn.sbuf);
+    conn.wbuf.extend_from_slice(conn.sbuf.as_bytes());
     conn.wbuf.push(b'\n');
     // Opportunistic flush: most replies fit the socket buffer and never
     // need an EPOLLOUT round-trip.

@@ -166,9 +166,18 @@ impl Shed {
 /// A set of shards serving one logical model behind one admission gate and
 /// one routing policy. Both frontends (threaded and evented) submit every
 /// inference request through [`Self::submit`].
+/// The routing policy plus its reusable [`NodeSnapshot`] scratch buffer,
+/// guarded together: snapshot assembly happens under the same lock the
+/// policy consultation needs anyway, so routing a request allocates
+/// nothing once the buffer is warm.
+struct PolicyState {
+    policy: Box<dyn RoutePolicy>,
+    nodes: Vec<NodeSnapshot>,
+}
+
 pub struct ShardSet {
     shards: Vec<Arc<Shard>>,
-    policy: Mutex<Box<dyn RoutePolicy>>,
+    policy: Mutex<PolicyState>,
     /// Per-quality-level relative stress intensity (this level's aging
     /// rate / the harshest level's) — what the wear-leveling policy steers
     /// on. All-1.0 without a wear config (every class assumed harsh).
@@ -257,7 +266,7 @@ impl ShardSet {
         stats.init_shards(shards.len());
         Ok(Arc::new(Self {
             shards,
-            policy: Mutex::new(policy),
+            policy: Mutex::new(PolicyState { policy, nodes: Vec::new() }),
             class_rel_intensity,
             max_queue: max_queue as u64,
             slo,
@@ -286,7 +295,7 @@ impl ShardSet {
     }
 
     pub fn policy_name(&self) -> &'static str {
-        self.policy.lock().unwrap_or_else(|e| e.into_inner()).name()
+        self.policy.lock().unwrap_or_else(|e| e.into_inner()).policy.name()
     }
 
     /// Admission control + routing: shed over-capacity work with a typed
@@ -386,22 +395,19 @@ impl ShardSet {
         }
         let est_s = self.stats.est_service_ns.load(Ordering::Relaxed) as f64 / 1e9;
         let per_worker = self.workers_per_shard as f64;
-        let nodes: Vec<NodeSnapshot> = self
-            .shards
-            .iter()
-            .enumerate()
-            .map(|(id, s)| NodeSnapshot {
-                id,
-                backlog_seconds: s.queued.load(Ordering::Relaxed) as f64 * est_s
-                    / per_worker,
-                headroom_x: s.headroom_x(),
-                generation: s.engine.generation(),
-            })
-            .collect();
         let rel = self.class_rel_intensity.get(class).copied().unwrap_or(1.0);
         let now = self.start.elapsed().as_secs_f64();
-        let mut policy = self.policy.lock().unwrap_or_else(|e| e.into_inner());
-        policy.pick(now, class, rel, &nodes).min(self.shards.len() - 1)
+        let mut state = self.policy.lock().unwrap_or_else(|e| e.into_inner());
+        let state = &mut *state;
+        state.nodes.clear();
+        state.nodes.extend(self.shards.iter().enumerate().map(|(id, s)| NodeSnapshot {
+            id,
+            backlog_seconds: s.queued.load(Ordering::Relaxed) as f64 * est_s
+                / per_worker,
+            headroom_x: s.headroom_x(),
+            generation: s.engine.generation(),
+        }));
+        state.policy.pick(now, class, rel, &state.nodes).min(self.shards.len() - 1)
     }
 
     /// Called by a batch worker after collecting `n` jobs from `shard` —

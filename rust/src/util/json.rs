@@ -169,6 +169,14 @@ impl Json {
         out
     }
 
+    /// Serialize compactly into a caller-provided buffer (appended, not
+    /// cleared). Byte-identical to `to_string()` — same single-line,
+    /// canonical-key-order form — but reuses the caller's allocation, so
+    /// per-reply serialization on a hot path costs no fresh `String`.
+    pub fn write_compact(&self, out: &mut String) {
+        self.write(out, None);
+    }
+
     fn write(&self, out: &mut String, indent: Option<usize>) {
         match self {
             Json::Null => out.push_str("null"),

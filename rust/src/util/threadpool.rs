@@ -60,6 +60,16 @@ where
     F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
 {
     debug_assert_eq!(out.len(), rows * row_len);
+    if rows == 0 {
+        return;
+    }
+    // Single-worker fast path: no range vector, no scope — the serving loop
+    // runs this per batch, and at XTPU_THREADS=1 it must stay off the
+    // allocator entirely.
+    if worker_count() == 1 {
+        f(0..rows, out);
+        return;
+    }
     let ranges = split_ranges_aligned(rows, worker_count(), align);
     if ranges.len() <= 1 {
         if let Some(r) = ranges.into_iter().next() {

@@ -25,22 +25,26 @@ use xtpu::server::{
 use xtpu::util::json::Json;
 use xtpu::util::rng::Xoshiro256pp;
 
-/// A small deterministic engine: fixed seed end to end, so two calls
-/// produce bit-identical engines (weights, quantization, noise specs).
-fn build_engine() -> (Engine, Dataset) {
+/// A small deterministic quantized model: fixed seed end to end, so two
+/// calls produce bit-identical models (weights, quantization).
+fn build_quantized() -> (QuantizedModel, Dataset) {
     let mut rng = Xoshiro256pp::seeded(1);
     let mut model = fc_mnist(Activation::Relu, &mut rng);
     let train_set = synth_mnist(200, 5);
     train(&mut model, &train_set, &TrainConfig { epochs: 1, ..Default::default() });
     let test = synth_mnist(20, 6);
     let calib = test.batch(&(0..16).collect::<Vec<_>>()).0;
-    let q = QuantizedModel::quantize(&model, &calib);
-    let n = q.num_neurons();
+    (QuantizedModel::quantize(&model, &calib), test)
+}
+
+/// The baseline level set: exact + an eco level noisy on the first 128
+/// neurons.
+fn levels_v1(n: usize) -> Vec<QualityLevel> {
     let mut noisy = NoiseSpec::silent(n);
     for s in noisy.std.iter_mut().take(128) {
         *s = 2000.0;
     }
-    let levels = vec![
+    vec![
         QualityLevel {
             name: "exact".into(),
             noise: NoiseSpec::silent(n),
@@ -55,8 +59,42 @@ fn build_engine() -> (Engine, Dataset) {
             energy: 7.0,
             predicted_mse: 0.0,
         },
-    ];
-    (Engine::new(q, levels, 784).unwrap(), test)
+    ]
+}
+
+/// A deliberately different level set for hot-swap tests: a different band
+/// of neurons is noisy at a different std, so a stale packed cache or
+/// noise-liveness table from [`levels_v1`] produces different logits.
+fn levels_v2(n: usize) -> Vec<QualityLevel> {
+    let mut noisy = NoiseSpec::silent(n);
+    for s in noisy.std.iter_mut().skip(64).take(64) {
+        *s = 1500.0;
+    }
+    vec![
+        QualityLevel {
+            name: "exact_v2".into(),
+            noise: NoiseSpec::silent(n),
+            energy_saving: 0.0,
+            energy: 10.0,
+            predicted_mse: 0.0,
+        },
+        QualityLevel {
+            name: "eco_v2".into(),
+            noise: noisy,
+            energy_saving: 0.25,
+            energy: 7.5,
+            predicted_mse: 0.0,
+        },
+    ]
+}
+
+/// A small deterministic engine on [`levels_v1`]: fixed seed end to end,
+/// so two calls produce bit-identical engines (weights, quantization,
+/// noise specs).
+fn build_engine() -> (Engine, Dataset) {
+    let (q, test) = build_quantized();
+    let n = q.num_neurons();
+    (Engine::new(q, levels_v1(n), 784).unwrap(), test)
 }
 
 fn spawn(mode: FrontendMode, opts: FrontendOptions, policy: BatchPolicy) -> (Server, Dataset) {
@@ -368,5 +406,173 @@ fn threaded_frontend_caps_connections_with_typed_rejection() {
     r2.read_line(&mut line).unwrap();
     assert!(line.contains("overloaded"), "{line}");
     assert!(server.stats.conn_rejected.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    server.shutdown();
+}
+
+/// Packed-cache invalidation: after a mid-load hot swap, the server must
+/// serve logits bit-identical to a cold server whose engine was *built* on
+/// the swapped-in levels. The SIMD-packed weight tiles and noise-liveness
+/// tables live inside the generation-tagged `PlanSet` snapshot — the swap
+/// publishing a new snapshot IS the cache invalidation — so a stale cache
+/// surviving the swap, or the swap-path pack diverging from the
+/// construction-path pack, shows up as logit divergence here.
+#[test]
+fn hot_swap_invalidates_packed_cache_bit_identically() {
+    let (engine_a, test) = build_engine();
+    let engine_a = Arc::new(engine_a);
+    let mut server_a = Server::spawn_opts(
+        vec![engine_a.clone()],
+        0,
+        one_worker(),
+        FrontendOptions { mode: FrontendMode::Evented, ..FrontendOptions::default() },
+    )
+    .unwrap();
+    let (mut aw, mut ar) = connect_raw(server_a.addr);
+
+    // Pre-swap traffic on the exact level only: silent levels draw no RNG
+    // keys (the exec-layer schedule tests pin this), so the worker's
+    // stream stays aligned with the cold server's fresh worker below.
+    for i in 0..3 {
+        let reply = roundtrip(&mut aw, &mut ar, &request_line(test.images.row(i), 0));
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(j.get("generation").unwrap().as_u64().unwrap(), 0, "{reply}");
+    }
+
+    // Swap in a different noise layout mid-load — generation 1, freshly
+    // packed on the swap path.
+    let (q2, _) = build_quantized();
+    let n = q2.num_neurons();
+    assert_eq!(engine_a.swap_levels(levels_v2(n)).unwrap(), 1);
+
+    // The reference: a cold engine constructed directly on the new levels
+    // (packed at Engine::new time, serving generation 0).
+    let engine_b = Engine::new(q2, levels_v2(n), 784).unwrap();
+    let mut server_b = Server::spawn_opts(
+        vec![Arc::new(engine_b)],
+        0,
+        one_worker(),
+        FrontendOptions { mode: FrontendMode::Evented, ..FrontendOptions::default() },
+    )
+    .unwrap();
+    let (mut bw, mut br) = connect_raw(server_b.addr);
+
+    for i in 0..6 {
+        // Level 1 is the v2 noisy level — RNG-dependent, the hard case.
+        let req = request_line(test.images.row(i), i % 2);
+        let a = Json::parse(&roundtrip(&mut aw, &mut ar, &req)).unwrap();
+        let b = Json::parse(&roundtrip(&mut bw, &mut br, &req)).unwrap();
+        assert_eq!(a.get("generation").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(b.get("generation").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(
+            a.get("quality").unwrap().as_u64().unwrap(),
+            b.get("quality").unwrap().as_u64().unwrap(),
+            "request {i}: applied quality diverges"
+        );
+        assert_eq!(
+            a.get("class").unwrap().as_u64().unwrap(),
+            b.get("class").unwrap().as_u64().unwrap(),
+            "request {i}: predicted class diverges"
+        );
+        // Serialized float formatting is deterministic, so string equality
+        // of the logits array is bit-identity of the payload.
+        assert_eq!(
+            a.get("logits").unwrap().to_string(),
+            b.get("logits").unwrap().to_string(),
+            "request {i}: swapped-in packed cache diverges from a cold pack"
+        );
+    }
+    server_a.shutdown();
+    server_b.shutdown();
+}
+
+/// The `--metrics-file` exporter contract: the file is published with an
+/// atomic write-to-tmp + rename (`util::json::write_file`), so a concurrent
+/// reader must *always* observe a complete, parseable JSON document — never
+/// a partial write — while the exporter is rewriting it under live load.
+/// This drives the exact loop `main.rs` runs for `--metrics-file`, just
+/// without the 500 ms sleep, to maximize rename/read interleavings.
+#[test]
+fn metrics_file_export_is_atomic_under_concurrent_load() {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use xtpu::util::json::write_file;
+
+    let (mut server, test) = spawn(
+        FrontendMode::Evented,
+        FrontendOptions::default(),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), workers: 2 },
+    );
+    let dir = std::env::temp_dir().join(format!("xtpu_metrics_atomicity_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.json");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let writes = Arc::new(AtomicU64::new(0));
+    let good_reads = Arc::new(AtomicU64::new(0));
+
+    // Writer: the exporter loop, hot.
+    let writer = {
+        let (stats, path, stop, writes) =
+            (server.stats.clone(), path.clone(), stop.clone(), writes.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                write_file(&path, &stats.metrics_json()).unwrap();
+                writes.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+    };
+
+    // Readers: every observation of the file must parse. A reader that
+    // catches a half-written document is the bug this test exists for.
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let (path, stop, good_reads) = (path.clone(), stop.clone(), good_reads.clone());
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match std::fs::read_to_string(&path) {
+                        // Not yet published — the tmp file is invisible.
+                        Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                        Err(e) => panic!("metrics file unreadable: {e}"),
+                        Ok(text) => {
+                            Json::parse(&text).unwrap_or_else(|e| {
+                                panic!("metrics file not valid JSON ({e:#}): {text:?}")
+                            });
+                            good_reads.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Live load while the file churns, so the exported counters move.
+    let (mut w, mut r) = connect_raw(server.addr);
+    for i in 0..40 {
+        let reply = roundtrip(&mut w, &mut r, &request_line(test.images.row(i % 20), i % 2));
+        assert!(reply.contains("\"class\""), "{reply}");
+    }
+    // Keep racing until both sides have real coverage: plenty of renames
+    // and plenty of successful reads overlapping them.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while writes.load(Ordering::Relaxed) < 200 || good_reads.load(Ordering::Relaxed) < 200 {
+        assert!(std::time::Instant::now() < deadline, "exporter race never got coverage");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop.store(true, Ordering::Relaxed);
+    writer.join().unwrap();
+    for h in readers {
+        h.join().unwrap(); // propagates any reader panic = atomicity violation
+    }
+
+    // The last published document reflects the served load.
+    let final_doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let served = final_doc
+        .get("server")
+        .unwrap()
+        .get("server_requests_total")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(served >= 40.0, "exported requests_total = {served}, want >= 40");
+    std::fs::remove_dir_all(&dir).ok();
     server.shutdown();
 }

@@ -1,0 +1,392 @@
+/* L3m replica: C mirror of the zero-repack serving data path added by the
+ * packed-weight-cache PR, measured the same way replica.c measures the
+ * earlier sections (see its header for the methodology and why this file
+ * exists: the build host has no Rust toolchain, so the checked-in
+ * BENCH_serving.json figures come from this line-for-line port, and CI's
+ * bench-json job re-measures the same keys with the real bench).
+ *
+ * Sections (mirroring benches/perf_hotpaths.rs L3m):
+ *
+ *   l3m_percall_mmacs   - systolic matmul at serving batch size, packing
+ *                         the weight tiles on every call (the pre-PR
+ *                         matmul_i8 entry point).
+ *   l3m_prepacked_mmacs - same workload through a PackedWeights artifact
+ *                         built once (the weight-stationary path).
+ *   l3d replica         - the pre-PR serve loop: per-batch malloc of xq /
+ *                         accumulator / output, dot-product (i8t) matmul.
+ *   l3m_serve_infs      - the post-PR steady state: per-layer unit-block
+ *                         interleaved weights packed once (PackedLayer),
+ *                         every buffer from a reusable arena.
+ *
+ * Kernels are byte-for-byte the ones in replica.c (pack_tiles,
+ * acc_tile_pairs_avx2, dot_i8_avx2); the fc_mnist shape is the real one
+ * (784 -> 128 relu -> 10 linear, batch 64), quantize/dequant match
+ * QuantMac::quantize_input / dequant.
+ */
+#include <immintrin.h>
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + 1e-9 * (double)ts.tv_nsec;
+}
+
+/* xoshiro256++ (input data only; exact port not needed for timing). */
+static uint64_t rot(uint64_t x, int k) { return (x << k) | (x >> (64 - k)); }
+typedef struct { uint64_t s[4]; } Xo;
+static uint64_t xo_next(Xo *x) {
+    uint64_t r = rot(x->s[0] + x->s[3], 23) + x->s[0];
+    uint64_t t = x->s[1] << 17;
+    x->s[2] ^= x->s[0];
+    x->s[3] ^= x->s[1];
+    x->s[1] ^= x->s[2];
+    x->s[0] ^= x->s[3];
+    x->s[2] ^= t;
+    x->s[3] = rot(x->s[3], 45);
+    return r;
+}
+static Xo xo_seed(uint64_t seed) {
+    Xo x;
+    for (int i = 0; i < 4; i++) {
+        seed += 0x9E3779B97F4A7C15ULL;
+        uint64_t z = seed;
+        z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ULL;
+        z = (z ^ (z >> 27)) * 0x94D049BB133111EBULL;
+        x.s[i] = z ^ (z >> 31);
+    }
+    return x;
+}
+
+#define TILE_K 128
+#define TILE_N 256
+
+typedef struct { size_t k0, kr, n0, nc, off; } Tile;
+
+static size_t plan_tiles(size_t k, size_t n, int interleave, Tile *tiles, size_t *ntiles) {
+    size_t off = 0, t = 0;
+    for (size_t k0 = 0; k0 < k; k0 += TILE_K) {
+        size_t kr = (k - k0) < TILE_K ? (k - k0) : TILE_K;
+        for (size_t n0 = 0; n0 < n; n0 += TILE_N) {
+            size_t nc = (n - n0) < TILE_N ? (n - n0) : TILE_N;
+            tiles[t].k0 = k0; tiles[t].kr = kr; tiles[t].n0 = n0; tiles[t].nc = nc;
+            tiles[t].off = off;
+            off += interleave ? ((kr + 1) / 2) * nc * 2 : kr * nc;
+            t++;
+        }
+    }
+    *ntiles = t;
+    return off;
+}
+
+static void pack_tiles(const int8_t *w, size_t n, int interleave, const Tile *tiles,
+                       size_t ntiles, int8_t *packed) {
+    for (size_t t = 0; t < ntiles; t++) {
+        const Tile *ti = &tiles[t];
+        if (interleave) {
+            size_t kp = (ti->kr + 1) / 2;
+            int8_t *dst = packed + ti->off;
+            for (size_t p = 0; p < kp; p++) {
+                const int8_t *r0 = w + (ti->k0 + 2 * p) * n + ti->n0;
+                const int8_t *r1 =
+                    (2 * p + 1 < ti->kr) ? w + (ti->k0 + 2 * p + 1) * n + ti->n0 : NULL;
+                int8_t *drow = dst + p * ti->nc * 2;
+                if (r1) {
+                    for (size_t j = 0; j < ti->nc; j++) {
+                        drow[2 * j] = r0[j];
+                        drow[2 * j + 1] = r1[j];
+                    }
+                } else {
+                    for (size_t j = 0; j < ti->nc; j++) {
+                        drow[2 * j] = r0[j];
+                        drow[2 * j + 1] = 0;
+                    }
+                }
+            }
+        } else {
+            int8_t *dst = packed + ti->off;
+            for (size_t r = 0; r < ti->kr; r++)
+                memcpy(dst + r * ti->nc, w + (ti->k0 + r) * n + ti->n0, ti->nc);
+        }
+    }
+}
+
+__attribute__((target("avx2"))) static void acc_tile_pairs_avx2(
+    const int8_t *a, size_t lda, size_t k0, size_t kr, const int8_t *packed, size_t nc,
+    int32_t *out, size_t ldo, size_t n0, size_t m) {
+    size_t kp = (kr + 1) / 2;
+    size_t nvec = nc & ~(size_t)7;
+    for (size_t s = 0; s < m; s++) {
+        const int8_t *arow = a + s * lda + k0;
+        int32_t *orow = out + s * ldo + n0;
+        size_t j = 0;
+        while (j < nvec) {
+            __m256i acc = _mm256_loadu_si256((const __m256i *)(orow + j));
+            for (size_t p = 0; p < kp; p++) {
+                int32_t a0 = arow[2 * p];
+                int32_t a1 = (2 * p + 1 < kr) ? arow[2 * p + 1] : 0;
+                if (a0 == 0 && a1 == 0) continue;
+                __m256i pair = _mm256_set1_epi32((a1 << 16) | (a0 & 0xFFFF));
+                __m128i wbytes = _mm_loadu_si128((const __m128i *)(packed + (p * nc + j) * 2));
+                __m256i w16 = _mm256_cvtepi8_epi16(wbytes);
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w16, pair));
+            }
+            _mm256_storeu_si256((__m256i *)(orow + j), acc);
+            j += 8;
+        }
+        for (j = nvec; j < nc; j++) {
+            int32_t acc = orow[j];
+            for (size_t p = 0; p < kp; p++) {
+                int32_t a0 = arow[2 * p];
+                int32_t a1 = (2 * p + 1 < kr) ? arow[2 * p + 1] : 0;
+                if (a0 == 0 && a1 == 0) continue;
+                acc += a0 * (int32_t)packed[(p * nc + j) * 2] +
+                       a1 * (int32_t)packed[(p * nc + j) * 2 + 1];
+            }
+            orow[j] = acc;
+        }
+    }
+}
+
+__attribute__((target("avx2"))) static int32_t dot_i8_avx2(const int8_t *x, const int8_t *y,
+                                                           size_t n) {
+    size_t nvec = n & ~(size_t)15;
+    __m256i acc = _mm256_setzero_si256();
+    size_t i = 0;
+    while (i < nvec) {
+        __m256i xv = _mm256_cvtepi8_epi16(_mm_loadu_si128((const __m128i *)(x + i)));
+        __m256i yv = _mm256_cvtepi8_epi16(_mm_loadu_si128((const __m128i *)(y + i)));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(xv, yv));
+        i += 16;
+    }
+    __m128i s = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256(acc, 1));
+    s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+    s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0x01));
+    int32_t sum = _mm_cvtsi128_si32(s);
+    for (i = nvec; i < n; i++) sum += (int32_t)x[i] * (int32_t)y[i];
+    return sum;
+}
+
+/* Pack wt[n][k] into [ublock of 8][kchunk of 16][8][16] + per-unit tail.
+ * kc = number of full 16-chunks; tail k%16 stored unit-major after. */
+static size_t packed_size(size_t n, size_t k) {
+    size_t ub = (n + 7) / 8;
+    return ub * 8 * k; /* generous: full rows, zero-padded units */
+}
+
+static void pack_units(const int8_t *wt, size_t n, size_t k, int8_t *packed) {
+    size_t kc = k / 16, tail = k % 16;
+    size_t ub = (n + 7) / 8;
+    memset(packed, 0, ub * 8 * k);
+    for (size_t b = 0; b < ub; b++) {
+        int8_t *base = packed + b * 8 * k;
+        for (size_t c = 0; c < kc; c++) {
+            for (size_t u = 0; u < 8; u++) {
+                size_t unit = b * 8 + u;
+                if (unit < n)
+                    memcpy(base + (c * 8 + u) * 16, wt + unit * k + c * 16, 16);
+            }
+        }
+        /* tail: after the chunks, 8 rows of `tail` bytes */
+        int8_t *tbase = base + kc * 128;
+        for (size_t u = 0; u < 8; u++) {
+            size_t unit = b * 8 + u;
+            if (unit < n) memcpy(tbase + u * tail, wt + unit * k + kc * 16, tail);
+        }
+    }
+}
+
+/* One activation row against one 8-unit block: shared a-load, 8 madds. */
+__attribute__((target("avx2"))) static void dot8_avx2(const int8_t *a, const int8_t *blk,
+                                                      size_t k, int32_t *out8, size_t nu) {
+    size_t kc = k / 16, tail = k % 16;
+    __m256i acc[8];
+    for (int u = 0; u < 8; u++) acc[u] = _mm256_setzero_si256();
+    for (size_t c = 0; c < kc; c++) {
+        __m256i av = _mm256_cvtepi8_epi16(_mm_loadu_si128((const __m128i *)(a + c * 16)));
+        const int8_t *wp = blk + c * 128;
+        for (int u = 0; u < 8; u++)
+            acc[u] = _mm256_add_epi32(
+                acc[u], _mm256_madd_epi16(av, _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                                                  (const __m128i *)(wp + 16 * u)))));
+    }
+    const int8_t *tbase = blk + kc * 128;
+    for (size_t u = 0; u < nu; u++) {
+        __m128i s = _mm_add_epi32(_mm256_castsi256_si128(acc[u]),
+                                  _mm256_extracti128_si256(acc[u], 1));
+        s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0x01));
+        int32_t sum = _mm_cvtsi128_si32(s);
+        for (size_t i = 0; i < tail; i++)
+            sum += (int32_t)a[kc * 16 + i] * (int32_t)tbase[u * tail + i];
+        out8[u] = sum;
+    }
+}
+
+static void run_tiles(const int8_t *a, size_t m, size_t k, size_t n, int32_t *out,
+                      const int8_t *packed, const Tile *tiles, size_t ntiles) {
+    memset(out, 0, m * n * sizeof(int32_t));
+    for (size_t t = 0; t < ntiles; t++) {
+        const Tile *ti = &tiles[t];
+        acc_tile_pairs_avx2(a, k, ti->k0, ti->kr, packed + ti->off, ti->nc, out, n, ti->n0, m);
+    }
+}
+
+/* QuantMac::quantize_input / dequant, exact semantics. */
+static void quantize(const float *x, int8_t *out, size_t len, float x_scale) {
+    float s = x_scale > 1e-12f ? x_scale : 1e-12f;
+    for (size_t i = 0; i < len; i++) {
+        float v = roundf(x[i] / s);
+        if (v < -127.0f) v = -127.0f;
+        if (v > 127.0f) v = 127.0f;
+        out[i] = (int8_t)v;
+    }
+}
+
+static volatile int64_t sink;
+
+int main(void) {
+    const size_t B = 64, K = 784, H = 128, O = 10;
+    Xo rng = xo_seed(0xF00D);
+    /* fc_mnist-scale data. wt layouts: w1t[H][K], w2t[O][H]; systolic
+     * layouts w1[K][H] for the tile packer (built by transpose). */
+    int8_t *w1t = malloc(H * K), *w2t = malloc(O * H);
+    float *x = malloc(B * K * sizeof(float));
+    for (size_t i = 0; i < H * K; i++) w1t[i] = (int8_t)(xo_next(&rng) % 255 - 127);
+    for (size_t i = 0; i < O * H; i++) w2t[i] = (int8_t)(xo_next(&rng) % 255 - 127);
+    for (size_t i = 0; i < B * K; i++)
+        x[i] = (float)(int64_t)(xo_next(&rng) % 2000) / 1000.0f - 1.0f;
+    int8_t *w1 = malloc(K * H), *w2 = malloc(H * O);
+    for (size_t r = 0; r < K; r++)
+        for (size_t c = 0; c < H; c++) w1[r * H + c] = w1t[c * K + r];
+    for (size_t r = 0; r < H; r++)
+        for (size_t c = 0; c < O; c++) w2[r * O + c] = w2t[c * H + r];
+    const float xs1 = 0.01f, ws1 = 0.02f, xs2 = 0.05f, ws2 = 0.02f;
+    float *bias1 = calloc(H, sizeof(float)), *bias2 = calloc(O, sizeof(float));
+
+    /* --- prepacked vs per-call systolic matmul, serving batch (m=8) ----- */
+    {
+        const size_t m = 8;
+        Tile tiles[64];
+        size_t ntiles;
+        size_t psz = plan_tiles(K, H, 1, tiles, &ntiles);
+        int8_t *packed = malloc(psz);
+        int8_t *a = malloc(m * K);
+        for (size_t i = 0; i < m * K; i++) a[i] = (int8_t)(xo_next(&rng) % 255 - 127);
+        int32_t *out = malloc(m * H * sizeof(int32_t));
+        const int reps = 4000;
+        double t0 = now_s();
+        for (int r = 0; r < reps; r++) {
+            plan_tiles(K, H, 1, tiles, &ntiles);
+            pack_tiles(w1, H, 1, tiles, ntiles, packed);
+            run_tiles(a, m, K, H, out, packed, tiles, ntiles);
+            sink += out[0];
+        }
+        double dt_percall = now_s() - t0;
+        plan_tiles(K, H, 1, tiles, &ntiles);
+        pack_tiles(w1, H, 1, tiles, ntiles, packed);
+        t0 = now_s();
+        for (int r = 0; r < reps; r++) {
+            run_tiles(a, m, K, H, out, packed, tiles, ntiles);
+            sink += out[0];
+        }
+        double dt_prepacked = now_s() - t0;
+        double macs = (double)reps * m * K * H;
+        printf("l3m_percall_mmacs    %10.0f\n", macs / dt_percall / 1e6);
+        printf("l3m_prepacked_mmacs  %10.0f\n", macs / dt_prepacked / 1e6);
+        printf("l3m_pack_overhead_x  %10.3f\n", dt_percall / dt_prepacked);
+        free(packed); free(a); free(out);
+    }
+
+    /* --- l3d replica: pre-PR serve loop (dot kernel, per-batch mallocs) -- */
+    const int reps = 400;
+    double dt_l3d, dt_l3m;
+    {
+        double t0 = now_s();
+        for (int r = 0; r < reps; r++) {
+            /* forward_with clones the input tensor before layer 0 */
+            float *xc = malloc(B * K * sizeof(float));
+            memcpy(xc, x, B * K * sizeof(float));
+            int8_t *xq = malloc(B * K);
+            quantize(xc, xq, B * K, xs1);
+            /* matmul_i8t_into: out.clear() + resize(.., 0) zero-fills */
+            int32_t *acc1 = calloc(B * H, sizeof(int32_t));
+            for (size_t s = 0; s < B; s++)
+                for (size_t u = 0; u < H; u++)
+                    acc1[s * H + u] = dot_i8_avx2(xq + s * K, w1t + u * K, K);
+            /* Tensor::zeros(&[batch, out]) zero-fills before dequant */
+            float *y1 = calloc(B * H, sizeof(float));
+            for (size_t s = 0; s < B; s++)
+                for (size_t u = 0; u < H; u++) {
+                    float v = (float)acc1[s * H + u] * ws1 * xs1 + bias1[u];
+                    y1[s * H + u] = v > 0 ? v : 0; /* relu */
+                }
+            int8_t *xq2 = malloc(B * H);
+            quantize(y1, xq2, B * H, xs2);
+            int32_t *acc2 = calloc(B * O, sizeof(int32_t));
+            for (size_t s = 0; s < B; s++)
+                for (size_t u = 0; u < O; u++)
+                    acc2[s * O + u] = dot_i8_avx2(xq2 + s * H, w2t + u * H, H);
+            float *y2 = calloc(B * O, sizeof(float));
+            for (size_t s = 0; s < B; s++)
+                for (size_t u = 0; u < O; u++)
+                    y2[s * O + u] = (float)acc2[s * O + u] * ws2 * xs2 + bias2[u];
+            sink += (int64_t)y2[0];
+            free(xc); free(xq); free(acc1); free(y1); free(xq2); free(acc2); free(y2);
+        }
+        dt_l3d = now_s() - t0;
+    }
+
+    /* --- l3m replica: prepacked tiles + arena, same math ----------------- */
+    {
+        int8_t *packed1 = malloc(packed_size(H, K));
+        int8_t *packed2 = malloc(packed_size(O, H));
+        pack_units(w1t, H, K, packed1);
+        pack_units(w2t, O, H, packed2);
+        /* arena: allocated once, reused every batch */
+        int8_t *xq = malloc(B * K), *xq2 = malloc(B * H);
+        int32_t *acc1 = malloc(B * H * sizeof(int32_t));
+        int32_t *acc2 = malloc(B * O * sizeof(int32_t));
+        float *y1 = malloc(B * H * sizeof(float));
+        float *y2 = malloc(B * O * sizeof(float));
+        double t0 = now_s();
+        for (int r = 0; r < reps; r++) {
+            quantize(x, xq, B * K, xs1);
+            for (size_t s = 0; s < B; s++)
+                for (size_t b = 0; b < H / 8; b++)
+                    dot8_avx2(xq + s * K, packed1 + b * 8 * K, K, acc1 + s * H + b * 8, 8);
+            for (size_t s = 0; s < B; s++)
+                for (size_t u = 0; u < H; u++) {
+                    float v = (float)acc1[s * H + u] * ws1 * xs1 + bias1[u];
+                    y1[s * H + u] = v > 0 ? v : 0;
+                }
+            quantize(y1, xq2, B * H, xs2);
+            for (size_t s = 0; s < B; s++) {
+                for (size_t b = 0; b < O / 8; b++)
+                    dot8_avx2(xq2 + s * H, packed2 + b * 8 * H, H, acc2 + s * O + b * 8, 8);
+                dot8_avx2(xq2 + s * H, packed2 + (O / 8) * 8 * H, H,
+                          acc2 + s * O + (O / 8) * 8, O % 8);
+            }
+            for (size_t s = 0; s < B; s++)
+                for (size_t u = 0; u < O; u++)
+                    y2[s * O + u] = (float)acc2[s * O + u] * ws2 * xs2 + bias2[u];
+            sink += (int64_t)y2[0];
+        }
+        dt_l3m = now_s() - t0;
+        free(packed1); free(packed2); free(xq); free(xq2);
+        free(acc1); free(acc2); free(y1); free(y2);
+    }
+
+    double l3d_infs = (double)reps * B / dt_l3d;
+    double l3m_infs = (double)reps * B / dt_l3m;
+    printf("l3d_inferences_per_s %10.0f\n", l3d_infs);
+    printf("l3m_serve_infs       %10.0f\n", l3m_infs);
+    printf("l3m_speedup_vs_l3d   %10.3f\n", l3m_infs / l3d_infs);
+    free(w1t); free(w2t); free(w1); free(w2); free(x); free(bias1); free(bias2);
+    return 0;
+}

@@ -135,6 +135,40 @@ def main():
                 "(obs hooks with sampling off must be near-free)"
             )
 
+    # --- zero-repack serving data path (L3m) ------------------------------
+    # Floors sit several-fold under the replica record (runner classes
+    # differ); the speedup and allocation gates are same-run ratios, so a
+    # uniformly slower runner cancels out. The speedup minima assume a SIMD
+    # interleaving path — the XTPU_SIMD=scalar CI leg skips this script and
+    # asserts presence + zero allocations directly (the scalar layout has
+    # no packing edge by design).
+    l3m_gates = serving_rec["gates"]
+    for key, floor in (
+        ("l3m_prepacked_mmacs", l3m_gates.get("l3m_prepacked_mmacs_floor")),
+        ("l3m_serve_infs", l3m_gates.get("l3m_serve_infs_floor")),
+        ("l3m_prepacked_speedup", l3m_gates.get("l3m_prepacked_speedup_min")),
+        ("l3m_serve_speedup_vs_l3d", l3m_gates.get("l3m_serve_speedup_min")),
+    ):
+        if floor is None:
+            continue
+        checks += 1
+        v = emitted(key)
+        if v is not None and v < floor:
+            failures.append(f"{key} = {v:.2f} below floor {floor}")
+    allocs_cap = l3m_gates.get("l3m_allocs_per_req_max")
+    if allocs_cap is not None:
+        checks += 1
+        v = emitted("l3m_allocs_per_req")
+        if v is not None and v > allocs_cap:
+            failures.append(
+                f"l3m_allocs_per_req = {v:.2f} above max {allocs_cap} "
+                "(the warm prepacked serve loop must not allocate; "
+                "build the bench with --features alloc-count)"
+            )
+    for key in ("l3m_percall_mmacs", "l3m_serve_baseline_infs"):
+        checks += 1
+        emitted(key)
+
     # --- layer 1: presence-only keys (no baseline recorded yet) -----------
     for key in PRESENCE_ONLY_KEYS:
         checks += 1
